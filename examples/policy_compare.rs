@@ -1,0 +1,44 @@
+//! Fig. 2-style comparison at one load point: all five systems on the same
+//! trace, across all four model setups.
+//!
+//! ```sh
+//! cargo run --release --example policy_compare -- [--rate 2.0] [--requests 200]
+//! ```
+
+use anyhow::Result;
+use infercept::cmds::sim_run_once;
+use infercept::coordinator::policy::Policy;
+use infercept::sim::SimModelSpec;
+use infercept::util::cli::Args;
+use infercept::workload::{WorkloadGen, WorkloadKind};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let n = args.usize_or("requests", 200)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    for spec in [
+        SimModelSpec::gptj_6b(),
+        SimModelSpec::vicuna_13b(),
+        SimModelSpec::vicuna_13b_tp2(),
+        SimModelSpec::llama3_70b_tp4(),
+    ] {
+        println!("\n=== {} @ {rate} req/s, {n} requests ===", spec.name);
+        let trace = WorkloadGen::new(WorkloadKind::Mixed, seed)
+            .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
+            .generate(n, rate);
+        let mut base: Option<f64> = None;
+        for policy in Policy::fig2_set() {
+            let rep = sim_run_once(&spec, policy, &trace, seed)?;
+            let lat = rep.normalized_latency_ms();
+            if rep.policy == "vllm" {
+                base = Some(lat);
+            }
+            let speedup =
+                base.map(|b| format!("{:5.2}x", b / lat)).unwrap_or_else(|| "  1.00x".into());
+            println!("  {} | vs vLLM {speedup}", rep.summary_line());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: serve a small augmented-LLM workload with InferCept on the
+//! simulated A100 backend and print the headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use infercept::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a model/GPU setup (GPT-J-6B on one A100) and the policy.
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+
+    // 2. Generate a mixed augmented workload: math, QA, virtual
+    //    environments, chatbot, image generation, TTS (Table 1 marginals).
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 42).generate(100, 2.0);
+
+    // 3. Serve it.
+    let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    let report = engine.run_trace(&trace)?;
+
+    println!("{}", report.summary_line());
+    println!(
+        "normalized latency: {:.2} ms/token | throughput: {:.2} req/s | \
+         TTFT p50: {:.0} ms | GPU waste: {:.1} GB·s",
+        report.normalized_latency_ms(),
+        report.throughput_rps(),
+        report.median_ttft_ms(),
+        report.waste.total(),
+    );
+
+    // 4. Compare against vanilla vLLM (Discard) on the same trace.
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::vllm());
+    let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    let vllm = engine.run_trace(&trace)?;
+    println!(
+        "vs vLLM: {:.2} ms/token ({:.2}x), waste {:.1} GB·s ({:.1}x)",
+        vllm.normalized_latency_ms(),
+        vllm.normalized_latency_ms() / report.normalized_latency_ms(),
+        vllm.waste.total(),
+        vllm.waste.total() / report.waste.total().max(1e-9),
+    );
+    Ok(())
+}

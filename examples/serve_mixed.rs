@@ -1,0 +1,24 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Loads a real (mini) model's AOT artifacts, compiles them on the PJRT CPU
+//! client, and serves a mixed augmented workload with *real* batched
+//! forward passes through the Pallas-kernel HLO — proving all three layers
+//! compose: L1 Pallas paged attention → L2 JAX model → L3 Rust coordinator.
+//!
+//! ```sh
+//! make artifacts   # once
+//! cargo run --release --example serve_mixed -- [--requests 12] [--policy infercept]
+//! ```
+
+use anyhow::Result;
+use infercept::cmds::serve;
+use infercept::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env(&[])?;
+    // Defaults tuned for a quick but meaningful run; override on the CLI.
+    args.options.entry("requests".into()).or_insert("12".into());
+    args.options.entry("policy".into()).or_insert("infercept".into());
+    args.options.entry("rate".into()).or_insert("2.0".into());
+    serve::run(&args)
+}

@@ -1,0 +1,15 @@
+//! Reproduce Table 1 (+ Fig. 4/5 CDFs with --cdf) from the augmentation
+//! trace generator.
+//!
+//! ```sh
+//! cargo run --release --example table1_properties -- [--cdf] [--requests 2000]
+//! ```
+
+use anyhow::Result;
+use infercept::cmds::table1;
+use infercept::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["cdf"])?;
+    table1::run(&args)
+}

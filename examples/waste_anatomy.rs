@@ -1,0 +1,56 @@
+//! Fig. 1 companion: the waste anatomy of one intercepted request under
+//! Discard / Preserve / Swap / chunked-Discard, straight from the paper's
+//! equations (§3.2, §4.2), swept over context length and interception time.
+//!
+//! ```sh
+//! cargo run --release --example waste_anatomy
+//! ```
+
+use infercept::coordinator::waste::{
+    min_waste, waste_chunked_discard, waste_discard, waste_preserve, waste_swap, WasteInputs,
+};
+use infercept::sim::SimModelSpec;
+
+fn main() {
+    let spec = SimModelSpec::gptj_6b();
+    let profile = &spec.profile;
+    let sync_swap = spec.swap_model(false);
+
+    println!("GPU-memory waste (GB·s) per interception — GPT-J-6B / A100 cost model");
+    println!("(running batch: 10k context tokens)\n");
+    println!(
+        "{:>8} {:>12} | {:>12} {:>12} {:>12} {:>12} | {:>10}",
+        "ctx", "int-time", "Discard", "Preserve", "Swap", "ChunkedD", "min-waste"
+    );
+    for ctx in [500usize, 1422, 2185] {
+        for int_s in [0.0002f64, 0.09, 0.69, 17.0, 28.6] {
+            let w = WasteInputs {
+                ctx_tokens: ctx,
+                other_tokens: 10_000,
+                kv_bytes_per_token: spec.kv_bytes_per_token,
+                est_interception_us: int_s * 1e6,
+                chunk_tokens: 256,
+                running_query: 32,
+                running_ctx: 10_000,
+            };
+            let t_swap = sync_swap.t_swap(ctx);
+            let mw = min_waste(profile, &w);
+            println!(
+                "{:>8} {:>10.4}s | {:>12.2} {:>12.2} {:>12.2} {:>12.2} | {:>10}",
+                ctx,
+                int_s,
+                waste_discard(profile, &w),
+                waste_preserve(&w),
+                waste_swap(t_swap, &w),
+                waste_chunked_discard(profile, &w),
+                if mw.prefer_preserve { "preserve" } else { "discard" },
+            );
+        }
+        println!();
+    }
+    println!(
+        "Reading: short automated calls (math 0.2 ms, VE 90 ms) → preserve is ~free;\n\
+         human-scale pauses (chat 28.6 s) → holding memory dominates, discard/swap wins.\n\
+         Chunked discard ≤ half of Discard's recompute waste (Eq. 4 vs Eq. 1)."
+    );
+}

@@ -1,0 +1,164 @@
+"""AOT pipeline: lower every model variant to HLO *text* + params npz.
+
+Build-time only (``make artifacts``); Python never runs on the request path.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  * ``{model}_{variant}.hlo.txt`` — one per (model, decode batch | prefill
+    chunk) combination; weights are *parameters* of the computation,
+  * ``{model}.params.npz``        — weights, loaded by Rust `Literal::read_npz`,
+  * ``manifest.json``             — configs, variant table, the exact input
+    order (flattened params first, then positional operands) the Rust
+    runtime must feed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+DECODE_BATCHES = (1, 2, 4, 8)
+PREFILL_CHUNKS = (16, 32, 64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    fn = functools.partial(M.decode_step, cfg)
+    params = jax.eval_shape(lambda: M.init_params(cfg))
+    lowered = jax.jit(fn).lower(
+        params,
+        _abstract((batch,), jnp.int32),
+        _abstract(cfg.pool_shape()),
+        _abstract(cfg.pool_shape()),
+        _abstract((batch, cfg.max_blocks_per_seq), jnp.int32),
+        _abstract((batch,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: M.ModelConfig, chunk: int) -> str:
+    fn = functools.partial(M.prefill_chunk, cfg)
+    params = jax.eval_shape(lambda: M.init_params(cfg))
+    lowered = jax.jit(fn).lower(
+        params,
+        _abstract((chunk,), jnp.int32),
+        _abstract(cfg.pool_shape()),
+        _abstract(cfg.pool_shape()),
+        _abstract((cfg.max_blocks_per_seq,), jnp.int32),
+        _abstract((), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def write_params_npz(cfg: M.ModelConfig, path: str, seed: int) -> None:
+    params = M.init_params(cfg, seed)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    arrays = {}
+    for p, leaf in leaves:
+        name = ".".join(str(getattr(seg, "key", seg)) for seg in p)
+        arrays[name] = np.asarray(leaf)
+    np.savez(path, **arrays)
+
+
+def build_model(cfg: M.ModelConfig, out_dir: str, seed: int,
+                decode_batches, prefill_chunks) -> dict:
+    entry: dict = {
+        "config": {
+            "name": cfg.name,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "block_size": cfg.block_size,
+            "num_blocks": cfg.num_blocks,
+            "max_blocks_per_seq": cfg.max_blocks_per_seq,
+        },
+        "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+        "param_order": M.param_flatten_order(cfg),
+        "params_npz": f"{cfg.name}.params.npz",
+        "variants": {},
+    }
+    write_params_npz(cfg, os.path.join(out_dir, entry["params_npz"]), seed)
+
+    for b in decode_batches:
+        t0 = time.time()
+        text = lower_decode(cfg, b)
+        name = f"decode_b{b}"
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["variants"][name] = {"file": fname, "kind": "decode", "batch": b}
+        print(f"  {cfg.name}/{name}: {len(text)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)")
+    for t in prefill_chunks:
+        t0 = time.time()
+        text = lower_prefill(cfg, t)
+        name = f"prefill_t{t}"
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["variants"][name] = {"file": fname, "kind": "prefill", "chunk": t}
+        print(f"  {cfg.name}/{name}: {len(text)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS),
+                    help=f"subset of {list(M.MODELS)}")
+    ap.add_argument("--decode-batches", nargs="*", type=int,
+                    default=list(DECODE_BATCHES))
+    ap.add_argument("--prefill-chunks", nargs="*", type=int,
+                    default=list(PREFILL_CHUNKS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "models": {}}
+    for name in args.models:
+        print(f"lowering {name} ...")
+        manifest["models"][name] = build_model(
+            M.MODELS[name], out_dir, args.seed,
+            args.decode_batches, args.prefill_chunks,
+        )
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for InferCept-RS's compute hot-spots."""
+
+from compile.kernels.paged_attention import (
+    chunked_prefill_attention,
+    paged_attention_decode,
+)
+
+__all__ = ["paged_attention_decode", "chunked_prefill_attention"]

@@ -1,0 +1,284 @@
+"""L1 Pallas kernels: paged attention for decode and chunked prefill.
+
+These are the compute hot-spots of InferCept's serving path. The KV cache
+lives in a *paged pool* — `[num_blocks, block_size, kv_heads, head_dim]` per
+layer — and sequences address it through per-sequence block tables, exactly
+mirroring the L3 Rust block allocator (the L3 block size IS the L1 tile minor
+dimension; see DESIGN.md §3 Hardware-Adaptation).
+
+TPU mapping of the paper's CUDA PagedAttention:
+  * one grid step per sequence stages one KV *page* at a time (HBM -> VMEM
+    via the BlockSpec schedule, instead of threadblock/shared-memory tiles),
+  * qk^T and alpha*V per page are expressed as (heads x head_dim) matmuls so
+    the MXU systolic array does the work (instead of warp-level dots),
+  * an online (flash-style) softmax streams arbitrary context lengths
+    through fixed VMEM: running max `m`, denominator `l`, accumulator `acc`.
+
+All kernels are lowered with interpret=True — the CPU PJRT plugin cannot run
+Mosaic custom-calls; numerics are validated against `ref.py` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _expand_kv(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Expand grouped KV heads [..., kv_heads, d] to [..., n_heads, d] (GQA)."""
+    kv_heads = x.shape[-2]
+    if kv_heads == n_heads:
+        return x
+    assert n_heads % kv_heads == 0, (n_heads, kv_heads)
+    return jnp.repeat(x, n_heads // kv_heads, axis=-2)
+
+
+def _decode_kernel(
+    q_ref,  # [1, H, D]
+    bt_ref,  # [1, MAXB] i32
+    len_ref,  # [1] i32
+    k_pool_ref,  # [P, bs, KH, D]
+    v_pool_ref,  # [P, bs, KH, D]
+    o_ref,  # [1, H, D]
+    *,
+    block_size: int,
+    n_heads: int,
+):
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    head_dim = q.shape[-1]
+    scale = 1.0 / (head_dim**0.5)
+    ctx_len = len_ref[0]
+    n_pages = (ctx_len + block_size - 1) // block_size
+
+    m0 = jnp.full((n_heads,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((n_heads,), dtype=jnp.float32)
+    acc0 = jnp.zeros((n_heads, head_dim), dtype=jnp.float32)
+
+    def page_step(j, carry):
+        m, l, acc = carry
+        page = bt_ref[0, j]
+        # Stage one KV page. On TPU this is the HBM->VMEM copy of a
+        # [block_size, KH, D] tile; double-buffering would prefetch j+1.
+        k = pl.load(k_pool_ref, (pl.dslice(page, 1),))[0]  # [bs, KH, D]
+        v = pl.load(v_pool_ref, (pl.dslice(page, 1),))[0]
+        k = _expand_kv(k.astype(jnp.float32), n_heads)  # [bs, H, D]
+        v = _expand_kv(v.astype(jnp.float32), n_heads)
+        # MXU-shaped: per head, [1, D] @ [D, bs].
+        s = jnp.einsum("hd,thd->ht", q, k) * scale  # [H, bs]
+        pos = j * block_size + lax.iota(jnp.int32, block_size)
+        s = jnp.where(pos[None, :] < ctx_len, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])  # [H, bs]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jnp.einsum("ht,thd->hd", p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = lax.fori_loop(0, n_pages, page_step, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _decode_gather_kernel(
+    q_ref,  # [1, H, D]
+    bt_ref,  # [1, MAXB] i32
+    len_ref,  # [1] i32
+    k_pool_ref,  # [P, bs, KH, D]
+    v_pool_ref,  # [P, bs, KH, D]
+    o_ref,  # [1, H, D]
+    *,
+    block_size: int,
+    n_heads: int,
+):
+    """Gather-lowering of the decode kernel: one pool gather per sequence
+    instead of a page-streaming loop. Numerically identical to
+    [`_decode_kernel`]; this variant is what CPU-PJRT artifacts use — the
+    XLA CPU backend executes a single fused gather+GEMM far faster than a
+    32-iteration while loop (see DESIGN.md §Perf). On TPU the streaming
+    kernel is the deployment target."""
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    head_dim = q.shape[-1]
+    scale = 1.0 / (head_dim**0.5)
+    ctx_len = len_ref[0]
+    pages = bt_ref[0]  # [MAXB]
+    # jnp.take over the materialized pool ref: XLA fuses this into a single
+    # gather (pl.load with array indices has no interpret discharge rule).
+    k = jnp.take(k_pool_ref[...], pages, axis=0).astype(jnp.float32)
+    v = jnp.take(v_pool_ref[...], pages, axis=0).astype(jnp.float32)
+    maxb, bs = k.shape[0], k.shape[1]
+    k = _expand_kv(k.reshape(maxb * bs, *k.shape[2:]), n_heads)  # [T, H, D]
+    v = _expand_kv(v.reshape(maxb * bs, *v.shape[2:]), n_heads)
+    s = jnp.einsum("hd,thd->ht", q, k) * scale  # [H, T]
+    pos = lax.iota(jnp.int32, maxb * bs)
+    s = jnp.where(pos[None, :] < ctx_len, s, NEG_INF)
+    m = s.max(axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("ht,thd->hd", p, v) / jnp.maximum(p.sum(axis=1), 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_decode(
+    q: jnp.ndarray,  # [B, H, D]
+    k_pool: jnp.ndarray,  # [P, bs, KH, D]
+    v_pool: jnp.ndarray,  # [P, bs, KH, D]
+    block_tables: jnp.ndarray,  # [B, MAXB] i32
+    ctx_lens: jnp.ndarray,  # [B] i32 — valid tokens incl. the current one
+    variant: str = "stream",
+) -> jnp.ndarray:
+    """Single-token paged attention over a batch of sequences.
+
+    `ctx_lens[b]` counts the tokens already written to the pool for sequence
+    `b`, including the token whose query this is (the engine writes the new
+    KV before attending, so decode attends to its own position too).
+
+    `variant="stream"` is the TPU-shaped page-streaming kernel (fixed VMEM,
+    online softmax); `variant="gather"` is the CPU-fast lowering used by the
+    AOT artifacts. Both are validated against `ref.py`.
+    """
+    batch, n_heads, head_dim = q.shape
+    n_pages_pool, block_size = k_pool.shape[0], k_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+
+    body = _decode_gather_kernel if variant == "gather" else _decode_kernel
+    kernel = functools.partial(body, block_size=block_size, n_heads=n_heads)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n_heads, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, max_blocks), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec(k_pool.shape, lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec(v_pool.shape, lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_heads, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, block_tables, ctx_lens, k_pool, v_pool)
+
+
+def _prefill_kernel(
+    q_ref,  # [T, H, D]
+    bt_ref,  # [MAXB] i32
+    len_ref,  # [1] i32 — cache length BEFORE this chunk
+    k_pool_ref,
+    v_pool_ref,
+    o_ref,  # [T, H, D]
+    *,
+    block_size: int,
+    n_heads: int,
+):
+    q = q_ref[...].astype(jnp.float32)  # [T, H, D]
+    chunk, _, head_dim = q.shape
+    scale = 1.0 / (head_dim**0.5)
+    cache_len = len_ref[0]
+    total = cache_len + chunk
+    n_pages = (total + block_size - 1) // block_size
+    q_pos = cache_len + lax.iota(jnp.int32, chunk)  # global position per query
+
+    m0 = jnp.full((chunk, n_heads), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((chunk, n_heads), dtype=jnp.float32)
+    acc0 = jnp.zeros((chunk, n_heads, head_dim), dtype=jnp.float32)
+
+    def page_step(j, carry):
+        m, l, acc = carry
+        page = bt_ref[j]
+        k = pl.load(k_pool_ref, (pl.dslice(page, 1),))[0]
+        v = pl.load(v_pool_ref, (pl.dslice(page, 1),))[0]
+        k = _expand_kv(k.astype(jnp.float32), n_heads)
+        v = _expand_kv(v.astype(jnp.float32), n_heads)
+        s = jnp.einsum("qhd,thd->qht", q, k) * scale  # [T, H, bs]
+        pos = j * block_size + lax.iota(jnp.int32, block_size)
+        # Causal within the chunk, full visibility of the prior cache:
+        # query i (global q_pos[i]) sees keys at positions <= q_pos[i].
+        visible = pos[None, :] <= q_pos[:, None]  # [T, bs]
+        s = jnp.where(visible[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=2)
+        acc_new = acc * alpha[..., None] + jnp.einsum("qht,thd->qhd", p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = lax.fori_loop(0, n_pages, page_step, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _prefill_gather_kernel(
+    q_ref,  # [T, H, D]
+    bt_ref,  # [MAXB] i32
+    len_ref,  # [1] i32 — cache length BEFORE this chunk
+    k_pool_ref,
+    v_pool_ref,
+    o_ref,  # [T, H, D]
+    *,
+    block_size: int,
+    n_heads: int,
+):
+    """Gather-lowering of the prefill kernel (see `_decode_gather_kernel`)."""
+    q = q_ref[...].astype(jnp.float32)  # [T, H, D]
+    chunk, _, head_dim = q.shape
+    scale = 1.0 / (head_dim**0.5)
+    cache_len = len_ref[0]
+    q_pos = cache_len + lax.iota(jnp.int32, chunk)
+    pages = bt_ref[...]
+    k = jnp.take(k_pool_ref[...], pages, axis=0).astype(jnp.float32)
+    v = jnp.take(v_pool_ref[...], pages, axis=0).astype(jnp.float32)
+    maxb, bs = k.shape[0], k.shape[1]
+    k = _expand_kv(k.reshape(maxb * bs, *k.shape[2:]), n_heads)  # [S, H, D]
+    v = _expand_kv(v.reshape(maxb * bs, *v.shape[2:]), n_heads)
+    s = jnp.einsum("qhd,thd->qht", q, k) * scale  # [T, H, S]
+    pos = lax.iota(jnp.int32, maxb * bs)
+    visible = pos[None, :] <= q_pos[:, None]  # [T, S]
+    s = jnp.where(visible[:, None, :], s, NEG_INF)
+    m = s.max(axis=2, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("qht,thd->qhd", p, v) / jnp.maximum(
+        p.sum(axis=2), 1e-30
+    )[..., None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(
+    q: jnp.ndarray,  # [T, H, D]
+    k_pool: jnp.ndarray,  # [P, bs, KH, D]
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [MAXB] i32
+    cache_len: jnp.ndarray,  # scalar i32 — tokens before this chunk
+    variant: str = "stream",
+) -> jnp.ndarray:
+    """Attention for one prefill/recompute chunk of a single sequence.
+
+    The chunk's own KV must already be written to the pool at positions
+    `cache_len .. cache_len+T-1`. This is exactly InferCept's recomputation
+    chunking primitive (§4.2): re-running a discarded context S tokens at a
+    time, each chunk attending to everything recomputed so far.
+    """
+    chunk, n_heads, head_dim = q.shape
+    block_size = k_pool.shape[1]
+    max_blocks = block_table.shape[0]
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape((1,))
+
+    body = _prefill_gather_kernel if variant == "gather" else _prefill_kernel
+    kernel = functools.partial(body, block_size=block_size, n_heads=n_heads)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(q.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((max_blocks,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(k_pool.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(v_pool.shape, lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(q.shape, lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, block_table, cache_len, k_pool, v_pool)

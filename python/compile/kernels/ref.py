@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Dense, gather-based attention with no paging tricks — the correctness signal
+every kernel change is validated against (pytest + hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_context(
+    pool: jnp.ndarray,  # [P, bs, KH, D]
+    block_table: jnp.ndarray,  # [MAXB] i32
+    length: int,
+) -> jnp.ndarray:
+    """Materialize the first `length` cached tokens of one sequence."""
+    block_size = pool.shape[1]
+    n = int(length)
+    idx = jnp.arange(n)
+    blocks = block_table[idx // block_size]
+    offsets = idx % block_size
+    return pool[blocks, offsets]  # [length, KH, D]
+
+
+def _expand_kv(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    kv_heads = x.shape[-2]
+    if kv_heads == n_heads:
+        return x
+    return jnp.repeat(x, n_heads // kv_heads, axis=-2)
+
+
+def attention(
+    q: jnp.ndarray,  # [T, H, D] — queries at global positions q_pos
+    k: jnp.ndarray,  # [S, KH, D] — full context keys
+    v: jnp.ndarray,  # [S, KH, D]
+    q_pos: jnp.ndarray,  # [T] global positions of the queries
+) -> jnp.ndarray:
+    """Masked attention: query i sees keys at positions <= q_pos[i]."""
+    n_heads, head_dim = q.shape[1], q.shape[2]
+    k = _expand_kv(k, n_heads).astype(jnp.float32)
+    v = _expand_kv(v, n_heads).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("qhd,shd->qhs", qf, k) / (head_dim**0.5)
+    pos = jnp.arange(k.shape[0])
+    mask = pos[None, None, :] <= q_pos[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("qhs,shd->qhd", p, v).astype(q.dtype)
+
+
+def ref_paged_attention_decode(
+    q: jnp.ndarray,  # [B, H, D]
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # [B, MAXB]
+    ctx_lens,  # [B] python ints / array
+) -> jnp.ndarray:
+    outs = []
+    for b in range(q.shape[0]):
+        n = int(ctx_lens[b])
+        k = gather_context(k_pool, block_tables[b], n)
+        v = gather_context(v_pool, block_tables[b], n)
+        o = attention(q[b : b + 1], k, v, jnp.array([n - 1]))
+        outs.append(o[0])
+    return jnp.stack(outs)
+
+
+def ref_chunked_prefill_attention(
+    q: jnp.ndarray,  # [T, H, D]
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [MAXB]
+    cache_len: int,
+) -> jnp.ndarray:
+    chunk = q.shape[0]
+    total = int(cache_len) + chunk
+    k = gather_context(k_pool, block_table, total)
+    v = gather_context(v_pool, block_table, total)
+    q_pos = int(cache_len) + jnp.arange(chunk)
+    return attention(q, k, v, q_pos)

@@ -1,0 +1,274 @@
+"""L2: the JAX model — a paged-KV-cache transformer built on the L1 kernels.
+
+This is the compute graph the Rust coordinator drives at runtime. Two entry
+points are AOT-lowered per model variant (see `aot.py`):
+
+  * ``decode_step``    — one token for each of B running sequences,
+  * ``prefill_chunk``  — T prompt/recompute tokens for ONE sequence
+                          (InferCept's chunked recomputation primitive, §4.2).
+
+Both read and write the paged KV pool (`[L, P, bs, KH, D]`) addressed through
+block tables, so the Rust block allocator fully owns memory placement. The
+layer stack runs under ``lax.scan`` over stacked per-layer parameters — this
+keeps the lowered HLO small and AOT time flat in depth (see DESIGN.md §Perf).
+
+Weights are *inputs*, not baked constants: `aot.py` writes them to an ``.npz``
+that the Rust runtime loads with ``Literal::read_npz`` and feeds in the
+flatten order recorded in the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import chunked_prefill_attention, paged_attention_decode
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of one mini model + its paged KV pool.
+
+    The minis stand in for the paper's GPT-J-6B / Vicuna-13B / Llama3-70B:
+    scheduling is content-agnostic, so only shapes, timings, and memory
+    footprints matter (DESIGN.md §4). ``llama-mini`` keeps the GQA ratio that
+    drives the paper's 70B Preserve/Swap behaviour.
+    """
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # paged KV pool geometry — must match the Rust allocator's config
+    block_size: int = 16
+    num_blocks: int = 128
+    max_blocks_per_seq: int = 32
+    rope_theta: float = 10000.0
+    # Kernel lowering used by the AOT artifacts: "gather" (CPU-fast) or
+    # "stream" (the TPU-shaped page-streaming kernel). See DESIGN.md §Perf.
+    attn_variant: str = "gather"
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+    def pool_shape(self) -> Tuple[int, int, int, int, int]:
+        return (
+            self.n_layers,
+            self.num_blocks,
+            self.block_size,
+            self.n_kv_heads,
+            self.head_dim,
+        )
+
+    def kv_bytes_per_token(self) -> int:
+        """f32 KV bytes per cached token across all layers (the paper's M)."""
+        return self.n_layers * 2 * self.n_kv_heads * self.head_dim * 4
+
+
+MODELS: Dict[str, ModelConfig] = {
+    # GPT-J-6B stand-in (MHA)
+    "gptj-mini": ModelConfig(
+        name="gptj-mini", n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+        head_dim=32, d_ff=1024, vocab=512,
+    ),
+    # Vicuna-13B stand-in (MHA, deeper/wider)
+    "vicuna-mini": ModelConfig(
+        name="vicuna-mini", n_layers=6, d_model=320, n_heads=10, n_kv_heads=10,
+        head_dim=32, d_ff=1280, vocab=512,
+    ),
+    # Llama3-70B stand-in — preserves the 4:1 GQA compression (§5.1 70B).
+    "llama-mini": ModelConfig(
+        name="llama-mini", n_layers=4, d_model=256, n_heads=8, n_kv_heads=2,
+        head_dim=32, d_ff=1024, vocab=512,
+    ),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Random init; per-layer weights stacked on a leading L axis for scan."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    L, d, ff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+
+    def norm_init(k, *shape):
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(shape[-2])
+
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": {
+            "ln1": jnp.ones((L, d), jnp.float32),
+            "ln2": jnp.ones((L, d), jnp.float32),
+            "wq": norm_init(ks[1], L, d, qd),
+            "wk": norm_init(ks[2], L, d, kvd),
+            "wv": norm_init(ks[3], L, d, kvd),
+            "wo": norm_init(ks[4], L, qd, d),
+            "w_gate": norm_init(ks[5], L, d, ff),
+            "w_up": norm_init(ks[6], L, d, ff),
+            "w_down": norm_init(ks[7], L, ff, d),
+        },
+    }
+
+
+def param_flatten_order(cfg: ModelConfig) -> list:
+    """(name, shape, dtype) in jax pytree flatten order — recorded in the
+    manifest so the Rust runtime feeds the npz entries correctly."""
+    params = jax.eval_shape(lambda: init_params(cfg))
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        out.append((name, tuple(leaf.shape), str(leaf.dtype)))
+    return out
+
+
+def _rms_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * lax.rsqrt(var + 1e-6) * scale
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [T, H, D], positions: [T]."""
+    head_dim = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, D/2]
+    cos, sin = jnp.cos(angles)[:, None, :], jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x1 * sin + x2 * cos
+    return jnp.stack([rx1, rx2], axis=-1).reshape(x.shape)
+
+
+def _qkv(cfg, lp, h, positions):
+    """Project + rope. h: [T, d] -> q [T,H,D], k/v [T,KH,D]."""
+    T = h.shape[0]
+    q = (h @ lp["wq"]).reshape(T, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(T, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(T, cfg.n_kv_heads, cfg.head_dim)
+    return _rope(q, positions, cfg.rope_theta), _rope(k, positions, cfg.rope_theta), v
+
+
+def _mlp(lp, x):
+    h = _rms_norm(x, lp["ln2"])
+    return x + (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token_ids: jnp.ndarray,  # [B] i32
+    k_pool: jnp.ndarray,  # [L, P, bs, KH, D]
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # [B, MAXB] i32
+    ctx_lens: jnp.ndarray,  # [B] i32 — INCLUDING the token decoded now
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode iteration for B sequences. Returns (logits, k_pool, v_pool)."""
+    positions = ctx_lens - 1  # [B]
+    x = params["embed"][token_ids]  # [B, d]
+    blocks = jnp.take_along_axis(
+        block_tables, (positions // cfg.block_size)[:, None], axis=1
+    )[:, 0]  # [B]
+    offsets = positions % cfg.block_size  # [B]
+
+    def layer(x, scanned):
+        lp, kp_l, vp_l = scanned
+        h = _rms_norm(x, lp["ln1"])
+        q, k, v = _qkv(cfg, lp, h, positions)
+        # Write this token's KV into its page before attending.
+        kp_l = kp_l.at[blocks, offsets].set(k)
+        vp_l = vp_l.at[blocks, offsets].set(v)
+        attn = paged_attention_decode(
+            q, kp_l, vp_l, block_tables, ctx_lens, variant=cfg.attn_variant
+        )
+        x = x + attn.reshape(x.shape[0], -1) @ lp["wo"]
+        x = _mlp(lp, x)
+        return x, (kp_l, vp_l)
+
+    x, (k_pool, v_pool) = lax.scan(
+        layer, x, (params["layers"], k_pool, v_pool)
+    )
+    logits = _rms_norm(x, params["ln_f"]) @ params["embed"].T  # [B, V]
+    return logits, k_pool, v_pool
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: Params,
+    token_ids: jnp.ndarray,  # [T] i32
+    k_pool: jnp.ndarray,  # [L, P, bs, KH, D]
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [MAXB] i32
+    cache_len: jnp.ndarray,  # scalar i32 — tokens already cached BEFORE chunk
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill/recompute one chunk of one sequence.
+
+    Returns (logits [T, V], k_pool, v_pool). Only the final chunk's logits
+    are consumed (row `real_len - 1`, to sample the first generated token —
+    full rows are returned because the Rust engine pads chunks to compiled
+    sizes); earlier chunks run purely to rebuild KV — exactly the §4.2
+    recomputation semantics.
+    """
+    T = token_ids.shape[0]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    positions = cache_len + jnp.arange(T, dtype=jnp.int32)  # [T]
+    x = params["embed"][token_ids]  # [T, d]
+    blocks = block_table[positions // cfg.block_size]  # [T]
+    offsets = positions % cfg.block_size
+
+    def layer(x, scanned):
+        lp, kp_l, vp_l = scanned
+        h = _rms_norm(x, lp["ln1"])
+        q, k, v = _qkv(cfg, lp, h, positions)
+        kp_l = kp_l.at[blocks, offsets].set(k)
+        vp_l = vp_l.at[blocks, offsets].set(v)
+        attn = chunked_prefill_attention(
+            q, kp_l, vp_l, block_table, cache_len, variant=cfg.attn_variant
+        )
+        x = x + attn.reshape(T, -1) @ lp["wo"]
+        x = _mlp(lp, x)
+        return x, (kp_l, vp_l)
+
+    x, (k_pool, v_pool) = lax.scan(
+        layer, x, (params["layers"], k_pool, v_pool)
+    )
+    logits = _rms_norm(x, params["ln_f"]) @ params["embed"].T  # [T, V]
+    return logits, k_pool, v_pool
+
+
+def ref_forward_full(
+    cfg: ModelConfig, params: Params, token_ids: jnp.ndarray
+) -> jnp.ndarray:
+    """Oracle: dense causal forward over the whole sequence, no paging.
+
+    Used by tests to validate that any composition of prefill chunks and
+    decode steps through the paged pool reproduces the dense computation.
+    """
+    from compile.kernels import ref
+
+    T = token_ids.shape[0]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = params["embed"][token_ids]
+
+    def layer(x, lp):
+        h = _rms_norm(x, lp["ln1"])
+        q, k, v = _qkv(cfg, lp, h, positions)
+        attn = ref.attention(q, k, v, positions)
+        x = x + attn.reshape(T, -1) @ lp["wo"]
+        x = _mlp(lp, x)
+        return x, None
+
+    x, _ = lax.scan(layer, x, params["layers"])
+    return _rms_norm(x, params["ln_f"]) @ params["embed"].T  # [T, V]

@@ -1,0 +1,211 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps the kernels over batch sizes, head/GQA geometry, context
+lengths (including page-boundary edges), and dtypes — the CORE correctness
+signal for the hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chunked_prefill_attention, paged_attention_decode
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32 else dict(
+        rtol=2e-2, atol=2e-2
+    )
+
+
+def make_pool(rng, n_blocks, block_size, kv_heads, head_dim, dtype):
+    k = rng.standard_normal((n_blocks, block_size, kv_heads, head_dim))
+    v = rng.standard_normal((n_blocks, block_size, kv_heads, head_dim))
+    return jnp.asarray(k, dtype), jnp.asarray(v, dtype)
+
+
+# ---------------------------------------------------------------- decode
+
+decode_cases = st.tuples(
+    st.integers(1, 4),  # batch
+    st.sampled_from([(4, 4), (8, 8), (8, 2), (10, 10), (6, 3)]),  # (H, KH)
+    st.sampled_from([8, 16]),  # block_size
+    st.sampled_from([16, 32]),  # head_dim
+    st.integers(0, 1000),  # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    decode_cases,
+    st.sampled_from(["float32", "bfloat16"]),
+    st.sampled_from(["stream", "gather"]),
+)
+def test_paged_decode_matches_ref(case, dtype_name, variant):
+    batch, (H, KH), bs, D, seed = case
+    dtype = jnp.dtype(dtype_name)
+    rng = np.random.default_rng(seed)
+    max_blocks = 6
+    n_blocks = batch * max_blocks + 2
+    kp, vp = make_pool(rng, n_blocks, bs, KH, D, dtype)
+    bt = jnp.asarray(
+        rng.permutation(n_blocks)[: batch * max_blocks].reshape(batch, max_blocks),
+        jnp.int32,
+    )
+    # context lengths hit page boundaries: 1, bs, bs+1, full
+    choices = [1, bs - 1, bs, bs + 1, 2 * bs, max_blocks * bs]
+    lens = jnp.asarray(rng.choice(choices, batch), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((batch, H, D)), dtype)
+
+    out = paged_attention_decode(q, kp, vp, bt, lens, variant=variant)
+    expect = ref.ref_paged_attention_decode(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_single_token_context():
+    """ctx_len=1: attention over exactly the current token -> out == v."""
+    rng = np.random.default_rng(7)
+    kp, vp = make_pool(rng, 4, 8, 2, 16, jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 2, 16)), jnp.float32)
+    bt = jnp.asarray([[2, 0, 1, 3]], jnp.int32)
+    out = paged_attention_decode(q, kp, vp, bt, jnp.asarray([1], jnp.int32))
+    np.testing.assert_allclose(out[0], vp[2, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_ignores_stale_pool_contents():
+    """Tokens beyond ctx_len (stale pages) must not affect the output."""
+    rng = np.random.default_rng(8)
+    kp, vp = make_pool(rng, 8, 8, 4, 16, jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 4, 16)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    lens = jnp.asarray([11], jnp.int32)
+    out1 = paged_attention_decode(q, kp, vp, bt, lens)
+    # scribble over everything past position 11
+    kp2 = kp.at[1, 3:].set(99.0).at[2:].set(-99.0)
+    vp2 = vp.at[1, 3:].set(99.0).at[2:].set(-99.0)
+    out2 = paged_attention_decode(q, kp2, vp2, bt, lens)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_jit_lowering_matches_eager():
+    rng = np.random.default_rng(9)
+    kp, vp = make_pool(rng, 12, 16, 8, 32, jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, 8, 32)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(12)[:8].reshape(2, 4), jnp.int32)
+    lens = jnp.asarray([5, 64], jnp.int32)
+    eager = paged_attention_decode(q, kp, vp, bt, lens)
+    jitted = jax.jit(paged_attention_decode)(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(eager, jitted, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- prefill
+
+prefill_cases = st.tuples(
+    st.integers(1, 24),  # chunk length T
+    st.integers(0, 40),  # cache_len before chunk
+    st.sampled_from([(4, 4), (8, 2), (6, 3)]),  # (H, KH)
+    st.sampled_from([8, 16]),  # block_size
+    st.integers(0, 1000),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    prefill_cases,
+    st.sampled_from(["float32", "bfloat16"]),
+    st.sampled_from(["stream", "gather"]),
+)
+def test_chunked_prefill_matches_ref(case, dtype_name, variant):
+    T, cache, (H, KH), bs, seed = case
+    dtype = jnp.dtype(dtype_name)
+    rng = np.random.default_rng(seed)
+    D = 16
+    max_blocks = (cache + T + bs - 1) // bs + 1
+    n_blocks = max_blocks + 3
+    kp, vp = make_pool(rng, n_blocks, bs, KH, D, dtype)
+    bt = jnp.asarray(rng.permutation(n_blocks)[:max_blocks], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((T, H, D)), dtype)
+
+    out = chunked_prefill_attention(q, kp, vp, bt, cache, variant=variant)
+    expect = ref.ref_chunked_prefill_attention(q, kp, vp, bt, cache)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+def test_prefill_zero_cache_is_plain_causal():
+    """cache_len=0 must equal dense causal attention over the chunk."""
+    rng = np.random.default_rng(11)
+    T, H, D, bs = 12, 4, 16, 8
+    kp, vp = make_pool(rng, 4, bs, H, D, jnp.float32)
+    bt = jnp.asarray([1, 3, 0, 2], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((T, H, D)), jnp.float32)
+    out = chunked_prefill_attention(q, kp, vp, bt, 0)
+    k = ref.gather_context(kp, bt, T)
+    v = ref.gather_context(vp, bt, T)
+    expect = ref.attention(q, k, v, jnp.arange(T))
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_causality_last_token_invariant():
+    """Changing the chunk's LAST key page slot must not affect earlier rows'
+    outputs (strict causality inside the chunk)."""
+    rng = np.random.default_rng(12)
+    T, H, D, bs = 8, 4, 16, 8
+    kp, vp = make_pool(rng, 4, bs, H, D, jnp.float32)
+    bt = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((T, H, D)), jnp.float32)
+    out1 = chunked_prefill_attention(q, kp, vp, bt, 0)
+    kp2 = kp.at[0, T - 1].set(42.0)
+    vp2 = vp.at[0, T - 1].set(-42.0)
+    out2 = chunked_prefill_attention(q, kp2, vp2, bt, 0)
+    np.testing.assert_allclose(out1[: T - 1], out2[: T - 1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[T - 1], out2[T - 1])
+
+
+def test_prefill_equals_decode_composition():
+    """Prefilling T tokens must equal T successive decode steps (chunked
+    recomputation restores exactly the state decode would have built)."""
+    rng = np.random.default_rng(13)
+    T, H, KH, D, bs = 10, 4, 2, 16, 8
+    n_blocks, max_blocks = 6, 3
+    kp, vp = make_pool(rng, n_blocks, bs, KH, D, jnp.float32)
+    bt = jnp.asarray([4, 1, 5], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((T, H, D)), jnp.float32)
+
+    chunk_out = chunked_prefill_attention(q, kp, vp, bt, 0)
+    # decode path: one token at a time with growing ctx_len
+    rows = []
+    for i in range(T):
+        o = paged_attention_decode(
+            q[i : i + 1], kp, vp, bt[None], jnp.asarray([i + 1], jnp.int32)
+        )
+        rows.append(o[0])
+    np.testing.assert_allclose(
+        chunk_out, jnp.stack(rows), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_stream_and_gather_variants_agree():
+    """The TPU-shaped streaming kernel and the CPU gather lowering are the
+    same function (DESIGN.md §Perf)."""
+    rng = np.random.default_rng(99)
+    B, H, KH, D, P, bs, MAXB = 2, 8, 2, 32, 32, 16, 6
+    kp, vp = make_pool(rng, P, bs, KH, D, jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P)[: B * MAXB].reshape(B, MAXB), jnp.int32)
+    lens = jnp.asarray([7, 77], jnp.int32)
+    a = paged_attention_decode(q, kp, vp, bt, lens, variant="stream")
+    b = paged_attention_decode(q, kp, vp, bt, lens, variant="gather")
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+    qc = jnp.asarray(rng.standard_normal((9, H, D)), jnp.float32)
+    a = chunked_prefill_attention(qc, kp, vp, bt[0], 21, variant="stream")
+    b = chunked_prefill_attention(qc, kp, vp, bt[0], 21, variant="gather")
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,145 @@
+"""L2 model correctness: paged prefill/decode vs the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+def fresh_pools(cfg):
+    return (
+        jnp.zeros(cfg.pool_shape(), jnp.float32),
+        jnp.zeros(cfg.pool_shape(), jnp.float32),
+    )
+
+
+def rand_block_table(cfg, rng):
+    return jnp.asarray(
+        rng.permutation(cfg.num_blocks)[: cfg.max_blocks_per_seq], jnp.int32
+    )
+
+
+@pytest.fixture(scope="module", params=list(M.MODELS))
+def model(request):
+    cfg = M.MODELS[request.param]
+    return cfg, M.init_params(cfg, seed=0)
+
+
+def test_param_flatten_order_covers_all_leaves(model):
+    cfg, params = model
+    order = M.param_flatten_order(cfg)
+    leaves = jax.tree_util.tree_leaves(params)
+    assert len(order) == len(leaves)
+    for (name, shape, dtype), leaf in zip(order, leaves):
+        assert tuple(leaf.shape) == tuple(shape), name
+        assert str(leaf.dtype) == dtype, name
+
+
+@pytest.mark.parametrize("chunk", [4, 7, 16])
+def test_chunked_prefill_matches_dense(model, chunk):
+    cfg, params = model
+    rng = np.random.default_rng(chunk)
+    L = 23
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, L), jnp.int32)
+    dense = M.ref_forward_full(cfg, params, toks)
+
+    kp, vp = fresh_pools(cfg)
+    bt = rand_block_table(cfg, rng)
+    cache, last = 0, None
+    for s in range(0, L, chunk):
+        piece = toks[s : s + chunk]
+        chunk_logits, kp, vp = M.prefill_chunk(cfg, params, piece, kp, vp, bt, cache)
+        cache += piece.shape[0]
+        last = chunk_logits[-1]
+        # every chunk's rows must match the dense forward at its positions
+        np.testing.assert_allclose(
+            chunk_logits, dense[s : s + piece.shape[0]], **TOL
+        )
+    np.testing.assert_allclose(last, dense[-1], **TOL)
+
+
+def test_decode_after_prefill_matches_dense(model):
+    cfg, params = model
+    rng = np.random.default_rng(42)
+    L = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, L), jnp.int32)
+    kp, vp = fresh_pools(cfg)
+    bt = rand_block_table(cfg, rng)
+    prefill_logits, kp, vp = M.prefill_chunk(cfg, params, toks, kp, vp, bt, 0)
+    last = prefill_logits[-1]
+
+    seq, cache = toks, L
+    for _ in range(4):
+        nxt = jnp.argmax(last).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt[None]])
+        cache += 1
+        logits, kp, vp = M.decode_step(
+            cfg, params, nxt[None], kp, vp, bt[None],
+            jnp.asarray([cache], jnp.int32),
+        )
+        last = logits[0]
+        dense = M.ref_forward_full(cfg, params, seq)[-1]
+        np.testing.assert_allclose(last, dense, **TOL)
+
+
+def test_batched_decode_matches_per_sequence(model):
+    """A batch-B decode step must equal B independent batch-1 steps."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    B = 4
+    kp, vp = fresh_pools(cfg)
+    bts, lens, toks = [], [], []
+    blocks = rng.permutation(cfg.num_blocks)
+    per = cfg.max_blocks_per_seq // B or 1
+    cache_lens = [3, 9, 17, 33]
+    for b in range(B):
+        bt = np.full(cfg.max_blocks_per_seq, 0, np.int32)
+        mine = blocks[b * 8 : b * 8 + 8]
+        bt[: len(mine)] = mine
+        bts.append(bt)
+        lens.append(cache_lens[b])
+        toks.append(rng.integers(0, cfg.vocab))
+        # seed pools with random prior context for this sequence
+        prior = jnp.asarray(rng.integers(0, cfg.vocab, cache_lens[b] - 1), jnp.int32)
+        if cache_lens[b] > 1:
+            _, kp, vp = M.prefill_chunk(
+                cfg, params, prior, kp, vp, jnp.asarray(bt), 0
+            )
+    bts = jnp.asarray(np.stack(bts))
+    lens_a = jnp.asarray(lens, jnp.int32)
+    toks_a = jnp.asarray(toks, jnp.int32)
+
+    batched, kp_b, vp_b = M.decode_step(cfg, params, toks_a, kp, vp, bts, lens_a)
+    for b in range(B):
+        single, _, _ = M.decode_step(
+            cfg, params, toks_a[b : b + 1], kp, vp,
+            bts[b : b + 1], lens_a[b : b + 1],
+        )
+        np.testing.assert_allclose(batched[b], single[0], **TOL)
+
+
+def test_gqa_model_uses_fewer_kv_heads():
+    cfg = M.MODELS["llama-mini"]
+    assert cfg.n_kv_heads < cfg.n_heads
+    assert cfg.pool_shape()[3] == cfg.n_kv_heads
+    # KV bytes per token shrink by the GQA ratio vs an MHA twin
+    mha = M.MODELS["gptj-mini"]
+    assert cfg.kv_bytes_per_token() * (cfg.n_heads // cfg.n_kv_heads) == (
+        mha.kv_bytes_per_token()
+    )
+
+
+def test_pool_untouched_blocks_preserved(model):
+    """Prefill must only write pages in the sequence's block table."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    kp, vp = fresh_pools(cfg)
+    kp = kp.at[:, -1].set(123.0)  # sentinel page not in the table
+    bt = jnp.asarray(np.arange(cfg.max_blocks_per_seq), jnp.int32)  # excludes last
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, 9), jnp.int32)
+    _, kp2, _ = M.prefill_chunk(cfg, params, toks, kp, vp, bt, 0)
+    np.testing.assert_array_equal(kp2[:, -1], kp[:, -1])

@@ -1,0 +1,37 @@
+//! End-to-end engine benchmarks (one per Fig. 2 policy): full mixed-workload
+//! runs on the simulated backend. The per-run wall time here is the L3
+//! scheduler + cost model only — it bounds how fast Fig. 2 sweeps complete
+//! and how much coordinator overhead a real deployment would see.
+
+use infercept::config::EngineConfig;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::Engine;
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::bench::Bench;
+use infercept::workload::{WorkloadGen, WorkloadKind};
+
+fn main() {
+    let bench = Bench::quick();
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 42).generate(100, 2.0);
+
+    for policy in Policy::fig2_set() {
+        let name = format!("engine/mixed100@2rps/{}", policy.name);
+        bench.run(&name, || {
+            let spec = SimModelSpec::gptj_6b();
+            let cfg = EngineConfig::for_sim(&spec, policy.clone());
+            let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+            let rep = engine.run_trace(&trace).unwrap();
+            assert_eq!(rep.completed, 100);
+        });
+    }
+
+    // Chatbot-only: long interceptions → many swaps/recomputes (§5.2).
+    let chat = WorkloadGen::new(WorkloadKind::Single(infercept::augment::AugmentKind::Chatbot), 7)
+        .generate(60, 2.0);
+    bench.run("engine/chatbot60@2rps/infercept", || {
+        let spec = SimModelSpec::gptj_6b();
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+        engine.run_trace(&chat).unwrap();
+    });
+}

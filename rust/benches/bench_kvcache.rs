@@ -1,0 +1,52 @@
+//! KV-cache manager hot-path benchmarks: allocation, growth, swap planning.
+//! These run on every scheduler iteration, so they must stay far below
+//! T_fwd (µs-scale).
+
+use infercept::kvcache::CacheManager;
+use infercept::util::bench::Bench;
+
+fn main() {
+    let bench = Bench::quick();
+
+    bench.run("kvcache/grow+release 64-block seq", || {
+        let mut m = CacheManager::new(16, 8192, 8192);
+        for req in 0..64u64 {
+            m.grow(req, 1024).unwrap();
+            m.advance(req, 1024);
+        }
+        for req in 0..64u64 {
+            m.release(req);
+        }
+    });
+
+    bench.run("kvcache/swap out+in 128 blocks", || {
+        let mut m = CacheManager::new(16, 8192, 8192);
+        m.grow(1, 2048).unwrap();
+        m.advance(1, 2048);
+        let out = m.swap_out(1, 128);
+        assert_eq!(out.len(), 128);
+        let back = m.swap_in(1, 128);
+        assert_eq!(back.len(), 128);
+        m.release(1);
+    });
+
+    bench.run("kvcache/gpu_tokens over 256 seqs", || {
+        let mut m = CacheManager::new(16, 65_536, 16);
+        for req in 0..256u64 {
+            m.grow(req, 1500).unwrap();
+            m.advance(req, 1500);
+        }
+        std::hint::black_box(m.gpu_tokens());
+        for req in 0..256u64 {
+            m.release(req);
+        }
+    });
+
+    bench.run("kvcache/block_table of 2k-token seq", || {
+        let mut m = CacheManager::new(16, 4096, 16);
+        m.grow(1, 2048).unwrap();
+        m.advance(1, 2048);
+        std::hint::black_box(m.gpu_block_table(1).unwrap());
+        m.release(1);
+    });
+}

@@ -1,0 +1,52 @@
+//! PJRT runtime benchmarks: the measured T_fwd of the real decode/prefill
+//! executables (the numbers the offline profiler feeds the waste
+//! equations). Skips gracefully when artifacts are absent.
+
+use infercept::runtime::pool::HostPool;
+use infercept::runtime::PjrtRuntime;
+use infercept::util::bench::Bench;
+
+fn main() {
+    let manifest = std::path::Path::new("artifacts/manifest.json");
+    if !manifest.exists() {
+        println!("bench_runtime: artifacts/manifest.json not found — run `make artifacts`; skipping");
+        return;
+    }
+    let rt = match PjrtRuntime::load(manifest, "gptj-mini") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("bench_runtime: load failed ({e}); skipping");
+            return;
+        }
+    };
+    let geom = rt.entry.geometry.clone();
+    let bench = Bench::quick();
+    let mut k = HostPool::new(&geom, 32);
+    let mut v = HostPool::new(&geom, 32);
+    let table: Vec<i32> = (0..geom.max_blocks_per_seq as i32).collect();
+
+    for b in rt.decode_batches() {
+        let tokens = vec![3i32; b];
+        let tables: Vec<i32> = (0..b).flat_map(|_| table.clone()).collect();
+        let lens = vec![128i32; b];
+        bench.run(&format!("runtime/decode b={b} ctx=128"), || {
+            rt.decode_step(&mut k, &mut v, &tokens, &tables, &lens).unwrap();
+        });
+    }
+    for t in rt.prefill_chunks() {
+        let toks = vec![3i32; t];
+        bench.run(&format!("runtime/prefill t={t}"), || {
+            rt.prefill_chunk(&mut k, &mut v, &toks, &table, 0).unwrap();
+        });
+    }
+    bench.run("runtime/swap copy 8 blocks", || {
+        for i in 0..8 {
+            k.copy_out(i, i % 32);
+            v.copy_out(i, i % 32);
+        }
+        for i in 0..8 {
+            k.copy_in(i % 32, i);
+            v.copy_in(i % 32, i);
+        }
+    });
+}

@@ -1,0 +1,78 @@
+//! Scheduler-core benchmarks: waste equations, the interception decision
+//! over many paused requests, budget solving, queue churn. All are
+//! per-iteration costs of the L3 coordinator.
+
+use infercept::augment::{AugmentKind, ALL_KINDS};
+use infercept::coordinator::budget::{self, BudgetInputs};
+use infercept::coordinator::estimator::{DurationEstimator, EstimatorKind};
+use infercept::coordinator::policy::Policy;
+use infercept::coordinator::scheduler::{
+    decide_interceptions, BatchStats, Disposition, FcfsQueue, PausedView,
+};
+use infercept::coordinator::waste::{min_waste, WasteInputs};
+use infercept::sim::SimModelSpec;
+use infercept::util::bench::Bench;
+
+fn main() {
+    let bench = Bench::quick();
+    let spec = SimModelSpec::gptj_6b();
+    let profile = spec.profile.clone();
+
+    bench.run("waste/min_waste eq1-5", || {
+        let w = WasteInputs {
+            ctx_tokens: 1500,
+            other_tokens: 12_000,
+            kv_bytes_per_token: spec.kv_bytes_per_token,
+            est_interception_us: 3e6,
+            chunk_tokens: 256,
+            running_query: 48,
+            running_ctx: 12_000,
+        };
+        std::hint::black_box(min_waste(&profile, &w));
+    });
+
+    let views: Vec<PausedView> = (0..128)
+        .map(|i| PausedView {
+            req: i,
+            kind: ALL_KINDS[(i % 6) as usize],
+            disposition: if i % 3 == 0 { Disposition::Preserved } else { Disposition::Fresh },
+            ctx_tokens: 500 + (i as usize * 37) % 2000,
+            gpu_tokens: 500 + (i as usize * 37) % 2000,
+            elapsed_us: (i * 10_000) as u64,
+            actual_total_us: 1_000_000,
+        })
+        .collect();
+    let batch = BatchStats {
+        other_tokens: 20_000,
+        running_query: 64,
+        kv_bytes_per_token: spec.kv_bytes_per_token,
+        chunk_tokens: 256,
+    };
+    let policy = Policy::infercept();
+    let est = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
+    bench.run("scheduler/decide 128 paused", || {
+        std::hint::black_box(decide_interceptions(
+            &policy, &est, &profile, &views, &batch, 4096,
+        ));
+    });
+
+    bench.run("budget/solve", || {
+        std::hint::black_box(budget::solve(&BudgetInputs {
+            swap_limit: 4096,
+            want_out: 10_000,
+            want_in: 3_000,
+            free_cpu: 50_000,
+            free_gpu: 2_000,
+        }));
+    });
+
+    bench.run("queues/push+pop 1k FCFS", || {
+        let mut q = FcfsQueue::default();
+        for i in 0..1000u64 {
+            q.push((i * 7919) % 1000, i);
+        }
+        while q.pop_front().is_some() {}
+    });
+
+    let _ = AugmentKind::Math; // keep import used in all cfgs
+}

@@ -1,0 +1,57 @@
+//! `infercept estimator-eval` — §4.4: how close do the TypeProfile and
+//! Dynamic estimators get to an oracle that knows exact interception
+//! durations? (The paper reports the dynamic estimator reaches 93% of
+//! oracle performance on the mixed workload.)
+
+use anyhow::{anyhow, Result};
+
+use crate::cmds::{sim_run_once, write_csv};
+use crate::coordinator::estimator::EstimatorKind;
+use crate::coordinator::policy::Policy;
+use crate::sim::SimModelSpec;
+use crate::util::cli::Args;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = SimModelSpec::by_name(&args.str_or("model", "6b"))
+        .ok_or_else(|| anyhow!("unknown --model"))?;
+    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+        .ok_or_else(|| anyhow!("unknown --workload"))?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let n = args.usize_or("requests", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let trace = WorkloadGen::new(kind, seed)
+        .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
+        .generate(n, rate);
+
+    println!(
+        "Estimator evaluation (§4.4) — model {} workload {} @ {rate} req/s",
+        spec.name,
+        kind.name()
+    );
+    let mut oracle_lat = None;
+    let mut rows = vec![];
+    for (name, est) in [
+        ("oracle", EstimatorKind::Oracle),
+        ("profile", EstimatorKind::TypeProfile),
+        ("dynamic", EstimatorKind::Dynamic),
+    ] {
+        let rep = sim_run_once(&spec, Policy::infercept_with(est), &trace, seed)?;
+        let lat = rep.normalized_latency_ms();
+        if name == "oracle" {
+            oracle_lat = Some(lat);
+        }
+        // "performance" = inverse normalized latency relative to oracle
+        let rel = oracle_lat.map(|o| o / lat * 100.0).unwrap_or(100.0);
+        println!(
+            "{name:<8} norm-lat {lat:>8.2} ms/tok  relative perf {rel:>6.1}%  waste {:>8.1} GB·s",
+            rep.waste.total()
+        );
+        rows.push(format!("{name},{lat:.4},{rel:.2},{:.4}", rep.waste.total()));
+    }
+    if let Some(path) = args.get("out") {
+        write_csv(path, "estimator,norm_latency_ms,relative_perf_pct,waste_gbs", &rows)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! `infercept fig2` — reproduce Figure 2: normalized latency, throughput,
+//! and TTFT versus request rate for the five systems across model setups.
+//!
+//! The paper's four columns are `--model 6b | 13b | 13b-tp2 | 70b`; one
+//! invocation sweeps one model over `--rates` for all five policies and
+//! prints the three rows (plus the §3.2 waste report with `--report waste`).
+
+use anyhow::{anyhow, Result};
+
+use crate::cmds::{sim_run_once, write_csv};
+use crate::coordinator::policy::Policy;
+use crate::metrics::RunReport;
+use crate::sim::SimModelSpec;
+use crate::util::cli::Args;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = SimModelSpec::by_name(&args.str_or("model", "6b"))
+        .ok_or_else(|| anyhow!("unknown --model"))?;
+    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+        .ok_or_else(|| anyhow!("unknown --workload"))?;
+    let rates = args.f64_list_or("rates", &[0.5, 1.0, 1.5, 2.0, 2.5, 3.0])?;
+    let n = args.usize_or("requests", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out = args.get("out").map(|s| s.to_string());
+
+    println!(
+        "Figure 2 — model {} workload {} ({} requests/point, seed {seed})",
+        spec.name,
+        kind.name(),
+        n
+    );
+    let policies = Policy::fig2_set();
+    let mut results: Vec<(f64, Vec<RunReport>)> = Vec::new();
+    for &rate in &rates {
+        let trace = WorkloadGen::new(kind, seed)
+            .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
+            .generate(n, rate);
+        let reps = policies
+            .iter()
+            .map(|p| sim_run_once(&spec, p.clone(), &trace, seed))
+            .collect::<Result<Vec<_>>>()?;
+        results.push((rate, reps));
+    }
+
+    for (metric, f) in [
+        ("normalized latency (ms/token)", metric_norm as fn(&RunReport) -> f64),
+        ("throughput (finished req/s)", metric_thru),
+        ("median TTFT (ms)", metric_ttft),
+    ] {
+        println!("\n== {metric} ==");
+        print!("{:>8}", "rate");
+        for p in &policies {
+            print!("{:>18}", p.name);
+        }
+        println!();
+        for (rate, reps) in &results {
+            print!("{rate:>8.2}");
+            for r in reps {
+                print!("{:>18.2}", f(r));
+            }
+            println!();
+        }
+    }
+
+    if args.str_or("report", "") == "waste" {
+        println!("\n== GPU waste (GB·s) and overhead shares ==");
+        for (rate, reps) in &results {
+            for r in reps {
+                println!(
+                    "rate {rate:>5.2} {:<18} waste {:>10.1} GB·s  recompute-fwd {:>5.1}%  \
+                     stall {:>6.2}s  paused≥50%-mem {:>6.1}s",
+                    r.policy,
+                    r.waste.total(),
+                    r.recompute_fwd_fraction * 100.0,
+                    r.stall_s,
+                    r.paused_majority_s,
+                );
+            }
+        }
+    }
+
+    if let Some(path) = out {
+        let mut rows = vec![];
+        for (rate, reps) in &results {
+            for r in reps {
+                rows.push(format!(
+                    "{},{},{},{rate},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+                    spec.name,
+                    kind.name(),
+                    r.policy,
+                    r.normalized_latency_ms(),
+                    r.throughput_rps(),
+                    r.median_ttft_ms(),
+                    r.waste.total(),
+                    r.recompute_fwd_fraction,
+                    r.completed,
+                ));
+            }
+        }
+        write_csv(
+            &path,
+            "model,workload,policy,rate,norm_latency_ms,throughput_rps,ttft_ms,waste_gbs,recompute_frac,completed",
+            &rows,
+        )?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn metric_norm(r: &RunReport) -> f64 {
+    r.normalized_latency_ms()
+}
+
+fn metric_thru(r: &RunReport) -> f64 {
+    r.throughput_rps()
+}
+
+fn metric_ttft(r: &RunReport) -> f64 {
+    r.median_ttft_ms()
+}

@@ -1,0 +1,65 @@
+//! `infercept fig3` — reproduce Figure 3: the technique-breakdown ablation.
+//! Each bar adds one InferCept technique to the previous configuration;
+//! reports normalized latency and GPU memory waste at a fixed load.
+
+use anyhow::{anyhow, Result};
+
+use crate::cmds::{sim_run_once, write_csv};
+use crate::coordinator::policy::Policy;
+use crate::sim::SimModelSpec;
+use crate::util::cli::Args;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = SimModelSpec::by_name(&args.str_or("model", "6b"))
+        .ok_or_else(|| anyhow!("unknown --model"))?;
+    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+        .ok_or_else(|| anyhow!("unknown --workload"))?;
+    let rate = args.f64_or("rate", 2.0)?; // the paper's Fig. 3 load
+    let n = args.usize_or("requests", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let trace = WorkloadGen::new(kind, seed)
+        .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
+        .generate(n, rate);
+
+    println!(
+        "Figure 3 — ablation ladder, model {} workload {} @ {rate} req/s ({n} requests)",
+        spec.name,
+        kind.name()
+    );
+    println!(
+        "{:<22} {:>16} {:>12} {:>14} {:>10}",
+        "configuration", "norm-lat ms/tok", "Δ vs prev", "waste GB·s", "completed"
+    );
+    let mut prev: Option<f64> = None;
+    let mut rows = vec![];
+    for policy in Policy::fig3_ladder() {
+        let name = policy.name;
+        let rep = sim_run_once(&spec, policy, &trace, seed)?;
+        let lat = rep.normalized_latency_ms();
+        let delta = prev.map(|p| format!("{:+.1}%", (lat - p) / p * 100.0)).unwrap_or_default();
+        println!(
+            "{:<22} {:>16.2} {:>12} {:>14.1} {:>10}",
+            name,
+            lat,
+            delta,
+            rep.waste.total(),
+            rep.completed
+        );
+        rows.push(format!(
+            "{},{},{rate},{:.4},{:.4},{}",
+            spec.name,
+            name,
+            lat,
+            rep.waste.total(),
+            rep.completed
+        ));
+        prev = Some(lat);
+    }
+    if let Some(path) = args.get("out") {
+        write_csv(path, "model,config,rate,norm_latency_ms,waste_gbs,completed", &rows)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

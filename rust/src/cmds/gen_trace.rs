@@ -1,0 +1,28 @@
+//! `infercept gen-trace` — generate a reproducible workload trace JSON.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::cli::Args;
+use crate::workload::{save_trace, WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+        .ok_or_else(|| anyhow!("unknown --workload"))?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let n = args.usize_or("requests", 100)?;
+    let seed = args.u64_or("seed", 42)?;
+    let ctx_scale = args.f64_or("ctx-scale", 1.0)?;
+    let max_ctx = args.usize_or("max-context", 0)?;
+    let out = args.str_or("out", "trace.json");
+
+    let trace = WorkloadGen::new(kind, seed)
+        .with_ctx_scale(ctx_scale, max_ctx)
+        .generate(n, rate);
+    save_trace(&trace, std::path::Path::new(&out))?;
+    let ints: usize = trace.iter().map(|t| t.script.num_interceptions()).sum();
+    println!(
+        "wrote {out}: {n} requests, {ints} interceptions, rate {rate}/s, kind {}",
+        kind.name()
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Experiment drivers behind the CLI subcommands — one per paper artifact
+//! (see DESIGN.md §5 for the experiment index).
+
+pub mod estimator_eval;
+pub mod fig2;
+pub mod fig3;
+pub mod gen_trace;
+pub mod profile;
+pub mod serve;
+pub mod sim_run;
+pub mod table1;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::coordinator::policy::Policy;
+use crate::engine::Engine;
+use crate::metrics::RunReport;
+use crate::sim::{SimBackend, SimModelSpec};
+use crate::workload::RequestTrace;
+
+/// Run one policy on one trace against a fresh simulated backend.
+pub fn sim_run_once(
+    spec: &SimModelSpec,
+    policy: Policy,
+    trace: &RequestTrace,
+    seed: u64,
+) -> Result<RunReport> {
+    let cfg = EngineConfig::for_sim(spec, policy).with_seed(seed);
+    let mut engine = Engine::new(Box::new(SimBackend::new(spec.clone())), cfg);
+    engine.run_trace(trace)
+}
+
+/// Append CSV rows to a file, writing the header when the file is new.
+pub fn write_csv(path: &str, header: &str, rows: &[String]) -> Result<()> {
+    use std::io::Write;
+    let new = !std::path::Path::new(path).exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if new {
+        writeln!(f, "{header}")?;
+    }
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}

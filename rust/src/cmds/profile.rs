@@ -1,0 +1,33 @@
+//! `infercept profile` — offline T_fwd profiling of the PJRT runtime
+//! (§4.5). Prints the fitted [`FwdProfile`] the serve command will use.
+
+use anyhow::Result;
+
+use crate::profiler;
+use crate::runtime::PjrtRuntime;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let manifest = args.str_or("manifest", "artifacts/manifest.json");
+    let model = args.str_or("model", "gptj-mini");
+    let reps = args.usize_or("reps", 3)?;
+    let saturation = args.usize_or("saturation", 64)?;
+
+    println!("profiling {model} from {manifest} ({reps} reps per point)...");
+    let rt = PjrtRuntime::load(std::path::Path::new(&manifest), &model)?;
+    let samples = profiler::measure(&rt, reps)?;
+    println!("prefill samples (chunk -> µs):");
+    for (q, t) in &samples.prefill {
+        println!("  {q:>5} -> {t}");
+    }
+    println!("decode-context samples (ctx -> µs):");
+    for (c, t) in &samples.decode_ctx {
+        println!("  {c:>5} -> {t}");
+    }
+    let p = profiler::fit(&samples, saturation);
+    println!(
+        "fitted FwdProfile: t_base {:.0} µs, {:.2} µs/ctx-token, {:.1} µs/query-token, S={}",
+        p.t_base_us, p.us_per_ctx_token, p.us_per_query_unsat, p.saturation_tokens
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! `infercept sim` — one policy × one workload on the simulated backend.
+
+use anyhow::{anyhow, Result};
+
+use crate::cmds::sim_run_once;
+use crate::coordinator::policy::Policy;
+use crate::sim::SimModelSpec;
+use crate::util::cli::Args;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let spec = SimModelSpec::by_name(&args.str_or("model", "6b"))
+        .ok_or_else(|| anyhow!("unknown --model"))?;
+    let policy = Policy::parse(&args.str_or("policy", "infercept"))
+        .ok_or_else(|| anyhow!("unknown --policy"))?;
+    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+        .ok_or_else(|| anyhow!("unknown --workload"))?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let n = args.usize_or("requests", 200)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let trace = WorkloadGen::new(kind, seed)
+        .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
+        .generate(n, rate);
+    let rep = sim_run_once(&spec, policy, &trace, seed)?;
+    println!("model={} workload={} rate={rate} n={n}", spec.name, kind.name());
+    println!("{}", rep.summary_line());
+    println!(
+        "  recompute-fwd {:.1}%  stall {:.2}s  evictions {}  swap out/in {}k/{}k tok  \
+         paused≥50%-mem {:.1}s of {:.1}s",
+        rep.recompute_fwd_fraction * 100.0,
+        rep.stall_s,
+        rep.evictions,
+        rep.swapped_out_tokens / 1000,
+        rep.swapped_in_tokens / 1000,
+        rep.paused_majority_s,
+        rep.duration_s,
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! `infercept table1` — reproduce Table 1 (interception properties of the
+//! six augmentations) from the trace generator, and with `--cdf` the
+//! Fig. 4/5 CDF series (interception time, #calls, returned tokens,
+//! context length).
+
+use anyhow::Result;
+
+use crate::augment::{AugmentProfile, ALL_KINDS};
+use crate::cmds::write_csv;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 2000)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    println!("Table 1 — interception properties, {n} sampled requests per type");
+    println!("(cells: measured mean / paper mean)\n");
+    println!(
+        "{:<9} {:>26} {:>22} {:>22}",
+        "Type", "Int Time (s)", "Num Interceptions", "Context Len"
+    );
+
+    let mut csv = vec![];
+    for kind in ALL_KINDS {
+        let gen = WorkloadGen::new(WorkloadKind::Single(kind), seed);
+        let mut rng = Pcg::new(seed ^ kind as u64);
+        let mut durs = vec![];
+        let mut nints = vec![];
+        let mut ctxs = vec![];
+        let mut rets = vec![];
+        for _ in 0..n {
+            let s = gen.sample_script(&mut rng, kind);
+            nints.push(s.num_interceptions() as f64);
+            for (j, seg) in
+                s.segments.iter().filter(|x| x.interception.is_some()).enumerate()
+            {
+                let int = seg.interception.as_ref().unwrap();
+                durs.push(int.duration_us as f64 / 1e6);
+                rets.push(int.ret_tokens as f64);
+                ctxs.push(s.ctx_at_interception(j) as f64);
+            }
+        }
+        let p = AugmentProfile::table1(kind);
+        let (dm, _) = stats::mean_var(&durs);
+        let (nm, _) = stats::mean_var(&nints);
+        let (cm, _) = stats::mean_var(&ctxs);
+        println!(
+            "{:<9} {:>12.4} /{:>11.4} {:>10.2} /{:>9.2} {:>11.0} /{:>9.0}",
+            kind.name(),
+            dm,
+            p.int_time_s.0,
+            nm,
+            p.num_int.0,
+            cm,
+            p.ctx_len.0
+        );
+        csv.push(format!(
+            "{},{dm:.6},{:.6},{nm:.3},{:.3},{cm:.1},{:.1}",
+            kind.name(),
+            p.int_time_s.0,
+            p.num_int.0,
+            p.ctx_len.0
+        ));
+
+        if args.flag("cdf") {
+            println!("  CDFs (Fig {} series):", if kind.short_running() { 4 } else { 5 });
+            for (label, xs) in [
+                ("int-time-s", &durs),
+                ("num-calls", &nints),
+                ("ret-tokens", &rets),
+                ("ctx-len", &ctxs),
+            ] {
+                let c = stats::cdf(xs, 10);
+                let line: Vec<String> =
+                    c.iter().map(|(v, q)| format!("{q:.1}:{v:.3}")).collect();
+                println!("    {label:<11} {}", line.join(" "));
+            }
+        }
+    }
+    if let Some(path) = args.get("out") {
+        write_csv(
+            path,
+            "kind,int_time_mean_s,paper_int_time_s,num_int_mean,paper_num_int,ctx_mean,paper_ctx",
+            &csv,
+        )?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Engine configuration: pool geometry, scheduling knobs, policy.
+//!
+//! Built either from a [`crate::sim::SimModelSpec`] (paper-scale simulation)
+//! or from the AOT manifest + offline profile (real PJRT serving).
+
+use crate::coordinator::policy::Policy;
+use crate::sim::SimModelSpec;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// Tokens per KV block (must match the AOT pool geometry in real mode).
+    pub block_size: usize,
+    pub num_gpu_blocks: usize,
+    pub num_cpu_blocks: usize,
+    /// KV bytes per cached token (the paper's `M`).
+    pub kv_bytes_per_token: usize,
+    /// GPU saturation point `S` in query tokens (§4.2).
+    pub saturation_tokens: usize,
+    /// vLLM-style admission cap on batched prefill tokens per iteration
+    /// (used by the non-chunked Discard family; chunked mode uses `S`).
+    pub max_batched_tokens: usize,
+    /// Floor chunk so prefill always progresses.
+    pub min_chunk: usize,
+    /// Free-block watermark kept for in-flight decodes.
+    pub watermark_blocks: usize,
+    /// Vocabulary for synthetic prompt tokens.
+    pub vocab: u32,
+    /// Interception-duration multiplier (1.0 in sim; real runs compress).
+    pub time_scale: f64,
+    /// Workload/prompt RNG seed.
+    pub seed: u64,
+    /// Cap on per-sequence context (blocks/seq × block size in real mode).
+    pub max_seq_tokens: usize,
+    /// Abort knob: maximum scheduler iterations (0 = unlimited).
+    pub max_iterations: u64,
+}
+
+impl EngineConfig {
+    /// Paper-scale configuration for a simulated GPU model.
+    pub fn for_sim(spec: &SimModelSpec, policy: Policy) -> EngineConfig {
+        EngineConfig {
+            policy,
+            block_size: spec.block_size,
+            num_gpu_blocks: spec.gpu_blocks,
+            num_cpu_blocks: spec.cpu_blocks,
+            kv_bytes_per_token: spec.kv_bytes_per_token,
+            saturation_tokens: spec.profile.saturation_tokens,
+            max_batched_tokens: (spec.profile.saturation_tokens * 8).max(4096),
+            min_chunk: 16,
+            watermark_blocks: spec.gpu_blocks / 100,
+            vocab: 32_000,
+            time_scale: 1.0,
+            seed: 0,
+            max_seq_tokens: spec.max_seq_tokens,
+            max_iterations: 0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_config_is_consistent() {
+        let spec = SimModelSpec::gptj_6b();
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        assert_eq!(cfg.block_size, spec.block_size);
+        assert!(cfg.num_gpu_blocks > 100);
+        assert!(cfg.max_seq_tokens <= cfg.num_gpu_blocks * cfg.block_size);
+        assert!(cfg.watermark_blocks < cfg.num_gpu_blocks / 10);
+    }
+}

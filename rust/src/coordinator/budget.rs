@@ -1,0 +1,178 @@
+//! Per-iteration swap-in/swap-out budget solver (§4.1).
+//!
+//! At iteration `i` the swap limit `N_i` is the token count whose transfer
+//! hides behind the iteration's forward pass (`T_swap(N_i) = T_fwd(B_i)`).
+//! The solver splits `N_i` between directions maximizing admitted work
+//! (swap-in + newly scheduled tokens) under the paper's three constraints:
+//!   1. `in + out ≤ N_i`
+//!   2. `out ≤ free_cpu + in`     (swap space conservation)
+//!   3. `in + new ≤ out + free_gpu` (GPU space conservation — enforced by
+//!      admission, which runs after this solver with the granted budgets)
+
+/// Token budgets granted for this iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapBudget {
+    pub out_tokens: usize,
+    pub in_tokens: usize,
+}
+
+/// Inputs to the solver, all in tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetInputs {
+    /// `N_i`: tokens transferable for free this iteration.
+    pub swap_limit: usize,
+    /// Tokens that intercepted requests want to move out.
+    pub want_out: usize,
+    /// Tokens that resumed (swap-queue) requests want to move in.
+    pub want_in: usize,
+    /// Free CPU swap space.
+    pub free_cpu: usize,
+    /// Free GPU pool space.
+    pub free_gpu: usize,
+}
+
+/// Maximize `in + new` admitted work. Swap-in gets priority for the link
+/// (it directly adds schedulable tokens — §4.3 keeps a dedicated swap queue
+/// precisely so the swap-in budget is always used); the remainder goes to
+/// swap-out, bounded by CPU space (constraint 2).
+///
+/// Swapping in more than `free_gpu` requires *simultaneous* swap-out to make
+/// room (constraint 3), which itself consumes link budget (constraint 1):
+/// any `in > free_gpu` needs `out ≥ in − free_gpu`, so `2·in − free_gpu ≤
+/// limit` — the `(limit + free_gpu) / 2` clamp below.
+pub fn solve(b: &BudgetInputs) -> SwapBudget {
+    let mut in_tokens = b.want_in.min(b.swap_limit).min(b.want_out + b.free_gpu);
+    if in_tokens > b.free_gpu {
+        in_tokens = in_tokens.min((b.swap_limit + b.free_gpu) / 2);
+    }
+    let remaining_link = b.swap_limit.saturating_sub(in_tokens);
+    let out_tokens = b.want_out.min(remaining_link).min(b.free_cpu + in_tokens);
+    debug_assert!(out_tokens + b.free_gpu >= in_tokens);
+    SwapBudget { out_tokens, in_tokens }
+}
+
+/// Check the constraints (used by property tests).
+pub fn feasible(b: &BudgetInputs, s: &SwapBudget) -> bool {
+    s.in_tokens + s.out_tokens <= b.swap_limit
+        && s.out_tokens <= b.free_cpu + s.in_tokens
+        && s.in_tokens <= b.free_gpu + s.out_tokens
+        && s.in_tokens <= b.want_in
+        && s.out_tokens <= b.want_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn swap_in_takes_priority() {
+        let b = BudgetInputs {
+            swap_limit: 100,
+            want_out: 100,
+            want_in: 80,
+            free_cpu: 1000,
+            free_gpu: 1000,
+        };
+        let s = solve(&b);
+        assert_eq!(s.in_tokens, 80);
+        assert_eq!(s.out_tokens, 20);
+        assert!(feasible(&b, &s));
+    }
+
+    #[test]
+    fn out_bounded_by_cpu_space() {
+        let b = BudgetInputs {
+            swap_limit: 100,
+            want_out: 100,
+            want_in: 0,
+            free_cpu: 30,
+            free_gpu: 0,
+        };
+        let s = solve(&b);
+        assert_eq!(s.out_tokens, 30);
+        assert!(feasible(&b, &s));
+    }
+
+    #[test]
+    fn swapping_in_frees_cpu_for_out() {
+        // Constraint 2 allows out ≤ free_cpu + in.
+        let b = BudgetInputs {
+            swap_limit: 100,
+            want_out: 50,
+            want_in: 40,
+            free_cpu: 0,
+            free_gpu: 100,
+        };
+        let s = solve(&b);
+        assert_eq!(s.in_tokens, 40);
+        assert_eq!(s.out_tokens, 40); // 0 free + 40 freed by swap-in
+        assert!(feasible(&b, &s));
+    }
+
+    #[test]
+    fn in_bounded_by_gpu_space_plus_out() {
+        let b = BudgetInputs {
+            swap_limit: 1000,
+            want_out: 0,
+            want_in: 500,
+            free_cpu: 1000,
+            free_gpu: 64,
+        };
+        let s = solve(&b);
+        assert_eq!(s.in_tokens, 64);
+        assert!(feasible(&b, &s));
+    }
+
+    #[test]
+    fn zero_limit_means_no_transfers() {
+        let b = BudgetInputs {
+            swap_limit: 0,
+            want_out: 100,
+            want_in: 100,
+            free_cpu: 100,
+            free_gpu: 100,
+        };
+        assert_eq!(solve(&b), SwapBudget { out_tokens: 0, in_tokens: 0 });
+    }
+
+    #[test]
+    fn prop_solution_always_feasible() {
+        prop::check("budget_feasible", 500, |rng| {
+            let b = BudgetInputs {
+                swap_limit: rng.usize(0, 2000),
+                want_out: rng.usize(0, 2000),
+                want_in: rng.usize(0, 2000),
+                free_cpu: rng.usize(0, 2000),
+                free_gpu: rng.usize(0, 2000),
+            };
+            let s = solve(&b);
+            assert!(feasible(&b, &s), "b={b:?} s={s:?}");
+        });
+    }
+
+    #[test]
+    fn prop_no_unilateral_improvement() {
+        // The solution is maximal for swap-in: granting one more in-token
+        // would violate some constraint or exceed demand.
+        prop::check("budget_in_maximal", 500, |rng| {
+            let b = BudgetInputs {
+                swap_limit: rng.usize(0, 500),
+                want_out: rng.usize(0, 500),
+                want_in: rng.usize(0, 500),
+                free_cpu: rng.usize(0, 500),
+                free_gpu: rng.usize(0, 500),
+            };
+            let s = solve(&b);
+            let bumped = SwapBudget { in_tokens: s.in_tokens + 1, ..s };
+            // Bumping swap-in (re-solving out for the smaller link slack)
+            // must be infeasible.
+            let re_out = b
+                .want_out
+                .min(b.swap_limit.saturating_sub(bumped.in_tokens))
+                .min(b.free_cpu + bumped.in_tokens);
+            let bumped = SwapBudget { out_tokens: re_out, ..bumped };
+            assert!(!feasible(&b, &bumped), "b={b:?} s={s:?} bumped={bumped:?}");
+        });
+    }
+}

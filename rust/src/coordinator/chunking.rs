@@ -1,0 +1,104 @@
+//! Recomputation chunking (§4.2).
+//!
+//! Decoding underuses GPU cores relative to its memory footprint; the spare
+//! capacity below the saturation point `S` recomputes discarded contexts
+//! "for free". The chunk for an iteration is `S − running_batch_tokens`;
+//! real-backend chunks must additionally decompose into the AOT-compiled
+//! prefill sizes.
+
+/// Query-token budget available for prefill/recompute in an iteration whose
+/// decode batch already schedules `running_query_tokens` (§4.2: chunk size =
+/// S − running group size, floored so progress is always possible).
+pub fn chunk_budget(saturation: usize, running_query_tokens: usize, floor: usize) -> usize {
+    saturation.saturating_sub(running_query_tokens).max(floor)
+}
+
+/// Decompose `tokens` of pending prefill into compiled chunk sizes.
+///
+/// Greedy: largest compiled size ≤ remaining while possible; the tail uses
+/// the smallest compiled size ≥ remaining (the backend pads — padded
+/// positions write scratch KV that later real tokens overwrite, see
+/// `python/compile/model.py`). With an empty `sizes` (sim backend) the
+/// answer is a single exact chunk.
+pub fn decompose(tokens: usize, sizes: &[usize]) -> Vec<usize> {
+    if tokens == 0 {
+        return vec![];
+    }
+    if sizes.is_empty() {
+        return vec![tokens];
+    }
+    let mut sorted = sizes.to_vec();
+    sorted.sort_unstable();
+    let mut out = Vec::new();
+    let mut rem = tokens;
+    while rem > 0 {
+        if let Some(&fit) = sorted.iter().rev().find(|&&s| s <= rem) {
+            out.push(fit);
+            rem -= fit;
+        } else {
+            // Tail smaller than every compiled size: use the smallest (pad).
+            out.push(sorted[0]);
+            rem = 0;
+        }
+    }
+    out
+}
+
+/// Tokens actually covered by a decomposition (== tokens, capped per chunk).
+pub fn covered(tokens: usize, chunks: &[usize]) -> usize {
+    tokens.min(chunks.iter().sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const SIZES: [usize; 4] = [16, 32, 64, 128];
+
+    #[test]
+    fn chunk_budget_shrinks_with_running_batch() {
+        assert_eq!(chunk_budget(512, 0, 16), 512);
+        assert_eq!(chunk_budget(512, 500, 16), 16); // floor
+        assert_eq!(chunk_budget(512, 128, 16), 384);
+    }
+
+    #[test]
+    fn decompose_exact_multiples() {
+        assert_eq!(decompose(256, &SIZES), vec![128, 128]);
+        assert_eq!(decompose(128 + 32, &SIZES), vec![128, 32]);
+        assert_eq!(decompose(16, &SIZES), vec![16]);
+    }
+
+    #[test]
+    fn decompose_pads_tail() {
+        assert_eq!(decompose(9, &SIZES), vec![16]);
+        assert_eq!(decompose(130, &SIZES), vec![128, 16]);
+    }
+
+    #[test]
+    fn decompose_empty_sizes_is_identity() {
+        assert_eq!(decompose(777, &[]), vec![777]);
+        assert_eq!(decompose(0, &SIZES), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn prop_decomposition_covers_with_bounded_padding() {
+        prop::check("decompose_covers", 500, |rng| {
+            let tokens = rng.usize(1, 2000);
+            let total: usize = decompose(tokens, &SIZES).iter().sum();
+            assert!(total >= tokens, "{total} < {tokens}");
+            assert!(total < tokens + 16, "overpadded: {total} for {tokens}");
+        });
+    }
+
+    #[test]
+    fn prop_chunks_are_compiled_sizes() {
+        prop::check("decompose_sizes_valid", 200, |rng| {
+            let tokens = rng.usize(1, 5000);
+            for c in decompose(tokens, &SIZES) {
+                assert!(SIZES.contains(&c), "{c}");
+            }
+        });
+    }
+}

@@ -1,0 +1,132 @@
+//! Interception-duration estimation (§4.4).
+//!
+//! `WastePreserve` (Eq. 2) needs `T̂_INT`. Three estimators:
+//!  * **Oracle** — the script's true duration (upper bound used by
+//!    `estimator_eval`; the paper reports the dynamic estimator reaches 93%
+//!    of oracle performance).
+//!  * **TypeProfile** — offline per-augmentation mean (the "augmentation
+//!    type as a hint" insight of §2.2).
+//!  * **Dynamic** — `T̂ = t_now − t_call`: the longer a request has been
+//!    intercepted, the larger the estimate. Needs no offline knowledge;
+//!    naturally re-evaluated every iteration, which is what lets InferCept
+//!    demote a long-preserved request to discard mid-interception.
+
+use std::collections::HashMap;
+
+use crate::augment::{AugmentKind, AugmentProfile, ALL_KINDS};
+use crate::util::Micros;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    Oracle,
+    TypeProfile,
+    Dynamic,
+}
+
+impl EstimatorKind {
+    pub fn parse(s: &str) -> Option<EstimatorKind> {
+        match s {
+            "oracle" => Some(EstimatorKind::Oracle),
+            "profile" => Some(EstimatorKind::TypeProfile),
+            "dynamic" => Some(EstimatorKind::Dynamic),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DurationEstimator {
+    pub kind: EstimatorKind,
+    /// Per-type mean duration in µs (offline profile, Table 1).
+    profile_means: HashMap<AugmentKind, f64>,
+    /// Durations are scaled in real mode; estimates must match the engine
+    /// clock, so the estimator applies the same scale.
+    pub time_scale: f64,
+}
+
+impl DurationEstimator {
+    pub fn new(kind: EstimatorKind, time_scale: f64) -> Self {
+        let profile_means = ALL_KINDS
+            .iter()
+            .map(|k| (*k, AugmentProfile::table1(*k).int_time_s.0 * 1e6))
+            .collect();
+        DurationEstimator { kind, profile_means, time_scale }
+    }
+
+    /// Estimated **remaining** interception time, µs (engine clock), for a
+    /// request of type `kind` that has been paused for `elapsed_us`.
+    /// `actual_total_us` is the script's scaled true duration (oracle only).
+    pub fn remaining_us(
+        &self,
+        kind: AugmentKind,
+        elapsed_us: Micros,
+        actual_total_us: Micros,
+    ) -> f64 {
+        match self.kind {
+            EstimatorKind::Oracle => (actual_total_us as f64 - elapsed_us as f64).max(0.0),
+            EstimatorKind::TypeProfile => {
+                let mean = self.profile_means[&kind] * self.time_scale;
+                // Remaining = profiled mean minus elapsed, floored at 10% of
+                // the mean (the call may simply be running long).
+                (mean - elapsed_us as f64).max(0.1 * mean)
+            }
+            EstimatorKind::Dynamic => {
+                // T̂ = t_now − t_call, floored at one engine tick so a
+                // freshly-paused request isn't treated as a zero-cost hold.
+                (elapsed_us as f64).max(1_000.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_counts_down_to_zero() {
+        let e = DurationEstimator::new(EstimatorKind::Oracle, 1.0);
+        assert_eq!(e.remaining_us(AugmentKind::Qa, 0, 500_000), 500_000.0);
+        assert_eq!(e.remaining_us(AugmentKind::Qa, 200_000, 500_000), 300_000.0);
+        assert_eq!(e.remaining_us(AugmentKind::Qa, 900_000, 500_000), 0.0);
+    }
+
+    #[test]
+    fn profile_uses_table1_means() {
+        let e = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
+        // Chatbot mean = 28.6 s
+        let r = e.remaining_us(AugmentKind::Chatbot, 0, 0);
+        assert!((r - 28.6e6).abs() < 1.0);
+        // Math mean = 90 µs
+        let r = e.remaining_us(AugmentKind::Math, 0, 0);
+        assert!((r - 90.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn profile_decays_with_elapsed_but_keeps_floor() {
+        let e = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
+        let full = e.remaining_us(AugmentKind::Chatbot, 0, 0);
+        let later = e.remaining_us(AugmentKind::Chatbot, 10_000_000, 0);
+        assert!(later < full);
+        let way_over = e.remaining_us(AugmentKind::Chatbot, 300_000_000, 0);
+        assert!(way_over >= 0.1 * full - 1.0);
+    }
+
+    #[test]
+    fn dynamic_grows_with_elapsed() {
+        let e = DurationEstimator::new(EstimatorKind::Dynamic, 1.0);
+        let early = e.remaining_us(AugmentKind::Image, 2_000, 0);
+        let late = e.remaining_us(AugmentKind::Image, 20_000_000, 0);
+        assert!(late > early);
+        assert_eq!(late, 20_000_000.0);
+        // floor for a brand-new pause
+        assert_eq!(e.remaining_us(AugmentKind::Image, 0, 0), 1_000.0);
+    }
+
+    #[test]
+    fn time_scale_shrinks_profile_estimates() {
+        let e = DurationEstimator::new(EstimatorKind::TypeProfile, 0.01);
+        let r = e.remaining_us(AugmentKind::Chatbot, 0, 0);
+        assert!((r - 0.286e6).abs() < 1.0);
+    }
+}

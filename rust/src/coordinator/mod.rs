@@ -1,0 +1,15 @@
+//! The InferCept coordinator: waste quantification (Eq. 1–5), interception
+//! policies, swap budgeting, recomputation chunking, interception-duration
+//! estimation, and the three-queue iteration scheduler.
+//!
+//! Everything here is *pure* policy logic — no backend, no clocks — so the
+//! identical code drives both the real PJRT engine and the paper-scale
+//! discrete-event simulation, and every rule is unit/property-testable in
+//! isolation.
+
+pub mod budget;
+pub mod chunking;
+pub mod estimator;
+pub mod policy;
+pub mod scheduler;
+pub mod waste;

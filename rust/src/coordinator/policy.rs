@@ -1,0 +1,212 @@
+//! Interception-handling policies: the paper's baselines (§3.2) and
+//! InferCept itself (§4.3), plus the intermediate ablation steps of Fig. 3.
+//!
+//! A [`Policy`] is a set of orthogonal switches; the named constructors are
+//! the exact configurations the paper evaluates.
+
+use crate::coordinator::estimator::EstimatorKind;
+
+/// How swap is used for intercepted requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Never swap.
+    None,
+    /// The Swap baseline: synchronously move the whole context out at
+    /// interception and back at resume, stalling the iteration (§3.2).
+    Sync,
+    /// InferCept: chunked + pipelined swapping within the per-iteration
+    /// swap budget; spillover handled by preserve/discard (§4.1).
+    Budgeted,
+}
+
+/// How the preserve option is used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreserveMode {
+    /// Never preserve (the Discard family + Swap baseline).
+    Never,
+    /// Always preserve (the Preserve baseline).
+    Always,
+    /// Fig. 3's heuristic step: preserve short-running (automated)
+    /// augmentations, discard long-running (interactive) ones.
+    Heuristic,
+    /// InferCept: per-request argmin of Eq. 2 vs Eq. 4, re-evaluated every
+    /// iteration with the duration estimator.
+    MinWaste,
+}
+
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub name: &'static str,
+    /// Keep the request's original arrival time when it re-enters the
+    /// waiting queue (ImprovedDiscard and everything after; vanilla vLLM
+    /// re-enqueues at the tail with a fresh arrival).
+    pub keep_original_arrival: bool,
+    /// Split recomputation into saturation-point-sized chunks (§4.2)
+    /// instead of recomputing the whole context in one iteration.
+    pub chunked_recompute: bool,
+    pub swap: SwapMode,
+    pub preserve: PreserveMode,
+    pub estimator: EstimatorKind,
+}
+
+impl Policy {
+    /// Vanilla vLLM: interception == request end; discard + re-arrival.
+    pub fn vllm() -> Policy {
+        Policy {
+            name: "vllm",
+            keep_original_arrival: false,
+            chunked_recompute: false,
+            swap: SwapMode::None,
+            preserve: PreserveMode::Never,
+            estimator: EstimatorKind::TypeProfile,
+        }
+    }
+
+    /// ImprovedDiscard: vLLM + original arrival time (§3.2).
+    pub fn improved_discard() -> Policy {
+        Policy { name: "improved-discard", keep_original_arrival: true, ..Policy::vllm() }
+    }
+
+    /// Preserve baseline: context pinned in GPU memory for the whole
+    /// interception.
+    pub fn preserve() -> Policy {
+        Policy {
+            name: "preserve",
+            preserve: PreserveMode::Always,
+            keep_original_arrival: true,
+            ..Policy::vllm()
+        }
+    }
+
+    /// Swap baseline: synchronous full-context swap out/in.
+    pub fn swap() -> Policy {
+        Policy {
+            name: "swap",
+            swap: SwapMode::Sync,
+            keep_original_arrival: true,
+            ..Policy::vllm()
+        }
+    }
+
+    /// The full system: min-waste hybrid with budgeted swap and chunked
+    /// recompute.
+    pub fn infercept() -> Policy {
+        Policy {
+            name: "infercept",
+            keep_original_arrival: true,
+            chunked_recompute: true,
+            swap: SwapMode::Budgeted,
+            preserve: PreserveMode::MinWaste,
+            estimator: EstimatorKind::TypeProfile,
+        }
+    }
+
+    /// InferCept with a specific estimator (for `estimator_eval`, §4.4).
+    pub fn infercept_with(estimator: EstimatorKind) -> Policy {
+        Policy { estimator, ..Policy::infercept() }
+    }
+
+    // ---- Fig. 3 ablation ladder (each adds one technique) ----------------
+
+    /// Step 2: + chunked recomputation.
+    pub fn ablation_chunked() -> Policy {
+        Policy { name: "+chunked-recompute", chunked_recompute: true, ..Policy::improved_discard() }
+    }
+
+    /// Step 3: + budgeted swapping (discard once the budget is exhausted).
+    pub fn ablation_swap() -> Policy {
+        Policy { name: "+budgeted-swap", swap: SwapMode::Budgeted, ..Policy::ablation_chunked() }
+    }
+
+    /// Step 4: + preserve with the short/long heuristic.
+    pub fn ablation_heuristic_preserve() -> Policy {
+        Policy {
+            name: "+heuristic-preserve",
+            preserve: PreserveMode::Heuristic,
+            ..Policy::ablation_swap()
+        }
+    }
+
+    /// Step 5 == full InferCept (min-waste adaptive schedule).
+    pub fn ablation_min_waste() -> Policy {
+        Policy { name: "+min-waste", ..Policy::infercept() }
+    }
+
+    /// All policies of Fig. 2 in presentation order.
+    pub fn fig2_set() -> Vec<Policy> {
+        vec![
+            Policy::vllm(),
+            Policy::improved_discard(),
+            Policy::preserve(),
+            Policy::swap(),
+            Policy::infercept(),
+        ]
+    }
+
+    /// The Fig. 3 ladder in presentation order.
+    pub fn fig3_ladder() -> Vec<Policy> {
+        vec![
+            Policy::vllm(),
+            Policy::improved_discard(),
+            Policy::ablation_chunked(),
+            Policy::ablation_swap(),
+            Policy::ablation_heuristic_preserve(),
+            Policy::ablation_min_waste(),
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "vllm" | "discard" => Some(Policy::vllm()),
+            "improved-discard" => Some(Policy::improved_discard()),
+            "preserve" => Some(Policy::preserve()),
+            "swap" => Some(Policy::swap()),
+            "infercept" => Some(Policy::infercept()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_semantics() {
+        let v = Policy::vllm();
+        assert!(!v.keep_original_arrival && v.preserve == PreserveMode::Never);
+        let i = Policy::improved_discard();
+        assert!(i.keep_original_arrival && !i.chunked_recompute);
+        let p = Policy::preserve();
+        assert_eq!(p.preserve, PreserveMode::Always);
+        assert_eq!(p.swap, SwapMode::None);
+        let s = Policy::swap();
+        assert_eq!(s.swap, SwapMode::Sync);
+        assert_eq!(s.preserve, PreserveMode::Never);
+        let f = Policy::infercept();
+        assert!(f.chunked_recompute);
+        assert_eq!(f.swap, SwapMode::Budgeted);
+        assert_eq!(f.preserve, PreserveMode::MinWaste);
+    }
+
+    #[test]
+    fn ablation_ladder_is_monotone() {
+        let ladder = Policy::fig3_ladder();
+        assert_eq!(ladder.len(), 6);
+        // Each step keeps all previous switches on.
+        assert!(ladder[1].keep_original_arrival);
+        assert!(ladder[2].chunked_recompute && ladder[2].keep_original_arrival);
+        assert_eq!(ladder[3].swap, SwapMode::Budgeted);
+        assert!(ladder[3].chunked_recompute);
+        assert_eq!(ladder[4].preserve, PreserveMode::Heuristic);
+        assert_eq!(ladder[5].preserve, PreserveMode::MinWaste);
+    }
+
+    #[test]
+    fn parse_known_names() {
+        for n in ["vllm", "improved-discard", "preserve", "swap", "infercept"] {
+            assert!(Policy::parse(n).is_some(), "{n}");
+        }
+        assert!(Policy::parse("nope").is_none());
+    }
+}

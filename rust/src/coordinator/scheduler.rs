@@ -1,0 +1,363 @@
+//! Queue management + the per-iteration interception decision (§4.3).
+//!
+//! Three queues, all FCFS by *original* arrival time (fairness / no
+//! starvation): `waiting` (new, discarded-resumed, evicted, and partially
+//! prefilled requests), `swapq` (resumed requests whose context is still in
+//! CPU memory), `running` (decode-ready). Paused requests live outside the
+//! queues until their API call completes.
+//!
+//! The interception decision runs every iteration over every paused
+//! request: with the dynamic estimator the preserve-vs-discard argmin
+//! changes as an interception drags on, so a request preserved at t₀ can be
+//! demoted to swap/discard later — exactly Fig. 1's adaptive green path.
+
+use crate::augment::AugmentKind;
+use crate::coordinator::estimator::DurationEstimator;
+use crate::coordinator::policy::{Policy, PreserveMode, SwapMode};
+use crate::coordinator::waste::{self, FwdProfile, WasteInputs};
+use crate::kvcache::ReqId;
+use crate::util::Micros;
+
+/// FCFS queue keyed by original arrival time.
+#[derive(Debug, Default, Clone)]
+pub struct FcfsQueue {
+    items: Vec<(Micros, ReqId)>,
+}
+
+impl FcfsQueue {
+    pub fn push(&mut self, arrival: Micros, req: ReqId) {
+        debug_assert!(!self.items.iter().any(|(_, r)| *r == req), "req {req} already queued");
+        let pos = self.items.partition_point(|(a, r)| (*a, *r) <= (arrival, req));
+        self.items.insert(pos, (arrival, req));
+    }
+
+    pub fn pop_front(&mut self) -> Option<ReqId> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0).1)
+        }
+    }
+
+    pub fn remove(&mut self, req: ReqId) -> bool {
+        if let Some(i) = self.items.iter().position(|(_, r)| *r == req) {
+            self.items.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ReqId> + '_ {
+        self.items.iter().map(|(_, r)| *r)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, req: ReqId) -> bool {
+        self.items.iter().any(|(_, r)| *r == req)
+    }
+}
+
+/// Context disposition of a paused request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Just intercepted, no decision yet this iteration.
+    Fresh,
+    /// Context held resident in GPU memory.
+    Preserved,
+    /// Chunked swap-out in progress (some blocks may already be on CPU).
+    SwappingOut,
+    /// GPU context freed; will recompute on resume.
+    Discarded,
+}
+
+/// What the scheduler decided for one paused request this iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterceptAction {
+    Preserve,
+    /// Free the GPU-resident remainder (CPU-resident prefix, if any, stays).
+    Discard,
+    /// Move up to `tokens` of GPU-resident context to CPU this iteration.
+    SwapOut { tokens: usize },
+}
+
+/// Scheduler-facing view of one paused request.
+#[derive(Debug, Clone, Copy)]
+pub struct PausedView {
+    pub req: ReqId,
+    pub kind: AugmentKind,
+    pub disposition: Disposition,
+    /// Valid context tokens (GPU + CPU resident).
+    pub ctx_tokens: usize,
+    /// Tokens currently in GPU blocks (what preserve would keep holding).
+    pub gpu_tokens: usize,
+    /// Time since the interception fired (engine clock).
+    pub elapsed_us: Micros,
+    /// True scaled duration from the script (oracle estimator only).
+    pub actual_total_us: Micros,
+}
+
+/// Batch-level stats the waste equations need.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchStats {
+    /// Σ context tokens of currently running (non-paused) requests.
+    pub other_tokens: usize,
+    /// Query tokens scheduled for the running batch.
+    pub running_query: usize,
+    pub kv_bytes_per_token: usize,
+    /// Recompute chunk size this iteration (§4.2).
+    pub chunk_tokens: usize,
+}
+
+/// Decide the action for every paused request (§4.3 "scheduling intercepted
+/// requests"). `swap_out_budget` is this iteration's granted swap-out token
+/// budget; it is consumed in descending-waste order.
+pub fn decide_interceptions(
+    policy: &Policy,
+    estimator: &DurationEstimator,
+    profile: &FwdProfile,
+    views: &[PausedView],
+    batch: &BatchStats,
+    mut swap_out_budget: usize,
+) -> Vec<(ReqId, InterceptAction)> {
+    let mut out = Vec::with_capacity(views.len());
+
+    // Requests already mid-swap keep draining the budget first: their GPU
+    // remainder is pure waste until it moves.
+    let mut swapping: Vec<&PausedView> = views
+        .iter()
+        .filter(|v| v.disposition == Disposition::SwappingOut && v.gpu_tokens > 0)
+        .collect();
+    swapping.sort_by(|a, b| b.gpu_tokens.cmp(&a.gpu_tokens));
+    for v in swapping {
+        let grant = v.gpu_tokens.min(swap_out_budget);
+        swap_out_budget -= grant;
+        out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
+    }
+
+    // Fresh interceptions + re-evaluated preserved requests.
+    let mut candidates: Vec<(f64, bool, &PausedView)> = views
+        .iter()
+        .filter(|v| {
+            matches!(v.disposition, Disposition::Fresh)
+                || (v.disposition == Disposition::Preserved
+                    && policy.preserve == PreserveMode::MinWaste)
+        })
+        .map(|v| {
+            let est = estimator.remaining_us(v.kind, v.elapsed_us, v.actual_total_us);
+            let w = WasteInputs {
+                ctx_tokens: v.ctx_tokens,
+                other_tokens: batch.other_tokens,
+                kv_bytes_per_token: batch.kv_bytes_per_token,
+                est_interception_us: est,
+                chunk_tokens: batch.chunk_tokens,
+                running_query: batch.running_query,
+                running_ctx: batch.other_tokens,
+            };
+            let mw = waste::min_waste(profile, &w);
+            (mw.waste_gbs, mw.prefer_preserve, v)
+        })
+        .collect();
+
+    // Highest waste first: those gain most from being swapped (§4.3).
+    candidates.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+
+    for (_, prefer_preserve, v) in candidates {
+        let action = match (policy.swap, policy.preserve) {
+            // Sync swap baseline: whole context moves, no budget.
+            (SwapMode::Sync, _) => InterceptAction::SwapOut { tokens: v.gpu_tokens },
+            (swap_mode, preserve_mode) => {
+                // Budgeted swap takes the highest-waste requests first.
+                if swap_mode == SwapMode::Budgeted && swap_out_budget > 0 && v.gpu_tokens > 0 {
+                    let grant = v.gpu_tokens.min(swap_out_budget);
+                    swap_out_budget -= grant;
+                    InterceptAction::SwapOut { tokens: grant }
+                } else {
+                    match preserve_mode {
+                        PreserveMode::Never => InterceptAction::Discard,
+                        PreserveMode::Always => InterceptAction::Preserve,
+                        PreserveMode::Heuristic => {
+                            if v.kind.short_running() {
+                                InterceptAction::Preserve
+                            } else {
+                                InterceptAction::Discard
+                            }
+                        }
+                        PreserveMode::MinWaste => {
+                            if prefer_preserve {
+                                InterceptAction::Preserve
+                            } else {
+                                InterceptAction::Discard
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        out.push((v.req, action));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::estimator::EstimatorKind;
+
+    fn profile() -> FwdProfile {
+        FwdProfile {
+            t_base_us: 6_000.0,
+            us_per_ctx_token: 0.23,
+            us_per_query_unsat: 10.0,
+            us_per_query_sat: 80.0,
+            saturation_tokens: 512,
+        }
+    }
+
+    fn batch() -> BatchStats {
+        BatchStats {
+            other_tokens: 8_000,
+            running_query: 16,
+            kv_bytes_per_token: 458_752,
+            chunk_tokens: 256,
+        }
+    }
+
+    fn view(req: ReqId, kind: AugmentKind, ctx: usize) -> PausedView {
+        PausedView {
+            req,
+            kind,
+            disposition: Disposition::Fresh,
+            ctx_tokens: ctx,
+            gpu_tokens: ctx,
+            elapsed_us: 0,
+            actual_total_us: 1_000_000,
+        }
+    }
+
+    fn est() -> DurationEstimator {
+        DurationEstimator::new(EstimatorKind::TypeProfile, 1.0)
+    }
+
+    #[test]
+    fn fcfs_queue_orders_by_arrival() {
+        let mut q = FcfsQueue::default();
+        q.push(300, 3);
+        q.push(100, 1);
+        q.push(200, 2);
+        assert_eq!(q.iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(q.pop_front(), Some(1));
+        assert!(q.remove(3));
+        assert!(!q.remove(3));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fcfs_ties_break_by_req_id() {
+        let mut q = FcfsQueue::default();
+        q.push(100, 7);
+        q.push(100, 2);
+        assert_eq!(q.iter().collect::<Vec<_>>(), vec![2, 7]);
+    }
+
+    #[test]
+    fn discard_policy_always_discards() {
+        let p = Policy::vllm();
+        let views = [view(1, AugmentKind::Math, 500), view(2, AugmentKind::Chatbot, 700)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 0);
+        assert!(acts.iter().all(|(_, a)| *a == InterceptAction::Discard));
+    }
+
+    #[test]
+    fn preserve_policy_always_preserves() {
+        let p = Policy::preserve();
+        let views = [view(1, AugmentKind::Chatbot, 700)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 0);
+        assert_eq!(acts[0].1, InterceptAction::Preserve);
+    }
+
+    #[test]
+    fn sync_swap_moves_everything() {
+        let p = Policy::swap();
+        let views = [view(1, AugmentKind::Qa, 640)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 0);
+        assert_eq!(acts[0].1, InterceptAction::SwapOut { tokens: 640 });
+    }
+
+    #[test]
+    fn heuristic_splits_short_vs_long() {
+        let mut p = Policy::ablation_heuristic_preserve();
+        p.swap = SwapMode::None; // isolate the heuristic
+        let views = [view(1, AugmentKind::Math, 500), view(2, AugmentKind::Tts, 500)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 0);
+        let get = |r| acts.iter().find(|(q, _)| *q == r).unwrap().1;
+        assert_eq!(get(1), InterceptAction::Preserve);
+        assert_eq!(get(2), InterceptAction::Discard);
+    }
+
+    #[test]
+    fn min_waste_preserves_short_discards_long() {
+        let p = Policy::infercept();
+        // no swap budget -> pure preserve/discard argmin
+        let views = [
+            view(1, AugmentKind::Math, 1400),    // 90 µs call -> preserve
+            view(2, AugmentKind::Chatbot, 1400), // 28.6 s call -> discard
+        ];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 0);
+        let get = |r| acts.iter().find(|(q, _)| *q == r).unwrap().1;
+        assert_eq!(get(1), InterceptAction::Preserve);
+        assert_eq!(get(2), InterceptAction::Discard);
+    }
+
+    #[test]
+    fn budget_goes_to_highest_waste_first() {
+        let p = Policy::infercept();
+        // Chatbot with huge context = highest waste; budget covers only it.
+        let views = [
+            view(1, AugmentKind::Math, 200),
+            view(2, AugmentKind::Chatbot, 2000),
+            view(3, AugmentKind::Qa, 300),
+        ];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 2000);
+        let get = |r| acts.iter().find(|(q, _)| *q == r).unwrap().1;
+        assert_eq!(get(2), InterceptAction::SwapOut { tokens: 2000 });
+        // The others got no budget: argmin decides.
+        assert_eq!(get(1), InterceptAction::Preserve);
+        assert!(matches!(get(3), InterceptAction::Preserve | InterceptAction::Discard));
+    }
+
+    #[test]
+    fn in_progress_swaps_drain_budget_first() {
+        let p = Policy::infercept();
+        let mut v1 = view(1, AugmentKind::Chatbot, 1000);
+        v1.disposition = Disposition::SwappingOut;
+        v1.gpu_tokens = 400;
+        let v2 = view(2, AugmentKind::Chatbot, 5000);
+        let acts = decide_interceptions(&p, &est(), &profile(), &[v1, v2], &batch(), 500);
+        assert_eq!(acts[0], (1, InterceptAction::SwapOut { tokens: 400 }));
+        assert_eq!(acts[1], (2, InterceptAction::SwapOut { tokens: 100 }));
+    }
+
+    #[test]
+    fn preserved_requests_reevaluated_under_min_waste() {
+        // With the dynamic estimator, a preserved chatbot request's estimate
+        // grows with elapsed time until discard wins (§4.4).
+        let p = Policy::infercept_with(EstimatorKind::Dynamic);
+        let e = DurationEstimator::new(EstimatorKind::Dynamic, 1.0);
+        let mut v = view(1, AugmentKind::Chatbot, 1500);
+        v.disposition = Disposition::Preserved;
+        v.elapsed_us = 2_000; // 2 ms in: still cheap to hold
+        let acts = decide_interceptions(&p, &e, &profile(), &[v], &batch(), 0);
+        assert_eq!(acts[0].1, InterceptAction::Preserve);
+        v.elapsed_us = 20_000_000; // 20 s in: the estimate says 20 s more
+        let acts = decide_interceptions(&p, &e, &profile(), &[v], &batch(), 0);
+        assert_eq!(acts[0].1, InterceptAction::Discard);
+    }
+}

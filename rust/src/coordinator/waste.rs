@@ -1,0 +1,240 @@
+//! GPU-memory waste quantification — the paper's Equations 1–5 (§3.2, §4.2).
+//!
+//! Waste is measured in **byte-seconds** (reported as GB·s): memory held or
+//! consumed, multiplied by the time it is not producing new tokens for any
+//! request. All four strategies reduce to one comparable scalar, which is
+//! what lets InferCept pick the argmin per request per iteration (Eq. 5).
+
+use crate::util::Micros;
+
+/// Piecewise-linear iteration-time model `T_fwd` obtained by offline
+/// profiling (§4.5): fixed cost + per-context-token memory term + per-query-
+/// token compute term that steepens past the GPU saturation point `S` (§4.2).
+#[derive(Debug, Clone)]
+pub struct FwdProfile {
+    /// Fixed per-iteration cost in µs (weight streaming, launch overhead).
+    pub t_base_us: f64,
+    /// µs per cached context token attended to (KV reads).
+    pub us_per_ctx_token: f64,
+    /// µs per query token below the saturation point (underutilized cores).
+    pub us_per_query_unsat: f64,
+    /// µs per query token beyond the saturation point (compute bound).
+    pub us_per_query_sat: f64,
+    /// The GPU saturation point `S` in query tokens.
+    pub saturation_tokens: usize,
+}
+
+impl FwdProfile {
+    /// Iteration time for a batch with `query_tokens` scheduled query tokens
+    /// attending over `ctx_tokens` total cached context.
+    pub fn t_fwd(&self, query_tokens: usize, ctx_tokens: usize) -> Micros {
+        if query_tokens == 0 {
+            return 0;
+        }
+        let s = self.saturation_tokens;
+        let unsat = query_tokens.min(s) as f64;
+        let sat = query_tokens.saturating_sub(s) as f64;
+        (self.t_base_us
+            + self.us_per_ctx_token * ctx_tokens as f64
+            + self.us_per_query_unsat * unsat
+            + self.us_per_query_sat * sat) as Micros
+    }
+
+    /// Convenience: T_fwd of recomputing `c` context tokens on top of an
+    /// otherwise-running batch (marginal cost of adding the recompute).
+    pub fn t_recompute(&self, c: usize, running_query: usize, running_ctx: usize) -> Micros {
+        self.t_fwd(running_query + c, running_ctx + c)
+            .saturating_sub(self.t_fwd(running_query, running_ctx))
+    }
+}
+
+/// Everything Eq. 1–5 need about one intercepted request + the batch.
+#[derive(Debug, Clone, Copy)]
+pub struct WasteInputs {
+    /// `C_i^j`: the request's context tokens at interception j.
+    pub ctx_tokens: usize,
+    /// `C_other`: context tokens of the other running requests.
+    pub other_tokens: usize,
+    /// `M`: KV-cache bytes per token.
+    pub kv_bytes_per_token: usize,
+    /// Estimated (remaining) interception duration `T̂_INT`, µs.
+    pub est_interception_us: f64,
+    /// Recompute chunk size (the §4.2 chunk: `S −` running batch size).
+    pub chunk_tokens: usize,
+    /// Query tokens + context of the running batch (for marginal T_fwd).
+    pub running_query: usize,
+    pub running_ctx: usize,
+}
+
+const US_PER_SEC: f64 = 1e6;
+const GB: f64 = 1e9;
+
+fn gbs(bytes: f64, us: f64) -> f64 {
+    bytes / GB * (us / US_PER_SEC)
+}
+
+/// Eq. 1 — Discard / ImprovedDiscard:
+/// `T_fwd(C) · C · M  +  T_fwd(C) · C_other · M`.
+pub fn waste_discard(p: &FwdProfile, w: &WasteInputs) -> f64 {
+    let t_fwd = p.t_fwd(w.ctx_tokens, w.ctx_tokens) as f64;
+    let m = w.kv_bytes_per_token as f64;
+    gbs(w.ctx_tokens as f64 * m, t_fwd) + gbs(w.other_tokens as f64 * m, t_fwd)
+}
+
+/// Eq. 2 — Preserve: `T̂_INT · C · M`.
+pub fn waste_preserve(w: &WasteInputs) -> f64 {
+    gbs(
+        w.ctx_tokens as f64 * w.kv_bytes_per_token as f64,
+        w.est_interception_us,
+    )
+}
+
+/// Eq. 3 — synchronous Swap: `2 · T_swap(C) · C_batch · M` where
+/// `C_batch = C + C_other` (everything waits for the transfer).
+pub fn waste_swap(t_swap_us: Micros, w: &WasteInputs) -> f64 {
+    let c_batch = (w.ctx_tokens + w.other_tokens) as f64;
+    2.0 * gbs(c_batch * w.kv_bytes_per_token as f64, t_swap_us as f64)
+}
+
+/// Eq. 4 — InferCept's chunked recomputation:
+/// `T_fwd(C)·C·M / 2  +  n · T_fwd(C/n) · C_other · M`
+/// with `n = ⌈C / chunk⌉` and the per-chunk time the *marginal* cost of
+/// adding one chunk to an already-running iteration.
+pub fn waste_chunked_discard(p: &FwdProfile, w: &WasteInputs) -> f64 {
+    let m = w.kv_bytes_per_token as f64;
+    let c = w.ctx_tokens.max(1);
+    let chunk = w.chunk_tokens.max(1).min(c);
+    let n = c.div_ceil(chunk);
+    let t_full = p.t_fwd(c, c) as f64;
+    let t_chunk = p.t_recompute(chunk, w.running_query, w.running_ctx) as f64;
+    gbs(c as f64 * m, t_full) / 2.0 + (n as f64) * gbs(w.other_tokens as f64 * m, t_chunk)
+}
+
+/// Eq. 5 — the request's waste under InferCept's best non-swap action, and
+/// which action attains it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinWaste {
+    pub waste_gbs: f64,
+    pub prefer_preserve: bool,
+}
+
+pub fn min_waste(p: &FwdProfile, w: &WasteInputs) -> MinWaste {
+    let pres = waste_preserve(w);
+    let disc = waste_chunked_discard(p, w);
+    MinWaste { waste_gbs: pres.min(disc), prefer_preserve: pres <= disc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn a100_6b_profile() -> FwdProfile {
+        FwdProfile {
+            t_base_us: 6_000.0,
+            us_per_ctx_token: 0.23,
+            us_per_query_unsat: 10.0,
+            us_per_query_sat: 80.0,
+            saturation_tokens: 512,
+        }
+    }
+
+    fn inputs(ctx: usize, est_us: f64) -> WasteInputs {
+        WasteInputs {
+            ctx_tokens: ctx,
+            other_tokens: 10_000,
+            kv_bytes_per_token: 458_752,
+            est_interception_us: est_us,
+            chunk_tokens: 256,
+            running_query: 32,
+            running_ctx: 10_000,
+        }
+    }
+
+    #[test]
+    fn t_fwd_monotone_in_both_args() {
+        let p = a100_6b_profile();
+        assert!(p.t_fwd(64, 1000) < p.t_fwd(128, 1000));
+        assert!(p.t_fwd(64, 1000) < p.t_fwd(64, 2000));
+        assert_eq!(p.t_fwd(0, 5000), 0);
+    }
+
+    #[test]
+    fn t_fwd_steepens_past_saturation() {
+        let p = a100_6b_profile();
+        let below = p.t_fwd(512, 0) - p.t_fwd(448, 0);
+        let above = p.t_fwd(1024, 0) - p.t_fwd(960, 0);
+        assert!(above > below * 2, "{above} vs {below}");
+    }
+
+    #[test]
+    fn chunked_discard_beats_plain_discard() {
+        // Eq. 4's both terms are ≤ Eq. 1's (paper §4.2).
+        let p = a100_6b_profile();
+        for ctx in [100, 500, 1500, 4000] {
+            let w = inputs(ctx, 1e6);
+            assert!(
+                waste_chunked_discard(&p, &w) <= waste_discard(&p, &w) + 1e-9,
+                "ctx={ctx}"
+            );
+        }
+    }
+
+    #[test]
+    fn preserve_wins_for_short_interceptions() {
+        // A 0.2 ms calculator call: preserving ~1.4k tokens is nearly free.
+        let p = a100_6b_profile();
+        let w = inputs(1422, 200.0); // Math: 0.2 ms
+        let mw = min_waste(&p, &w);
+        assert!(mw.prefer_preserve);
+        // A 30 s chat turn: discard+recompute is far cheaper than holding.
+        let w = inputs(753, 30e6);
+        let mw = min_waste(&p, &w);
+        assert!(!mw.prefer_preserve);
+    }
+
+    #[test]
+    fn preserve_waste_scales_linearly() {
+        let w1 = inputs(1000, 1e6);
+        let w2 = inputs(2000, 1e6);
+        let w3 = inputs(1000, 2e6);
+        assert!((waste_preserve(&w2) - 2.0 * waste_preserve(&w1)).abs() < 1e-9);
+        assert!((waste_preserve(&w3) - 2.0 * waste_preserve(&w1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swap_waste_counts_both_directions() {
+        let w = inputs(1000, 1e6);
+        let one_way = gbs(
+            (w.ctx_tokens + w.other_tokens) as f64 * w.kv_bytes_per_token as f64,
+            50_000.0,
+        );
+        assert!((waste_swap(50_000, &w) - 2.0 * one_way).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_waste_is_the_min() {
+        let p = a100_6b_profile();
+        for est in [1e3, 1e5, 1e6, 3e7] {
+            let w = inputs(1500, est);
+            let mw = min_waste(&p, &w);
+            let pres = waste_preserve(&w);
+            let disc = waste_chunked_discard(&p, &w);
+            assert!((mw.waste_gbs - pres.min(disc)).abs() < 1e-12);
+            assert_eq!(mw.prefer_preserve, pres <= disc);
+        }
+    }
+
+    #[test]
+    fn all_wastes_nonnegative() {
+        let p = a100_6b_profile();
+        for ctx in [1, 16, 1000] {
+            for est in [0.0, 1.0, 1e7] {
+                let w = inputs(ctx, est);
+                assert!(waste_discard(&p, &w) >= 0.0);
+                assert!(waste_preserve(&w) >= 0.0);
+                assert!(waste_swap(1000, &w) >= 0.0);
+                assert!(waste_chunked_discard(&p, &w) >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! The execution-backend abstraction: one scheduler, two substrates.
+//!
+//! The engine plans an iteration (decode batch + prefill chunks + block
+//! moves) and hands it to an [`ExecBackend`]:
+//!   * [`crate::runtime::PjrtBackend`] executes AOT-compiled HLO on the
+//!     PJRT CPU client against a real paged KV pool (mini models),
+//!   * [`crate::sim::SimBackend`] advances a virtual clock with an
+//!     A100-calibrated cost model (paper-scale experiments).
+//!
+//! Sharing the planner across both is what makes the simulated results a
+//! faithful statement about the policy (DESIGN.md §1).
+
+use anyhow::Result;
+
+use crate::coordinator::waste::FwdProfile;
+use crate::kvcache::{BlockId, BlockMove, ReqId};
+use crate::kvcache::swap::SwapModel;
+use crate::util::Micros;
+
+/// One running sequence decoding one token this iteration.
+#[derive(Debug, Clone)]
+pub struct DecodeEntry {
+    pub req: ReqId,
+    /// The token being fed (its KV is written at position `ctx_len - 1`).
+    pub token: u32,
+    pub block_table: Vec<BlockId>,
+    /// Valid context length INCLUDING the fed token.
+    pub ctx_len: u32,
+}
+
+/// One prefill / recompute chunk of one sequence.
+#[derive(Debug, Clone)]
+pub struct PrefillEntry {
+    pub req: ReqId,
+    /// Tokens to process; may be padded beyond `real_len` to a compiled
+    /// chunk size (padding writes scratch KV that real tokens overwrite).
+    pub tokens: Vec<u32>,
+    /// Number of non-padding tokens.
+    pub real_len: u32,
+    pub block_table: Vec<BlockId>,
+    /// Valid tokens cached BEFORE this chunk.
+    pub cache_len: u32,
+    /// Sample a next token from the last real position's logits (true for
+    /// the chunk that completes the pending context).
+    pub sample_last: bool,
+}
+
+/// Everything the backend executes in one iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterationPlan {
+    pub decode: Vec<DecodeEntry>,
+    pub prefill: Vec<PrefillEntry>,
+    pub swap_out: Vec<BlockMove>,
+    pub swap_in: Vec<BlockMove>,
+    /// Stall charged on top of compute (sync-swap baseline, over-budget
+    /// transfers). The engine computes it from the swap model.
+    pub stall_us: Micros,
+}
+
+impl IterationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty()
+            && self.prefill.is_empty()
+            && self.swap_out.is_empty()
+            && self.swap_in.is_empty()
+    }
+
+    /// Scheduled query tokens (decode counts 1 each, prefill its real len).
+    pub fn query_tokens(&self) -> usize {
+        self.decode.len() + self.prefill.iter().map(|p| p.real_len as usize).sum::<usize>()
+    }
+}
+
+/// What came back from the backend.
+#[derive(Debug, Clone, Default)]
+pub struct IterationOutcome {
+    /// Next token sampled for each decode entry (same order).
+    pub decode_tokens: Vec<(ReqId, u32)>,
+    /// Next token sampled for each `sample_last` prefill entry.
+    pub prefill_tokens: Vec<(ReqId, u32)>,
+    /// Forward-pass time on the engine clock (excludes `stall_us`).
+    pub compute_us: Micros,
+}
+
+/// A substrate that can run iterations and keep time.
+pub trait ExecBackend {
+    /// Current engine-clock time.
+    fn now(&self) -> Micros;
+
+    /// Idle until `t` (sim: jump the clock; real: sleep the wall clock).
+    fn advance_to(&mut self, t: Micros);
+
+    /// Execute the plan; moves data for swaps, runs forward passes, samples
+    /// tokens, and advances the clock by compute + stall time.
+    fn run_iteration(&mut self, plan: &IterationPlan) -> Result<IterationOutcome>;
+
+    /// The profiled T_fwd model (waste equations + swap-limit computation).
+    fn fwd_profile(&self) -> &FwdProfile;
+
+    /// The GPU↔CPU link model.
+    fn swap_model(&self) -> &SwapModel;
+
+    /// Largest decode batch per iteration.
+    fn max_decode_batch(&self) -> usize;
+
+    /// Compiled prefill chunk sizes (empty = any size, sim backend).
+    fn prefill_chunk_sizes(&self) -> &[usize];
+
+    /// Per-sequence block-table capacity.
+    fn max_blocks_per_seq(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_query_tokens_counts_real_lengths() {
+        let plan = IterationPlan {
+            decode: vec![
+                DecodeEntry { req: 1, token: 0, block_table: vec![], ctx_len: 5 },
+                DecodeEntry { req: 2, token: 0, block_table: vec![], ctx_len: 9 },
+            ],
+            prefill: vec![PrefillEntry {
+                req: 3,
+                tokens: vec![0; 16],
+                real_len: 9,
+                block_table: vec![],
+                cache_len: 0,
+                sample_last: false,
+            }],
+            ..Default::default()
+        };
+        assert_eq!(plan.query_tokens(), 11);
+        assert!(!plan.is_empty());
+        assert!(IterationPlan::default().is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Request lifecycle state.
+//!
+//! `tokens` is the request's full logical context — prompt, generated
+//! tokens, and API-returned tokens, in order. `processed` counts the prefix
+//! whose KV is valid in the cache. The engine processes `tokens[processed..]`
+//! as prefill chunks (prompt processing and recomputation are the same
+//! operation); when `processed == tokens.len()` and more generation is due,
+//! the request decodes.
+
+use crate::augment::AugmentKind;
+use crate::coordinator::scheduler::Disposition;
+use crate::kvcache::ReqId;
+use crate::util::Micros;
+use crate::workload::RequestScript;
+
+/// Which phase of its life the request is in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// Loaded from the trace but not yet arrived.
+    Pending,
+    /// In the waiting queue (new / resumed-discarded / evicted / partially
+    /// prefilled).
+    Waiting,
+    /// Decode-ready (processed == tokens.len()).
+    Running,
+    /// An API call is in flight.
+    Paused,
+    /// Resumed, but context still (partly) in CPU swap space.
+    SwapQueue,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub arrival: Micros,
+    /// Arrival key used for FCFS ordering (vanilla vLLM resets this on each
+    /// interception; everything else keeps the original).
+    pub queue_arrival: Micros,
+    pub script: RequestScript,
+    pub state: ReqState,
+
+    /// Full logical context (prompt + generated + API returns).
+    pub tokens: Vec<u32>,
+    /// Prefix of `tokens` whose KV is currently valid in the cache.
+    pub processed: usize,
+    /// High-water mark of `processed` before the last discard — tokens
+    /// re-processed below this line count as *recomputation* (§3.2 metrics).
+    pub recompute_hwm: usize,
+
+    /// Script progress.
+    pub segment: usize,
+    pub seg_generated: u32,
+    pub interceptions_fired: usize,
+
+    /// Pause bookkeeping.
+    pub disposition: Disposition,
+    pub paused_at: Micros,
+    pub resume_at: Micros,
+    pub pause_kind: AugmentKind,
+    /// Scaled (engine-clock) duration of the in-flight interception.
+    pub pause_duration_us: Micros,
+
+    /// Metrics.
+    pub first_token_at: Option<Micros>,
+    pub finished_at: Option<Micros>,
+    /// Total paused time (subtracted from E2E latency, §5.1).
+    pub intercepted_us: Micros,
+    pub output_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: ReqId, arrival: Micros, script: RequestScript, prompt: Vec<u32>) -> Self {
+        assert_eq!(prompt.len(), script.prompt_tokens as usize);
+        let kind = script.kind;
+        Request {
+            id,
+            arrival,
+            queue_arrival: arrival,
+            script,
+            state: ReqState::Pending,
+            tokens: prompt,
+            processed: 0,
+            recompute_hwm: 0,
+            segment: 0,
+            seg_generated: 0,
+            interceptions_fired: 0,
+            disposition: Disposition::Preserved,
+            paused_at: 0,
+            resume_at: 0,
+            pause_kind: kind,
+            pause_duration_us: 0,
+            first_token_at: None,
+            finished_at: None,
+            intercepted_us: 0,
+            output_tokens: 0,
+        }
+    }
+
+    /// Tokens still needing prefill (prompt remainder / recompute / API
+    /// returns).
+    pub fn pending_prefill(&self) -> usize {
+        self.tokens.len() - self.processed
+    }
+
+    /// Ready to decode: everything but the freshly sampled token is cached.
+    pub fn decode_ready(&self) -> bool {
+        self.pending_prefill() == 1 && self.state == ReqState::Running
+    }
+
+    /// The generation target of the current segment.
+    pub fn current_segment_gen(&self) -> u32 {
+        self.script.segments[self.segment].gen_tokens
+    }
+
+    /// Does the current segment end with an interception?
+    pub fn segment_intercepts(&self) -> bool {
+        self.script.segments[self.segment].interception.is_some()
+    }
+
+    /// Tokens re-processed below the recompute high-water mark count as
+    /// recomputation. Returns how many of the next `n` processed tokens are
+    /// recompute.
+    pub fn recompute_portion(&self, n: usize) -> usize {
+        self.recompute_hwm.saturating_sub(self.processed).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Interception, Segment};
+
+    fn script() -> RequestScript {
+        RequestScript {
+            kind: AugmentKind::Qa,
+            prompt_tokens: 4,
+            segments: vec![
+                Segment {
+                    gen_tokens: 3,
+                    interception: Some(Interception {
+                        kind: AugmentKind::Qa,
+                        duration_us: 1000,
+                        ret_tokens: 2,
+                    }),
+                },
+                Segment { gen_tokens: 2, interception: None },
+            ],
+        }
+    }
+
+    #[test]
+    fn new_request_needs_full_prompt_prefill() {
+        let r = Request::new(1, 0, script(), vec![1, 2, 3, 4]);
+        assert_eq!(r.pending_prefill(), 4);
+        assert_eq!(r.state, ReqState::Pending);
+        assert!(!r.decode_ready());
+    }
+
+    #[test]
+    fn recompute_portion_tracks_hwm() {
+        let mut r = Request::new(1, 0, script(), vec![1, 2, 3, 4]);
+        r.processed = 0;
+        r.recompute_hwm = 3;
+        assert_eq!(r.recompute_portion(2), 2);
+        assert_eq!(r.recompute_portion(10), 3);
+        r.processed = 3;
+        assert_eq!(r.recompute_portion(10), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prompt_length_must_match_script() {
+        Request::new(1, 0, script(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Token sampling over logits (used by the PJRT backend; the sim backend
+//! synthesizes token ids directly — content is policy-irrelevant).
+
+/// Greedy argmax.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Temperature + top-k sampling with an explicit uniform sample `u ∈ [0,1)`
+/// (the caller owns the RNG so runs stay deterministic).
+pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, u: f64) -> u32 {
+    if temperature <= 0.0 || k <= 1 {
+        return argmax(logits);
+    }
+    let k = k.min(logits.len());
+    // Top-k indices by logit.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let top = &idx[..k];
+    let max = top.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        top.iter().map(|&i| (((logits[i] - max) / temperature) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    let target = u * total;
+    for (w, &i) in weights.iter().zip(top) {
+        acc += w;
+        if acc >= target {
+            return i as u32;
+        }
+    }
+    top[k - 1] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_finds_peak() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let l = [0.0, 2.0, 1.0];
+        assert_eq!(sample_topk(&l, 0.0, 5, 0.7), 1);
+    }
+
+    #[test]
+    fn topk_only_samples_top_candidates() {
+        let l = [10.0, 9.0, -50.0, -50.0];
+        for u in [0.0, 0.3, 0.6, 0.99] {
+            let t = sample_topk(&l, 1.0, 2, u);
+            assert!(t == 0 || t == 1, "{t}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_u() {
+        let l: Vec<f32> = (0..64).map(|i| (i % 7) as f32).collect();
+        assert_eq!(sample_topk(&l, 0.8, 8, 0.42), sample_topk(&l, 0.8, 8, 0.42));
+    }
+}

@@ -1,0 +1,529 @@
+//! Paged KV-cache management (the vLLM PagedAttention substrate, §3.1).
+//!
+//! GPU memory is a pool of fixed-size *blocks* (pages) of `block_size`
+//! tokens each; CPU memory is a second pool used as swap space. A sequence's
+//! cache is a vector of logical blocks, each resident on GPU or CPU. The L3
+//! block size equals the L1 Pallas kernel's page tile, so the allocator's
+//! block ids *are* the kernel's block-table entries.
+
+pub mod swap;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub type BlockId = u32;
+pub type CpuSlot = u32;
+pub type ReqId = u64;
+
+/// Where one logical block of a sequence currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockLoc {
+    Gpu(BlockId),
+    Cpu(CpuSlot),
+}
+
+/// Free-list allocator over the two pools.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_size: usize,
+    num_gpu: usize,
+    num_cpu: usize,
+    gpu_free: Vec<BlockId>,
+    cpu_free: Vec<CpuSlot>,
+}
+
+impl BlockAllocator {
+    pub fn new(block_size: usize, num_gpu: usize, num_cpu: usize) -> Self {
+        assert!(block_size > 0);
+        BlockAllocator {
+            block_size,
+            num_gpu,
+            num_cpu,
+            gpu_free: (0..num_gpu as BlockId).rev().collect(),
+            cpu_free: (0..num_cpu as CpuSlot).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_gpu(&self) -> usize {
+        self.num_gpu
+    }
+
+    pub fn num_cpu(&self) -> usize {
+        self.num_cpu
+    }
+
+    pub fn gpu_free_count(&self) -> usize {
+        self.gpu_free.len()
+    }
+
+    pub fn cpu_free_count(&self) -> usize {
+        self.cpu_free.len()
+    }
+
+    pub fn gpu_used(&self) -> usize {
+        self.num_gpu - self.gpu_free.len()
+    }
+
+    pub fn alloc_gpu(&mut self) -> Option<BlockId> {
+        self.gpu_free.pop()
+    }
+
+    pub fn alloc_cpu(&mut self) -> Option<CpuSlot> {
+        self.cpu_free.pop()
+    }
+
+    pub fn free_gpu(&mut self, id: BlockId) {
+        debug_assert!(!self.gpu_free.contains(&id), "double free of gpu block {id}");
+        debug_assert!((id as usize) < self.num_gpu);
+        self.gpu_free.push(id);
+    }
+
+    pub fn free_cpu(&mut self, id: CpuSlot) {
+        debug_assert!(!self.cpu_free.contains(&id), "double free of cpu slot {id}");
+        debug_assert!((id as usize) < self.num_cpu);
+        self.cpu_free.push(id);
+    }
+}
+
+/// One sequence's cache: logical blocks + the number of valid tokens.
+#[derive(Debug, Clone, Default)]
+pub struct SeqCache {
+    pub blocks: Vec<BlockLoc>,
+    pub len_tokens: usize,
+}
+
+impl SeqCache {
+    pub fn gpu_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| matches!(b, BlockLoc::Gpu(_))).count()
+    }
+
+    pub fn cpu_blocks(&self) -> usize {
+        self.blocks.len() - self.gpu_blocks()
+    }
+
+    pub fn fully_on_gpu(&self) -> bool {
+        self.blocks.iter().all(|b| matches!(b, BlockLoc::Gpu(_)))
+    }
+}
+
+/// A physical block move scheduled for this iteration. The backend performs
+/// the data copy; the manager has already updated the mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockMove {
+    pub req: ReqId,
+    pub gpu: BlockId,
+    pub cpu: CpuSlot,
+}
+
+/// The cache manager: allocator + per-request sequence caches.
+#[derive(Debug)]
+pub struct CacheManager {
+    alloc: BlockAllocator,
+    seqs: HashMap<ReqId, SeqCache>,
+    /// Blocks the engine keeps free as headroom for in-flight decodes.
+    pub watermark_blocks: usize,
+}
+
+impl CacheManager {
+    pub fn new(block_size: usize, num_gpu: usize, num_cpu: usize) -> Self {
+        CacheManager {
+            alloc: BlockAllocator::new(block_size, num_gpu, num_cpu),
+            seqs: HashMap::new(),
+            watermark_blocks: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.alloc.block_size()
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    pub fn seq(&self, req: ReqId) -> Option<&SeqCache> {
+        self.seqs.get(&req)
+    }
+
+    pub fn has_seq(&self, req: ReqId) -> bool {
+        self.seqs.contains_key(&req)
+    }
+
+    pub fn gpu_free(&self) -> usize {
+        self.alloc.gpu_free_count()
+    }
+
+    pub fn cpu_free(&self) -> usize {
+        self.alloc.cpu_free_count()
+    }
+
+    /// Tokens currently occupying GPU blocks across all sequences.
+    pub fn gpu_tokens(&self) -> usize {
+        let bs = self.alloc.block_size();
+        self.seqs
+            .values()
+            .map(|s| {
+                s.blocks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| matches!(b, BlockLoc::Gpu(_)))
+                    .map(|(i, _)| ((i + 1) * bs).min(s.len_tokens).saturating_sub(i * bs))
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Number of *new* GPU blocks needed to grow `req`'s cache to
+    /// `target_tokens` valid tokens.
+    pub fn blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
+        let bs = self.alloc.block_size();
+        let have = self.seqs.get(&req).map(|s| s.blocks.len()).unwrap_or(0);
+        let need = target_tokens.div_ceil(bs);
+        need.saturating_sub(have)
+    }
+
+    /// Can we grow `req` to `target_tokens` while keeping the watermark?
+    pub fn can_grow(&self, req: ReqId, target_tokens: usize) -> bool {
+        self.blocks_needed(req, target_tokens) + self.watermark_blocks
+            <= self.alloc.gpu_free_count()
+    }
+
+    /// Grow `req`'s cache so blocks cover `target_tokens` tokens (valid token
+    /// count is NOT advanced; call [`CacheManager::advance`] after the
+    /// forward pass writes the KV).
+    pub fn grow(&mut self, req: ReqId, target_tokens: usize) -> Result<()> {
+        let need = self.blocks_needed(req, target_tokens);
+        if need + self.watermark_blocks > self.alloc.gpu_free_count() {
+            bail!(
+                "OOM: need {need} blocks (+{} watermark), {} free",
+                self.watermark_blocks,
+                self.alloc.gpu_free_count()
+            );
+        }
+        let seq = self.seqs.entry(req).or_default();
+        for _ in 0..need {
+            let b = self.alloc.alloc_gpu().expect("checked above");
+            seq.blocks.push(BlockLoc::Gpu(b));
+        }
+        Ok(())
+    }
+
+    /// Advance the valid-token count after the backend wrote `n` new tokens.
+    pub fn advance(&mut self, req: ReqId, n: usize) {
+        let bs = self.alloc.block_size();
+        let seq = self.seqs.get_mut(&req).expect("advance on unknown seq");
+        seq.len_tokens += n;
+        assert!(
+            seq.len_tokens <= seq.blocks.len() * bs,
+            "advance past allocated blocks (req {req}: {} tokens > {} blocks)",
+            seq.len_tokens,
+            seq.blocks.len()
+        );
+    }
+
+    /// Truncate the valid-token count (recompute restart bookkeeping).
+    pub fn set_len(&mut self, req: ReqId, len: usize) {
+        let bs = self.alloc.block_size();
+        let seq = self.seqs.get_mut(&req).expect("set_len on unknown seq");
+        assert!(len <= seq.blocks.len() * bs);
+        seq.len_tokens = len;
+    }
+
+    /// Free everything the request holds (GPU and CPU) — Discard, or request
+    /// completion.
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(seq) = self.seqs.remove(&req) {
+            for b in seq.blocks {
+                match b {
+                    BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
+                    BlockLoc::Cpu(id) => self.alloc.free_cpu(id),
+                }
+            }
+        }
+    }
+
+    /// Plan swapping OUT up to `max_blocks` GPU-resident blocks of `req`,
+    /// **front-first**: the CPU-resident part is always a logical *prefix*,
+    /// so if the swap budget runs dry mid-request the GPU tail can be
+    /// discarded and later recomputed on top of the swapped-in prefix
+    /// (InferCept's hybrid restore). Returns the moves; the mapping is
+    /// updated immediately, the backend copies data this iteration.
+    pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> Vec<BlockMove> {
+        let Some(seq) = self.seqs.get_mut(&req) else {
+            return vec![];
+        };
+        let mut moves = Vec::new();
+        for i in 0..seq.blocks.len() {
+            if moves.len() >= max_blocks {
+                break;
+            }
+            if let BlockLoc::Gpu(g) = seq.blocks[i] {
+                let Some(c) = self.alloc.alloc_cpu() else {
+                    break; // CPU swap space exhausted
+                };
+                seq.blocks[i] = BlockLoc::Cpu(c);
+                self.alloc.free_gpu(g);
+                moves.push(BlockMove { req, gpu: g, cpu: c });
+            }
+        }
+        moves
+    }
+
+    /// Discard the GPU-resident tail of a partially swapped request: free
+    /// the GPU blocks after the CPU prefix and truncate the valid length to
+    /// the prefix. Returns the new valid token count. Panics if a GPU block
+    /// precedes a CPU block (swap_out is front-first, so this cannot occur).
+    pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
+        let bs = self.alloc.block_size();
+        let Some(seq) = self.seqs.get_mut(&req) else {
+            return 0;
+        };
+        let prefix = seq
+            .blocks
+            .iter()
+            .position(|b| matches!(b, BlockLoc::Gpu(_)))
+            .unwrap_or(seq.blocks.len());
+        for b in seq.blocks.drain(prefix..) {
+            match b {
+                BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
+                BlockLoc::Cpu(_) => panic!("CPU block after GPU block in req {req}"),
+            }
+        }
+        seq.len_tokens = seq.len_tokens.min(prefix * bs);
+        seq.len_tokens
+    }
+
+    /// Plan swapping IN up to `max_blocks` CPU-resident blocks of `req`
+    /// (earliest logical blocks first). Stops at GPU exhaustion.
+    pub fn swap_in(&mut self, req: ReqId, max_blocks: usize) -> Vec<BlockMove> {
+        let Some(seq) = self.seqs.get_mut(&req) else {
+            return vec![];
+        };
+        let mut moves = Vec::new();
+        for i in 0..seq.blocks.len() {
+            if moves.len() >= max_blocks {
+                break;
+            }
+            if let BlockLoc::Cpu(c) = seq.blocks[i] {
+                let Some(g) = self.alloc.alloc_gpu() else {
+                    break;
+                };
+                seq.blocks[i] = BlockLoc::Gpu(g);
+                self.alloc.free_cpu(c);
+                moves.push(BlockMove { req, gpu: g, cpu: c });
+            }
+        }
+        moves
+    }
+
+    /// GPU block table for the kernels. Errors if any block is on CPU.
+    pub fn gpu_block_table(&self, req: ReqId) -> Result<Vec<BlockId>> {
+        let seq = self.seqs.get(&req).ok_or_else(|| anyhow::anyhow!("no seq {req}"))?;
+        seq.blocks
+            .iter()
+            .map(|b| match b {
+                BlockLoc::Gpu(id) => Ok(*id),
+                BlockLoc::Cpu(_) => bail!("req {req} has CPU-resident blocks"),
+            })
+            .collect()
+    }
+
+    /// Sum of valid tokens held in GPU blocks by `req`.
+    pub fn gpu_tokens_of(&self, req: ReqId) -> usize {
+        let bs = self.alloc.block_size();
+        self.seqs
+            .get(&req)
+            .map(|s| {
+                s.blocks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| matches!(b, BlockLoc::Gpu(_)))
+                    .map(|(i, _)| ((i + 1) * bs).min(s.len_tokens).saturating_sub(i * bs))
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// CPU-resident blocks of `req` (for swap-in budgeting).
+    pub fn cpu_blocks_of(&self, req: ReqId) -> usize {
+        self.seqs.get(&req).map(|s| s.cpu_blocks()).unwrap_or(0)
+    }
+
+    /// Total valid tokens of `req`'s cache.
+    pub fn len_tokens(&self, req: ReqId) -> usize {
+        self.seqs.get(&req).map(|s| s.len_tokens).unwrap_or(0)
+    }
+
+    /// Invariant check used by tests: every block id appears exactly once
+    /// across free lists and sequence tables.
+    pub fn check_conservation(&self) -> Result<()> {
+        let mut gpu_seen = vec![0u32; self.alloc.num_gpu()];
+        let mut cpu_seen = vec![0u32; self.alloc.num_cpu()];
+        for id in &self.alloc.gpu_free {
+            gpu_seen[*id as usize] += 1;
+        }
+        for id in &self.alloc.cpu_free {
+            cpu_seen[*id as usize] += 1;
+        }
+        for seq in self.seqs.values() {
+            for b in &seq.blocks {
+                match b {
+                    BlockLoc::Gpu(id) => gpu_seen[*id as usize] += 1,
+                    BlockLoc::Cpu(id) => cpu_seen[*id as usize] += 1,
+                }
+            }
+        }
+        if let Some(i) = gpu_seen.iter().position(|&c| c != 1) {
+            bail!("gpu block {i} appears {} times", gpu_seen[i]);
+        }
+        if let Some(i) = cpu_seen.iter().position(|&c| c != 1) {
+            bail!("cpu slot {i} appears {} times", cpu_seen[i]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> CacheManager {
+        CacheManager::new(16, 8, 8)
+    }
+
+    #[test]
+    fn grow_allocates_exact_blocks() {
+        let mut m = mgr();
+        m.grow(1, 17).unwrap(); // 2 blocks
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 2);
+        assert_eq!(m.gpu_free(), 6);
+        m.grow(1, 32).unwrap(); // still 2 blocks
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 2);
+        m.grow(1, 33).unwrap(); // 3rd block
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 3);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn oom_is_an_error() {
+        let mut m = mgr();
+        m.grow(1, 8 * 16).unwrap(); // all 8 blocks
+        assert!(m.grow(2, 1).is_err());
+        assert_eq!(m.gpu_free(), 0);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn watermark_blocks_admission() {
+        let mut m = mgr();
+        m.watermark_blocks = 2;
+        assert!(m.can_grow(1, 6 * 16));
+        assert!(!m.can_grow(1, 7 * 16));
+        m.grow(1, 6 * 16).unwrap();
+        assert!(m.grow(2, 1).is_err());
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut m = mgr();
+        m.grow(1, 50).unwrap();
+        m.advance(1, 50);
+        m.release(1);
+        assert_eq!(m.gpu_free(), 8);
+        assert!(!m.has_seq(1));
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn swap_out_then_in_roundtrip() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap(); // 4 blocks
+        m.advance(1, 64);
+        let out = m.swap_out(1, 10);
+        assert_eq!(out.len(), 4);
+        assert_eq!(m.gpu_free(), 8);
+        assert_eq!(m.cpu_free(), 4);
+        assert!(!m.seq(1).unwrap().fully_on_gpu());
+        assert!(m.gpu_block_table(1).is_err());
+        m.check_conservation().unwrap();
+
+        let back = m.swap_in(1, 2);
+        assert_eq!(back.len(), 2);
+        assert_eq!(m.cpu_blocks_of(1), 2);
+        let back2 = m.swap_in(1, 99);
+        assert_eq!(back2.len(), 2);
+        assert!(m.seq(1).unwrap().fully_on_gpu());
+        assert_eq!(m.gpu_block_table(1).unwrap().len(), 4);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn swap_out_evicts_front_first() {
+        let mut m = mgr();
+        m.grow(1, 48).unwrap();
+        m.advance(1, 48);
+        m.swap_out(1, 1);
+        let seq = m.seq(1).unwrap();
+        assert!(matches!(seq.blocks[0], BlockLoc::Cpu(_)));
+        assert!(matches!(seq.blocks[2], BlockLoc::Gpu(_)));
+    }
+
+    #[test]
+    fn discard_gpu_tail_keeps_cpu_prefix() {
+        let mut m = mgr();
+        m.grow(1, 60).unwrap(); // 4 blocks
+        m.advance(1, 60);
+        m.swap_out(1, 2); // blocks 0,1 now on CPU
+        let new_len = m.discard_gpu_tail(1);
+        assert_eq!(new_len, 32); // 2 blocks * 16 tokens
+        assert_eq!(m.len_tokens(1), 32);
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 2);
+        assert_eq!(m.gpu_free(), 8);
+        m.check_conservation().unwrap();
+        // fully discarding when nothing was swapped
+        m.grow(2, 30).unwrap();
+        m.advance(2, 30);
+        assert_eq!(m.discard_gpu_tail(2), 0);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn swap_in_restores_prefix_first() {
+        let mut m = mgr();
+        m.grow(1, 48).unwrap();
+        m.advance(1, 48);
+        m.swap_out(1, 3);
+        m.swap_in(1, 1);
+        let seq = m.seq(1).unwrap();
+        assert!(matches!(seq.blocks[0], BlockLoc::Gpu(_)));
+    }
+
+    #[test]
+    fn swap_out_bounded_by_cpu_space() {
+        let mut m = CacheManager::new(16, 8, 2);
+        m.grow(1, 64).unwrap();
+        m.advance(1, 64);
+        let out = m.swap_out(1, 10);
+        assert_eq!(out.len(), 2); // only 2 CPU slots
+        assert_eq!(m.cpu_free(), 0);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn gpu_tokens_counts_partial_blocks() {
+        let mut m = mgr();
+        m.grow(1, 20).unwrap();
+        m.advance(1, 20);
+        assert_eq!(m.gpu_tokens_of(1), 20);
+        assert_eq!(m.gpu_tokens(), 20);
+        // swap out the front block (holds 16 valid tokens); the partial
+        // tail block (4 valid tokens) stays on GPU
+        m.swap_out(1, 1);
+        assert_eq!(m.gpu_tokens_of(1), 4);
+    }
+}

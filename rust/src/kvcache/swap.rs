@@ -1,0 +1,130 @@
+//! Swap transfer model: §4.1's pipelining + chunking timing semantics.
+//!
+//! The *data* movement is the backend's job ([`crate::kvcache::BlockMove`]);
+//! this module answers the timing/accounting questions:
+//!   * how long does moving N tokens take (bandwidth + per-page kernel
+//!     launch overhead — the PagedAttention scatter cost the paper calls
+//!     out in §3.2),
+//!   * how much of a transfer is hidden behind model forwarding when swap
+//!     is pipelined layer-by-layer (§4.1), and
+//!   * the per-iteration *swap limit* `N_i` with `T_swap(N_i) = T_fwd(B_i)`.
+
+use crate::util::Micros;
+
+/// Parameters of the GPU↔CPU link and the swap implementation.
+#[derive(Debug, Clone)]
+pub struct SwapModel {
+    /// Link bandwidth in bytes per second (PCIe ~16 GB/s in the paper).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Per-page launch overhead in µs (one CUDA memcpy kernel per
+    /// non-contiguous physical region under PagedAttention).
+    pub per_block_launch_us: f64,
+    /// KV bytes per token (the paper's `M`).
+    pub kv_bytes_per_token: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Whether transfers are pipelined layer-by-layer with forwarding
+    /// (InferCept's swap pipelining, §4.1). Non-pipelined swap serializes
+    /// with the iteration; pipelined swap only costs whatever exceeds the
+    /// concurrent forward time.
+    pub pipelined: bool,
+}
+
+impl SwapModel {
+    /// Wall time to move `tokens` over the link (one direction).
+    pub fn t_swap(&self, tokens: usize) -> Micros {
+        if tokens == 0 {
+            return 0;
+        }
+        let bytes = tokens as f64 * self.kv_bytes_per_token as f64;
+        let blocks = tokens.div_ceil(self.block_size) as f64;
+        let secs = bytes / self.bandwidth_bytes_per_sec;
+        (secs * 1e6 + blocks * self.per_block_launch_us) as Micros
+    }
+
+    /// Inverse of [`SwapModel::t_swap`]: the swap limit `N_i` — how many
+    /// tokens can move within `budget_us` (§4.1 "swap chunking": choose
+    /// `N_i` with `T_swap(N_i) = T_fwd(B_i)`).
+    pub fn tokens_within(&self, budget_us: Micros) -> usize {
+        if budget_us == 0 {
+            return 0;
+        }
+        // Solve bytes/bw + blocks*launch <= budget, conservatively treating
+        // launch overhead at token granularity.
+        let per_token_us = self.kv_bytes_per_token as f64 / self.bandwidth_bytes_per_sec * 1e6
+            + self.per_block_launch_us / self.block_size as f64;
+        (budget_us as f64 / per_token_us) as usize
+    }
+
+    /// The iteration-time *cost* of moving `tokens` while the forward pass
+    /// takes `fwd_us`: zero when pipelined and hidden, the excess when the
+    /// transfer outlasts forwarding, the full transfer when unpipelined.
+    pub fn stall_us(&self, tokens: usize, fwd_us: Micros) -> Micros {
+        let t = self.t_swap(tokens);
+        if self.pipelined {
+            t.saturating_sub(fwd_us)
+        } else {
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(pipelined: bool) -> SwapModel {
+        SwapModel {
+            bandwidth_bytes_per_sec: 16e9,
+            per_block_launch_us: 10.0,
+            kv_bytes_per_token: 458_752, // GPT-J-6B fp16
+            block_size: 16,
+            pipelined,
+        }
+    }
+
+    #[test]
+    fn t_swap_scales_with_tokens() {
+        let m = model(false);
+        assert_eq!(m.t_swap(0), 0);
+        let t1 = m.t_swap(160);
+        let t2 = m.t_swap(320);
+        assert!(t2 > t1 && t2 < 3 * t1);
+        // 160 tokens * 458752 B = 73.4 MB over 16 GB/s ≈ 4.6 ms + 100 µs launch
+        assert!((4_000..6_000).contains(&t1), "{t1}");
+    }
+
+    #[test]
+    fn tokens_within_roundtrips() {
+        let m = model(true);
+        let budget = 5_000; // 5 ms
+        let n = m.tokens_within(budget);
+        assert!(n > 0);
+        assert!(m.t_swap(n) <= budget + budget / 10, "{} > {}", m.t_swap(n), budget);
+        // and it is close to tight: 20% more tokens must exceed the budget
+        assert!(m.t_swap(n + n / 5 + 1) > budget);
+    }
+
+    #[test]
+    fn pipelining_hides_transfer_behind_forward() {
+        let hidden = model(true);
+        let blocking = model(false);
+        let fwd = 50_000; // 50 ms forward pass
+        let tokens = hidden.tokens_within(fwd);
+        assert_eq!(hidden.stall_us(tokens, fwd), 0);
+        assert!(blocking.stall_us(tokens, fwd) > 0);
+        // oversized transfers still stall the pipelined path, but only by
+        // the excess
+        let big = tokens * 4;
+        let stall = hidden.stall_us(big, fwd);
+        assert!(stall > 0 && stall < blocking.stall_us(big, fwd));
+    }
+
+    #[test]
+    fn launch_overhead_visible_for_small_transfers() {
+        let mut m = model(false);
+        m.per_block_launch_us = 1000.0; // exaggerate
+        let t_one_block = m.t_swap(16);
+        assert!(t_one_block >= 1000);
+    }
+}

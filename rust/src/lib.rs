@@ -1,0 +1,59 @@
+//! # InferCept-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *InferCept: Efficient Intercept
+//! Support for Augmented Large Language Model Inference* (ICML 2024).
+//!
+//! Augmented LLMs are *intercepted* mid-generation by tools, humans, and
+//! environments. Existing serving stacks treat every interception as the end
+//! of the request and recompute the whole context on resume. InferCept
+//! instead minimizes **GPU memory waste**: each iteration it chooses, per
+//! intercepted request, between *Preserve*, *chunked Discard (recompute)*,
+//! and *budgeted pipelined Swap*, driven by the waste equations of §3.2/§4.
+//!
+//! ## Layers
+//! * **L3 (this crate)** — the serving coordinator: iteration-level
+//!   scheduler, paged KV-cache manager, waste estimator, swap budgets,
+//!   augmentation executor, metrics ([`engine`], [`coordinator`],
+//!   [`kvcache`], [`augment`], [`workload`], [`metrics`]).
+//! * **L2/L1 (python/, build-time only)** — a paged-KV transformer whose
+//!   attention hot-spots are Pallas kernels; AOT-lowered to HLO text and
+//!   executed from Rust via PJRT ([`runtime`]).
+//! * **Sim substrate** — a discrete-event backend with A100-calibrated cost
+//!   models that runs the *same* scheduler at paper scale ([`sim`]).
+//!
+//! ## Quickstart
+//! ```no_run
+//! use infercept::prelude::*;
+//! let spec = SimModelSpec::gptj_6b();
+//! let mut engine = Engine::new(
+//!     Box::new(SimBackend::new(spec.clone())),
+//!     EngineConfig::for_sim(&spec, Policy::infercept()),
+//! );
+//! let trace = WorkloadGen::new(WorkloadKind::Mixed, 42).generate(100, 2.0);
+//! let report = engine.run_trace(&trace).unwrap();
+//! println!("normalized latency: {:.1} ms/token", report.normalized_latency_ms());
+//! ```
+
+pub mod augment;
+pub mod cmds;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::augment::{AugmentKind, AugmentProfile};
+    pub use crate::config::EngineConfig;
+    pub use crate::coordinator::policy::Policy;
+    pub use crate::engine::{Engine, ExecBackend};
+    pub use crate::metrics::RunReport;
+    pub use crate::sim::{SimBackend, SimModelSpec};
+    pub use crate::workload::{RequestTrace, WorkloadGen, WorkloadKind};
+}

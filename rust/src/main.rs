@@ -1,0 +1,58 @@
+//! InferCept-RS launcher.
+//!
+//! Subcommands:
+//!   serve           real PJRT serving of a mini model on a generated trace
+//!   sim             one policy × one workload on the simulated A100 backend
+//!   fig2            Fig. 2 sweep: policies × request rates × model setups
+//!   fig3            Fig. 3 ablation ladder (normalized latency + waste)
+//!   table1          Table 1 / Fig. 4–5: augmentation marginals + CDFs
+//!   estimator-eval  §4.4: oracle vs profile vs dynamic estimators
+//!   profile         offline T_fwd profiling of the PJRT runtime (§4.5)
+//!   gen-trace       generate and save a workload trace (JSON)
+
+use anyhow::{bail, Result};
+use infercept::cmds;
+use infercept::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["cdf", "verbose", "csv"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => cmds::serve::run(&args),
+        "sim" => cmds::sim_run::run(&args),
+        "fig2" => cmds::fig2::run(&args),
+        "fig3" => cmds::fig3::run(&args),
+        "table1" => cmds::table1::run(&args),
+        "estimator-eval" => cmds::estimator_eval::run(&args),
+        "profile" => cmds::profile::run(&args),
+        "gen-trace" => cmds::gen_trace::run(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+InferCept-RS — efficient intercept support for augmented LLM inference
+
+USAGE: infercept <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve           real PJRT serving of a mini model (needs `make artifacts`)
+  sim             run one policy on the simulated A100 backend
+  fig2            reproduce Fig. 2 (norm latency / throughput / TTFT sweeps)
+  fig3            reproduce Fig. 3 (technique-breakdown ablation)
+  table1          reproduce Table 1 + Fig. 4/5 CDFs
+  estimator-eval  reproduce the §4.4 estimator comparison
+  profile         offline T_fwd profiling of the PJRT runtime
+  gen-trace       generate a workload trace JSON
+
+COMMON OPTIONS:
+  --model <6b|13b|13b-tp2|70b>      sim model   (default 6b)
+  --workload <mixed|qa|chatbot|math|ve|image|tts>  (default mixed)
+  --policy <vllm|improved-discard|preserve|swap|infercept>
+  --rate <req/s>   --requests <n>   --seed <n>
+  --out <path>     write results (CSV)
+";

@@ -1,0 +1,271 @@
+//! Serving metrics: the quantities §5 reports.
+//!
+//! * **Normalized latency** — median over requests of (end-to-end latency
+//!   minus intercepted time) / output tokens (ms/token).
+//! * **Throughput** — finished requests per second.
+//! * **TTFT** — arrival to first generated token.
+//! * **GPU waste** — GB·s of memory held/consumed without producing tokens,
+//!   broken down by cause (preserve hold, recompute rebuild, swap stall) —
+//!   the paper's §3.2 accounting.
+//! * **Recompute share** — fraction of forward time spent re-processing
+//!   previously computed tokens (the 37–40% claim).
+
+use crate::kvcache::ReqId;
+use crate::util::{stats, to_secs, Micros};
+
+/// Per-request record, filled as the request progresses.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub req: ReqId,
+    pub arrival: Micros,
+    pub first_token_at: Option<Micros>,
+    pub finished_at: Option<Micros>,
+    pub intercepted_us: Micros,
+    pub output_tokens: usize,
+    pub interceptions: usize,
+}
+
+impl RequestRecord {
+    /// (E2E − intercepted) / output tokens, in ms per token.
+    pub fn normalized_latency_ms(&self) -> Option<f64> {
+        let fin = self.finished_at?;
+        let serve_us = (fin - self.arrival).saturating_sub(self.intercepted_us);
+        if self.output_tokens == 0 {
+            return None;
+        }
+        Some(serve_us as f64 / 1e3 / self.output_tokens as f64)
+    }
+
+    pub fn ttft_ms(&self) -> Option<f64> {
+        Some((self.first_token_at? - self.arrival) as f64 / 1e3)
+    }
+}
+
+/// GPU-memory waste accounting in GB·s by cause.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WasteBreakdown {
+    /// Paused requests' GPU-resident context × time.
+    pub preserve_gbs: f64,
+    /// Memory being rebuilt by recomputation × time.
+    pub recompute_gbs: f64,
+    /// All resident context × stall time (sync swap, over-budget transfers).
+    pub stall_gbs: f64,
+}
+
+impl WasteBreakdown {
+    pub fn total(&self) -> f64 {
+        self.preserve_gbs + self.recompute_gbs + self.stall_gbs
+    }
+}
+
+/// Rolling accumulator the engine feeds each iteration.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<RequestRecord>,
+    pub waste: WasteBreakdown,
+    pub iterations: u64,
+    pub compute_us: Micros,
+    pub stall_us: Micros,
+    /// Query-token counts by kind.
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+    pub recompute_tokens: u64,
+    /// Forward time attributed to recomputation (token-weighted).
+    pub recompute_fwd_us: f64,
+    /// Time during which paused requests held ≥ half the GPU pool.
+    pub paused_majority_us: Micros,
+    pub swapped_out_tokens: u64,
+    pub swapped_in_tokens: u64,
+    pub evictions: u64,
+    pub run_started: Micros,
+    pub run_ended: Micros,
+}
+
+impl Recorder {
+    pub fn finish_request(&mut self, rec: RequestRecord) {
+        self.records.push(rec);
+    }
+
+    /// Per-iteration accrual. `dt_us = compute + stall`; `recompute_us` is
+    /// the engine's marginal-cost attribution of recompute time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn iteration(
+        &mut self,
+        compute_us: Micros,
+        stall_us: Micros,
+        decode_q: usize,
+        prefill_q: usize,
+        recompute_q: usize,
+        recompute_us: f64,
+    ) {
+        self.iterations += 1;
+        self.compute_us += compute_us;
+        self.stall_us += stall_us;
+        self.decode_tokens += decode_q as u64;
+        self.prefill_tokens += prefill_q as u64;
+        self.recompute_tokens += recompute_q as u64;
+        self.recompute_fwd_us += recompute_us;
+    }
+
+    /// Fraction of total forward time spent on recomputation.
+    pub fn recompute_fwd_fraction(&self) -> f64 {
+        if self.compute_us == 0 {
+            0.0
+        } else {
+            self.recompute_fwd_us / self.compute_us as f64
+        }
+    }
+
+    pub fn report(&self, policy: &str, label: &str) -> RunReport {
+        RunReport {
+            policy: policy.to_string(),
+            label: label.to_string(),
+            completed: self.records.iter().filter(|r| r.finished_at.is_some()).count(),
+            total: self.records.len(),
+            duration_s: to_secs(self.run_ended.saturating_sub(self.run_started)),
+            norm_latencies_ms: self
+                .records
+                .iter()
+                .filter_map(|r| r.normalized_latency_ms())
+                .collect(),
+            ttfts_ms: self.records.iter().filter_map(|r| r.ttft_ms()).collect(),
+            waste: self.waste,
+            iterations: self.iterations,
+            compute_s: to_secs(self.compute_us),
+            stall_s: to_secs(self.stall_us),
+            recompute_fwd_fraction: self.recompute_fwd_fraction(),
+            paused_majority_s: to_secs(self.paused_majority_us),
+            swapped_out_tokens: self.swapped_out_tokens,
+            swapped_in_tokens: self.swapped_in_tokens,
+            evictions: self.evictions,
+        }
+    }
+}
+
+/// Final aggregate for one run — what every experiment binary prints.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    pub label: String,
+    pub completed: usize,
+    pub total: usize,
+    pub duration_s: f64,
+    pub norm_latencies_ms: Vec<f64>,
+    pub ttfts_ms: Vec<f64>,
+    pub waste: WasteBreakdown,
+    pub iterations: u64,
+    pub compute_s: f64,
+    pub stall_s: f64,
+    pub recompute_fwd_fraction: f64,
+    pub paused_majority_s: f64,
+    pub swapped_out_tokens: u64,
+    pub swapped_in_tokens: u64,
+    pub evictions: u64,
+}
+
+impl RunReport {
+    /// Median normalized latency, ms per output token (§5.1's headline).
+    pub fn normalized_latency_ms(&self) -> f64 {
+        stats::median(&self.norm_latencies_ms)
+    }
+
+    pub fn p99_normalized_latency_ms(&self) -> f64 {
+        stats::percentile_of(&self.norm_latencies_ms, 99.0)
+    }
+
+    /// Finished requests per second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.duration_s == 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.duration_s
+        }
+    }
+
+    pub fn median_ttft_ms(&self) -> f64 {
+        stats::median(&self.ttfts_ms)
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        stats::percentile_of(&self.ttfts_ms, 99.0)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<20} {:>5}/{:<5} done  norm-lat {:>9.2} ms/tok  ttft {:>9.1} ms  \
+             thru {:>6.3} req/s  waste {:>8.2} GB·s (P {:.1} / R {:.1} / S {:.1})",
+            self.policy,
+            self.completed,
+            self.total,
+            self.normalized_latency_ms(),
+            self.median_ttft_ms(),
+            self.throughput_rps(),
+            self.waste.total(),
+            self.waste.preserve_gbs,
+            self.waste.recompute_gbs,
+            self.waste.stall_gbs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: Micros, first: Micros, fin: Micros, paused: Micros, out: usize) -> RequestRecord {
+        RequestRecord {
+            req: 0,
+            arrival,
+            first_token_at: Some(first),
+            finished_at: Some(fin),
+            intercepted_us: paused,
+            output_tokens: out,
+            interceptions: 1,
+        }
+    }
+
+    #[test]
+    fn normalized_latency_subtracts_interception_time() {
+        let r = rec(0, 50_000, 1_050_000, 1_000_000, 10);
+        // (1.05s - 1.0s paused) / 10 tokens = 5 ms/token
+        assert!((r.normalized_latency_ms().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_from_arrival() {
+        let r = rec(100_000, 150_000, 1_000_000, 0, 5);
+        assert!((r.ttft_ms().unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unfinished_requests_have_no_latency() {
+        let mut r = rec(0, 10, 20, 0, 5);
+        r.finished_at = None;
+        assert!(r.normalized_latency_ms().is_none());
+    }
+
+    #[test]
+    fn recorder_attributes_recompute_time() {
+        let mut m = Recorder::default();
+        // iteration: 100 ms, of which 90 ms attributed to recompute
+        m.iteration(100_000, 0, 10, 90, 90, 90_000.0);
+        // iteration: 100 ms, pure decode
+        m.iteration(100_000, 0, 100, 0, 0, 0.0);
+        let f = m.recompute_fwd_fraction();
+        assert!((f - 0.45).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut m = Recorder::default();
+        m.run_started = 0;
+        m.run_ended = 2_000_000;
+        m.finish_request(rec(0, 100_000, 1_000_000, 0, 100));
+        m.finish_request(rec(0, 200_000, 2_000_000, 1_000_000, 100));
+        let rep = m.report("test", "lbl");
+        assert_eq!(rep.completed, 2);
+        assert!((rep.throughput_rps() - 1.0).abs() < 1e-9);
+        // latencies: 10 ms/tok and 10 ms/tok -> median 10
+        assert!((rep.normalized_latency_ms() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Offline profiler (§4.5): measures `T_fwd` and the saturation point on
+//! the live PJRT runtime before serving starts, producing the
+//! [`FwdProfile`] the waste equations and swap budgets consume.
+
+use anyhow::Result;
+
+use crate::coordinator::waste::FwdProfile;
+use crate::runtime::pool::HostPool;
+use crate::runtime::PjrtRuntime;
+use crate::util::Micros;
+
+/// Measured (query_tokens, ctx_tokens, micros) samples.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileSamples {
+    pub prefill: Vec<(usize, Micros)>,
+    pub decode_ctx: Vec<(usize, Micros)>,
+}
+
+/// Run the measurement workload: every compiled prefill chunk (query-token
+/// scaling) and decode at increasing context lengths (context scaling).
+pub fn measure(rt: &PjrtRuntime, reps: usize) -> Result<ProfileSamples> {
+    let geom = rt.entry.geometry.clone();
+    let cpu_blocks = 4;
+    let mut k = HostPool::new(&geom, cpu_blocks);
+    let mut v = HostPool::new(&geom, cpu_blocks);
+    let table: Vec<i32> = (0..geom.max_blocks_per_seq as i32).collect();
+    let mut samples = ProfileSamples::default();
+
+    for &chunk in rt.prefill_chunks().iter() {
+        if chunk > geom.max_seq_tokens() {
+            continue;
+        }
+        let toks = vec![3i32; chunk];
+        // warmup
+        rt.prefill_chunk(&mut k, &mut v, &toks, &table, 0)?;
+        let mut best = Micros::MAX;
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            rt.prefill_chunk(&mut k, &mut v, &toks, &table, 0)?;
+            best = best.min(t.elapsed().as_micros() as Micros);
+        }
+        samples.prefill.push((chunk, best));
+    }
+
+    // Decode at batch 1 with growing context.
+    let max_ctx = geom.max_seq_tokens();
+    for ctx in [16, max_ctx / 4, max_ctx / 2, max_ctx - 1] {
+        let tokens = [5i32];
+        let lens = [ctx as i32];
+        rt.decode_step(&mut k, &mut v, &tokens, &table, &lens)?;
+        let mut best = Micros::MAX;
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            rt.decode_step(&mut k, &mut v, &tokens, &table, &lens)?;
+            best = best.min(t.elapsed().as_micros() as Micros);
+        }
+        samples.decode_ctx.push((ctx, best));
+    }
+    Ok(samples)
+}
+
+/// Least-squares fit of the piecewise model from measured samples.
+///
+/// On CPU there is no underutilized-parallelism region, so the unsaturated
+/// and saturated query slopes coincide and `saturation_tokens` becomes a
+/// *latency bound* on per-iteration prefill work (Sarathi-style chunking)
+/// rather than a parallelism knee — set by `saturation_override`.
+pub fn fit(samples: &ProfileSamples, saturation_override: usize) -> FwdProfile {
+    // Query slope + base from prefill samples: t = base + a·q.
+    let (a, base) = linfit(
+        &samples.prefill.iter().map(|(q, t)| (*q as f64, *t as f64)).collect::<Vec<_>>(),
+    );
+    // Context slope from decode samples: t = base' + b·ctx.
+    let (b, _) = linfit(
+        &samples.decode_ctx.iter().map(|(c, t)| (*c as f64, *t as f64)).collect::<Vec<_>>(),
+    );
+    FwdProfile {
+        t_base_us: base.max(1.0),
+        us_per_ctx_token: b.max(0.0),
+        us_per_query_unsat: a.max(0.1),
+        us_per_query_sat: a.max(0.1),
+        saturation_tokens: saturation_override,
+    }
+}
+
+/// Ordinary least squares y = slope·x + intercept → (slope, intercept).
+pub fn linfit(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return (0.0, points.first().map(|p| p.1).unwrap_or(0.0));
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    (slope, (sy - slope * sx) / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linfit_recovers_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 + 2.0 * i as f64)).collect();
+        let (m, c) = linfit(&pts);
+        assert!((m - 2.0).abs() < 1e-9);
+        assert!((c - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_degenerate_inputs() {
+        assert_eq!(linfit(&[]), (0.0, 0.0));
+        assert_eq!(linfit(&[(1.0, 5.0)]), (0.0, 5.0));
+        let (m, c) = linfit(&[(2.0, 7.0), (2.0, 9.0)]); // vertical
+        assert_eq!(m, 0.0);
+        assert_eq!(c, 8.0);
+    }
+
+    #[test]
+    fn fit_builds_sane_profile() {
+        let samples = ProfileSamples {
+            prefill: vec![(16, 6_000), (32, 10_000), (64, 18_000), (128, 34_000)],
+            decode_ctx: vec![(16, 2_100), (128, 2_500), (256, 3_000), (511, 4_000)],
+        };
+        let p = fit(&samples, 64);
+        assert!(p.t_base_us > 0.0);
+        assert!((p.us_per_query_unsat - 250.0).abs() < 20.0, "{}", p.us_per_query_unsat);
+        assert!(p.us_per_ctx_token > 1.0);
+        assert_eq!(p.saturation_tokens, 64);
+        // model roughly reproduces a sample
+        let t = p.t_fwd(64, 0);
+        assert!((t as f64 - 18_000.0).abs() / 18_000.0 < 0.25, "{t}");
+    }
+}

@@ -1,0 +1,205 @@
+//! AOT manifest: what `python/compile/aot.py` produced and how to feed it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model geometry (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub max_blocks_per_seq: usize,
+}
+
+impl ModelGeometry {
+    /// f32 elements in one KV pool `[L, P, bs, KH, D]`.
+    pub fn pool_elems(&self) -> usize {
+        self.n_layers * self.num_blocks * self.block_size * self.n_kv_heads * self.head_dim
+    }
+
+    /// f32 elements of one block in one layer (`bs × KH × D`).
+    pub fn block_elems(&self) -> usize {
+        self.block_size * self.n_kv_heads * self.head_dim
+    }
+
+    pub fn max_seq_tokens(&self) -> usize {
+        self.block_size * self.max_blocks_per_seq
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VariantKind {
+    Decode { batch: usize },
+    Prefill { chunk: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub file: PathBuf,
+    pub kind: VariantKind,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub geometry: ModelGeometry,
+    pub kv_bytes_per_token: usize,
+    pub params_npz: PathBuf,
+    /// (name, shape, dtype) in jax pytree flatten order = argument order.
+    pub param_order: Vec<(String, Vec<usize>, String)>,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl ModelEntry {
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .variants
+            .values()
+            .filter_map(|x| match x.kind {
+                VariantKind::Decode { batch } => Some(batch),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn prefill_chunks(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .variants
+            .values()
+            .filter_map(|x| match x.kind {
+                VariantKind::Prefill { chunk } => Some(chunk),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} — run `make artifacts`"))?;
+        let v = Json::parse(&text)?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(&dir, name, m)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest ({:?})", self.models.keys()))
+    }
+}
+
+fn parse_model(dir: &Path, name: &str, m: &Json) -> Result<ModelEntry> {
+    let c = m.get("config")?;
+    let geometry = ModelGeometry {
+        name: name.to_string(),
+        n_layers: c.get("n_layers")?.as_usize()?,
+        d_model: c.get("d_model")?.as_usize()?,
+        n_heads: c.get("n_heads")?.as_usize()?,
+        n_kv_heads: c.get("n_kv_heads")?.as_usize()?,
+        head_dim: c.get("head_dim")?.as_usize()?,
+        vocab: c.get("vocab")?.as_usize()?,
+        block_size: c.get("block_size")?.as_usize()?,
+        num_blocks: c.get("num_blocks")?.as_usize()?,
+        max_blocks_per_seq: c.get("max_blocks_per_seq")?.as_usize()?,
+    };
+    let param_order = m
+        .get("param_order")?
+        .as_arr()?
+        .iter()
+        .map(|e| {
+            let t = e.as_arr()?;
+            if t.len() != 3 {
+                bail!("bad param_order entry");
+            }
+            let shape =
+                t[1].as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<Vec<_>>>()?;
+            Ok((t[0].as_str()?.to_string(), shape, t[2].as_str()?.to_string()))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut variants = BTreeMap::new();
+    for (vname, vv) in m.get("variants")?.as_obj()? {
+        let file = dir.join(vv.get("file")?.as_str()?);
+        let kind = match vv.get("kind")?.as_str()? {
+            "decode" => VariantKind::Decode { batch: vv.get("batch")?.as_usize()? },
+            "prefill" => VariantKind::Prefill { chunk: vv.get("chunk")?.as_usize()? },
+            k => bail!("unknown variant kind '{k}'"),
+        };
+        variants.insert(vname.clone(), Variant { file, kind });
+    }
+    Ok(ModelEntry {
+        geometry,
+        kv_bytes_per_token: m.get("kv_bytes_per_token")?.as_usize()?,
+        params_npz: dir.join(m.get("params_npz")?.as_str()?),
+        param_order,
+        variants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        Json::parse(
+            r#"{
+            "format": 1,
+            "models": {
+              "gptj-mini": {
+                "config": {"name":"gptj-mini","n_layers":4,"d_model":256,
+                  "n_heads":8,"n_kv_heads":8,"head_dim":32,"d_ff":1024,
+                  "vocab":512,"block_size":16,"num_blocks":128,
+                  "max_blocks_per_seq":32},
+                "kv_bytes_per_token": 8192,
+                "param_order": [["embed",[512,256],"float32"]],
+                "params_npz": "gptj-mini.params.npz",
+                "variants": {
+                  "decode_b1": {"file":"d1.hlo.txt","kind":"decode","batch":1},
+                  "decode_b4": {"file":"d4.hlo.txt","kind":"decode","batch":4},
+                  "prefill_t16": {"file":"p16.hlo.txt","kind":"prefill","chunk":16}
+                }
+              }
+            }}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = parse_model(Path::new("/tmp/a"), "gptj-mini",
+            sample_manifest().get("models").unwrap().get("gptj-mini").unwrap()).unwrap();
+        assert_eq!(m.geometry.n_layers, 4);
+        assert_eq!(m.geometry.pool_elems(), 4 * 128 * 16 * 8 * 32);
+        assert_eq!(m.geometry.block_elems(), 16 * 8 * 32);
+        assert_eq!(m.geometry.max_seq_tokens(), 512);
+        assert_eq!(m.decode_batches(), vec![1, 4]);
+        assert_eq!(m.prefill_chunks(), vec![16]);
+        assert_eq!(m.param_order[0].0, "embed");
+        assert!(m.variants["decode_b1"].file.ends_with("d1.hlo.txt"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Host-side paged KV pools + the CPU swap space for the PJRT backend.
+//!
+//! Layout matches the L2 model exactly: `[L, P, bs, KH, D]` f32, so block
+//! `b` of layer `l` starts at `(l * P + b) * block_elems`. Swap moves copy
+//! per-layer block slices between the GPU pool and the CPU swap area.
+
+use crate::runtime::manifest::ModelGeometry;
+
+/// One K or V pool plus its CPU swap mirror.
+#[derive(Debug, Clone)]
+pub struct HostPool {
+    /// `[L, P, bs, KH, D]` — the pool the executables read/write.
+    pub gpu: Vec<f32>,
+    /// `[L, P_cpu, bs, KH, D]` — swap space.
+    pub cpu: Vec<f32>,
+    layers: usize,
+    gpu_blocks: usize,
+    cpu_blocks: usize,
+    block_elems: usize,
+}
+
+impl HostPool {
+    pub fn new(geom: &ModelGeometry, cpu_blocks: usize) -> HostPool {
+        HostPool {
+            gpu: vec![0.0; geom.pool_elems()],
+            cpu: vec![0.0; geom.n_layers * cpu_blocks * geom.block_elems()],
+            layers: geom.n_layers,
+            gpu_blocks: geom.num_blocks,
+            cpu_blocks,
+            block_elems: geom.block_elems(),
+        }
+    }
+
+    fn gpu_off(&self, layer: usize, block: usize) -> usize {
+        (layer * self.gpu_blocks + block) * self.block_elems
+    }
+
+    fn cpu_off(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.cpu_blocks + slot) * self.block_elems
+    }
+
+    /// GPU block → CPU slot (all layers).
+    pub fn copy_out(&mut self, gpu_block: usize, cpu_slot: usize) {
+        assert!(gpu_block < self.gpu_blocks && cpu_slot < self.cpu_blocks);
+        for l in 0..self.layers {
+            let g = self.gpu_off(l, gpu_block);
+            let c = self.cpu_off(l, cpu_slot);
+            let (src, dst) = (g..g + self.block_elems, c..c + self.block_elems);
+            let tmp: Vec<f32> = self.gpu[src].to_vec();
+            self.cpu[dst].copy_from_slice(&tmp);
+        }
+    }
+
+    /// CPU slot → GPU block (all layers).
+    pub fn copy_in(&mut self, cpu_slot: usize, gpu_block: usize) {
+        assert!(gpu_block < self.gpu_blocks && cpu_slot < self.cpu_blocks);
+        for l in 0..self.layers {
+            let g = self.gpu_off(l, gpu_block);
+            let c = self.cpu_off(l, cpu_slot);
+            let tmp: Vec<f32> = self.cpu[c..c + self.block_elems].to_vec();
+            self.gpu[g..g + self.block_elems].copy_from_slice(&tmp);
+        }
+    }
+
+    pub fn gpu_bytes(&self) -> &[u8] {
+        bytemuck_cast(&self.gpu)
+    }
+
+    /// Overwrite the GPU pool from executable output bytes.
+    pub fn set_gpu_from(&mut self, data: &[f32]) {
+        assert_eq!(data.len(), self.gpu.len());
+        self.gpu.copy_from_slice(data);
+    }
+}
+
+/// f32 slice → byte view (little-endian host).
+pub fn bytemuck_cast(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> ModelGeometry {
+        ModelGeometry {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            vocab: 16,
+            block_size: 4,
+            num_blocks: 3,
+            max_blocks_per_seq: 2,
+        }
+    }
+
+    #[test]
+    fn swap_roundtrip_preserves_data() {
+        let g = geom();
+        let mut p = HostPool::new(&g, 2);
+        // fill gpu block 1 with recognizable data per layer
+        let be = g.block_elems();
+        for l in 0..2 {
+            let off = (l * 3 + 1) * be;
+            for i in 0..be {
+                p.gpu[off + i] = (l * 1000 + i) as f32;
+            }
+        }
+        p.copy_out(1, 0);
+        // clobber gpu block 1
+        for l in 0..2 {
+            let off = (l * 3 + 1) * be;
+            p.gpu[off..off + be].fill(-1.0);
+        }
+        // restore into a different gpu block
+        p.copy_in(0, 2);
+        for l in 0..2 {
+            let off = (l * 3 + 2) * be;
+            for i in 0..be {
+                assert_eq!(p.gpu[off + i], (l * 1000 + i) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_view_has_right_length() {
+        let p = HostPool::new(&geom(), 1);
+        assert_eq!(p.gpu_bytes().len(), p.gpu.len() * 4);
+    }
+}

@@ -1,0 +1,321 @@
+//! Discrete-event execution backend: the paper-scale substrate.
+//!
+//! Runs the *same* engine/scheduler as the PJRT backend, but iteration time
+//! comes from an A100-calibrated cost model and the clock is virtual — so a
+//! Fig. 2 sweep over thousands of requests with 28-second chatbot
+//! interceptions completes in seconds of wall time.
+//!
+//! Calibration (DESIGN.md §4): `t_base` = weight-streaming time at ~2 TB/s
+//! HBM, `us_per_ctx_token` = KV read per cached token, `us_per_query_sat` =
+//! FLOPs per token at ~250 TFLOPS effective, saturation where GEMMs become
+//! compute-bound, 16 GB/s effective host link. Absolute numbers are
+//! estimates; the policy comparisons depend on their *ratios*.
+
+use anyhow::Result;
+
+use crate::coordinator::waste::FwdProfile;
+use crate::engine::backend::{ExecBackend, IterationOutcome, IterationPlan};
+use crate::kvcache::swap::SwapModel;
+use crate::util::rng::Pcg;
+use crate::util::Micros;
+
+/// A simulated GPU + model configuration.
+#[derive(Debug, Clone)]
+pub struct SimModelSpec {
+    pub name: &'static str,
+    pub profile: FwdProfile,
+    pub kv_bytes_per_token: usize,
+    pub block_size: usize,
+    pub gpu_blocks: usize,
+    pub cpu_blocks: usize,
+    pub max_seq_tokens: usize,
+    pub max_decode_batch: usize,
+    /// Host-link bandwidth (bytes/s) and per-page launch overhead (µs).
+    pub link_bandwidth: f64,
+    pub per_block_launch_us: f64,
+}
+
+impl SimModelSpec {
+    /// GPT-J-6B on one A100-80GB (fp16): 28 layers × 4096 d_model.
+    pub fn gptj_6b() -> SimModelSpec {
+        SimModelSpec {
+            name: "gptj-6b",
+            profile: FwdProfile {
+                t_base_us: 6_000.0,       // 12 GB weights / 2 TB/s
+                us_per_ctx_token: 0.23,   // 458 KB KV / 2 TB/s
+                us_per_query_unsat: 2.0,
+                us_per_query_sat: 48.0,   // 12 GFLOP/token / 250 TFLOPS
+                saturation_tokens: 512,
+            },
+            kv_bytes_per_token: 458_752, // 2 × 28 L × 4096 × 2 B
+            block_size: 16,
+            gpu_blocks: 8_174,  // ~60 GB KV space
+            cpu_blocks: 8_174,
+            max_seq_tokens: 4_096,
+            max_decode_batch: 256,
+            link_bandwidth: 16e9,
+            per_block_launch_us: 5.0,
+        }
+    }
+
+    /// Vicuna-13B on one A100-80GB: 40 layers × 5120.
+    pub fn vicuna_13b() -> SimModelSpec {
+        SimModelSpec {
+            name: "vicuna-13b",
+            profile: FwdProfile {
+                t_base_us: 13_000.0,
+                us_per_ctx_token: 0.41,
+                us_per_query_unsat: 3.0,
+                us_per_query_sat: 104.0,
+                saturation_tokens: 448,
+            },
+            kv_bytes_per_token: 819_200, // 2 × 40 L × 5120 × 2 B
+            block_size: 16,
+            gpu_blocks: 3_814,  // ~50 GB KV space
+            cpu_blocks: 3_814,
+            max_seq_tokens: 4_096,
+            max_decode_batch: 256,
+            link_bandwidth: 16e9,
+            per_block_launch_us: 5.0,
+        }
+    }
+
+    /// Vicuna-13B tensor-parallel over two A100s: per-GPU weights halve, so
+    /// KV space (and concurrency, and interceptions) grow (§5.1).
+    pub fn vicuna_13b_tp2() -> SimModelSpec {
+        SimModelSpec {
+            name: "vicuna-13b-tp2",
+            profile: FwdProfile {
+                t_base_us: 8_000.0, // halved weights + NCCL overhead
+                us_per_ctx_token: 0.21,
+                us_per_query_unsat: 2.0,
+                us_per_query_sat: 54.0,
+                saturation_tokens: 896,
+            },
+            kv_bytes_per_token: 819_200,
+            block_size: 16,
+            gpu_blocks: 9_882,  // ~130 GB combined KV space
+            cpu_blocks: 9_882,
+            max_seq_tokens: 4_096,
+            max_decode_batch: 512,
+            link_bandwidth: 32e9, // two links
+            per_block_launch_us: 5.0,
+        }
+    }
+
+    /// Llama3-70B tensor-parallel over four A100s with 8-group GQA: KV per
+    /// token shrinks 8× vs MHA, which is what tilts the 70B results toward
+    /// Preserve/Swap (§5.1).
+    pub fn llama3_70b_tp4() -> SimModelSpec {
+        SimModelSpec {
+            name: "llama3-70b-tp4",
+            profile: FwdProfile {
+                t_base_us: 19_000.0, // 35 GB/GPU weights + comm
+                us_per_ctx_token: 0.04,
+                us_per_query_unsat: 2.0,
+                us_per_query_sat: 70.0,
+                saturation_tokens: 1_024,
+            },
+            kv_bytes_per_token: 327_680, // 2 × 80 L × 8 kvh × 128 × 2 B (GQA)
+            block_size: 16,
+            gpu_blocks: 34_000, // ~180 GB combined KV space
+            cpu_blocks: 34_000,
+            max_seq_tokens: 8_192,
+            max_decode_batch: 512,
+            link_bandwidth: 64e9, // four links
+            per_block_launch_us: 5.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SimModelSpec> {
+        match name {
+            "6b" | "gptj-6b" => Some(SimModelSpec::gptj_6b()),
+            "13b" | "vicuna-13b" => Some(SimModelSpec::vicuna_13b()),
+            "13b-tp2" | "vicuna-13b-tp2" => Some(SimModelSpec::vicuna_13b_tp2()),
+            "70b" | "llama3-70b-tp4" => Some(SimModelSpec::llama3_70b_tp4()),
+            _ => None,
+        }
+    }
+
+    pub fn swap_model(&self, pipelined: bool) -> SwapModel {
+        SwapModel {
+            bandwidth_bytes_per_sec: self.link_bandwidth,
+            per_block_launch_us: self.per_block_launch_us,
+            kv_bytes_per_token: self.kv_bytes_per_token,
+            block_size: self.block_size,
+            pipelined,
+        }
+    }
+}
+
+/// The virtual-clock backend.
+pub struct SimBackend {
+    spec: SimModelSpec,
+    swap: SwapModel,
+    clock: Micros,
+    rng: Pcg,
+    /// Iterations executed (introspection for tests/benches).
+    pub iterations: u64,
+}
+
+impl SimBackend {
+    pub fn new(spec: SimModelSpec) -> Self {
+        let swap = spec.swap_model(true);
+        SimBackend { spec, swap, clock: 0, rng: Pcg::new(0x5eed), iterations: 0 }
+    }
+
+    pub fn spec(&self) -> &SimModelSpec {
+        &self.spec
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn now(&self) -> Micros {
+        self.clock
+    }
+
+    fn advance_to(&mut self, t: Micros) {
+        self.clock = self.clock.max(t);
+    }
+
+    fn run_iteration(&mut self, plan: &IterationPlan) -> Result<IterationOutcome> {
+        // Attended context: decode attends its full ctx; prefill attends
+        // cache + chunk.
+        let ctx: usize = plan.decode.iter().map(|d| d.ctx_len as usize).sum::<usize>()
+            + plan
+                .prefill
+                .iter()
+                .map(|p| p.cache_len as usize + p.real_len as usize)
+                .sum::<usize>();
+        let q = plan.query_tokens();
+        let compute = self.spec.profile.t_fwd(q, ctx);
+
+        let decode_tokens = plan
+            .decode
+            .iter()
+            .map(|d| (d.req, self.rng.next_u32() % 32_000))
+            .collect();
+        let prefill_tokens = plan
+            .prefill
+            .iter()
+            .filter(|p| p.sample_last)
+            .map(|p| (p.req, self.rng.next_u32() % 32_000))
+            .collect();
+
+        self.clock += compute + plan.stall_us;
+        self.iterations += 1;
+        Ok(IterationOutcome { decode_tokens, prefill_tokens, compute_us: compute })
+    }
+
+    fn fwd_profile(&self) -> &FwdProfile {
+        &self.spec.profile
+    }
+
+    fn swap_model(&self) -> &SwapModel {
+        &self.swap
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.spec.max_decode_batch
+    }
+
+    fn prefill_chunk_sizes(&self) -> &[usize] {
+        &[] // any chunk size — no compiled-shape constraint in sim
+    }
+
+    fn max_blocks_per_seq(&self) -> usize {
+        self.spec.max_seq_tokens / self.spec.block_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::{DecodeEntry, PrefillEntry};
+
+    #[test]
+    fn specs_are_ordered_by_size() {
+        let a = SimModelSpec::gptj_6b();
+        let b = SimModelSpec::vicuna_13b();
+        assert!(b.profile.t_base_us > a.profile.t_base_us);
+        assert!(b.kv_bytes_per_token > a.kv_bytes_per_token);
+        // GQA compresses 70B KV below 13B's MHA KV.
+        let c = SimModelSpec::llama3_70b_tp4();
+        assert!(c.kv_bytes_per_token < b.kv_bytes_per_token);
+    }
+
+    #[test]
+    fn tp2_has_more_kv_space_than_single_gpu() {
+        assert!(SimModelSpec::vicuna_13b_tp2().gpu_blocks > SimModelSpec::vicuna_13b().gpu_blocks);
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        for n in ["6b", "13b", "13b-tp2", "70b"] {
+            assert!(SimModelSpec::by_name(n).is_some(), "{n}");
+        }
+        assert!(SimModelSpec::by_name("3b").is_none());
+    }
+
+    #[test]
+    fn clock_advances_by_compute_time() {
+        let mut b = SimBackend::new(SimModelSpec::gptj_6b());
+        let plan = IterationPlan {
+            decode: vec![DecodeEntry { req: 1, token: 0, block_table: vec![], ctx_len: 100 }],
+            ..Default::default()
+        };
+        let out = b.run_iteration(&plan).unwrap();
+        assert!(out.compute_us > 0);
+        assert_eq!(b.now(), out.compute_us);
+        assert_eq!(out.decode_tokens.len(), 1);
+    }
+
+    #[test]
+    fn prefill_samples_only_when_asked() {
+        let mut b = SimBackend::new(SimModelSpec::gptj_6b());
+        let plan = IterationPlan {
+            prefill: vec![
+                PrefillEntry {
+                    req: 1,
+                    tokens: vec![0; 64],
+                    real_len: 64,
+                    block_table: vec![],
+                    cache_len: 0,
+                    sample_last: false,
+                },
+                PrefillEntry {
+                    req: 2,
+                    tokens: vec![0; 64],
+                    real_len: 30,
+                    block_table: vec![],
+                    cache_len: 64,
+                    sample_last: true,
+                },
+            ],
+            ..Default::default()
+        };
+        let out = b.run_iteration(&plan).unwrap();
+        assert_eq!(out.prefill_tokens.len(), 1);
+        assert_eq!(out.prefill_tokens[0].0, 2);
+    }
+
+    #[test]
+    fn advance_to_never_goes_backward() {
+        let mut b = SimBackend::new(SimModelSpec::gptj_6b());
+        b.advance_to(500);
+        b.advance_to(100);
+        assert_eq!(b.now(), 500);
+    }
+
+    #[test]
+    fn stall_adds_to_clock() {
+        let mut b = SimBackend::new(SimModelSpec::gptj_6b());
+        let plan = IterationPlan {
+            decode: vec![DecodeEntry { req: 1, token: 0, block_table: vec![], ctx_len: 10 }],
+            stall_us: 123_456,
+            ..Default::default()
+        };
+        let out = b.run_iteration(&plan).unwrap();
+        assert_eq!(b.now(), out.compute_us + 123_456);
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (substrate for the unavailable `criterion`).
+//!
+//! `cargo bench` runs `[[bench]] harness = false` binaries that call
+//! [`Bench::run`]: warmup, timed iterations, and a p50/p95/mean report in
+//! criterion-like text output.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [mean {:>12} p50 {:>12} p95 {:>12}]  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    /// Fast profile for CI-ish runs (shorter measurement window).
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(600),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly; each call is one sample. Prints and returns stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            f();
+        }
+        // Measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.measure || (samples_ns.len() as u32) < self.min_iters)
+            && (samples_ns.len() as u32) < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+        }
+        let (mean, _) = stats::mean_var(&samples_ns);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u32,
+            mean_ns: mean,
+            p50_ns: stats::percentile_of(&samples_ns, 50.0),
+            p95_ns: stats::percentile_of(&samples_ns, 95.0),
+        };
+        println!("{}", res.report());
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(17));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+}

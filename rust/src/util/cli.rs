@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (substrate for the unavailable `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    known_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments. `flag_names` lists options that take
+    /// no value (everything else with `--` is a key-value option).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args { known_flags: flag_names.to_vec(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&'static str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of f64s.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| anyhow!("--{key}: bad number '{s}'")))
+                .collect(),
+        }
+    }
+
+    /// Fail on unknown leftover options given the accepted set.
+    pub fn check_known(&self, accepted: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !accepted.contains(&k.as_str()) {
+                bail!("unknown option --{k} (accepted: {accepted:?})");
+            }
+        }
+        for f in &self.flags {
+            if !self.known_flags.contains(&f.as_str()) && !accepted.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            sv(&["serve", "--rate", "2.5", "--policy=infercept", "--verbose", "t.json"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "t.json"]);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.str_or("policy", "x"), "infercept");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["--rate"]), &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(sv(&["--rates", "1,2,3.5"]), &[]).unwrap();
+        assert_eq!(a.f64_list_or("rates", &[]).unwrap(), vec![1.0, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = Args::parse(sv(&["--bogus", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["rate"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,24 @@
+//! In-tree substrates for crates unavailable in this offline environment
+//! (see DESIGN.md §4 Substitutions): deterministic RNG, JSON, CLI parsing,
+//! statistics, a bench harness, and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Microseconds of (virtual or wall) time. All engine time-keeping is u64 µs
+/// so the real and simulated backends share one arithmetic.
+pub type Micros = u64;
+
+/// Seconds → [`Micros`].
+pub fn secs(s: f64) -> Micros {
+    (s * 1e6).round().max(0.0) as Micros
+}
+
+/// [`Micros`] → seconds.
+pub fn to_secs(us: Micros) -> f64 {
+    us as f64 / 1e6
+}

@@ -1,0 +1,52 @@
+//! Lightweight property-testing helper (substrate for the unavailable
+//! `proptest`). Runs a property over many seeded random cases; on failure it
+//! reports the failing seed so the case is exactly reproducible:
+//!
+//! ```text
+//! property 'allocator_never_double_allocates' failed at seed 1234:
+//! ...
+//! ```
+//!
+//! No shrinking — cases are kept small by construction instead.
+
+use crate::util::rng::Pcg;
+
+/// Run `prop` for `cases` seeds. The property receives a per-case RNG and
+/// should panic (assert) on violation.
+pub fn check<F: FnMut(&mut Pcg)>(name: &str, cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg::with_stream(seed, 0x9e3779b97f4a7c15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64_in_range", 50, |rng| {
+            let x = rng.range(1, 10);
+            assert!((1..=10).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("always_fails_eventually", 50, |rng| {
+            assert!(rng.range(0, 9) != 3, "hit the bad value");
+        });
+    }
+}

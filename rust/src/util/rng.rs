@@ -1,0 +1,200 @@
+//! Deterministic PCG-XSH-RR 64/32 RNG plus the distributions the workload
+//! generator needs (uniform, exponential, lognormal, geometric).
+//!
+//! Substrate for the unavailable `rand` crate. Determinism matters: every
+//! experiment in EXPERIMENTS.md is reproducible from a seed.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). Small, fast, statistically solid.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent generator (for per-request streams).
+    pub fn fork(&mut self, stream: u64) -> Pcg {
+        Pcg::with_stream(self.next_u64(), stream.wrapping_mul(2654435761) | 1)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). Panics if lo > hi.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "empty range");
+        let span = hi - lo + 1;
+        // Lemire's unbiased bounded generation.
+        if span == 0 {
+            return self.next_u64(); // full range
+        }
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (span as u128);
+        let mut l = m as u64;
+        if l < span {
+            let t = span.wrapping_neg() % span;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (span as u128);
+                l = m as u64;
+            }
+        }
+        lo + (m >> 64) as u64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with given mean (inter-arrival times of Poisson arrivals).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.f64().max(1e-300).ln()
+    }
+
+    /// Lognormal parameterized by the target *arithmetic* mean and standard
+    /// deviation — the form Table 1 of the paper reports.
+    pub fn lognormal_mean_sd(&mut self, mean: f64, sd: f64) -> f64 {
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        if sd <= 0.0 {
+            return mean;
+        }
+        let cv2 = (sd / mean).powi(2);
+        let sigma2 = (1.0 + cv2).ln();
+        let mu = mean.ln() - sigma2 / 2.0;
+        (mu + sigma2.sqrt() * self.normal()).exp()
+    }
+
+    /// Shifted geometric on {1, 2, ...} with the given mean (≥ 1).
+    pub fn geometric_min1(&mut self, mean: f64) -> u64 {
+        let mean = mean.max(1.0);
+        let p = 1.0 / mean;
+        let u = self.f64().max(1e-300);
+        (u.ln() / (1.0 - p).max(1e-12).ln()).ceil().max(1.0) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut r = Pcg::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let x = r.range(5, 8);
+            assert!((5..=8).contains(&x));
+            seen_lo |= x == 5;
+            seen_hi |= x == 8;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg::new(4);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn lognormal_matches_target_moments() {
+        let mut r = Pcg::new(5);
+        let (mean, sd) = (20.0, 8.0);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.lognormal_mean_sd(mean, sd)).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n as f64;
+        assert!((m - mean).abs() / mean < 0.05, "mean {m}");
+        assert!((v.sqrt() - sd).abs() / sd < 0.15, "sd {}", v.sqrt());
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg::new(6);
+        let n = 20000;
+        let m = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn geometric_min1_mean_and_floor() {
+        let mut r = Pcg::new(7);
+        let n = 20000;
+        let xs: Vec<u64> = (0..n).map(|_| r.geometric_min1(3.75)).collect();
+        assert!(xs.iter().all(|&x| x >= 1));
+        let m = xs.iter().sum::<u64>() as f64 / n as f64;
+        assert!((m - 3.75).abs() < 0.15, "{m}");
+    }
+}

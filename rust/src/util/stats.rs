@@ -1,0 +1,109 @@
+//! Statistics helpers: summary moments, percentiles, CDFs, histograms.
+//! Used by the metrics module and every experiment binary.
+
+/// Mean and (population) variance, the form Table 1 reports.
+pub fn mean_var(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let m = xs.iter().sum::<f64>() / n;
+    let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n;
+    (m, v)
+}
+
+/// p in [0, 100]. Linear interpolation between closest ranks.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sort a copy and take a percentile.
+pub fn percentile_of(xs: &[f64], p: f64) -> f64 {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, p)
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile_of(xs, 50.0)
+}
+
+/// Empirical CDF sampled at `points` evenly spaced quantiles:
+/// returns (value, cumulative_probability) pairs.
+pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return vec![];
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..=points)
+        .map(|i| {
+            let q = i as f64 / points as f64;
+            (percentile(&v, q * 100.0), q)
+        })
+        .collect()
+}
+
+/// Render a compact fixed-width ASCII sparkline of a series (for CLI output).
+pub fn sparkline(xs: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() {
+        return String::new();
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    xs.iter()
+        .map(|x| TICKS[(((x - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_basics() {
+        let (m, v) = mean_var(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((v - 1.25).abs() < 1e-12);
+        assert_eq!(mean_var(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_unsorted() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
+        let c = cdf(&xs, 20);
+        for w in c.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(c.first().unwrap().1, 0.0);
+        assert_eq!(c.last().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,396 @@
+//! Workload generation: request scripts, Poisson arrivals, trace I/O.
+//!
+//! A *request script* fixes, per request, the prompt length and the
+//! alternation of generation segments and interceptions (type, duration,
+//! returned tokens). Scripts make every policy comparison apples-to-apples:
+//! all systems serve exactly the same token/interception sequence, and runs
+//! are reproducible from the trace JSON.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::augment::{AugmentKind, AugmentProfile, ALL_KINDS};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::Micros;
+
+/// One interception in a script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Interception {
+    pub kind: AugmentKind,
+    /// True (unscaled) duration — what the oracle estimator sees.
+    pub duration_us: Micros,
+    /// Tokens the API returns (appended to the context on resume).
+    pub ret_tokens: u32,
+}
+
+/// Generate `gen_tokens`, then (optionally) fire the interception.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub gen_tokens: u32,
+    pub interception: Option<Interception>,
+}
+
+/// The full per-request plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestScript {
+    pub kind: AugmentKind,
+    pub prompt_tokens: u32,
+    pub segments: Vec<Segment>,
+}
+
+impl RequestScript {
+    pub fn num_interceptions(&self) -> usize {
+        self.segments.iter().filter(|s| s.interception.is_some()).count()
+    }
+
+    pub fn total_gen_tokens(&self) -> usize {
+        self.segments.iter().map(|s| s.gen_tokens as usize).sum()
+    }
+
+    pub fn total_ret_tokens(&self) -> usize {
+        self.segments
+            .iter()
+            .filter_map(|s| s.interception.as_ref())
+            .map(|i| i.ret_tokens as usize)
+            .sum()
+    }
+
+    /// Final context length (prompt + all generation + all returns).
+    pub fn final_context(&self) -> usize {
+        self.prompt_tokens as usize + self.total_gen_tokens() + self.total_ret_tokens()
+    }
+
+    /// Context length when interception `j` fires.
+    pub fn ctx_at_interception(&self, j: usize) -> usize {
+        let mut ctx = self.prompt_tokens as usize;
+        let mut seen = 0;
+        for seg in &self.segments {
+            ctx += seg.gen_tokens as usize;
+            if let Some(int) = &seg.interception {
+                if seen == j {
+                    return ctx;
+                }
+                ctx += int.ret_tokens as usize;
+                seen += 1;
+            }
+        }
+        ctx
+    }
+}
+
+/// A request with its arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracedRequest {
+    pub arrival_us: Micros,
+    pub script: RequestScript,
+}
+
+pub type RequestTrace = Vec<TracedRequest>;
+
+/// Which augmentation mix to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Uniform sample over all six augmentations (§5 "mixed").
+    Mixed,
+    /// Single-augmentation workload (§5.1 QA-only / Chatbot-only).
+    Single(AugmentKind),
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        if s == "mixed" {
+            return Some(WorkloadKind::Mixed);
+        }
+        AugmentKind::parse(s).map(WorkloadKind::Single)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            WorkloadKind::Mixed => "mixed".into(),
+            WorkloadKind::Single(k) => k.name().into(),
+        }
+    }
+}
+
+/// Workload generator with optional scaling for the mini (real-PJRT) models.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub kind: WorkloadKind,
+    pub seed: u64,
+    /// Multiply all context-ish lengths (prompt, gen, ret) — the mini models
+    /// cap sequences at 512 tokens, so real-mode runs use e.g. 0.08.
+    pub ctx_scale: f64,
+    /// Hard cap on final context length (0 = no cap).
+    pub max_context: usize,
+}
+
+impl WorkloadGen {
+    /// Defaults cap final contexts at 4096 tokens (the sim models' sequence
+    /// limit); override with [`WorkloadGen::with_ctx_scale`].
+    pub fn new(kind: WorkloadKind, seed: u64) -> Self {
+        WorkloadGen { kind, seed, ctx_scale: 1.0, max_context: 4096 }
+    }
+
+    pub fn with_ctx_scale(mut self, scale: f64, max_context: usize) -> Self {
+        self.ctx_scale = scale;
+        self.max_context = max_context;
+        self
+    }
+
+    fn scale(&self, tokens: usize) -> u32 {
+        ((tokens as f64 * self.ctx_scale).round() as u32).max(1)
+    }
+
+    /// Sample one request script of the given kind.
+    pub fn sample_script(&self, rng: &mut Pcg, kind: AugmentKind) -> RequestScript {
+        let p = AugmentProfile::table1(kind);
+        let n_int = p.sample_num_interceptions(rng);
+        // Choose the prompt so the context at the *median* interception of
+        // this request matches the Table-1 marginal: contexts grow by
+        // (seg_gen + ret) per round, so aim the sampled target at round
+        // n/2 rather than round 0.
+        let target_ctx = p.sample_ctx_len(rng);
+        let growth_per_round = p.seg_gen.0 + p.ret_tokens.0;
+        let mid_growth = (growth_per_round * (n_int as f64 + 1.0) / 2.0) as usize;
+        let prompt = self.scale(target_ctx.saturating_sub(mid_growth).max(16));
+
+        let mut segments = Vec::with_capacity(n_int + 1);
+        for _ in 0..n_int {
+            segments.push(Segment {
+                gen_tokens: self.scale(p.sample_seg_gen(rng)),
+                interception: Some(Interception {
+                    kind,
+                    duration_us: p.sample_duration(rng),
+                    ret_tokens: self.scale(p.sample_ret_tokens(rng)),
+                }),
+            });
+        }
+        // Final generation segment after the last interception.
+        segments.push(Segment {
+            gen_tokens: self.scale(p.sample_seg_gen(rng)),
+            interception: None,
+        });
+
+        let mut script = RequestScript { kind, prompt_tokens: prompt, segments };
+        if self.max_context > 0 {
+            clamp_script(&mut script, self.max_context);
+        }
+        script
+    }
+
+    /// Generate `n` requests with Poisson arrivals at `rate` req/s.
+    pub fn generate(&self, n: usize, rate_per_sec: f64) -> RequestTrace {
+        let mut rng = Pcg::new(self.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let kind = match self.kind {
+                WorkloadKind::Mixed => *rng.choose(&ALL_KINDS),
+                WorkloadKind::Single(k) => k,
+            };
+            let script = self.sample_script(&mut rng, kind);
+            out.push(TracedRequest { arrival_us: (t * 1e6) as Micros, script });
+            t += rng.exponential(1.0 / rate_per_sec);
+        }
+        out
+    }
+}
+
+/// Shrink a script until its final context fits under `max_context`
+/// (mini-model sequence cap). Trims proportionally, preserving structure.
+fn clamp_script(script: &mut RequestScript, max_context: usize) {
+    loop {
+        let total = script.final_context();
+        if total <= max_context {
+            return;
+        }
+        let ratio = max_context as f64 / total as f64 * 0.95;
+        script.prompt_tokens = ((script.prompt_tokens as f64 * ratio) as u32).max(4);
+        for seg in &mut script.segments {
+            seg.gen_tokens = ((seg.gen_tokens as f64 * ratio) as u32).max(1);
+            if let Some(int) = &mut seg.interception {
+                int.ret_tokens = ((int.ret_tokens as f64 * ratio) as u32).max(1);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- trace IO
+
+pub fn trace_to_json(trace: &RequestTrace) -> Json {
+    Json::arr(trace.iter().map(|tr| {
+        Json::obj(vec![
+            ("arrival_us", Json::num(tr.arrival_us as f64)),
+            ("kind", Json::str(tr.script.kind.name())),
+            ("prompt_tokens", Json::num(tr.script.prompt_tokens as f64)),
+            (
+                "segments",
+                Json::arr(tr.script.segments.iter().map(|s| {
+                    let mut fields = vec![("gen_tokens", Json::num(s.gen_tokens as f64))];
+                    if let Some(i) = &s.interception {
+                        fields.push(("int_kind", Json::str(i.kind.name())));
+                        fields.push(("int_duration_us", Json::num(i.duration_us as f64)));
+                        fields.push(("int_ret_tokens", Json::num(i.ret_tokens as f64)));
+                    }
+                    Json::obj(fields)
+                })),
+            ),
+        ])
+    }))
+}
+
+pub fn trace_from_json(v: &Json) -> Result<RequestTrace> {
+    v.as_arr()?
+        .iter()
+        .map(|tr| {
+            let kind = AugmentKind::parse(tr.get("kind")?.as_str()?)
+                .context("unknown augment kind")?;
+            let segments = tr
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    let interception = match s.opt("int_kind") {
+                        Some(k) => Some(Interception {
+                            kind: AugmentKind::parse(k.as_str()?)
+                                .context("unknown interception kind")?,
+                            duration_us: s.get("int_duration_us")?.as_u64()?,
+                            ret_tokens: s.get("int_ret_tokens")?.as_u64()? as u32,
+                        }),
+                        None => None,
+                    };
+                    Ok(Segment {
+                        gen_tokens: s.get("gen_tokens")?.as_u64()? as u32,
+                        interception,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TracedRequest {
+                arrival_us: tr.get("arrival_us")?.as_u64()?,
+                script: RequestScript {
+                    kind,
+                    prompt_tokens: tr.get("prompt_tokens")?.as_u64()? as u32,
+                    segments,
+                },
+            })
+        })
+        .collect()
+}
+
+pub fn save_trace(trace: &RequestTrace, path: &Path) -> Result<()> {
+    std::fs::write(path, trace_to_json(trace).to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))
+}
+
+pub fn load_trace(path: &Path) -> Result<RequestTrace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    trace_from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let g = WorkloadGen::new(WorkloadKind::Mixed, 7);
+        assert_eq!(g.generate(20, 2.0), g.generate(20, 2.0));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = WorkloadGen::new(WorkloadKind::Mixed, 1).generate(10, 2.0);
+        let b = WorkloadGen::new(WorkloadKind::Mixed, 2).generate(10, 2.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_poisson() {
+        let trace = WorkloadGen::new(WorkloadKind::Mixed, 3).generate(500, 4.0);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        // Mean inter-arrival ~ 1/4 s
+        let span = trace.last().unwrap().arrival_us as f64 / 1e6;
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 4.0).abs() < 0.8, "rate {rate}");
+    }
+
+    #[test]
+    fn single_workload_has_one_kind() {
+        let t = WorkloadGen::new(WorkloadKind::Single(AugmentKind::Qa), 5).generate(50, 1.0);
+        assert!(t.iter().all(|r| r.script.kind == AugmentKind::Qa));
+        assert!(t
+            .iter()
+            .flat_map(|r| &r.script.segments)
+            .filter_map(|s| s.interception.as_ref())
+            .all(|i| i.kind == AugmentKind::Qa));
+    }
+
+    #[test]
+    fn scripts_end_with_plain_generation() {
+        let t = WorkloadGen::new(WorkloadKind::Mixed, 6).generate(100, 1.0);
+        for r in &t {
+            assert!(r.script.segments.last().unwrap().interception.is_none());
+            assert!(r.script.num_interceptions() >= 1);
+            assert!(r.script.prompt_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn ctx_scale_caps_context() {
+        let g = WorkloadGen::new(WorkloadKind::Mixed, 8).with_ctx_scale(0.08, 400);
+        let t = g.generate(200, 1.0);
+        for r in &t {
+            assert!(r.script.final_context() <= 400, "{}", r.script.final_context());
+        }
+    }
+
+    #[test]
+    fn ctx_at_interception_tracks_growth() {
+        let s = RequestScript {
+            kind: AugmentKind::Math,
+            prompt_tokens: 100,
+            segments: vec![
+                Segment {
+                    gen_tokens: 10,
+                    interception: Some(Interception {
+                        kind: AugmentKind::Math,
+                        duration_us: 1,
+                        ret_tokens: 5,
+                    }),
+                },
+                Segment {
+                    gen_tokens: 20,
+                    interception: Some(Interception {
+                        kind: AugmentKind::Math,
+                        duration_us: 1,
+                        ret_tokens: 7,
+                    }),
+                },
+                Segment { gen_tokens: 3, interception: None },
+            ],
+        };
+        assert_eq!(s.ctx_at_interception(0), 110);
+        assert_eq!(s.ctx_at_interception(1), 135);
+        assert_eq!(s.final_context(), 145);
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(25, 2.0);
+        let j = trace_to_json(&t);
+        let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn mixed_covers_all_kinds_eventually() {
+        let t = WorkloadGen::new(WorkloadKind::Mixed, 13).generate(300, 2.0);
+        for k in ALL_KINDS {
+            assert!(t.iter().any(|r| r.script.kind == k), "{k:?} missing");
+        }
+    }
+}

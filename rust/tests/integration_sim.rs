@@ -1,0 +1,215 @@
+//! Integration tests: the full engine over the simulated backend — the
+//! paper's qualitative claims as assertions, plus cross-policy invariants
+//! and determinism.
+
+use infercept::config::EngineConfig;
+use infercept::coordinator::estimator::EstimatorKind;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::Engine;
+use infercept::metrics::RunReport;
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::workload::{RequestTrace, WorkloadGen, WorkloadKind};
+
+fn run(spec: &SimModelSpec, policy: Policy, trace: &RequestTrace) -> RunReport {
+    let cfg = EngineConfig::for_sim(spec, policy);
+    let mut engine = Engine::new(Box::new(SimBackend::new(spec.clone())), cfg);
+    let rep = engine.run_trace(trace).unwrap();
+    engine.check_invariants().unwrap();
+    rep
+}
+
+fn mixed(n: usize, rate: f64, seed: u64) -> RequestTrace {
+    WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, rate)
+}
+
+#[test]
+fn fig2_ordering_infercept_beats_all_baselines() {
+    // The headline: InferCept sustains lower normalized latency than every
+    // baseline at the same (loaded) request rate.
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.5, 101);
+    let reps: Vec<RunReport> =
+        Policy::fig2_set().into_iter().map(|p| run(&spec, p, &trace)).collect();
+    let lat = |name: &str| {
+        reps.iter().find(|r| r.policy == name).unwrap().normalized_latency_ms()
+    };
+    let inf = lat("infercept");
+    for base in ["vllm", "improved-discard", "preserve", "swap"] {
+        assert!(
+            inf <= lat(base) * 1.02, // tolerate ties with Preserve at low load
+            "infercept {inf:.2} vs {base} {:.2}",
+            lat(base)
+        );
+    }
+    // And strictly better than the discard family (the paper's 1.9×+).
+    assert!(inf * 1.5 < lat("vllm"), "infercept {inf:.2} vs vllm {:.2}", lat("vllm"));
+}
+
+#[test]
+fn improved_discard_beats_vanilla_vllm_on_latency() {
+    // §3.2: keeping the original arrival time alone helps (Fig. 3 step 1).
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.0, 102);
+    let vllm = run(&spec, Policy::vllm(), &trace);
+    let imp = run(&spec, Policy::improved_discard(), &trace);
+    assert!(
+        imp.normalized_latency_ms() <= vllm.normalized_latency_ms() * 1.05,
+        "improved {:.2} vs vllm {:.2}",
+        imp.normalized_latency_ms(),
+        vllm.normalized_latency_ms()
+    );
+}
+
+#[test]
+fn discard_recompute_share_is_substantial() {
+    // §3.2: "37-40% of total model forwarding time is spent on
+    // recomputation" for the discard family on the mixed workload. Assert
+    // the ballpark (> 20%) and that InferCept eliminates most of it.
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.0, 103);
+    let vllm = run(&spec, Policy::vllm(), &trace);
+    let inf = run(&spec, Policy::infercept(), &trace);
+    assert!(
+        vllm.recompute_fwd_fraction > 0.2,
+        "vllm recompute share {:.2}",
+        vllm.recompute_fwd_fraction
+    );
+    assert!(
+        inf.recompute_fwd_fraction < vllm.recompute_fwd_fraction / 2.0,
+        "infercept {:.2} vs vllm {:.2}",
+        inf.recompute_fwd_fraction,
+        vllm.recompute_fwd_fraction
+    );
+}
+
+#[test]
+fn preserve_holds_memory_swap_stalls() {
+    // §3.2's waste anatomies: Preserve's waste is held memory; Swap's is
+    // stall time. Each must dominate its own breakdown.
+    let spec = SimModelSpec::gptj_6b();
+    // Enough load that paused-preserved contexts crowd the pool.
+    let trace = mixed(250, 3.0, 104);
+    let pres = run(&spec, Policy::preserve(), &trace);
+    assert!(pres.waste.preserve_gbs > 0.9 * pres.waste.total());
+    assert!(pres.paused_majority_s > 0.0, "preserved contexts should crowd memory");
+    let swap = run(&spec, Policy::swap(), &trace);
+    assert!(swap.waste.stall_gbs > 0.5 * swap.waste.total());
+    assert!(swap.swapped_out_tokens > 0 && swap.swapped_in_tokens > 0);
+}
+
+#[test]
+fn infercept_waste_is_a_small_fraction_of_baselines() {
+    // Fig. 3's right axis: full InferCept ends with near-zero waste.
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.0, 105);
+    let inf = run(&spec, Policy::infercept(), &trace);
+    for p in [Policy::vllm(), Policy::preserve(), Policy::swap()] {
+        let base = run(&spec, p.clone(), &trace);
+        assert!(
+            inf.waste.total() < base.waste.total() * 0.5,
+            "infercept {:.1} vs {} {:.1}",
+            inf.waste.total(),
+            p.name,
+            base.waste.total()
+        );
+    }
+}
+
+#[test]
+fn fig3_ladder_is_monotone_in_latency() {
+    // Each added technique must not regress normalized latency (much) and
+    // the full system must be the best rung.
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.0, 106);
+    let lats: Vec<(String, f64)> = Policy::fig3_ladder()
+        .into_iter()
+        .map(|p| {
+            let name = p.name.to_string();
+            (name, run(&spec, p, &trace).normalized_latency_ms())
+        })
+        .collect();
+    let first = lats.first().unwrap().1;
+    let last = lats.last().unwrap().1;
+    assert!(last < first, "ladder start {first:.2} end {last:.2}");
+    for w in lats.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1 * 1.25,
+            "rung {} ({:.2}) much worse than {} ({:.2})",
+            w[1].0,
+            w[1].1,
+            w[0].0,
+            w[0].1
+        );
+    }
+}
+
+#[test]
+fn estimator_dynamic_close_to_oracle() {
+    // §4.4: dynamic estimation reaches ~93% of oracle performance.
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(150, 2.0, 107);
+    let oracle = run(&spec, Policy::infercept_with(EstimatorKind::Oracle), &trace);
+    let dynamic = run(&spec, Policy::infercept_with(EstimatorKind::Dynamic), &trace);
+    let rel = oracle.normalized_latency_ms() / dynamic.normalized_latency_ms();
+    assert!(rel > 0.7, "dynamic at {:.0}% of oracle", rel * 100.0);
+}
+
+#[test]
+fn gqa_70b_shrinks_preserve_and_swap_penalty() {
+    // §5.1 70B: GQA compresses KV, so Preserve's and Swap's relative waste
+    // shrinks vs the MHA 13B model.
+    let spec13 = SimModelSpec::vicuna_13b();
+    let spec70 = SimModelSpec::llama3_70b_tp4();
+    let trace = mixed(100, 1.5, 108);
+    let p13 = run(&spec13, Policy::preserve(), &trace);
+    let p70 = run(&spec70, Policy::preserve(), &trace);
+    // waste per request-second of run, normalized by the model's own scale:
+    let w13 = p13.waste.total() / p13.duration_s;
+    let w70 = p70.waste.total() / p70.duration_s;
+    assert!(w70 < w13, "70B-GQA preserve waste rate {w70:.2} vs 13B {w13:.2}");
+}
+
+#[test]
+fn single_augment_workloads_complete() {
+    use infercept::augment::ALL_KINDS;
+    let spec = SimModelSpec::gptj_6b();
+    for kind in ALL_KINDS {
+        let trace = WorkloadGen::new(WorkloadKind::Single(kind), 109).generate(40, 2.0);
+        let rep = run(&spec, Policy::infercept(), &trace);
+        assert_eq!(rep.completed, 40, "{kind:?}");
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let spec = SimModelSpec::gptj_6b();
+    let trace = mixed(80, 2.0, 110);
+    let a = run(&spec, Policy::infercept(), &trace);
+    let b = run(&spec, Policy::infercept(), &trace);
+    assert_eq!(a.normalized_latency_ms(), b.normalized_latency_ms());
+    assert_eq!(a.waste.total(), b.waste.total());
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn all_models_serve_the_mixed_workload() {
+    for name in ["6b", "13b", "13b-tp2", "70b"] {
+        let spec = SimModelSpec::by_name(name).unwrap();
+        let trace = mixed(60, 2.0, 111);
+        let rep = run(&spec, Policy::infercept(), &trace);
+        assert_eq!(rep.completed, 60, "{name}");
+    }
+}
+
+#[test]
+fn heavier_load_does_not_lose_requests() {
+    let spec = SimModelSpec::gptj_6b();
+    for rate in [1.0, 4.0, 8.0] {
+        let trace = mixed(150, rate, 112);
+        for p in Policy::fig2_set() {
+            let name = p.name;
+            let rep = run(&spec, p, &trace);
+            assert_eq!(rep.completed, 150, "{name} at rate {rate}");
+        }
+    }
+}
