@@ -5,11 +5,14 @@
 use infercept::augment::{AugmentKind, ALL_KINDS};
 use infercept::coordinator::budget::{self, BudgetInputs};
 use infercept::coordinator::estimator::{DurationEstimator, EstimatorKind};
+use infercept::coordinator::planner::{Planner, ReqSnapshot, SchedSnapshot};
 use infercept::coordinator::policy::Policy;
 use infercept::coordinator::scheduler::{
     decide_interceptions, BatchStats, Disposition, FcfsQueue, PausedView,
 };
 use infercept::coordinator::waste::{min_waste, WasteInputs};
+use infercept::engine::request::ReqState;
+use infercept::kvcache::CacheSnapshot;
 use infercept::sim::SimModelSpec;
 use infercept::util::bench::Bench;
 
@@ -72,6 +75,56 @@ fn main() {
             q.push((i * 7919) % 1000, i);
         }
         while q.pop_front().is_some() {}
+    });
+
+    // Full staged planning pass over a loaded snapshot: 64 running decodes,
+    // 64 paused interceptions, 32 waiting prefills, 8 swap-queue entries.
+    // This is the whole per-iteration scheduling cost of the refactored
+    // engine (capture excluded), so it bounds coordinator overhead.
+    let bs = 16usize;
+    let mut snap = SchedSnapshot::new(Policy::infercept(), profile.clone(), spec.swap_model(true));
+    snap.kv_bytes_per_token = spec.kv_bytes_per_token;
+    snap.max_decode_batch = 256;
+    snap.max_blocks_per_seq = 256;
+    let mut cache = CacheSnapshot::for_test(bs, 8, 4096, 4096);
+    let mut id = 0u64;
+    for i in 0..64usize {
+        id += 1;
+        let ctx = 200 + (i * 37) % 1200;
+        snap.running.push(id);
+        snap.reqs.insert(id, ReqSnapshot::basic(ReqState::Running, id * 10, ctx + 1, ctx));
+        cache.set_seq(id, ctx.div_ceil(bs), 0, ctx);
+    }
+    for i in 0..64usize {
+        id += 1;
+        let ctx = 160 + (i * 53) % 1600;
+        let mut r = ReqSnapshot::basic(ReqState::Paused, id * 10, ctx + 1, ctx);
+        r.pause_kind = ALL_KINDS[i % 6];
+        r.pause_duration_us = 1_000_000;
+        snap.paused.push(id);
+        snap.reqs.insert(id, r);
+        cache.set_seq(id, ctx.div_ceil(bs), 0, ctx);
+    }
+    for i in 0..32usize {
+        id += 1;
+        let tokens = 300 + (i * 91) % 900;
+        snap.waiting.push(id);
+        snap.reqs.insert(id, ReqSnapshot::basic(ReqState::Waiting, id * 10, tokens, 0));
+    }
+    for _ in 0..8usize {
+        id += 1;
+        snap.swapq.push(id);
+        snap.reqs.insert(id, ReqSnapshot::basic(ReqState::SwapQueue, id * 10, 4 * bs + 8, 4 * bs));
+        cache.set_seq(id, 4, 4, 4 * bs);
+    }
+    snap.cache = cache;
+    let mut planner = Planner::new();
+    planner.plan_for(snap, &est); // install the snapshot once (and warm buffers)
+    bench.run("planner/full pass 64r+64p+32w+8s", || {
+        // Re-plan from the installed snapshot: planner-internal buffers are
+        // reused, so this times the five stages alone — the engine's real
+        // per-iteration scheduling cost (capture excluded, no clones).
+        std::hint::black_box(planner.plan(&est));
     });
 
     let _ = AugmentKind::Math; // keep import used in all cfgs

@@ -3,31 +3,51 @@
 
 use anyhow::Result;
 
-use crate::profiler;
-use crate::runtime::PjrtRuntime;
 use crate::util::cli::Args;
 
-pub fn run(args: &Args) -> Result<()> {
-    let manifest = args.str_or("manifest", "artifacts/manifest.json");
-    let model = args.str_or("model", "gptj-mini");
-    let reps = args.usize_or("reps", 3)?;
-    let saturation = args.usize_or("saturation", 64)?;
+#[cfg(feature = "pjrt")]
+mod real {
+    use anyhow::Result;
 
-    println!("profiling {model} from {manifest} ({reps} reps per point)...");
-    let rt = PjrtRuntime::load(std::path::Path::new(&manifest), &model)?;
-    let samples = profiler::measure(&rt, reps)?;
-    println!("prefill samples (chunk -> µs):");
-    for (q, t) in &samples.prefill {
-        println!("  {q:>5} -> {t}");
+    use crate::profiler;
+    use crate::runtime::PjrtRuntime;
+    use crate::util::cli::Args;
+
+    pub fn run(args: &Args) -> Result<()> {
+        let manifest = args.str_or("manifest", "artifacts/manifest.json");
+        let model = args.str_or("model", "gptj-mini");
+        let reps = args.usize_or("reps", 3)?;
+        let saturation = args.usize_or("saturation", 64)?;
+
+        println!("profiling {model} from {manifest} ({reps} reps per point)...");
+        let rt = PjrtRuntime::load(std::path::Path::new(&manifest), &model)?;
+        let samples = profiler::measure(&rt, reps)?;
+        println!("prefill samples (chunk -> µs):");
+        for (q, t) in &samples.prefill {
+            println!("  {q:>5} -> {t}");
+        }
+        println!("decode-context samples (ctx -> µs):");
+        for (c, t) in &samples.decode_ctx {
+            println!("  {c:>5} -> {t}");
+        }
+        let p = profiler::fit(&samples, saturation);
+        println!(
+            "fitted FwdProfile: t_base {:.0} µs, {:.2} µs/ctx-token, {:.1} µs/query-token, S={}",
+            p.t_base_us, p.us_per_ctx_token, p.us_per_query_unsat, p.saturation_tokens
+        );
+        Ok(())
     }
-    println!("decode-context samples (ctx -> µs):");
-    for (c, t) in &samples.decode_ctx {
-        println!("  {c:>5} -> {t}");
-    }
-    let p = profiler::fit(&samples, saturation);
-    println!(
-        "fitted FwdProfile: t_base {:.0} µs, {:.2} µs/ctx-token, {:.1} µs/query-token, S={}",
-        p.t_base_us, p.us_per_ctx_token, p.us_per_query_unsat, p.saturation_tokens
-    );
-    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+pub fn run(args: &Args) -> Result<()> {
+    real::run(args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the `profile` command needs the PJRT runtime; rebuild with `--features pjrt` \
+         (and add the `xla` dependency — see Cargo.toml)"
+    )
 }

@@ -3,97 +3,117 @@
 //! workload with real batched forward passes, real KV paging, real swap
 //! copies, and real (scaled) interception timers.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::config::EngineConfig;
-use crate::coordinator::policy::Policy;
-use crate::engine::Engine;
-use crate::profiler;
-use crate::runtime::PjrtBackend;
 use crate::util::cli::Args;
-use crate::workload::{WorkloadGen, WorkloadKind};
 
+#[cfg(feature = "pjrt")]
+mod real {
+    use anyhow::{anyhow, Result};
+
+    use crate::config::EngineConfig;
+    use crate::coordinator::policy::Policy;
+    use crate::engine::Engine;
+    use crate::profiler;
+    use crate::runtime::PjrtBackend;
+    use crate::util::cli::Args;
+    use crate::workload::{WorkloadGen, WorkloadKind};
+
+    pub fn run(args: &Args) -> Result<()> {
+        let manifest = args.str_or("manifest", "artifacts/manifest.json");
+        let model = args.str_or("model", "gptj-mini");
+        let policy = Policy::parse(&args.str_or("policy", "infercept"))
+            .ok_or_else(|| anyhow!("unknown --policy"))?;
+        let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
+            .ok_or_else(|| anyhow!("unknown --workload"))?;
+        let rate = args.f64_or("rate", 2.0)?;
+        let n = args.usize_or("requests", 12)?;
+        let seed = args.u64_or("seed", 42)?;
+        // 28 s chat pauses compress to ~0.28 s by default.
+        let time_scale = args.f64_or("time-scale", 0.01)?;
+        let cpu_blocks = args.usize_or("cpu-blocks", 256)?;
+
+        println!("loading + compiling {model} from {manifest} ...");
+        let mut backend = PjrtBackend::new(std::path::Path::new(&manifest), &model, cpu_blocks)?;
+        let geom = backend.geometry().clone();
+
+        // Offline profiling pass (§4.5) to calibrate T_fwd.
+        let samples = profiler::measure(backend.runtime(), 2)?;
+        let profile = profiler::fit(&samples, args.usize_or("saturation", 64)?);
+        println!(
+            "profiled: t_base {:.0} µs, {:.2} µs/ctx-tok, {:.0} µs/query-tok",
+            profile.t_base_us, profile.us_per_ctx_token, profile.us_per_query_unsat
+        );
+        backend.set_profile(profile.clone());
+
+        let cfg = EngineConfig {
+            policy,
+            block_size: geom.block_size,
+            num_gpu_blocks: geom.num_blocks,
+            num_cpu_blocks: cpu_blocks,
+            kv_bytes_per_token: backend.runtime().entry.kv_bytes_per_token,
+            saturation_tokens: profile.saturation_tokens,
+            max_batched_tokens: profile.saturation_tokens * 4,
+            min_chunk: 16,
+            watermark_blocks: 2,
+            vocab: geom.vocab as u32,
+            time_scale,
+            seed,
+            max_seq_tokens: geom.max_seq_tokens(),
+            max_iterations: 2_000_000,
+        };
+
+        // Mini models cap sequences at max_seq_tokens; scale contexts down and
+        // leave one max-chunk headroom for padded prefill.
+        let max_ctx = geom.max_seq_tokens().saturating_sub(128 + 16);
+        let trace = WorkloadGen::new(kind, seed)
+            .with_ctx_scale(args.f64_or("ctx-scale", 0.1)?, max_ctx)
+            .generate(n, rate);
+        let total_tokens: usize = trace.iter().map(|t| t.script.final_context()).sum();
+        let ints: usize = trace.iter().map(|t| t.script.num_interceptions()).sum();
+        println!(
+            "serving {n} requests ({total_tokens} context tokens, {ints} interceptions) \
+             at {rate} req/s, policy {}, time-scale {time_scale}",
+            cfg.policy.name
+        );
+
+        let mut engine = Engine::new(Box::new(backend), cfg);
+        let t0 = std::time::Instant::now();
+        let rep = engine.run_trace(&trace)?;
+        engine.check_invariants()?;
+        println!("\ncompleted in {:.1}s wall", t0.elapsed().as_secs_f64());
+        println!("{}", rep.summary_line());
+        println!(
+            "  iterations {}  fwd {:.2}s  decode/prefill/recompute tokens {}/{}/{}  \
+             recompute-fwd {:.1}%  swap out/in {}/{} tokens",
+            rep.iterations,
+            rep.compute_s,
+            engine.metrics.decode_tokens,
+            engine.metrics.prefill_tokens,
+            engine.metrics.recompute_tokens,
+            rep.recompute_fwd_fraction * 100.0,
+            rep.swapped_out_tokens,
+            rep.swapped_in_tokens,
+        );
+        println!(
+            "  p50 TTFT {:.0} ms  p99 TTFT {:.0} ms  p99 norm-lat {:.1} ms/tok",
+            rep.median_ttft_ms(),
+            rep.p99_ttft_ms(),
+            rep.p99_normalized_latency_ms()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
 pub fn run(args: &Args) -> Result<()> {
-    let manifest = args.str_or("manifest", "artifacts/manifest.json");
-    let model = args.str_or("model", "gptj-mini");
-    let policy = Policy::parse(&args.str_or("policy", "infercept"))
-        .ok_or_else(|| anyhow!("unknown --policy"))?;
-    let kind = WorkloadKind::parse(&args.str_or("workload", "mixed"))
-        .ok_or_else(|| anyhow!("unknown --workload"))?;
-    let rate = args.f64_or("rate", 2.0)?;
-    let n = args.usize_or("requests", 12)?;
-    let seed = args.u64_or("seed", 42)?;
-    // 28 s chat pauses compress to ~0.28 s by default.
-    let time_scale = args.f64_or("time-scale", 0.01)?;
-    let cpu_blocks = args.usize_or("cpu-blocks", 256)?;
+    real::run(args)
+}
 
-    println!("loading + compiling {model} from {manifest} ...");
-    let mut backend = PjrtBackend::new(std::path::Path::new(&manifest), &model, cpu_blocks)?;
-    let geom = backend.geometry().clone();
-
-    // Offline profiling pass (§4.5) to calibrate T_fwd.
-    let samples = profiler::measure(backend.runtime(), 2)?;
-    let profile = profiler::fit(&samples, args.usize_or("saturation", 64)?);
-    println!(
-        "profiled: t_base {:.0} µs, {:.2} µs/ctx-tok, {:.0} µs/query-tok",
-        profile.t_base_us, profile.us_per_ctx_token, profile.us_per_query_unsat
-    );
-    backend.set_profile(profile.clone());
-
-    let cfg = EngineConfig {
-        policy,
-        block_size: geom.block_size,
-        num_gpu_blocks: geom.num_blocks,
-        num_cpu_blocks: cpu_blocks,
-        kv_bytes_per_token: backend.runtime().entry.kv_bytes_per_token,
-        saturation_tokens: profile.saturation_tokens,
-        max_batched_tokens: profile.saturation_tokens * 4,
-        min_chunk: 16,
-        watermark_blocks: 2,
-        vocab: geom.vocab as u32,
-        time_scale,
-        seed,
-        max_seq_tokens: geom.max_seq_tokens(),
-        max_iterations: 2_000_000,
-    };
-
-    // Mini models cap sequences at max_seq_tokens; scale contexts down and
-    // leave one max-chunk headroom for padded prefill.
-    let max_ctx = geom.max_seq_tokens().saturating_sub(128 + 16);
-    let trace = WorkloadGen::new(kind, seed)
-        .with_ctx_scale(args.f64_or("ctx-scale", 0.1)?, max_ctx)
-        .generate(n, rate);
-    let total_tokens: usize = trace.iter().map(|t| t.script.final_context()).sum();
-    let ints: usize = trace.iter().map(|t| t.script.num_interceptions()).sum();
-    println!(
-        "serving {n} requests ({total_tokens} context tokens, {ints} interceptions) \
-         at {rate} req/s, policy {}, time-scale {time_scale}",
-        cfg.policy.name
-    );
-
-    let mut engine = Engine::new(Box::new(backend), cfg);
-    let t0 = std::time::Instant::now();
-    let rep = engine.run_trace(&trace)?;
-    engine.check_invariants()?;
-    println!("\ncompleted in {:.1}s wall", t0.elapsed().as_secs_f64());
-    println!("{}", rep.summary_line());
-    println!(
-        "  iterations {}  fwd {:.2}s  decode/prefill/recompute tokens {}/{}/{}  \
-         recompute-fwd {:.1}%  swap out/in {}/{} tokens",
-        rep.iterations,
-        rep.compute_s,
-        engine.metrics.decode_tokens,
-        engine.metrics.prefill_tokens,
-        engine.metrics.recompute_tokens,
-        rep.recompute_fwd_fraction * 100.0,
-        rep.swapped_out_tokens,
-        rep.swapped_in_tokens,
-    );
-    println!(
-        "  p50 TTFT {:.0} ms  p99 TTFT {:.0} ms  p99 norm-lat {:.1} ms/tok",
-        rep.median_ttft_ms(),
-        rep.p99_ttft_ms(),
-        rep.p99_normalized_latency_ms()
-    );
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the `serve` command needs the PJRT runtime; rebuild with `--features pjrt` \
+         (and add the `xla` dependency — see Cargo.toml)"
+    )
 }

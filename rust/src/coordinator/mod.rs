@@ -1,15 +1,17 @@
 //! The InferCept coordinator: waste quantification (Eq. 1–5), interception
 //! policies, swap budgeting, recomputation chunking, interception-duration
-//! estimation, and the three-queue iteration scheduler.
+//! estimation, the three-queue iteration scheduler, and the staged
+//! per-iteration [`planner`] that composes them into a [`planner::SchedPlan`].
 //!
-//! Everything here is *pure* policy logic — no backend, no clocks — so the
-//! identical code drives both the real PJRT engine and the paper-scale
-//! discrete-event simulation, and every rule is unit/property-testable in
-//! isolation.
+//! Everything here is *pure* policy logic — no backend, no clocks, no
+//! `&mut` cache access — so the identical code drives both the real PJRT
+//! engine and the paper-scale discrete-event simulation, and every rule is
+//! unit/property-testable in isolation.
 
 pub mod budget;
 pub mod chunking;
 pub mod estimator;
+pub mod planner;
 pub mod policy;
 pub mod scheduler;
 pub mod waste;

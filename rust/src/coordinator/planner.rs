@@ -1,0 +1,1198 @@
+//! The staged scheduling planner: InferCept's per-iteration *decision*
+//! (§4), extracted from the engine loop as a pure function.
+//!
+//! Each iteration the engine captures an immutable [`SchedSnapshot`]
+//! (queues, per-request state, cache occupancy, forward profile) and the
+//! planner turns it into a typed [`SchedPlan`] through five stages:
+//!
+//!  1. **Forward estimate** ([`estimate_forward`]) — the expected iteration
+//!     time `T_fwd(B_i)` from the decode candidates and the §4.2 recompute
+//!     chunk, which sizes the swap limit `N_i` (§4.1).
+//!  2. **Swap budgets** ([`solve_budgets`]) — split `N_i` between swap-in
+//!     and swap-out under the space-conservation constraints (§4.1,
+//!     [`crate::coordinator::budget`]).
+//!  3. **Interception dispositions** — preserve / chunked-discard /
+//!     budgeted-swap per paused request by min-waste
+//!     ([`crate::coordinator::scheduler::decide_interceptions`], §4.3),
+//!     re-evaluated every iteration (§4.4).
+//!  4. **Swap-in** — drain the resumed swap queue within the granted
+//!     budget; fully-resident requests join the waiting queue (§4.3).
+//!  5. **Batch formation** — decode admissions then FCFS prefill/recompute
+//!     chunks up to the saturation point (§4.2/§4.3), with vLLM-style
+//!     eviction of latest-arrived requests under memory pressure.
+//!
+//! Planning is side-effect-free: stages 3–5 run against a cloned
+//! [`CacheSnapshot`] ledger (never `&mut CacheManager` or the backend), so
+//! every stage is unit-testable without a backend, the whole plan is
+//! property-testable (a plan never over-commits GPU blocks — see
+//! `prop_plans_never_overcommit`), and a plan can be replayed
+//! deterministically. The engine merely *applies* the plan: real cache
+//! mutations, backend execution, and metrics.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::augment::AugmentKind;
+use crate::config::EngineConfig;
+use crate::coordinator::budget::{self, BudgetInputs};
+use crate::coordinator::chunking;
+use crate::coordinator::estimator::DurationEstimator;
+use crate::coordinator::policy::{Policy, SwapMode};
+use crate::coordinator::scheduler::{
+    decide_interceptions, BatchStats, Disposition, FcfsQueue, InterceptAction, PausedView,
+};
+use crate::coordinator::waste::FwdProfile;
+use crate::engine::backend::ExecBackend;
+use crate::engine::request::{ReqState, Request};
+use crate::kvcache::swap::SwapModel;
+use crate::kvcache::{CacheManager, CacheSnapshot, ReqId};
+use crate::util::Micros;
+
+// ---------------------------------------------------------------------------
+// Snapshot (planner input)
+// ---------------------------------------------------------------------------
+
+/// Scheduler-relevant view of one request.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqSnapshot {
+    pub queue_arrival: Micros,
+    pub state: ReqState,
+    /// Full logical context length (prompt + generated + API returns).
+    pub tokens_len: usize,
+    /// Prefix with valid KV (== the cache's valid length).
+    pub processed: usize,
+    pub recompute_hwm: usize,
+    pub disposition: Disposition,
+    pub pause_kind: AugmentKind,
+    pub paused_at: Micros,
+    /// Scaled duration of the in-flight interception (oracle estimator).
+    pub pause_duration_us: Micros,
+}
+
+impl ReqSnapshot {
+    pub fn of(rq: &Request) -> ReqSnapshot {
+        ReqSnapshot {
+            queue_arrival: rq.queue_arrival,
+            state: rq.state,
+            tokens_len: rq.tokens.len(),
+            processed: rq.processed,
+            recompute_hwm: rq.recompute_hwm,
+            disposition: rq.disposition,
+            pause_kind: rq.pause_kind,
+            paused_at: rq.paused_at,
+            pause_duration_us: rq.pause_duration_us,
+        }
+    }
+
+    /// Minimal snapshot for unit tests.
+    pub fn basic(
+        state: ReqState,
+        queue_arrival: Micros,
+        tokens_len: usize,
+        processed: usize,
+    ) -> ReqSnapshot {
+        ReqSnapshot {
+            queue_arrival,
+            state,
+            tokens_len,
+            processed,
+            recompute_hwm: 0,
+            disposition: Disposition::Fresh,
+            pause_kind: AugmentKind::Math,
+            paused_at: 0,
+            pause_duration_us: 0,
+        }
+    }
+
+    pub fn pending_prefill(&self) -> usize {
+        self.tokens_len - self.processed
+    }
+}
+
+/// Everything the planner reads: an owned, immutable view of the engine at
+/// the start of an iteration. Buffers are reused across iterations by
+/// [`Planner::capture`].
+#[derive(Debug, Clone)]
+pub struct SchedSnapshot {
+    pub now: Micros,
+    pub policy: Policy,
+    // -- config knobs ------------------------------------------------------
+    pub block_size: usize,
+    pub saturation_tokens: usize,
+    pub min_chunk: usize,
+    pub max_batched_tokens: usize,
+    pub kv_bytes_per_token: usize,
+    // -- backend capabilities ---------------------------------------------
+    pub max_decode_batch: usize,
+    pub max_blocks_per_seq: usize,
+    pub prefill_chunk_sizes: Vec<usize>,
+    pub profile: FwdProfile,
+    pub swap_model: SwapModel,
+    // -- queues, FCFS order ------------------------------------------------
+    pub waiting: Vec<ReqId>,
+    pub swapq: Vec<ReqId>,
+    pub running: Vec<ReqId>,
+    /// Engine insertion order (decision order must match).
+    pub paused: Vec<ReqId>,
+    pub reqs: HashMap<ReqId, ReqSnapshot>,
+    pub cache: CacheSnapshot,
+}
+
+impl SchedSnapshot {
+    /// A blank snapshot with the given policy/profiles; callers (tests)
+    /// fill queues, `reqs`, and `cache` directly.
+    pub fn new(policy: Policy, profile: FwdProfile, swap_model: SwapModel) -> SchedSnapshot {
+        SchedSnapshot {
+            now: 0,
+            policy,
+            block_size: 16,
+            saturation_tokens: profile.saturation_tokens,
+            min_chunk: 16,
+            max_batched_tokens: 4096,
+            kv_bytes_per_token: 458_752,
+            max_decode_batch: 256,
+            max_blocks_per_seq: 256,
+            prefill_chunk_sizes: Vec::new(),
+            profile,
+            swap_model,
+            waiting: Vec::new(),
+            swapq: Vec::new(),
+            running: Vec::new(),
+            paused: Vec::new(),
+            reqs: HashMap::new(),
+            cache: CacheSnapshot::default(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan (planner output)
+// ---------------------------------------------------------------------------
+
+/// One swap-in grant for a resumed (swap-queue) request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapInGrant {
+    pub req: ReqId,
+    /// Blocks that will move (already bounded by budget, residency, and
+    /// free GPU space — the engine's `swap_in` moves exactly this many).
+    pub blocks: usize,
+    /// After this grant the request is fully GPU-resident and joins the
+    /// waiting queue.
+    pub completes: bool,
+}
+
+/// One decode-admission attempt. `evictions` lists victims preempted while
+/// making room (applied even when the admission itself fails, mirroring the
+/// incremental eviction loop).
+#[derive(Debug, Clone, Default)]
+pub struct DecodeAdmission {
+    pub req: ReqId,
+    pub evictions: Vec<ReqId>,
+    pub admitted: bool,
+    /// Grow the cache to cover this many tokens before decoding.
+    pub target_tokens: usize,
+}
+
+/// One prefill/recompute admission attempt (§4.2 chunking already solved).
+#[derive(Debug, Clone, Default)]
+pub struct PrefillAdmission {
+    pub req: ReqId,
+    pub evictions: Vec<ReqId>,
+    pub admitted: bool,
+    /// Grow target: `from_tokens` + padded chunk total.
+    pub target_tokens: usize,
+    /// Valid tokens when admitted (the first chunk's `cache_len`).
+    pub from_tokens: usize,
+    /// Real (non-padding) tokens scheduled this iteration.
+    pub chunk_real: usize,
+    /// Compiled-size decomposition of `chunk_real` (tail pads).
+    pub chunks: Vec<usize>,
+    /// True when this completes the request's pending prefill (sample from
+    /// the last chunk).
+    pub finishes: bool,
+    /// Portion of `chunk_real` below the recompute high-water mark.
+    pub recompute_tokens: usize,
+}
+
+/// The full iteration decision, ready for mechanical application.
+#[derive(Debug, Clone, Default)]
+pub struct SchedPlan {
+    /// Per-paused-request actions, in decision (application) order.
+    pub dispositions: Vec<(ReqId, InterceptAction)>,
+    pub swap_in: Vec<SwapInGrant>,
+    pub decode: Vec<DecodeAdmission>,
+    pub prefill: Vec<PrefillAdmission>,
+    /// Stage-1 estimate of this iteration's forward time (sizes `N_i`).
+    pub expected_fwd_us: Micros,
+    /// Granted §4.1 budgets, tokens.
+    pub swap_out_budget: usize,
+    pub swap_in_budget: usize,
+    /// Ledger-predicted blocks the dispositions will move out.
+    pub swap_out_blocks: usize,
+}
+
+impl SchedPlan {
+    pub fn clear(&mut self) {
+        self.dispositions.clear();
+        self.swap_in.clear();
+        self.decode.clear();
+        self.prefill.clear();
+        self.expected_fwd_us = 0;
+        self.swap_out_budget = 0;
+        self.swap_in_budget = 0;
+        self.swap_out_blocks = 0;
+    }
+
+    /// Will applying this plan give the backend anything to do?
+    pub fn has_work(&self) -> bool {
+        self.swap_out_blocks > 0
+            || !self.swap_in.is_empty()
+            || self.decode.iter().any(|a| a.admitted)
+            || self.prefill.iter().any(|a| a.admitted)
+    }
+
+    pub fn admitted_decode(&self) -> usize {
+        self.decode.iter().filter(|a| a.admitted).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 1 — forward estimate
+// ---------------------------------------------------------------------------
+
+/// Expected shape of this iteration's batch (before admission).
+#[derive(Debug, Clone, Copy)]
+pub struct FwdEstimate {
+    /// Decode candidates (bounded by the backend's max decode batch).
+    pub decode_cands: usize,
+    /// Σ context of the decode candidates (each attends processed + 1).
+    pub running_ctx: usize,
+    /// This iteration's §4.2 recompute chunk budget.
+    pub chunk_tokens: usize,
+    /// `T_fwd(B_i)` under the profiled model.
+    pub expected_fwd_us: Micros,
+}
+
+pub fn estimate_forward(snap: &SchedSnapshot) -> FwdEstimate {
+    let decode_cands = snap.running.len().min(snap.max_decode_batch);
+    let running_ctx: usize = snap
+        .running
+        .iter()
+        .take(snap.max_decode_batch)
+        .map(|r| snap.reqs[r].processed + 1)
+        .sum();
+    let pending_head: usize = snap
+        .waiting
+        .iter()
+        .take(4)
+        .map(|r| snap.reqs[r].pending_prefill())
+        .sum();
+    let chunk_tokens = if snap.policy.chunked_recompute {
+        chunking::chunk_budget(snap.saturation_tokens, decode_cands, snap.min_chunk)
+    } else {
+        snap.saturation_tokens.max(pending_head)
+    };
+    let expected_q = decode_cands + chunk_tokens.min(pending_head);
+    let expected_fwd_us = snap.profile.t_fwd(expected_q.max(1), running_ctx);
+    FwdEstimate { decode_cands, running_ctx, chunk_tokens, expected_fwd_us }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 2 — swap budgets (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Returns `(swap_out_tokens, swap_in_tokens)` granted for this iteration.
+pub fn solve_budgets(snap: &SchedSnapshot, fwd: &FwdEstimate) -> (usize, usize) {
+    let bs = snap.block_size;
+    match snap.policy.swap {
+        SwapMode::None => (0, 0),
+        SwapMode::Sync => (usize::MAX, usize::MAX),
+        SwapMode::Budgeted => {
+            let limit = snap.swap_model.tokens_within(fwd.expected_fwd_us);
+            let want_out: usize = snap
+                .paused
+                .iter()
+                .filter(|r| {
+                    matches!(
+                        snap.reqs[*r].disposition,
+                        Disposition::Fresh | Disposition::SwappingOut
+                    )
+                })
+                .map(|r| snap.cache.gpu_tokens_of(*r))
+                .sum();
+            let want_in: usize =
+                snap.swapq.iter().map(|r| snap.cache.cpu_blocks_of(*r) * bs).sum();
+            let b = budget::solve(&BudgetInputs {
+                swap_limit: limit,
+                want_out,
+                want_in,
+                free_cpu: snap.cache.cpu_free() * bs,
+                free_gpu: snap.cache.gpu_free() * bs,
+            });
+            (b.out_tokens, b.in_tokens)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulated engine state for stages 3–5
+// ---------------------------------------------------------------------------
+
+/// Mutable simulation the later stages plan against: a cloned cache ledger
+/// plus per-request overrides. Entirely planner-private state; the real
+/// engine is untouched.
+#[derive(Debug, Default)]
+struct SimState {
+    cache: CacheSnapshot,
+    reqs: HashMap<ReqId, ReqSnapshot>,
+    /// Waiting queue ordered by (queue_arrival, req) — grows with swap-in
+    /// completions and evicted running requests.
+    waiting: Vec<(Micros, ReqId)>,
+    /// Requests already in this plan: their cache entries are referenced by
+    /// plan entries and must not be evicted.
+    planned: HashSet<ReqId>,
+}
+
+impl SimState {
+    fn reset_from(&mut self, snap: &SchedSnapshot) {
+        self.cache.clone_from(&snap.cache);
+        self.reqs.clear();
+        for (k, v) in &snap.reqs {
+            self.reqs.insert(*k, *v);
+        }
+        self.waiting.clear();
+        self.waiting.extend(snap.waiting.iter().map(|&r| (snap.reqs[&r].queue_arrival, r)));
+        self.planned.clear();
+    }
+
+    fn insert_waiting(&mut self, req: ReqId) {
+        let arr = self.reqs[&req].queue_arrival;
+        let pos = self.waiting.partition_point(|&(a, r)| (a, r) <= (arr, req));
+        self.waiting.insert(pos, (arr, req));
+    }
+
+    /// Mirror of the engine's preemption-by-recompute.
+    fn evict(&mut self, req: ReqId) {
+        {
+            let r = self.reqs.get_mut(&req).unwrap();
+            r.recompute_hwm = r.recompute_hwm.max(r.processed);
+            r.processed = 0;
+        }
+        self.cache.release(req);
+        if self.reqs[&req].state == ReqState::Running {
+            self.reqs.get_mut(&req).unwrap().state = ReqState::Waiting;
+            self.insert_waiting(req);
+        }
+        // Waiting victims stay queued and restart from zero.
+    }
+
+    /// Mirror of the engine's grow-with-eviction loop: reserve blocks for
+    /// `req` up to `target` tokens, evicting strictly later-arrived
+    /// running/waiting requests under pressure. Victims are recorded in
+    /// `evictions` (they apply even if the reservation ultimately fails).
+    fn ensure_blocks(
+        &mut self,
+        snap: &SchedSnapshot,
+        req: ReqId,
+        target: usize,
+        evictions: &mut Vec<ReqId>,
+    ) -> bool {
+        loop {
+            if self.cache.can_grow(req, target) {
+                self.cache.reserve_grow(req, target);
+                return true;
+            }
+            let req_arrival = self.reqs[&req].queue_arrival;
+            let victim = snap
+                .running
+                .iter()
+                .copied()
+                .filter(|r| self.reqs[r].state == ReqState::Running)
+                .chain(self.waiting.iter().map(|&(_, r)| r))
+                .filter(|r| {
+                    *r != req && !self.planned.contains(r) && self.cache.gpu_tokens_of(*r) > 0
+                })
+                .max_by_key(|r| (self.reqs[r].queue_arrival, *r));
+            let Some(v) = victim else {
+                return false;
+            };
+            if self.reqs[&v].queue_arrival < req_arrival {
+                return false; // only strictly lower-priority victims
+            }
+            self.evict(v);
+            evictions.push(v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stages 3–5
+// ---------------------------------------------------------------------------
+
+fn stage_dispositions(
+    snap: &SchedSnapshot,
+    fwd: &FwdEstimate,
+    out_budget: usize,
+    estimator: &DurationEstimator,
+    views: &mut Vec<PausedView>,
+    sim: &mut SimState,
+    plan: &mut SchedPlan,
+) {
+    views.clear();
+    for &r in &snap.paused {
+        let q = &snap.reqs[&r];
+        views.push(PausedView {
+            req: r,
+            kind: q.pause_kind,
+            disposition: q.disposition,
+            ctx_tokens: q.processed,
+            gpu_tokens: snap.cache.gpu_tokens_of(r),
+            elapsed_us: snap.now.saturating_sub(q.paused_at),
+            actual_total_us: q.pause_duration_us,
+        });
+    }
+    let stats = BatchStats {
+        other_tokens: fwd.running_ctx,
+        running_query: fwd.decode_cands,
+        kv_bytes_per_token: snap.kv_bytes_per_token,
+        chunk_tokens: fwd.chunk_tokens,
+    };
+    let actions = decide_interceptions(
+        &snap.policy,
+        estimator,
+        &snap.profile,
+        views.as_slice(),
+        &stats,
+        out_budget,
+    );
+    for (req, action) in actions {
+        match action {
+            InterceptAction::Preserve => {
+                sim.reqs.get_mut(&req).unwrap().disposition = Disposition::Preserved;
+            }
+            InterceptAction::Discard => {
+                {
+                    let r = sim.reqs.get_mut(&req).unwrap();
+                    r.recompute_hwm = r.recompute_hwm.max(r.processed);
+                    r.disposition = Disposition::Discarded;
+                }
+                if sim.cache.cpu_blocks_of(req) > 0 {
+                    let new_len = sim.cache.discard_gpu_tail(req);
+                    sim.reqs.get_mut(&req).unwrap().processed = new_len;
+                } else {
+                    sim.cache.release(req);
+                    sim.reqs.get_mut(&req).unwrap().processed = 0;
+                }
+            }
+            InterceptAction::SwapOut { tokens } => {
+                if tokens > 0 {
+                    plan.swap_out_blocks +=
+                        sim.cache.swap_out(req, tokens.div_ceil(snap.block_size));
+                }
+                sim.reqs.get_mut(&req).unwrap().disposition = Disposition::SwappingOut;
+            }
+        }
+        plan.dispositions.push((req, action));
+    }
+}
+
+fn stage_swap_in(snap: &SchedSnapshot, in_budget: usize, sim: &mut SimState, plan: &mut SchedPlan) {
+    let bs = snap.block_size;
+    let mut in_left = in_budget;
+    for &req in &snap.swapq {
+        if in_left == 0 {
+            break;
+        }
+        let want = sim.cache.cpu_blocks_of(req);
+        if want == 0 {
+            continue;
+        }
+        let grant = want.min(in_left.div_ceil(bs));
+        let moved = sim.cache.swap_in(req, grant);
+        in_left = in_left.saturating_sub(moved * bs);
+        if moved == 0 {
+            continue; // GPU exhausted; nothing to record
+        }
+        let completes = sim.cache.cpu_blocks_of(req) == 0;
+        plan.swap_in.push(SwapInGrant { req, blocks: moved, completes });
+        if completes {
+            // Fully resident: continues as a waiting (prefill) request and
+            // is eligible for admission later this very iteration.
+            sim.reqs.get_mut(&req).unwrap().state = ReqState::Waiting;
+            sim.insert_waiting(req);
+        }
+    }
+}
+
+fn stage_batch(
+    snap: &SchedSnapshot,
+    sim: &mut SimState,
+    plan: &mut SchedPlan,
+    prefill_order: &mut Vec<(Micros, ReqId)>,
+) {
+    // ---- Decode admission (running requests, FCFS, bounded batch) --------
+    for &req in snap.running.iter().take(snap.max_decode_batch) {
+        if sim.reqs[&req].state != ReqState::Running {
+            continue; // evicted by an earlier admission this iteration
+        }
+        let target = sim.reqs[&req].processed + 1;
+        let mut ev = Vec::new();
+        let ok = sim.ensure_blocks(snap, req, target, &mut ev);
+        if ok {
+            sim.planned.insert(req);
+        }
+        if ok || !ev.is_empty() {
+            plan.decode.push(DecodeAdmission {
+                req,
+                evictions: ev,
+                admitted: ok,
+                target_tokens: target,
+            });
+        }
+    }
+
+    // ---- Prefill/recompute admission (FCFS to saturation, §4.2/§4.3) ----
+    let chunked = snap.policy.chunked_recompute;
+    let mut q_left = if chunked {
+        chunking::chunk_budget(snap.saturation_tokens, plan.admitted_decode(), snap.min_chunk)
+    } else {
+        snap.max_batched_tokens
+    };
+    // Iterate a snapshot of the waiting order taken now: requests that
+    // join `waiting` during this loop (evicted running victims) wait for
+    // the next iteration, but waiting victims already in the list restart
+    // from zero and may be re-admitted.
+    prefill_order.clear();
+    prefill_order.extend_from_slice(&sim.waiting);
+    for &(_, req) in prefill_order.iter() {
+        if q_left == 0 {
+            break;
+        }
+        let r = sim.reqs[&req];
+        if r.state != ReqState::Waiting {
+            continue;
+        }
+        let pending = r.pending_prefill();
+        debug_assert!(pending > 0, "req {req} in waiting with no pending prefill");
+        let mut chunk_real = pending.min(q_left);
+        if !chunked {
+            chunk_real = pending; // whole context in one iteration
+        }
+        let chunks = chunking::decompose(chunk_real, &snap.prefill_chunk_sizes);
+        let padded: usize = chunks.iter().sum();
+        // Respect the per-sequence block-table capacity incl. padding.
+        if r.processed + padded > snap.max_blocks_per_seq * snap.block_size {
+            continue; // cannot pad past capacity; wait for exact fit
+        }
+        let target = r.processed + padded;
+        let mut ev = Vec::new();
+        let ok = sim.ensure_blocks(snap, req, target, &mut ev);
+        if !ok {
+            if !ev.is_empty() {
+                plan.prefill.push(PrefillAdmission {
+                    req,
+                    evictions: ev,
+                    admitted: false,
+                    target_tokens: target,
+                    from_tokens: r.processed,
+                    ..Default::default()
+                });
+            }
+            break; // FCFS head-of-line blocks until memory frees up
+        }
+        sim.planned.insert(req);
+        let finishes = chunk_real == pending;
+        let recompute_tokens = r.recompute_hwm.saturating_sub(r.processed).min(chunk_real);
+        plan.prefill.push(PrefillAdmission {
+            req,
+            evictions: ev,
+            admitted: true,
+            target_tokens: target,
+            from_tokens: r.processed,
+            chunk_real,
+            chunks,
+            finishes,
+            recompute_tokens,
+        });
+        q_left = q_left.saturating_sub(chunk_real);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planner (snapshot capture + staged planning, reusable buffers)
+// ---------------------------------------------------------------------------
+
+/// Owns the snapshot, the plan, and all scratch buffers, so the per-
+/// iteration hot path allocates nothing in steady state (buffers are
+/// cleared, not dropped).
+#[derive(Debug)]
+pub struct Planner {
+    snap: SchedSnapshot,
+    plan: SchedPlan,
+    views: Vec<PausedView>,
+    sim: SimState,
+    prefill_order: Vec<(Micros, ReqId)>,
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner {
+            snap: SchedSnapshot::new(
+                Policy::vllm(),
+                FwdProfile {
+                    t_base_us: 0.0,
+                    us_per_ctx_token: 0.0,
+                    us_per_query_unsat: 0.0,
+                    us_per_query_sat: 0.0,
+                    saturation_tokens: 1,
+                },
+                SwapModel {
+                    bandwidth_bytes_per_sec: 1.0,
+                    per_block_launch_us: 0.0,
+                    kv_bytes_per_token: 1,
+                    block_size: 1,
+                    pipelined: true,
+                },
+            ),
+            plan: SchedPlan::default(),
+            views: Vec::new(),
+            sim: SimState::default(),
+            prefill_order: Vec::new(),
+        }
+    }
+
+    /// Capture the engine's current state into the internal snapshot,
+    /// reusing buffers (no `&mut` escapes; the engine stays untouched).
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        &mut self,
+        now: Micros,
+        cfg: &EngineConfig,
+        backend: &dyn ExecBackend,
+        cache: &CacheManager,
+        waiting: &FcfsQueue,
+        swapq: &FcfsQueue,
+        running: &FcfsQueue,
+        paused: &[ReqId],
+        requests: &HashMap<ReqId, Request>,
+    ) {
+        let s = &mut self.snap;
+        s.now = now;
+        s.policy = cfg.policy.clone();
+        s.block_size = cfg.block_size;
+        s.saturation_tokens = cfg.saturation_tokens;
+        s.min_chunk = cfg.min_chunk;
+        s.max_batched_tokens = cfg.max_batched_tokens;
+        s.kv_bytes_per_token = cfg.kv_bytes_per_token;
+        s.max_decode_batch = backend.max_decode_batch();
+        s.max_blocks_per_seq = backend.max_blocks_per_seq();
+        s.prefill_chunk_sizes.clear();
+        s.prefill_chunk_sizes.extend_from_slice(backend.prefill_chunk_sizes());
+        s.profile = backend.fwd_profile().clone();
+        s.swap_model = backend.swap_model().clone();
+        s.waiting.clear();
+        s.waiting.extend(waiting.iter());
+        s.swapq.clear();
+        s.swapq.extend(swapq.iter());
+        s.running.clear();
+        s.running.extend(running.iter());
+        s.paused.clear();
+        s.paused.extend_from_slice(paused);
+        cache.snapshot_into(&mut s.cache);
+        s.reqs.clear();
+        for &id in s.waiting.iter().chain(&s.swapq).chain(&s.running).chain(&s.paused) {
+            s.reqs.insert(id, ReqSnapshot::of(&requests[&id]));
+        }
+    }
+
+    /// Plan from the captured snapshot. Pure with respect to the engine:
+    /// only planner-internal buffers are written.
+    pub fn plan(&mut self, estimator: &DurationEstimator) -> &SchedPlan {
+        let Planner { snap, plan, views, sim, prefill_order } = self;
+        plan.clear();
+        sim.reset_from(snap);
+        let fwd = estimate_forward(snap);
+        let (out_budget, in_budget) = solve_budgets(snap, &fwd);
+        plan.expected_fwd_us = fwd.expected_fwd_us;
+        plan.swap_out_budget = out_budget;
+        plan.swap_in_budget = in_budget;
+        stage_dispositions(snap, &fwd, out_budget, estimator, views, sim, plan);
+        stage_swap_in(snap, in_budget, sim, plan);
+        stage_batch(snap, sim, plan, prefill_order);
+        &self.plan
+    }
+
+    /// Plan from an explicitly provided snapshot (tests and benches).
+    pub fn plan_for(
+        &mut self,
+        snap: SchedSnapshot,
+        estimator: &DurationEstimator,
+    ) -> &SchedPlan {
+        self.snap = snap;
+        self.plan(estimator)
+    }
+
+    pub fn snapshot(&self) -> &SchedSnapshot {
+        &self.snap
+    }
+
+    /// Move the plan out (the engine applies it without borrowing the
+    /// planner); return it with [`Planner::put_back_plan`] to keep reusing
+    /// its buffers.
+    pub fn take_plan(&mut self) -> SchedPlan {
+        std::mem::take(&mut self.plan)
+    }
+
+    pub fn put_back_plan(&mut self, plan: SchedPlan) {
+        self.plan = plan;
+    }
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::augment::ALL_KINDS;
+    use crate::coordinator::estimator::EstimatorKind;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    const BS: usize = 16;
+
+    fn profile() -> FwdProfile {
+        FwdProfile {
+            t_base_us: 6_000.0,
+            us_per_ctx_token: 0.23,
+            us_per_query_unsat: 10.0,
+            us_per_query_sat: 80.0,
+            saturation_tokens: 512,
+        }
+    }
+
+    fn swap_model() -> SwapModel {
+        SwapModel {
+            bandwidth_bytes_per_sec: 16e9,
+            per_block_launch_us: 5.0,
+            kv_bytes_per_token: 458_752,
+            block_size: BS,
+            pipelined: true,
+        }
+    }
+
+    fn est() -> DurationEstimator {
+        DurationEstimator::new(EstimatorKind::TypeProfile, 1.0)
+    }
+
+    fn snap(policy: Policy, gpu_free: usize, cpu_free: usize) -> SchedSnapshot {
+        let mut s = SchedSnapshot::new(policy, profile(), swap_model());
+        s.block_size = BS;
+        s.max_decode_batch = 8;
+        s.max_blocks_per_seq = 64;
+        s.cache = CacheSnapshot::for_test(BS, 0, gpu_free, cpu_free);
+        s
+    }
+
+    /// A running request with `ctx` processed tokens, fully GPU-resident.
+    fn add_running(s: &mut SchedSnapshot, req: ReqId, arrival: Micros, ctx: usize) {
+        s.running.push(req);
+        s.reqs.insert(req, ReqSnapshot::basic(ReqState::Running, arrival, ctx + 1, ctx));
+        s.cache.set_seq(req, ctx.div_ceil(BS), 0, ctx);
+    }
+
+    /// A waiting request with `tokens` total and `processed` already cached.
+    fn add_waiting(
+        s: &mut SchedSnapshot,
+        req: ReqId,
+        arrival: Micros,
+        tokens: usize,
+        processed: usize,
+    ) {
+        s.waiting.push(req);
+        s.reqs.insert(req, ReqSnapshot::basic(ReqState::Waiting, arrival, tokens, processed));
+        if processed > 0 {
+            s.cache.set_seq(req, processed.div_ceil(BS), 0, processed);
+        }
+    }
+
+    /// A paused request: `ctx` valid tokens, `cpu_blocks` already swapped
+    /// out (CPU prefix), fresh interception of the given kind.
+    fn add_paused(
+        s: &mut SchedSnapshot,
+        req: ReqId,
+        arrival: Micros,
+        ctx: usize,
+        kind: AugmentKind,
+        cpu_blocks: usize,
+    ) {
+        s.paused.push(req);
+        let mut r = ReqSnapshot::basic(ReqState::Paused, arrival, ctx + 1, ctx);
+        r.pause_kind = kind;
+        r.pause_duration_us = 1_000_000;
+        s.reqs.insert(req, r);
+        s.cache.set_seq(req, ctx.div_ceil(BS), cpu_blocks, ctx);
+    }
+
+    /// A resumed request still holding `cpu_blocks` in swap space.
+    fn add_swapq(s: &mut SchedSnapshot, req: ReqId, arrival: Micros, cpu_blocks: usize) {
+        s.swapq.push(req);
+        let len = cpu_blocks * BS;
+        s.reqs.insert(
+            req,
+            ReqSnapshot::basic(ReqState::SwapQueue, arrival, len + 8, len),
+        );
+        s.cache.set_seq(req, cpu_blocks, cpu_blocks, len);
+    }
+
+    #[test]
+    fn estimate_counts_decode_and_chunk() {
+        let mut s = snap(Policy::infercept(), 64, 64);
+        add_running(&mut s, 1, 0, 100);
+        add_running(&mut s, 2, 10, 200);
+        add_waiting(&mut s, 3, 20, 300, 0);
+        let f = estimate_forward(&s);
+        assert_eq!(f.decode_cands, 2);
+        assert_eq!(f.running_ctx, 101 + 201);
+        assert_eq!(f.chunk_tokens, 512 - 2);
+        // expected batch = 2 decodes + min(chunk, pending_head=300)
+        assert_eq!(f.expected_fwd_us, s.profile.t_fwd(2 + 300, 302));
+    }
+
+    #[test]
+    fn estimate_unchunked_uses_pending_head() {
+        let mut s = snap(Policy::vllm(), 64, 64);
+        add_waiting(&mut s, 1, 0, 700, 0);
+        let f = estimate_forward(&s);
+        assert_eq!(f.chunk_tokens, 700); // saturation.max(pending_head)
+        assert_eq!(f.expected_fwd_us, s.profile.t_fwd(700, 0));
+    }
+
+    #[test]
+    fn budgets_match_swap_mode() {
+        let mut s = snap(Policy::vllm(), 64, 64);
+        add_paused(&mut s, 1, 0, 160, AugmentKind::Chatbot, 0);
+        let f = estimate_forward(&s);
+        assert_eq!(solve_budgets(&s, &f), (0, 0));
+        s.policy = Policy::swap();
+        assert_eq!(solve_budgets(&s, &f), (usize::MAX, usize::MAX));
+        s.policy = Policy::infercept();
+        let (out, in_) = solve_budgets(&s, &f);
+        assert!(out > 0, "paused context should earn an out-budget");
+        assert_eq!(in_, 0, "empty swapq wants nothing in");
+        assert!(out <= 160, "cannot grant more than requested");
+    }
+
+    #[test]
+    fn preserve_policy_plans_preserve_for_all_paused() {
+        let mut s = snap(Policy::preserve(), 64, 64);
+        add_paused(&mut s, 1, 0, 100, AugmentKind::Chatbot, 0);
+        add_paused(&mut s, 2, 5, 200, AugmentKind::Math, 0);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        assert_eq!(plan.dispositions.len(), 2);
+        assert!(plan.dispositions.iter().all(|(_, a)| *a == InterceptAction::Preserve));
+        assert!(!plan.has_work());
+    }
+
+    #[test]
+    fn min_waste_splits_short_and_long_calls() {
+        // cpu_free = 0 disables swap grants: pure preserve/discard argmin.
+        let mut s = snap(Policy::infercept(), 64, 0);
+        add_paused(&mut s, 1, 0, 1400, AugmentKind::Math, 0);
+        add_paused(&mut s, 2, 5, 1400, AugmentKind::Chatbot, 0);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        let get = |r| plan.dispositions.iter().find(|(q, _)| *q == r).unwrap().1;
+        assert_eq!(get(1), InterceptAction::Preserve);
+        assert_eq!(get(2), InterceptAction::Discard);
+        assert_eq!(plan.swap_out_blocks, 0);
+    }
+
+    #[test]
+    fn discard_frees_ledger_space_for_admission() {
+        // Pool: 4 free blocks; a waiting request needs 8. A discarded
+        // chatbot pause must free its 5 blocks within the same plan.
+        let mut s = snap(Policy::vllm(), 4, 0);
+        s.policy.preserve = crate::coordinator::policy::PreserveMode::Never;
+        add_paused(&mut s, 1, 0, 5 * BS, AugmentKind::Chatbot, 0);
+        add_waiting(&mut s, 2, 10, 8 * BS, 0);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        assert_eq!(plan.dispositions, vec![(1, InterceptAction::Discard)]);
+        assert_eq!(plan.prefill.len(), 1);
+        let adm = &plan.prefill[0];
+        assert!(adm.admitted && adm.req == 2);
+        assert_eq!(adm.chunk_real, 8 * BS);
+        assert_eq!(adm.target_tokens, 8 * BS);
+        assert!(adm.finishes);
+        assert!(adm.evictions.is_empty(), "discard freed enough; no eviction needed");
+    }
+
+    #[test]
+    fn swap_in_completion_feeds_same_iteration_prefill() {
+        let mut s = snap(Policy::swap(), 64, 64);
+        add_swapq(&mut s, 1, 0, 3);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        assert_eq!(plan.swap_in, vec![SwapInGrant { req: 1, blocks: 3, completes: true }]);
+        assert_eq!(plan.prefill.len(), 1, "fully-resident request admitted immediately");
+        assert_eq!(plan.prefill[0].req, 1);
+        assert_eq!(plan.prefill[0].from_tokens, 3 * BS);
+        assert_eq!(plan.prefill[0].chunk_real, 8); // the 8 pending tokens
+    }
+
+    #[test]
+    fn swap_in_bounded_by_gpu_space() {
+        let mut s = snap(Policy::swap(), 2, 64);
+        add_swapq(&mut s, 1, 0, 5);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        assert_eq!(plan.swap_in, vec![SwapInGrant { req: 1, blocks: 2, completes: false }]);
+        assert!(plan.prefill.is_empty(), "still partly CPU-resident");
+    }
+
+    #[test]
+    fn decode_evicts_latest_arrival_under_pressure() {
+        let mut s = snap(Policy::vllm(), 0, 0);
+        add_running(&mut s, 1, 0, BS); // decode target 17 needs a 2nd block
+        add_running(&mut s, 2, 100, 2 * BS); // latest arrival: the victim
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        assert_eq!(plan.decode.len(), 1);
+        let adm = &plan.decode[0];
+        assert!(adm.admitted && adm.req == 1);
+        assert_eq!(adm.evictions, vec![2]);
+        assert_eq!(adm.target_tokens, BS + 1);
+        // The victim restarts from zero; with 1 of its 2 freed blocks taken
+        // by req 1, its full 33-token recompute (3 blocks) cannot fit.
+        assert!(plan.prefill.is_empty());
+    }
+
+    #[test]
+    fn earlier_arrivals_are_never_evicted() {
+        let mut s = snap(Policy::vllm(), 0, 0);
+        add_running(&mut s, 1, 100, BS); // later arrival needs a block…
+        add_running(&mut s, 2, 0, 2 * BS - 1); // …but the only holder is earlier
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        // req 1 is denied without evictions; req 2's decode fits in place
+        // (its 32nd token lives in its already-allocated second block).
+        assert_eq!(plan.decode.len(), 1);
+        assert!(plan.decode[0].req == 2 && plan.decode[0].admitted);
+        assert!(plan.decode[0].evictions.is_empty());
+    }
+
+    #[test]
+    fn prefill_chunks_decompose_to_compiled_sizes() {
+        let mut s = snap(Policy::infercept(), 64, 0);
+        s.prefill_chunk_sizes = vec![16, 32, 64, 128];
+        add_waiting(&mut s, 1, 0, 100, 0);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        let adm = &plan.prefill[0];
+        assert!(adm.admitted);
+        assert_eq!(adm.chunk_real, 100);
+        assert_eq!(adm.chunks, vec![64, 32, 16]); // 112 padded
+        assert_eq!(adm.target_tokens, 112);
+        assert!(adm.finishes);
+    }
+
+    #[test]
+    fn chunked_recompute_counts_rebuilt_tokens() {
+        let mut s = snap(Policy::infercept(), 64, 0);
+        let mut r = ReqSnapshot::basic(ReqState::Waiting, 0, 600, 0);
+        r.recompute_hwm = 400; // discarded at 400 tokens: rebuilding
+        s.waiting.push(1);
+        s.reqs.insert(1, r);
+        let mut p = Planner::new();
+        let plan = p.plan_for(s, &est());
+        let adm = &plan.prefill[0];
+        assert!(adm.admitted);
+        assert_eq!(adm.chunk_real, 512 - 0); // chunk budget, no decodes
+        assert_eq!(adm.recompute_tokens, 400);
+        assert!(!adm.finishes);
+    }
+
+    #[test]
+    fn planning_is_deterministic_and_engine_pure() {
+        let mut s = snap(Policy::infercept(), 8, 4);
+        add_running(&mut s, 1, 0, 40);
+        add_paused(&mut s, 2, 5, 96, AugmentKind::Qa, 2);
+        add_waiting(&mut s, 3, 10, 200, 32);
+        add_swapq(&mut s, 4, 15, 2);
+        let mut p1 = Planner::new();
+        let mut p2 = Planner::new();
+        let a = format!("{:?}", p1.plan_for(s.clone(), &est()));
+        let b = format!("{:?}", p2.plan_for(s.clone(), &est()));
+        assert_eq!(a, b);
+        // The snapshot (stand-in for the real engine) is untouched.
+        assert_eq!(p1.snapshot().cache.gpu_free(), s.cache.gpu_free());
+        assert_eq!(p1.snapshot().reqs[&3].processed, 32);
+    }
+
+    // -- the over-commit property ------------------------------------------
+
+    /// Replay a plan against a fresh ledger, asserting every reservation is
+    /// feasible at its point in the sequence.
+    fn replay_asserts_feasible(s: &SchedSnapshot, plan: &SchedPlan) {
+        let mut cache = s.cache.clone();
+        let mut out_blocks = 0usize;
+        for &(req, action) in &plan.dispositions {
+            match action {
+                InterceptAction::Preserve => {}
+                InterceptAction::Discard => {
+                    if cache.cpu_blocks_of(req) > 0 {
+                        cache.discard_gpu_tail(req);
+                    } else {
+                        cache.release(req);
+                    }
+                }
+                InterceptAction::SwapOut { tokens } => {
+                    out_blocks += cache.swap_out(req, tokens.div_ceil(s.block_size));
+                }
+            }
+        }
+        assert_eq!(out_blocks, plan.swap_out_blocks);
+        for g in &plan.swap_in {
+            assert_eq!(cache.swap_in(g.req, g.blocks), g.blocks, "over-granted swap-in");
+            assert_eq!(g.completes, cache.cpu_blocks_of(g.req) == 0);
+        }
+        for adm in &plan.decode {
+            for &v in &adm.evictions {
+                cache.release(v);
+            }
+            if adm.admitted {
+                assert!(cache.can_grow(adm.req, adm.target_tokens), "decode over-commit");
+                cache.reserve_grow(adm.req, adm.target_tokens);
+            }
+        }
+        for adm in &plan.prefill {
+            for &v in &adm.evictions {
+                cache.release(v);
+            }
+            if adm.admitted {
+                assert!(cache.can_grow(adm.req, adm.target_tokens), "prefill over-commit");
+                cache.reserve_grow(adm.req, adm.target_tokens);
+                let covered: usize = adm.chunks.iter().sum();
+                assert!(covered >= adm.chunk_real);
+                assert_eq!(adm.target_tokens, adm.from_tokens + covered);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_plans_never_overcommit() {
+        let policies = [
+            Policy::vllm(),
+            Policy::improved_discard(),
+            Policy::preserve(),
+            Policy::swap(),
+            Policy::ablation_chunked(),
+            Policy::infercept(),
+        ];
+        prop::check("planner_no_overcommit", 120, |rng| {
+            for policy in &policies {
+                let s = random_snapshot(rng, policy.clone());
+                let mut p = Planner::new();
+                let plan = p.plan_for(s.clone(), &est());
+                replay_asserts_feasible(&s, plan);
+            }
+        });
+    }
+
+    /// A random but *consistent* engine state: queue membership matches
+    /// request state, cache lengths match `processed`, paused requests have
+    /// CPU-prefix layouts, and total block usage fits the pool.
+    fn random_snapshot(rng: &mut Pcg, policy: Policy) -> SchedSnapshot {
+        let total_gpu = rng.usize(4, 30);
+        let total_cpu = rng.usize(2, 12);
+        let mut s = snap(policy, 0, 0);
+        s.now = 1_000_000;
+        s.max_decode_batch = rng.usize(1, 6);
+        s.max_blocks_per_seq = 8;
+        let mut gpu_used = 0usize;
+        let mut cpu_used = 0usize;
+        let mut id: ReqId = 0;
+        for _ in 0..rng.usize(0, 3) {
+            let ctx = rng.usize(1, 48);
+            let blocks = ctx.div_ceil(BS);
+            if gpu_used + blocks <= total_gpu {
+                id += 1;
+                gpu_used += blocks;
+                add_running(&mut s, id, rng.range(0, 500), ctx);
+            }
+        }
+        for _ in 0..rng.usize(0, 3) {
+            let tokens = rng.usize(1, 96);
+            let processed = rng.usize(0, tokens - 1);
+            let blocks = processed.div_ceil(BS);
+            if gpu_used + blocks <= total_gpu {
+                id += 1;
+                gpu_used += blocks;
+                add_waiting(&mut s, id, rng.range(0, 500), tokens, processed);
+                if rng.usize(0, 1) == 0 {
+                    s.reqs.get_mut(&id).unwrap().recompute_hwm = rng.usize(0, tokens);
+                }
+            }
+        }
+        for _ in 0..rng.usize(0, 3) {
+            let ctx = rng.usize(BS, 64);
+            let blocks = ctx.div_ceil(BS);
+            let cpu = rng.usize(0, blocks.min(total_cpu.saturating_sub(cpu_used)));
+            if gpu_used + (blocks - cpu) <= total_gpu {
+                id += 1;
+                gpu_used += blocks - cpu;
+                cpu_used += cpu;
+                let kind = *rng.choose(&ALL_KINDS);
+                add_paused(&mut s, id, rng.range(0, 500), ctx, kind, cpu);
+                let r = s.reqs.get_mut(&id).unwrap();
+                r.paused_at = rng.range(0, 1_000_000);
+                r.pause_duration_us = rng.range(1_000, 30_000_000);
+                r.disposition = match rng.usize(0, 2) {
+                    0 => Disposition::Fresh,
+                    1 => Disposition::Preserved,
+                    _ => Disposition::SwappingOut,
+                };
+            }
+        }
+        for _ in 0..rng.usize(0, 2) {
+            let cpu = rng.usize(1, 3);
+            if cpu_used + cpu <= total_cpu {
+                id += 1;
+                cpu_used += cpu;
+                add_swapq(&mut s, id, rng.range(0, 500), cpu);
+            }
+        }
+        s.cache = {
+            let mut c = CacheSnapshot::for_test(
+                BS,
+                rng.usize(0, 1),
+                total_gpu - gpu_used,
+                total_cpu - cpu_used,
+            );
+            // Rebuild seq entries recorded by the helpers.
+            for (&r, q) in &s.reqs {
+                let (blocks, cpu_blocks) = match q.state {
+                    ReqState::Running | ReqState::Waiting => (q.processed.div_ceil(BS), 0),
+                    ReqState::Paused => {
+                        let b = q.processed.div_ceil(BS);
+                        // recover the helper's cpu prefix from the old cache
+                        (b, s.cache.cpu_blocks_of(r))
+                    }
+                    ReqState::SwapQueue => {
+                        (s.cache.cpu_blocks_of(r), s.cache.cpu_blocks_of(r))
+                    }
+                    _ => (0, 0),
+                };
+                if blocks > 0 {
+                    c.set_seq(r, blocks, cpu_blocks, q.processed);
+                }
+            }
+            c
+        };
+        s
+    }
+}

@@ -360,4 +360,50 @@ mod tests {
         let acts = decide_interceptions(&p, &e, &profile(), &[v], &batch(), 0);
         assert_eq!(acts[0].1, InterceptAction::Discard);
     }
+
+    #[test]
+    fn prop_fcfs_order_under_interleaved_push_remove_pop() {
+        // Model-based property: against a sorted reference model, the queue
+        // preserves (arrival, req) order through arbitrary interleavings of
+        // push / remove / pop_front.
+        use crate::util::prop;
+        prop::check("fcfs_order", 300, |rng| {
+            let mut q = FcfsQueue::default();
+            let mut model: Vec<(Micros, ReqId)> = Vec::new();
+            let mut next: ReqId = 0;
+            for _ in 0..50 {
+                match rng.usize(0, 2) {
+                    0 => {
+                        next += 1;
+                        let arr = rng.range(0, 300); // dense: exercises ties
+                        q.push(arr, next);
+                        model.push((arr, next));
+                    }
+                    1 => {
+                        if !model.is_empty() {
+                            let i = rng.usize(0, model.len() - 1);
+                            let (_, id) = model.remove(i);
+                            assert!(q.remove(id));
+                            assert!(!q.remove(id), "double-remove succeeded");
+                        }
+                    }
+                    _ => {
+                        model.sort_unstable();
+                        let expect =
+                            if model.is_empty() { None } else { Some(model.remove(0).1) };
+                        assert_eq!(q.pop_front(), expect);
+                    }
+                }
+                model.sort_unstable();
+                assert_eq!(q.len(), model.len());
+                assert_eq!(q.is_empty(), model.is_empty());
+                let got: Vec<ReqId> = q.iter().collect();
+                let want: Vec<ReqId> = model.iter().map(|&(_, r)| r).collect();
+                assert_eq!(got, want);
+                for &(_, r) in &model {
+                    assert!(q.contains(r));
+                }
+            }
+        });
+    }
 }

@@ -1,0 +1,251 @@
+//! Plan application: mechanically replay a [`SchedPlan`] against the real
+//! cache, backend, and metrics. Split from `engine/mod.rs` so the parent
+//! module stays a thin lifecycle + event loop; no scheduling *decisions*
+//! are made here — feasibility was established by the planner's ledger,
+//! and divergence is a bug (guarded by debug assertions).
+
+use anyhow::Result;
+
+use super::backend::{DecodeEntry, IterationPlan, PrefillEntry};
+use super::request::ReqState;
+use super::Engine;
+use crate::coordinator::planner::SchedPlan;
+use crate::coordinator::policy::SwapMode;
+use crate::coordinator::scheduler::{Disposition, InterceptAction};
+use crate::util::Micros;
+
+impl Engine {
+    /// Mechanically replay a [`SchedPlan`]: cache mutations, backend
+    /// execution, sampling, and metrics. The plan's feasibility was
+    /// established against the cache-snapshot ledger; divergence here is a
+    /// bug (guarded by debug assertions).
+    pub(super) fn apply_and_execute(&mut self, plan: &SchedPlan) -> Result<bool> {
+        let bs = self.cfg.block_size;
+        let mut exec = IterationPlan::default();
+        let mut stall: Micros = 0;
+
+        // ---- Interception dispositions (§4.3 / §4.4) ---------------------
+        for &(req, action) in &plan.dispositions {
+            match action {
+                InterceptAction::Preserve => {
+                    self.metrics.preserve_decisions += 1;
+                    self.requests.get_mut(&req).unwrap().disposition = Disposition::Preserved;
+                }
+                InterceptAction::Discard => {
+                    self.metrics.discard_decisions += 1;
+                    self.discard_context(req);
+                }
+                InterceptAction::SwapOut { tokens } => {
+                    self.metrics.swap_decisions += 1;
+                    if tokens > 0 {
+                        let moves = self.cache.swap_out(req, tokens.div_ceil(bs));
+                        let moved_tokens = moves.len() * bs;
+                        self.metrics.swapped_out_tokens += moved_tokens as u64;
+                        if self.cfg.policy.swap == SwapMode::Sync {
+                            stall += self.backend.swap_model().t_swap(moved_tokens);
+                        }
+                        exec.swap_out.extend(moves);
+                    }
+                    self.requests.get_mut(&req).unwrap().disposition =
+                        Disposition::SwappingOut;
+                }
+            }
+        }
+
+        // ---- Swap-in grants (§4.1 budget, §4.3 swap queue) ---------------
+        for g in &plan.swap_in {
+            let moves = self.cache.swap_in(g.req, g.blocks);
+            debug_assert_eq!(moves.len(), g.blocks, "ledger/manager swap-in divergence");
+            let moved_tokens = moves.len() * bs;
+            self.metrics.swapped_in_tokens += moved_tokens as u64;
+            if self.cfg.policy.swap == SwapMode::Sync {
+                stall += self.backend.swap_model().t_swap(moved_tokens);
+            }
+            exec.swap_in.extend(moves);
+            if g.completes {
+                debug_assert_eq!(self.cache.cpu_blocks_of(g.req), 0);
+                self.swapq.remove(g.req);
+                let rq = self.requests.get_mut(&g.req).unwrap();
+                rq.state = ReqState::Waiting;
+                self.waiting.push(rq.queue_arrival, g.req);
+            }
+        }
+
+        // ---- Decode batch ------------------------------------------------
+        for adm in &plan.decode {
+            for &v in &adm.evictions {
+                self.evict(v);
+            }
+            if !adm.admitted {
+                continue;
+            }
+            self.cache.grow(adm.req, adm.target_tokens)?;
+            let rq = &self.requests[&adm.req];
+            exec.decode.push(DecodeEntry {
+                req: adm.req,
+                token: rq.tokens[rq.processed],
+                block_table: self.cache.gpu_block_table(adm.req)?,
+                ctx_len: rq.processed as u32 + 1,
+            });
+        }
+
+        // ---- Prefill / recompute chunks ----------------------------------
+        let mut recompute_q = 0usize;
+        self.rebuild_scratch.clear();
+        for adm in &plan.prefill {
+            for &v in &adm.evictions {
+                self.evict(v);
+            }
+            if !adm.admitted {
+                continue;
+            }
+            self.cache.grow(adm.req, adm.target_tokens)?;
+            let rq = &self.requests[&adm.req];
+            debug_assert_eq!(rq.processed, adm.from_tokens, "sim/real prefill divergence");
+            if adm.recompute_tokens > 0 {
+                self.rebuild_scratch.push(adm.req);
+            }
+            recompute_q += adm.recompute_tokens;
+            let mut cache_len = adm.from_tokens;
+            let mut remaining_real = adm.chunk_real;
+            for (i, &c) in adm.chunks.iter().enumerate() {
+                let real = remaining_real.min(c);
+                let mut toks: Vec<u32> = rq.tokens[cache_len..cache_len + real].to_vec();
+                toks.resize(c, 0); // pad to the compiled chunk size
+                exec.prefill.push(PrefillEntry {
+                    req: adm.req,
+                    tokens: toks,
+                    real_len: real as u32,
+                    block_table: self.cache.gpu_block_table(adm.req)?,
+                    cache_len: cache_len as u32,
+                    sample_last: adm.finishes && i == adm.chunks.len() - 1,
+                });
+                cache_len += real;
+                remaining_real -= real;
+            }
+        }
+
+        debug_assert_eq!(plan.has_work(), !exec.is_empty(), "planner emptiness divergence");
+        if exec.is_empty() {
+            return Ok(false);
+        }
+        exec.stall_us = stall;
+
+        // ---- Execute ------------------------------------------------------
+        let decode_q = exec.decode.len();
+        let prefill_q: usize = exec.prefill.iter().map(|p| p.real_len as usize).sum();
+        // Context attended by recompute work (for marginal-cost attribution).
+        let (mut rq_ctx, mut total_ctx) = (0usize, 0usize);
+        for e in &exec.decode {
+            total_ctx += e.ctx_len as usize;
+        }
+        for e in &exec.prefill {
+            let attended = e.cache_len as usize + e.real_len as usize;
+            total_ctx += attended;
+            let hwm = self.requests[&e.req].recompute_hwm;
+            let rp = hwm.saturating_sub(e.cache_len as usize).min(e.real_len as usize);
+            if e.real_len > 0 {
+                rq_ctx += attended * rp / e.real_len as usize;
+            }
+        }
+        let outcome = self.backend.run_iteration(&exec)?;
+        let now_end = self.backend.now();
+
+        // ---- Bookkeeping: advance caches ---------------------------------
+        for e in &exec.decode {
+            let rq = self.requests.get_mut(&e.req).unwrap();
+            rq.processed += 1;
+            self.cache.advance(e.req, 1);
+        }
+        for e in &exec.prefill {
+            let rq = self.requests.get_mut(&e.req).unwrap();
+            rq.processed += e.real_len as usize;
+            self.cache.advance(e.req, e.real_len as usize);
+        }
+        // Requests that completed their pending prefill become Running.
+        for adm in plan.prefill.iter().filter(|a| a.admitted) {
+            if self.requests[&adm.req].pending_prefill() == 0 {
+                self.waiting.remove(adm.req);
+                let rq = self.requests.get_mut(&adm.req).unwrap();
+                rq.state = ReqState::Running;
+                self.running.push(rq.queue_arrival, adm.req);
+            }
+        }
+
+        // ---- Sampled tokens: generation progress --------------------------
+        for &(req, tok) in outcome.decode_tokens.iter().chain(outcome.prefill_tokens.iter()) {
+            self.handle_sampled(req, tok, now_end);
+        }
+
+        // ---- Metrics -------------------------------------------------------
+        let dt = outcome.compute_us + exec.stall_us;
+        // Time attributable to recomputation = marginal cost of the
+        // recompute work in this iteration under the profiled T_fwd model
+        // (not query-token share, which over-weights compute-bound prefill
+        // against memory-bound decode).
+        let recompute_us = if recompute_q > 0 {
+            let q = decode_q + prefill_q;
+            let profile = self.backend.fwd_profile();
+            let t_with = profile.t_fwd(q, total_ctx).max(1) as f64;
+            let t_without =
+                profile.t_fwd(q - recompute_q, total_ctx.saturating_sub(rq_ctx)) as f64;
+            (outcome.compute_us as f64 * (t_with - t_without) / t_with).max(0.0)
+        } else {
+            0.0
+        };
+        self.metrics.iteration(
+            outcome.compute_us,
+            exec.stall_us,
+            decode_q,
+            prefill_q,
+            recompute_q,
+            recompute_us,
+        );
+        let m = self.cfg.kv_bytes_per_token as f64;
+        let dt_s = dt as f64 / 1e6;
+        // Eq. 2 accrual: memory held by requests that were paused when the
+        // iteration started (and still hold GPU blocks after decisions).
+        // The planner's snapshot is exactly that set — no clone needed.
+        let paused_gpu_tokens: usize = self
+            .planner
+            .snapshot()
+            .paused
+            .iter()
+            .filter(|r| self.paused.contains(r))
+            .map(|r| self.cache.gpu_tokens_of(*r))
+            .sum();
+        self.metrics.waste.preserve_gbs += paused_gpu_tokens as f64 * m / 1e9 * dt_s;
+        // Eq. 1/4 accrual: memory being (or just) rebuilt by recomputation —
+        // requests that recomputed this iteration plus those parked
+        // mid-rebuild in the waiting queue.
+        for r in self.waiting.iter() {
+            let rq = &self.requests[&r];
+            if rq.processed < rq.recompute_hwm && !self.rebuild_scratch.contains(&r) {
+                self.rebuild_scratch.push(r);
+            }
+        }
+        let rebuilding: f64 = self
+            .rebuild_scratch
+            .iter()
+            .map(|r| {
+                let rq = &self.requests[r];
+                self.cache.gpu_tokens_of(*r).min(rq.recompute_hwm) as f64
+            })
+            .sum();
+        // Eq. 1/4's second term: every OTHER resident context is held idle
+        // for the recompute-attributable fraction of the iteration.
+        let resident = self.cache.gpu_tokens() as f64;
+        self.metrics.waste.recompute_gbs += rebuilding * m / 1e9 * dt_s
+            + (resident - rebuilding).max(0.0) * m / 1e9 * (recompute_us / 1e6);
+        if exec.stall_us > 0 {
+            self.metrics.waste.stall_gbs += resident * m / 1e9 * (exec.stall_us as f64 / 1e6);
+        }
+        let pool_tokens = self.cfg.num_gpu_blocks * self.cfg.block_size;
+        let all_paused_tokens: usize =
+            self.paused.iter().map(|r| self.cache.gpu_tokens_of(*r)).sum();
+        if all_paused_tokens * 2 >= pool_tokens {
+            self.metrics.paused_majority_us += dt;
+        }
+        Ok(true)
+    }
+}

@@ -1,17 +1,19 @@
-//! The serving engine: iteration-level scheduling loop (Fig. 6).
+//! The serving engine: event loop + plan application (Fig. 6).
 //!
 //! Each iteration:
-//!  1. admit arrivals, collect completed API calls (resumptions),
-//!  2. decide dispositions for every paused request — preserve / chunked
-//!     discard / budgeted swap, by min-waste (§4.3, re-evaluated per
-//!     iteration per §4.4),
-//!  3. solve the swap-in/out token budgets (§4.1),
-//!  4. form the batch: running decodes up to the decode batch bound, then
-//!     waiting-queue prefill/recompute chunks FCFS up to the saturation
-//!     point (§4.2/§4.3), with vLLM-style eviction under memory pressure,
-//!  5. execute on the backend (PJRT or simulated), sample tokens, fire
-//!     interceptions, account waste.
+//!  1. admit arrivals and collect completed API calls (resumptions),
+//!  2. capture an immutable snapshot of queues + cache occupancy and hand
+//!     it to the staged planner ([`crate::coordinator::planner`]), which
+//!     decides dispositions (§4.3/§4.4), swap budgets (§4.1), and the
+//!     prefill/decode batch (§4.2) as a pure function,
+//!  3. *apply* the plan: real cache mutations, backend execution, token
+//!     sampling, interception firing, and waste accounting.
+//!
+//! All scheduling policy lives in `coordinator/`; this module only owns
+//! request lifecycle state and the mechanical replay of a
+//! [`crate::coordinator::planner::SchedPlan`] (see `engine/apply.rs`).
 
+mod apply;
 pub mod backend;
 pub mod request;
 pub mod sampling;
@@ -21,18 +23,13 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 pub use backend::ExecBackend;
-use backend::{DecodeEntry, IterationPlan, PrefillEntry};
 use request::{ReqState, Request};
 
 use crate::augment::executor::ApiExecutor;
 use crate::config::EngineConfig;
-use crate::coordinator::budget::{self, BudgetInputs};
-use crate::coordinator::chunking;
 use crate::coordinator::estimator::DurationEstimator;
-use crate::coordinator::policy::SwapMode;
-use crate::coordinator::scheduler::{
-    decide_interceptions, BatchStats, Disposition, FcfsQueue, InterceptAction, PausedView,
-};
+use crate::coordinator::planner::Planner;
+use crate::coordinator::scheduler::{Disposition, FcfsQueue};
 use crate::kvcache::{CacheManager, ReqId};
 use crate::metrics::{Recorder, RequestRecord, RunReport};
 use crate::util::rng::Pcg;
@@ -50,11 +47,14 @@ pub struct Engine {
     requests: HashMap<ReqId, Request>,
     executor: ApiExecutor,
     estimator: DurationEstimator,
+    planner: Planner,
     pub metrics: Recorder,
     rng: Pcg,
     /// Pending arrivals, soonest last (popped from the back).
     pending: Vec<(Micros, ReqId)>,
     unfinished: usize,
+    /// Scratch for the Eq. 1/4 rebuild set (reused across iterations).
+    rebuild_scratch: Vec<ReqId>,
 }
 
 impl Engine {
@@ -76,10 +76,12 @@ impl Engine {
             requests: HashMap::new(),
             executor,
             estimator,
+            planner: Planner::new(),
             metrics: Recorder::default(),
             rng,
             pending: Vec::new(),
             unfinished: 0,
+            rebuild_scratch: Vec::new(),
         }
     }
 
@@ -131,26 +133,35 @@ impl Engine {
             if self.cfg.max_iterations > 0 && iters > self.cfg.max_iterations {
                 bail!("max_iterations exceeded with {} unfinished", self.unfinished);
             }
-            if !worked {
-                // Idle: jump to the next arrival or API completion.
-                let next = [
-                    self.pending.last().map(|(t, _)| *t),
-                    self.executor.next_completion(),
-                ]
-                .into_iter()
-                .flatten()
-                .min();
-                match next {
-                    Some(t) => self.backend.advance_to(t.max(self.backend.now() + 1)),
-                    None => bail!(
-                        "stuck: {} unfinished but no runnable work or future events",
-                        self.unfinished
-                    ),
-                }
+            if !worked && !self.advance_idle() {
+                bail!(
+                    "stuck: {} unfinished but no runnable work or future events",
+                    self.unfinished
+                );
             }
         }
         self.metrics.run_ended = self.backend.now();
         Ok(self.metrics.report(self.cfg.policy.name, "run"))
+    }
+
+    /// Completion time of the next future event (arrival or API return).
+    pub fn next_event(&self) -> Option<Micros> {
+        [self.pending.last().map(|(t, _)| *t), self.executor.next_completion()]
+            .into_iter()
+            .flatten()
+            .min()
+    }
+
+    /// Idle: jump the clock to the next future event. Returns false when no
+    /// such event exists (a stuck engine if work remains).
+    pub fn advance_idle(&mut self) -> bool {
+        match self.next_event() {
+            Some(t) => {
+                self.backend.advance_to(t.max(self.backend.now() + 1));
+                true
+            }
+            None => false,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -162,378 +173,31 @@ impl Engine {
         for req in self.executor.poll(now) {
             self.resume(req, now);
         }
-        // Requests paused as of now — the set whose held memory counts as
-        // preserve waste for this iteration (§3.2 Eq. 2 accrual). Requests
-        // that pause at the END of this iteration were productive during it.
-        let paused_snapshot: Vec<ReqId> = self.paused.clone();
 
-        // ---- Expected forward time (for the swap limit N_i) -------------
-        let decode_cands: Vec<ReqId> =
-            self.running.iter().take(self.backend.max_decode_batch()).collect();
-        let running_ctx: usize =
-            decode_cands.iter().map(|r| self.requests[r].processed + 1).sum();
-        let pending_head: usize = self
-            .waiting
-            .iter()
-            .take(4)
-            .map(|r| self.requests[&r].pending_prefill())
-            .sum();
-        let chunk_now = if self.cfg.policy.chunked_recompute {
-            chunking::chunk_budget(
-                self.cfg.saturation_tokens,
-                decode_cands.len(),
-                self.cfg.min_chunk,
-            )
-        } else {
-            self.cfg.saturation_tokens.max(pending_head)
-        };
-        let expected_q = decode_cands.len() + chunk_now.min(pending_head);
-        let expected_fwd = self.backend.fwd_profile().t_fwd(expected_q.max(1), running_ctx);
-
-        // ---- Swap budgets (§4.1) ----------------------------------------
-        let bs = self.cfg.block_size;
-        let (out_budget, in_budget) = match self.cfg.policy.swap {
-            SwapMode::None => (0usize, 0usize),
-            SwapMode::Sync => (usize::MAX, usize::MAX),
-            SwapMode::Budgeted => {
-                let limit = self.backend.swap_model().tokens_within(expected_fwd);
-                let want_out: usize = self
-                    .paused
-                    .iter()
-                    .filter(|r| {
-                        matches!(
-                            self.requests[r].disposition,
-                            Disposition::Fresh | Disposition::SwappingOut
-                        )
-                    })
-                    .map(|r| self.cache.gpu_tokens_of(*r))
-                    .sum();
-                let want_in: usize = self
-                    .swapq
-                    .iter()
-                    .map(|r| self.cache.cpu_blocks_of(r) * bs)
-                    .sum();
-                let b = budget::solve(&BudgetInputs {
-                    swap_limit: limit,
-                    want_out,
-                    want_in,
-                    free_cpu: self.cache.cpu_free() * bs,
-                    free_gpu: self.cache.gpu_free() * bs,
-                });
-                (b.out_tokens, b.in_tokens)
-            }
-        };
-
-        // ---- Interception dispositions (§4.3 / §4.4) ---------------------
-        let mut plan = IterationPlan::default();
-        let mut stall: Micros = 0;
-        let views: Vec<PausedView> = self
-            .paused
-            .iter()
-            .map(|r| {
-                let rq = &self.requests[r];
-                PausedView {
-                    req: *r,
-                    kind: rq.pause_kind,
-                    disposition: rq.disposition,
-                    ctx_tokens: rq.processed,
-                    gpu_tokens: self.cache.gpu_tokens_of(*r),
-                    elapsed_us: now.saturating_sub(rq.paused_at),
-                    actual_total_us: rq.pause_duration_us,
-                }
-            })
-            .collect();
-        let batch_stats = BatchStats {
-            other_tokens: running_ctx,
-            running_query: decode_cands.len(),
-            kv_bytes_per_token: self.cfg.kv_bytes_per_token,
-            chunk_tokens: chunk_now,
-        };
-        let actions = decide_interceptions(
-            &self.cfg.policy,
-            &self.estimator,
-            self.backend.fwd_profile(),
-            &views,
-            &batch_stats,
-            out_budget,
+        // Plan (pure: snapshot in, typed plan out — no cache/backend
+        // mutation). Planner buffers are reused across iterations.
+        self.planner.capture(
+            now,
+            &self.cfg,
+            self.backend.as_ref(),
+            &self.cache,
+            &self.waiting,
+            &self.swapq,
+            &self.running,
+            &self.paused,
+            &self.requests,
         );
-        for (req, action) in actions {
-            match action {
-                InterceptAction::Preserve => {
-                    self.requests.get_mut(&req).unwrap().disposition = Disposition::Preserved;
-                }
-                InterceptAction::Discard => {
-                    self.discard_context(req);
-                }
-                InterceptAction::SwapOut { tokens } => {
-                    if tokens > 0 {
-                        let blocks = tokens.div_ceil(bs);
-                        let moves = self.cache.swap_out(req, blocks);
-                        let moved_tokens = moves.len() * bs;
-                        self.metrics.swapped_out_tokens += moved_tokens as u64;
-                        if self.cfg.policy.swap == SwapMode::Sync {
-                            stall += self.backend.swap_model().t_swap(moved_tokens);
-                        }
-                        plan.swap_out.extend(moves);
-                    }
-                    self.requests.get_mut(&req).unwrap().disposition =
-                        Disposition::SwappingOut;
-                }
-            }
-        }
+        self.planner.plan(&self.estimator);
 
-        // ---- Swap-in for the resumed swap queue (§4.3) -------------------
-        let mut in_left = in_budget;
-        for req in self.swapq.iter().collect::<Vec<_>>() {
-            if in_left == 0 {
-                break;
-            }
-            let want_blocks = self.cache.cpu_blocks_of(req);
-            if want_blocks == 0 {
-                continue;
-            }
-            let grant_blocks = want_blocks.min(in_left.div_ceil(bs));
-            let moves = self.cache.swap_in(req, grant_blocks);
-            let moved_tokens = moves.len() * bs;
-            in_left = in_left.saturating_sub(moved_tokens);
-            self.metrics.swapped_in_tokens += moved_tokens as u64;
-            if self.cfg.policy.swap == SwapMode::Sync {
-                stall += self.backend.swap_model().t_swap(moved_tokens);
-            }
-            plan.swap_in.extend(moves);
-            if self.cache.cpu_blocks_of(req) == 0 {
-                // Fully resident: continue as a waiting (prefill) request.
-                self.swapq.remove(req);
-                let rq = self.requests.get_mut(&req).unwrap();
-                rq.state = ReqState::Waiting;
-                self.waiting.push(rq.queue_arrival, req);
-            }
-        }
-
-        // ---- Decode admission --------------------------------------------
-        // `planned` requests must not be evicted mid-iteration: their plan
-        // entries reference cache state.
-        let mut planned: std::collections::HashSet<ReqId> = std::collections::HashSet::new();
-        for req in decode_cands {
-            if self.requests[&req].state != ReqState::Running {
-                continue; // evicted by an earlier admission this iteration
-            }
-            if !self.ensure_blocks(req, self.requests[&req].processed + 1, &planned) {
-                continue; // memory pressure: skip this decode this iteration
-            }
-            planned.insert(req);
-            let rq = &self.requests[&req];
-            plan.decode.push(DecodeEntry {
-                req,
-                token: rq.tokens[rq.processed],
-                block_table: self.cache.gpu_block_table(req)?,
-                ctx_len: rq.processed as u32 + 1,
-            });
-        }
-
-        // ---- Prefill/recompute admission (FCFS to saturation, §4.2/4.3) --
-        // Chunked mode fills spare capacity below the saturation point
-        // (§4.2); the Discard family recomputes each admitted request's
-        // whole context in one iteration, bounded only by vLLM's
-        // max-batched-tokens admission cap.
-        let chunked = self.cfg.policy.chunked_recompute;
-        let mut q_left = if chunked {
-            chunking::chunk_budget(
-                self.cfg.saturation_tokens,
-                plan.decode.len(),
-                self.cfg.min_chunk,
-            )
-        } else {
-            self.cfg.max_batched_tokens
-        };
-        let mut rebuilt_this_iter: Vec<ReqId> = Vec::new();
-        let mut recompute_q = 0usize;
-        for req in self.waiting.iter().collect::<Vec<_>>() {
-            if q_left == 0 {
-                break;
-            }
-            if self.requests[&req].state != ReqState::Waiting {
-                continue;
-            }
-            let pending = self.requests[&req].pending_prefill();
-            debug_assert!(pending > 0, "req {req} in waiting with no pending prefill");
-            let mut chunk_real = pending.min(q_left);
-            if !self.cfg.policy.chunked_recompute {
-                chunk_real = pending; // all at once
-            }
-            // Decompose into compiled chunk sizes (tail pads).
-            let chunks = chunking::decompose(chunk_real, self.backend.prefill_chunk_sizes());
-            let padded: usize = chunks.iter().sum();
-            // Respect the per-sequence block table capacity incl. padding.
-            let rq_processed = self.requests[&req].processed;
-            let cap = self.backend.max_blocks_per_seq() * bs;
-            if rq_processed + padded > cap {
-                continue; // cannot pad past capacity; wait for exact fit
-            }
-            if !self.ensure_blocks(req, rq_processed + padded, &planned) {
-                break; // FCFS head-of-line blocks until memory frees up
-            }
-            planned.insert(req);
-            // Emit one entry per compiled chunk, consecutive cache_lens.
-            let mut cache_len = rq_processed;
-            let mut remaining_real = chunk_real;
-            let finishes = chunk_real == pending;
-            let rq = &self.requests[&req];
-            let recompute_here = rq.recompute_portion(chunk_real);
-            if recompute_here > 0 {
-                rebuilt_this_iter.push(req);
-            }
-            recompute_q += recompute_here;
-            for (i, &c) in chunks.iter().enumerate() {
-                let real = remaining_real.min(c);
-                let mut toks: Vec<u32> = rq.tokens[cache_len..cache_len + real].to_vec();
-                toks.resize(c, 0); // pad
-                plan.prefill.push(PrefillEntry {
-                    req,
-                    tokens: toks,
-                    real_len: real as u32,
-                    block_table: self.cache.gpu_block_table(req)?,
-                    cache_len: cache_len as u32,
-                    sample_last: finishes && i == chunks.len() - 1,
-                });
-                cache_len += real;
-                remaining_real -= real;
-            }
-            q_left = q_left.saturating_sub(chunk_real);
-        }
-
-        if plan.is_empty() {
-            return Ok(false);
-        }
-        plan.stall_us = stall;
-
-        // ---- Execute ------------------------------------------------------
-        let decode_q = plan.decode.len();
-        let prefill_q: usize = plan.prefill.iter().map(|p| p.real_len as usize).sum();
-        // Context attended by recompute work (for marginal-cost attribution).
-        let (mut rq_ctx, mut total_ctx) = (0usize, 0usize);
-        for e in &plan.decode {
-            total_ctx += e.ctx_len as usize;
-        }
-        for e in &plan.prefill {
-            let attended = e.cache_len as usize + e.real_len as usize;
-            total_ctx += attended;
-            let hwm = self.requests[&e.req].recompute_hwm;
-            let rp = hwm.saturating_sub(e.cache_len as usize).min(e.real_len as usize);
-            if e.real_len > 0 {
-                rq_ctx += attended * rp / e.real_len as usize;
-            }
-        }
-        let outcome = self.backend.run_iteration(&plan)?;
-        let now_end = self.backend.now();
-
-        // ---- Bookkeeping: advance caches ---------------------------------
-        for e in &plan.decode {
-            let rq = self.requests.get_mut(&e.req).unwrap();
-            rq.processed += 1;
-            self.cache.advance(e.req, 1);
-        }
-        for e in &plan.prefill {
-            let rq = self.requests.get_mut(&e.req).unwrap();
-            rq.processed += e.real_len as usize;
-            self.cache.advance(e.req, e.real_len as usize);
-        }
-        // Requests that completed their pending prefill become Running.
-        let prefilled: Vec<ReqId> = {
-            let mut v: Vec<ReqId> = plan.prefill.iter().map(|p| p.req).collect();
-            v.dedup();
-            v
-        };
-        for req in prefilled {
-            if self.requests[&req].pending_prefill() == 0 {
-                self.waiting.remove(req);
-                let rq = self.requests.get_mut(&req).unwrap();
-                rq.state = ReqState::Running;
-                self.running.push(rq.queue_arrival, req);
-            }
-        }
-
-        // ---- Sampled tokens: generation progress --------------------------
-        for (req, tok) in outcome
-            .decode_tokens
-            .iter()
-            .chain(outcome.prefill_tokens.iter())
-            .copied()
-            .collect::<Vec<_>>()
-        {
-            self.handle_sampled(req, tok, now_end);
-        }
-
-        // ---- Metrics -------------------------------------------------------
-        let dt = outcome.compute_us + plan.stall_us;
-        // Time attributable to recomputation = marginal cost of the
-        // recompute work in this iteration under the profiled T_fwd model
-        // (not query-token share, which over-weights compute-bound prefill
-        // against memory-bound decode).
-        let recompute_us = if recompute_q > 0 {
-            let q = decode_q + prefill_q;
-            let profile = self.backend.fwd_profile();
-            let t_with = profile.t_fwd(q, total_ctx).max(1) as f64;
-            let t_without =
-                profile.t_fwd(q - recompute_q, total_ctx.saturating_sub(rq_ctx)) as f64;
-            (outcome.compute_us as f64 * (t_with - t_without) / t_with).max(0.0)
-        } else {
-            0.0
-        };
-        self.metrics.iteration(
-            outcome.compute_us,
-            plan.stall_us,
-            decode_q,
-            prefill_q,
-            recompute_q,
-            recompute_us,
-        );
-        let m = self.cfg.kv_bytes_per_token as f64;
-        let dt_s = dt as f64 / 1e6;
-        // Eq. 2 accrual: memory held by requests that were paused when the
-        // iteration started (and still hold GPU blocks after decisions).
-        let paused_gpu_tokens: usize = paused_snapshot
-            .iter()
-            .filter(|r| self.paused.contains(r))
-            .map(|r| self.cache.gpu_tokens_of(*r))
-            .sum();
-        self.metrics.waste.preserve_gbs += paused_gpu_tokens as f64 * m / 1e9 * dt_s;
-        // Eq. 1/4 accrual: memory being (or just) rebuilt by recomputation —
-        // requests that recomputed this iteration plus those parked
-        // mid-rebuild in the waiting queue.
-        let mut rebuild_set: Vec<ReqId> = rebuilt_this_iter;
-        for r in self.waiting.iter() {
-            let rq = &self.requests[&r];
-            if rq.processed < rq.recompute_hwm && !rebuild_set.contains(&r) {
-                rebuild_set.push(r);
-            }
-        }
-        let rebuilding: f64 = rebuild_set
-            .iter()
-            .map(|r| {
-                let rq = &self.requests[r];
-                self.cache.gpu_tokens_of(*r).min(rq.recompute_hwm) as f64
-            })
-            .sum();
-        // Eq. 1/4's second term: every OTHER resident context is held idle
-        // for the recompute-attributable fraction of the iteration.
-        let resident = self.cache.gpu_tokens() as f64;
-        self.metrics.waste.recompute_gbs += rebuilding * m / 1e9 * dt_s
-            + (resident - rebuilding).max(0.0) * m / 1e9 * (recompute_us / 1e6);
-        if plan.stall_us > 0 {
-            self.metrics.waste.stall_gbs += resident * m / 1e9 * (plan.stall_us as f64 / 1e6);
-        }
-        let pool_tokens = self.cfg.num_gpu_blocks * self.cfg.block_size;
-        let all_paused_tokens: usize =
-            self.paused.iter().map(|r| self.cache.gpu_tokens_of(*r)).sum();
-        if all_paused_tokens * 2 >= pool_tokens {
-            self.metrics.paused_majority_us += dt;
-        }
-        Ok(true)
+        // Apply (all mutation lives here).
+        let plan = self.planner.take_plan();
+        let result = self.apply_and_execute(&plan);
+        self.planner.put_back_plan(plan);
+        result
     }
 
     // ------------------------------------------------------------------
-    // Helpers
+    // Request lifecycle helpers
     // ------------------------------------------------------------------
 
     fn admit_arrivals(&mut self, now: Micros) {
@@ -586,40 +250,6 @@ impl Engine {
         } else {
             self.cache.release(req);
             self.requests.get_mut(&req).unwrap().processed = 0;
-        }
-    }
-
-    /// Grow `req` to `target` tokens, evicting later-arrived requests under
-    /// memory pressure (vLLM recompute-style preemption). Requests already
-    /// in this iteration's plan are not eligible victims. Returns success.
-    fn ensure_blocks(
-        &mut self,
-        req: ReqId,
-        target: usize,
-        planned: &std::collections::HashSet<ReqId>,
-    ) -> bool {
-        loop {
-            if self.cache.can_grow(req, target) {
-                return self.cache.grow(req, target).is_ok();
-            }
-            // Victim: latest queue_arrival among running/waiting requests
-            // holding cache, excluding `req` itself and planned requests.
-            let victim = self
-                .running
-                .iter()
-                .chain(self.waiting.iter())
-                .filter(|r| {
-                    *r != req && !planned.contains(r) && self.cache.gpu_tokens_of(*r) > 0
-                })
-                .max_by_key(|r| (self.requests[r].queue_arrival, *r));
-            let Some(v) = victim else {
-                return false;
-            };
-            // Only evict strictly lower-priority (later-arrived) requests.
-            if self.requests[&v].queue_arrival < self.requests[&req].queue_arrival {
-                return false;
-            }
-            self.evict(v);
         }
     }
 
@@ -757,161 +387,5 @@ impl Engine {
             }
         }
         Ok(())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::coordinator::policy::Policy;
-    use crate::sim::{SimBackend, SimModelSpec};
-    use crate::workload::{WorkloadGen, WorkloadKind};
-
-    fn engine(policy: Policy) -> Engine {
-        let spec = SimModelSpec::gptj_6b();
-        let cfg = EngineConfig::for_sim(&spec, policy);
-        Engine::new(Box::new(SimBackend::new(spec)), cfg)
-    }
-
-    fn small_trace(n: usize, seed: u64) -> RequestTrace {
-        WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0)
-    }
-
-    #[test]
-    fn completes_all_requests_under_every_policy() {
-        for policy in Policy::fig2_set() {
-            let name = policy.name;
-            let mut e = engine(policy);
-            let rep = e.run_trace(&small_trace(20, 1)).unwrap();
-            assert_eq!(rep.completed, 20, "{name}");
-            assert_eq!(e.queue_depths(), (0, 0, 0, 0), "{name}");
-            e.check_invariants().unwrap();
-        }
-    }
-
-    #[test]
-    fn output_tokens_match_script() {
-        let mut e = engine(Policy::infercept());
-        let trace = small_trace(10, 2);
-        e.run_trace(&trace).unwrap();
-        for (i, tr) in trace.iter().enumerate() {
-            let rq = e.request(i as ReqId + 1).unwrap();
-            assert_eq!(rq.output_tokens, tr.script.total_gen_tokens(), "req {i}");
-            assert_eq!(rq.interceptions_fired, tr.script.num_interceptions());
-        }
-    }
-
-    #[test]
-    fn intercepted_time_accounted() {
-        let mut e = engine(Policy::infercept());
-        let trace = small_trace(10, 3);
-        e.run_trace(&trace).unwrap();
-        for (i, tr) in trace.iter().enumerate() {
-            let rq = e.request(i as ReqId + 1).unwrap();
-            let script_pause: u64 = tr
-                .script
-                .segments
-                .iter()
-                .filter_map(|s| s.interception.as_ref())
-                .map(|int| int.duration_us)
-                .sum();
-            // paused at least the scripted durations (plus queueing until
-            // the engine notices completion)
-            assert!(rq.intercepted_us >= script_pause, "req {i}");
-        }
-    }
-
-    #[test]
-    fn infercept_wastes_less_than_discard_and_preserve() {
-        let trace = WorkloadGen::new(WorkloadKind::Mixed, 7).generate(60, 3.0);
-        let run = |p: Policy| {
-            let mut e = engine(p);
-            e.run_trace(&trace).unwrap()
-        };
-        let vllm = run(Policy::vllm());
-        let pres = run(Policy::preserve());
-        let inf = run(Policy::infercept());
-        assert!(
-            inf.waste.total() < vllm.waste.total(),
-            "infercept {} vs vllm {}",
-            inf.waste.total(),
-            vllm.waste.total()
-        );
-        assert!(
-            inf.waste.total() < pres.waste.total(),
-            "infercept {} vs preserve {}",
-            inf.waste.total(),
-            pres.waste.total()
-        );
-    }
-
-    #[test]
-    fn vllm_pays_recompute_preserve_does_not() {
-        let trace = WorkloadGen::new(WorkloadKind::Mixed, 9).generate(40, 3.0);
-        let mut ev = engine(Policy::vllm());
-        let rv = ev.run_trace(&trace).unwrap();
-        let mut ep = engine(Policy::preserve());
-        let rp = ep.run_trace(&trace).unwrap();
-        assert!(rv.recompute_fwd_fraction > 0.05, "{}", rv.recompute_fwd_fraction);
-        assert!(rp.recompute_fwd_fraction < 0.01, "{}", rp.recompute_fwd_fraction);
-        assert!(rp.waste.preserve_gbs > rv.waste.preserve_gbs);
-    }
-
-    #[test]
-    fn swap_policy_moves_data() {
-        let trace = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(30, 3.0);
-        let mut e = engine(Policy::swap());
-        let rep = e.run_trace(&trace).unwrap();
-        assert!(rep.swapped_out_tokens > 0);
-        assert!(rep.swapped_in_tokens > 0);
-        assert!(rep.stall_s > 0.0, "sync swap must stall");
-    }
-
-    #[test]
-    fn infercept_hides_swap_traffic() {
-        let trace = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(30, 3.0);
-        let mut e = engine(Policy::infercept());
-        let rep = e.run_trace(&trace).unwrap();
-        // budgeted swapping moves data without stalling iterations
-        assert_eq!(rep.stall_s, 0.0);
-    }
-
-    #[test]
-    fn ttft_is_positive_and_bounded_by_finish() {
-        let mut e = engine(Policy::infercept());
-        let rep = e.run_trace(&small_trace(15, 13)).unwrap();
-        for r in &e.metrics.records {
-            let ttft = r.first_token_at.unwrap();
-            assert!(ttft >= r.arrival);
-            assert!(ttft <= r.finished_at.unwrap());
-        }
-        assert!(rep.median_ttft_ms() > 0.0);
-    }
-
-    #[test]
-    fn invariants_hold_mid_run() {
-        let mut e = engine(Policy::infercept());
-        e.load_trace(&small_trace(25, 17));
-        e.metrics.run_started = 0;
-        for _ in 0..200 {
-            let worked = e.step().unwrap();
-            e.check_invariants().unwrap();
-            if !worked {
-                let next = [
-                    e.pending.last().map(|(t, _)| *t),
-                    e.executor.next_completion(),
-                ]
-                .into_iter()
-                .flatten()
-                .min();
-                match next {
-                    Some(t) => {
-                        let target = t.max(e.backend.now() + 1);
-                        e.backend.advance_to(target);
-                    }
-                    None => break,
-                }
-            }
-        }
     }
 }

@@ -359,6 +359,36 @@ impl CacheManager {
         self.seqs.get(&req).map(|s| s.len_tokens).unwrap_or(0)
     }
 
+    /// Capture a side-effect-free [`CacheSnapshot`] into `out` (buffers are
+    /// reused across calls — no steady-state allocation). The snapshot is
+    /// what the scheduling planner plans against: it answers the same
+    /// feasibility questions as the manager and supports *simulated*
+    /// reservations without `&mut CacheManager`.
+    pub fn snapshot_into(&self, out: &mut CacheSnapshot) {
+        out.block_size = self.alloc.block_size();
+        out.watermark_blocks = self.watermark_blocks;
+        out.gpu_free = self.alloc.gpu_free_count();
+        out.cpu_free = self.alloc.cpu_free_count();
+        out.seqs.clear();
+        for (id, s) in &self.seqs {
+            out.seqs.insert(
+                *id,
+                SeqSnapshot {
+                    blocks: s.blocks.len(),
+                    cpu_blocks: s.cpu_blocks(),
+                    len_tokens: s.len_tokens,
+                },
+            );
+        }
+    }
+
+    /// Convenience: a freshly allocated [`CacheSnapshot`].
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let mut out = CacheSnapshot::default();
+        self.snapshot_into(&mut out);
+        out
+    }
+
     /// Invariant check used by tests: every block id appears exactly once
     /// across free lists and sequence tables.
     pub fn check_conservation(&self) -> Result<()> {
@@ -385,6 +415,182 @@ impl CacheManager {
             bail!("cpu slot {i} appears {} times", cpu_seen[i]);
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Side-effect-free planning view
+// ---------------------------------------------------------------------------
+
+/// Counts-only view of one sequence's cache (block identities elided — the
+/// planner only needs feasibility, not physical placement).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SeqSnapshot {
+    /// Total logical blocks (GPU + CPU resident).
+    pub blocks: usize,
+    /// Blocks currently in CPU swap space.
+    pub cpu_blocks: usize,
+    /// Valid tokens.
+    pub len_tokens: usize,
+}
+
+/// A pure ledger over the allocator + sequence tables: every feasibility
+/// query of [`CacheManager`] (`can_grow`, `blocks_needed`, free counts,
+/// per-request residency) plus *simulated* mutation counterparts
+/// (`reserve_grow`, `release`, `swap_out`, `swap_in`, `discard_gpu_tail`)
+/// that move counts around without touching the real cache. The scheduling
+/// planner clones a snapshot per iteration and plans against it; the engine
+/// then replays the decisions against the real `CacheManager`, whose
+/// count-level outcomes match the ledger's by construction (see the
+/// `prop_snapshot_mirrors_manager_ops` parity property below).
+#[derive(Debug, Clone, Default)]
+pub struct CacheSnapshot {
+    block_size: usize,
+    watermark_blocks: usize,
+    gpu_free: usize,
+    cpu_free: usize,
+    seqs: HashMap<ReqId, SeqSnapshot>,
+}
+
+impl CacheSnapshot {
+    /// Build a snapshot directly (planner unit tests — no CacheManager).
+    pub fn for_test(
+        block_size: usize,
+        watermark_blocks: usize,
+        gpu_free: usize,
+        cpu_free: usize,
+    ) -> CacheSnapshot {
+        CacheSnapshot {
+            block_size,
+            watermark_blocks,
+            gpu_free,
+            cpu_free,
+            seqs: HashMap::new(),
+        }
+    }
+
+    /// Install or overwrite a sequence entry (test construction).
+    pub fn set_seq(&mut self, req: ReqId, blocks: usize, cpu_blocks: usize, len_tokens: usize) {
+        debug_assert!(cpu_blocks <= blocks && len_tokens <= blocks * self.block_size);
+        self.seqs.insert(req, SeqSnapshot { blocks, cpu_blocks, len_tokens });
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn watermark_blocks(&self) -> usize {
+        self.watermark_blocks
+    }
+
+    pub fn gpu_free(&self) -> usize {
+        self.gpu_free
+    }
+
+    pub fn cpu_free(&self) -> usize {
+        self.cpu_free
+    }
+
+    pub fn seq(&self, req: ReqId) -> Option<&SeqSnapshot> {
+        self.seqs.get(&req)
+    }
+
+    pub fn cpu_blocks_of(&self, req: ReqId) -> usize {
+        self.seqs.get(&req).map(|s| s.cpu_blocks).unwrap_or(0)
+    }
+
+    pub fn len_tokens(&self, req: ReqId) -> usize {
+        self.seqs.get(&req).map(|s| s.len_tokens).unwrap_or(0)
+    }
+
+    /// Valid tokens held in GPU blocks. Exact for the layouts the planner
+    /// consults (paused requests have a CPU-*prefix* layout because swap-out
+    /// is front-first; running/waiting requests hold no CPU blocks), where
+    /// it equals `len − min(len, cpu_blocks·bs)`.
+    pub fn gpu_tokens_of(&self, req: ReqId) -> usize {
+        self.seqs
+            .get(&req)
+            .map(|s| s.len_tokens - s.len_tokens.min(s.cpu_blocks * self.block_size))
+            .unwrap_or(0)
+    }
+
+    /// New GPU blocks needed to cover `target_tokens` (mirror of
+    /// [`CacheManager::blocks_needed`]).
+    pub fn blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
+        let have = self.seqs.get(&req).map(|s| s.blocks).unwrap_or(0);
+        target_tokens.div_ceil(self.block_size).saturating_sub(have)
+    }
+
+    /// Mirror of [`CacheManager::can_grow`], including the watermark.
+    pub fn can_grow(&self, req: ReqId, target_tokens: usize) -> bool {
+        self.blocks_needed(req, target_tokens) + self.watermark_blocks <= self.gpu_free
+    }
+
+    /// Reserve the growth in the ledger. Callers must check `can_grow`
+    /// first; over-committing is a planner bug and panics.
+    pub fn reserve_grow(&mut self, req: ReqId, target_tokens: usize) {
+        let need = self.blocks_needed(req, target_tokens);
+        assert!(
+            need + self.watermark_blocks <= self.gpu_free,
+            "plan over-commits GPU blocks: req {req} needs {need}, {} free",
+            self.gpu_free
+        );
+        self.gpu_free -= need;
+        self.seqs.entry(req).or_default().blocks += need;
+    }
+
+    /// Mirror of [`CacheManager::release`].
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(s) = self.seqs.remove(&req) {
+            self.gpu_free += s.blocks - s.cpu_blocks;
+            self.cpu_free += s.cpu_blocks;
+        }
+    }
+
+    /// Mirror of [`CacheManager::discard_gpu_tail`]: free the GPU blocks,
+    /// keep the CPU prefix, return the new valid length.
+    pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
+        let Some(s) = self.seqs.get_mut(&req) else {
+            return 0;
+        };
+        self.gpu_free += s.blocks - s.cpu_blocks;
+        s.blocks = s.cpu_blocks;
+        s.len_tokens = s.len_tokens.min(s.cpu_blocks * self.block_size);
+        s.len_tokens
+    }
+
+    /// Mirror of [`CacheManager::swap_out`] at count level: moves
+    /// `min(max_blocks, gpu_blocks, cpu_free)` blocks; returns the count.
+    pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> usize {
+        let Some(s) = self.seqs.get_mut(&req) else {
+            return 0;
+        };
+        let n = max_blocks.min(s.blocks - s.cpu_blocks).min(self.cpu_free);
+        s.cpu_blocks += n;
+        self.gpu_free += n;
+        self.cpu_free -= n;
+        n
+    }
+
+    /// Mirror of [`CacheManager::swap_in`] at count level (note: like the
+    /// real swap-in, this ignores the watermark — it allocates down to GPU
+    /// exhaustion).
+    pub fn swap_in(&mut self, req: ReqId, max_blocks: usize) -> usize {
+        let Some(s) = self.seqs.get_mut(&req) else {
+            return 0;
+        };
+        let n = max_blocks.min(s.cpu_blocks).min(self.gpu_free);
+        s.cpu_blocks -= n;
+        self.gpu_free -= n;
+        self.cpu_free += n;
+        n
+    }
+
+    /// Mirror of [`CacheManager::advance`] (parity tests).
+    pub fn advance(&mut self, req: ReqId, n: usize) {
+        let s = self.seqs.get_mut(&req).expect("advance on unknown seq");
+        s.len_tokens += n;
+        debug_assert!(s.len_tokens <= s.blocks * self.block_size);
     }
 }
 
@@ -525,5 +731,193 @@ mod tests {
         // tail block (4 valid tokens) stays on GPU
         m.swap_out(1, 1);
         assert_eq!(m.gpu_tokens_of(1), 4);
+    }
+
+    #[test]
+    fn snapshot_reflects_manager_state() {
+        let mut m = mgr();
+        m.watermark_blocks = 1;
+        m.grow(1, 40).unwrap(); // 3 blocks
+        m.advance(1, 40);
+        m.swap_out(1, 1);
+        let s = m.snapshot();
+        assert_eq!(s.block_size(), 16);
+        assert_eq!(s.watermark_blocks(), 1);
+        assert_eq!(s.gpu_free(), m.gpu_free());
+        assert_eq!(s.cpu_free(), m.cpu_free());
+        assert_eq!(s.seq(1).unwrap().blocks, 3);
+        assert_eq!(s.cpu_blocks_of(1), 1);
+        assert_eq!(s.len_tokens(1), 40);
+        assert_eq!(s.gpu_tokens_of(1), m.gpu_tokens_of(1));
+        assert_eq!(s.blocks_needed(1, 49), m.blocks_needed(1, 49));
+        assert_eq!(s.can_grow(1, 49), m.can_grow(1, 49));
+    }
+
+    #[test]
+    fn snapshot_reservation_is_pure() {
+        let m = {
+            let mut m = mgr();
+            m.grow(1, 16).unwrap();
+            m.advance(1, 16);
+            m
+        };
+        let mut s = m.snapshot();
+        s.reserve_grow(1, 48);
+        assert_eq!(s.gpu_free(), m.gpu_free() - 2);
+        assert_eq!(m.gpu_free(), 7); // real cache untouched
+        s.release(1);
+        assert_eq!(s.gpu_free(), m.gpu_free() + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-commits")]
+    fn snapshot_overcommit_panics() {
+        let m = mgr();
+        let mut s = m.snapshot();
+        s.reserve_grow(1, 9 * 16); // pool holds only 8 blocks
+    }
+
+    #[test]
+    fn prop_allocator_conserves_blocks_and_never_double_allocates() {
+        use crate::util::prop;
+        prop::check("allocator_conservation", 300, |rng| {
+            let n = rng.usize(1, 24);
+            let mut a = BlockAllocator::new(16, n, n);
+            let mut held: Vec<BlockId> = Vec::new();
+            for _ in 0..64 {
+                if rng.usize(0, 1) == 0 {
+                    match a.alloc_gpu() {
+                        Some(b) => {
+                            assert!(!held.contains(&b), "block {b} allocated twice");
+                            held.push(b);
+                        }
+                        None => assert_eq!(held.len(), n, "alloc failed with free blocks"),
+                    }
+                } else if !held.is_empty() {
+                    let i = rng.usize(0, held.len() - 1);
+                    a.free_gpu(held.swap_remove(i));
+                }
+                assert_eq!(a.gpu_used() + a.gpu_free_count(), n);
+                assert_eq!(held.len(), a.gpu_used());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_manager_conserves_blocks_under_random_ops() {
+        use crate::util::prop;
+        prop::check("cache_conservation", 150, |rng| {
+            let num_gpu = rng.usize(4, 24);
+            let num_cpu = rng.usize(2, 16);
+            let bs = 16;
+            let mut m = CacheManager::new(bs, num_gpu, num_cpu);
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next_id: ReqId = 1;
+            for _ in 0..50 {
+                match rng.usize(0, 3) {
+                    0 => {
+                        let req = if live.is_empty() || rng.usize(0, 1) == 0 {
+                            next_id += 1;
+                            live.push(next_id);
+                            next_id
+                        } else {
+                            *rng.choose(&live)
+                        };
+                        let cur = m.len_tokens(req);
+                        let want = cur + rng.usize(1, 3 * bs);
+                        if m.can_grow(req, want) {
+                            m.grow(req, want).unwrap();
+                            m.advance(req, want - cur);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            m.swap_out(*rng.choose(&live), rng.usize(1, 4));
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            m.swap_in(*rng.choose(&live), rng.usize(1, 4));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len() - 1);
+                            m.release(live.swap_remove(i));
+                        }
+                    }
+                }
+                m.check_conservation().unwrap();
+                let a = m.allocator();
+                assert_eq!(a.gpu_used() + a.gpu_free_count(), num_gpu);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_snapshot_mirrors_manager_ops() {
+        // The planner's whole correctness argument: the ledger's count-level
+        // outcomes equal the real manager's under any legal op sequence.
+        use crate::util::prop;
+        prop::check("snapshot_parity", 150, |rng| {
+            let mut m = CacheManager::new(16, 12, 6);
+            m.watermark_blocks = rng.usize(0, 2);
+            let mut s = m.snapshot();
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next_id: ReqId = 0;
+            for _ in 0..60 {
+                match rng.usize(0, 3) {
+                    0 => {
+                        let req = if live.is_empty() || rng.usize(0, 1) == 0 {
+                            next_id += 1;
+                            live.push(next_id);
+                            next_id
+                        } else {
+                            *rng.choose(&live)
+                        };
+                        let want = m.len_tokens(req) + rng.usize(1, 40);
+                        assert_eq!(m.can_grow(req, want), s.can_grow(req, want));
+                        assert_eq!(m.blocks_needed(req, want), s.blocks_needed(req, want));
+                        if m.can_grow(req, want) {
+                            let cur = m.len_tokens(req);
+                            m.grow(req, want).unwrap();
+                            m.advance(req, want - cur);
+                            s.reserve_grow(req, want);
+                            s.advance(req, want - cur);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let req = *rng.choose(&live);
+                            let k = rng.usize(1, 5);
+                            assert_eq!(m.swap_out(req, k).len(), s.swap_out(req, k));
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let req = *rng.choose(&live);
+                            let k = rng.usize(1, 5);
+                            assert_eq!(m.swap_in(req, k).len(), s.swap_in(req, k));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len() - 1);
+                            let req = live.swap_remove(i);
+                            m.release(req);
+                            s.release(req);
+                        }
+                    }
+                }
+                assert_eq!(m.gpu_free(), s.gpu_free());
+                assert_eq!(m.cpu_free(), s.cpu_free());
+                for &r in &live {
+                    assert_eq!(m.seq(r).map(|q| q.blocks.len()).unwrap_or(0), s.seq(r).map(|q| q.blocks).unwrap_or(0), "req {r}");
+                    assert_eq!(m.cpu_blocks_of(r), s.cpu_blocks_of(r), "req {r}");
+                    assert_eq!(m.len_tokens(r), s.len_tokens(r), "req {r}");
+                }
+                m.check_conservation().unwrap();
+            }
+        });
     }
 }

@@ -77,6 +77,11 @@ pub struct Recorder {
     pub swapped_out_tokens: u64,
     pub swapped_in_tokens: u64,
     pub evictions: u64,
+    /// Per-stage disposition decisions (§4.3), one count per paused request
+    /// per iteration the planner acted on it.
+    pub preserve_decisions: u64,
+    pub discard_decisions: u64,
+    pub swap_decisions: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -138,6 +143,9 @@ impl Recorder {
             swapped_out_tokens: self.swapped_out_tokens,
             swapped_in_tokens: self.swapped_in_tokens,
             evictions: self.evictions,
+            preserve_decisions: self.preserve_decisions,
+            discard_decisions: self.discard_decisions,
+            swap_decisions: self.swap_decisions,
         }
     }
 }
@@ -161,6 +169,10 @@ pub struct RunReport {
     pub swapped_out_tokens: u64,
     pub swapped_in_tokens: u64,
     pub evictions: u64,
+    /// Per-stage disposition decision counts (preserve / discard / swap).
+    pub preserve_decisions: u64,
+    pub discard_decisions: u64,
+    pub swap_decisions: u64,
 }
 
 impl RunReport {

@@ -2,10 +2,13 @@
 //! the live PJRT runtime before serving starts, producing the
 //! [`FwdProfile`] the waste equations and swap budgets consume.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 use crate::coordinator::waste::FwdProfile;
+#[cfg(feature = "pjrt")]
 use crate::runtime::pool::HostPool;
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjrtRuntime;
 use crate::util::Micros;
 
@@ -18,6 +21,8 @@ pub struct ProfileSamples {
 
 /// Run the measurement workload: every compiled prefill chunk (query-token
 /// scaling) and decode at increasing context lengths (context scaling).
+/// Needs the live PJRT runtime, so it is only built with feature `pjrt`.
+#[cfg(feature = "pjrt")]
 pub fn measure(rt: &PjrtRuntime, reps: usize) -> Result<ProfileSamples> {
     let geom = rt.entry.geometry.clone();
     let cpu_blocks = 4;

@@ -1,384 +1,19 @@
-//! PJRT runtime: load AOT artifacts (HLO text + params npz) and execute
-//! them — the real-hardware substrate behind [`crate::engine::ExecBackend`].
+//! PJRT runtime: the real-hardware substrate behind
+//! [`crate::engine::ExecBackend`].
 //!
-//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. Weights are
-//! fed as leading arguments in the manifest's flatten order; the paged KV
-//! pools round-trip host↔device every call (see DESIGN.md §Perf for the
-//! buffer-resident optimization path).
+//! The manifest parser and host KV pools are always built (pure Rust). The
+//! execution half ([`PjrtRuntime`] / [`PjrtBackend`]) needs the `xla`
+//! crate, which is unavailable in the offline build environment, so it is
+//! gated behind the `pjrt` cargo feature (see Cargo.toml). Without the
+//! feature, `infercept serve` / `infercept profile` report the missing
+//! feature and every simulated path works unchanged — the engine and the
+//! staged planner are backend-agnostic.
 
 pub mod manifest;
 pub mod pool;
 
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-use anyhow::{anyhow, Context, Result};
-use xla::{ElementType, FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
-
-use crate::coordinator::waste::FwdProfile;
-use crate::engine::backend::{ExecBackend, IterationOutcome, IterationPlan};
-use crate::engine::sampling;
-use crate::kvcache::swap::SwapModel;
-use crate::runtime::manifest::{Manifest, ModelEntry, VariantKind};
-use crate::runtime::pool::{bytemuck_cast, HostPool};
-use crate::util::Micros;
-
-/// Compiled executables + weights for one model.
-pub struct PjrtRuntime {
-    pub client: PjRtClient,
-    pub entry: ModelEntry,
-    params: Vec<Literal>,
-    decode: BTreeMap<usize, PjRtLoadedExecutable>,
-    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
-}
-
-impl PjrtRuntime {
-    /// Load a model's artifacts and compile every variant.
-    pub fn load(manifest_path: &Path, model: &str) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(manifest_path)?;
-        let entry = manifest.model(model)?.clone();
-        let client = PjRtClient::cpu()?;
-
-        // Weights: npz entries matched to the manifest flatten order.
-        let npz = Literal::read_npz(&entry.params_npz, &())
-            .with_context(|| format!("reading {:?}", entry.params_npz))?;
-        let mut by_name: BTreeMap<String, Literal> = npz
-            .into_iter()
-            .map(|(name, lit)| (name.trim_end_matches(".npy").to_string(), lit))
-            .collect();
-        let params = entry
-            .param_order
-            .iter()
-            .map(|(name, shape, _)| {
-                let lit = by_name
-                    .remove(name)
-                    .ok_or_else(|| anyhow!("param '{name}' missing from npz"))?;
-                let dims = lit.array_shape()?.dims().to_vec();
-                anyhow::ensure!(
-                    dims.iter().map(|d| *d as usize).collect::<Vec<_>>() == *shape,
-                    "param '{name}' shape {dims:?} != manifest {shape:?}"
-                );
-                Ok(lit)
-            })
-            .collect::<Result<Vec<_>>>()?;
-
-        let mut decode = BTreeMap::new();
-        let mut prefill = BTreeMap::new();
-        for v in entry.variants.values() {
-            let proto = xla::HloModuleProto::from_text_file(
-                v.file.to_str().context("non-utf8 path")?,
-            )?;
-            let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
-            match v.kind {
-                VariantKind::Decode { batch } => {
-                    decode.insert(batch, exe);
-                }
-                VariantKind::Prefill { chunk } => {
-                    prefill.insert(chunk, exe);
-                }
-            }
-        }
-        Ok(PjrtRuntime { client, entry, params, decode, prefill })
-    }
-
-    pub fn decode_batches(&self) -> Vec<usize> {
-        self.decode.keys().copied().collect()
-    }
-
-    pub fn prefill_chunks(&self) -> Vec<usize> {
-        self.prefill.keys().copied().collect()
-    }
-
-    /// Run one decode step for `tokens.len()` sequences (must be a compiled
-    /// batch size). Pools are updated in place. Returns logits rows [B][V].
-    #[allow(clippy::too_many_arguments)]
-    pub fn decode_step(
-        &self,
-        k: &mut HostPool,
-        v: &mut HostPool,
-        tokens: &[i32],
-        block_tables: &[i32], // [B * max_blocks_per_seq]
-        ctx_lens: &[i32],
-    ) -> Result<Vec<Vec<f32>>> {
-        let b = tokens.len();
-        let exe = self
-            .decode
-            .get(&b)
-            .ok_or_else(|| anyhow!("no compiled decode batch {b}"))?;
-        let geom = &self.entry.geometry;
-        let pool_dims: Vec<usize> = vec![
-            geom.n_layers,
-            geom.num_blocks,
-            geom.block_size,
-            geom.n_kv_heads,
-            geom.head_dim,
-        ];
-        let tok_lit = Literal::vec1(tokens);
-        let kp = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &pool_dims,
-            bytemuck_cast(&k.gpu),
-        )?;
-        let vp = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &pool_dims,
-            bytemuck_cast(&v.gpu),
-        )?;
-        let bt = Literal::vec1(block_tables)
-            .reshape(&[b as i64, geom.max_blocks_per_seq as i64])?;
-        let lens = Literal::vec1(ctx_lens);
-
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.extend([&tok_lit, &kp, &vp, &bt, &lens]);
-        let result = exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let mut outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
-        let vp_out = outs.pop().unwrap().to_vec::<f32>()?;
-        let kp_out = outs.pop().unwrap().to_vec::<f32>()?;
-        let logits = outs.pop().unwrap().to_vec::<f32>()?;
-        k.set_gpu_from(&kp_out);
-        v.set_gpu_from(&vp_out);
-        let vocab = geom.vocab;
-        Ok((0..b).map(|i| logits[i * vocab..(i + 1) * vocab].to_vec()).collect())
-    }
-
-    /// Run one prefill chunk (must be a compiled chunk size) for one
-    /// sequence. Returns the full [T][V] logits rows.
-    pub fn prefill_chunk(
-        &self,
-        k: &mut HostPool,
-        v: &mut HostPool,
-        tokens: &[i32],
-        block_table: &[i32], // [max_blocks_per_seq]
-        cache_len: i32,
-    ) -> Result<Vec<Vec<f32>>> {
-        let t = tokens.len();
-        let exe = self
-            .prefill
-            .get(&t)
-            .ok_or_else(|| anyhow!("no compiled prefill chunk {t}"))?;
-        let geom = &self.entry.geometry;
-        let pool_dims: Vec<usize> = vec![
-            geom.n_layers,
-            geom.num_blocks,
-            geom.block_size,
-            geom.n_kv_heads,
-            geom.head_dim,
-        ];
-        let tok_lit = Literal::vec1(tokens);
-        let kp = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &pool_dims,
-            bytemuck_cast(&k.gpu),
-        )?;
-        let vp = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &pool_dims,
-            bytemuck_cast(&v.gpu),
-        )?;
-        let bt = Literal::vec1(block_table);
-        let cl = Literal::scalar(cache_len);
-
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.extend([&tok_lit, &kp, &vp, &bt, &cl]);
-        let result = exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let mut outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
-        let vp_out = outs.pop().unwrap().to_vec::<f32>()?;
-        let kp_out = outs.pop().unwrap().to_vec::<f32>()?;
-        let logits = outs.pop().unwrap().to_vec::<f32>()?;
-        k.set_gpu_from(&kp_out);
-        v.set_gpu_from(&vp_out);
-        let vocab = geom.vocab;
-        Ok((0..t).map(|i| logits[i * vocab..(i + 1) * vocab].to_vec()).collect())
-    }
-}
-
-/// The real-execution backend: PJRT runtime + host pools + wall clock.
-pub struct PjrtBackend {
-    rt: PjrtRuntime,
-    k: HostPool,
-    v: HostPool,
-    epoch: Instant,
-    profile: FwdProfile,
-    swap: SwapModel,
-    chunk_sizes: Vec<usize>,
-    max_batch: usize,
-}
-
-impl PjrtBackend {
-    pub fn new(manifest_path: &Path, model: &str, cpu_blocks: usize) -> Result<PjrtBackend> {
-        let rt = PjrtRuntime::load(manifest_path, model)?;
-        let geom = rt.entry.geometry.clone();
-        let k = HostPool::new(&geom, cpu_blocks);
-        let v = HostPool::new(&geom, cpu_blocks);
-        let chunk_sizes = rt.prefill_chunks();
-        let max_batch = rt.decode_batches().into_iter().max().unwrap_or(1);
-        // Default profile; `crate::profiler` refines it by measurement.
-        let profile = FwdProfile {
-            t_base_us: 2_000.0,
-            us_per_ctx_token: 5.0,
-            us_per_query_unsat: 300.0,
-            us_per_query_sat: 300.0,
-            saturation_tokens: 64,
-        };
-        let swap = SwapModel {
-            bandwidth_bytes_per_sec: 8e9, // measured host memcpy ballpark
-            per_block_launch_us: 1.0,
-            kv_bytes_per_token: rt.entry.kv_bytes_per_token,
-            block_size: geom.block_size,
-            pipelined: true,
-        };
-        Ok(PjrtBackend { rt, k, v, epoch: Instant::now(), profile, swap, chunk_sizes, max_batch })
-    }
-
-    pub fn runtime(&self) -> &PjrtRuntime {
-        &self.rt
-    }
-
-    pub fn geometry(&self) -> &manifest::ModelGeometry {
-        &self.rt.entry.geometry
-    }
-
-    pub fn set_profile(&mut self, profile: FwdProfile) {
-        self.profile = profile;
-    }
-
-    fn padded_table(&self, table: &[u32]) -> Vec<i32> {
-        let maxb = self.rt.entry.geometry.max_blocks_per_seq;
-        let mut out: Vec<i32> = table.iter().map(|&b| b as i32).collect();
-        out.resize(maxb, 0);
-        out
-    }
-
-    /// Decompose a decode batch into compiled sub-batches (descending).
-    fn sub_batches(&self, n: usize) -> Vec<usize> {
-        let sizes = self.rt.decode_batches();
-        let mut rem = n;
-        let mut out = vec![];
-        while rem > 0 {
-            let fit = sizes.iter().rev().find(|&&s| s <= rem).copied().unwrap_or(sizes[0]);
-            out.push(fit.min(rem).max(sizes[0]).min(fit));
-            rem = rem.saturating_sub(fit);
-        }
-        out
-    }
-}
-
-impl ExecBackend for PjrtBackend {
-    fn now(&self) -> Micros {
-        self.epoch.elapsed().as_micros() as Micros
-    }
-
-    fn advance_to(&mut self, t: Micros) {
-        let now = self.now();
-        if t > now {
-            std::thread::sleep(std::time::Duration::from_micros(t - now));
-        }
-    }
-
-    fn run_iteration(&mut self, plan: &IterationPlan) -> Result<IterationOutcome> {
-        let start = Instant::now();
-        // Swap data movement (host memcpy standing in for PCIe transfers).
-        for mv in &plan.swap_out {
-            self.k.copy_out(mv.gpu as usize, mv.cpu as usize);
-            self.v.copy_out(mv.gpu as usize, mv.cpu as usize);
-        }
-        for mv in &plan.swap_in {
-            self.k.copy_in(mv.cpu as usize, mv.gpu as usize);
-            self.v.copy_in(mv.cpu as usize, mv.gpu as usize);
-        }
-
-        // Prefill chunks (each entry is one compiled-size exec).
-        let mut prefill_tokens = Vec::new();
-        for e in &plan.prefill {
-            let toks: Vec<i32> = e.tokens.iter().map(|&t| t as i32).collect();
-            let table = self.padded_table(&e.block_table);
-            let logits = self.rt.prefill_chunk(
-                &mut self.k,
-                &mut self.v,
-                &toks,
-                &table,
-                e.cache_len as i32,
-            )?;
-            if e.sample_last {
-                let row = &logits[e.real_len as usize - 1];
-                prefill_tokens.push((e.req, sampling::argmax(row)));
-            }
-        }
-
-        // Decode batch, decomposed into compiled sub-batches.
-        let mut decode_tokens = Vec::new();
-        let mut i = 0usize;
-        for sb in self.sub_batches(plan.decode.len()) {
-            let sb = sb.min(plan.decode.len() - i);
-            if sb == 0 {
-                break;
-            }
-            let entries = &plan.decode[i..i + sb];
-            // Pad the sub-batch up to a compiled size by repeating the last
-            // entry into a scratch slot? Not needed: sub_batches only emits
-            // compiled sizes that fit exactly (1 is always compiled).
-            let tokens: Vec<i32> = entries.iter().map(|e| e.token as i32).collect();
-            let tables: Vec<i32> = entries
-                .iter()
-                .flat_map(|e| self.padded_table(&e.block_table))
-                .collect();
-            let lens: Vec<i32> = entries.iter().map(|e| e.ctx_len as i32).collect();
-            let logits =
-                self.rt.decode_step(&mut self.k, &mut self.v, &tokens, &tables, &lens)?;
-            for (e, row) in entries.iter().zip(&logits) {
-                decode_tokens.push((e.req, sampling::argmax(row)));
-            }
-            i += sb;
-        }
-
-        let compute_us = start.elapsed().as_micros() as Micros;
-        Ok(IterationOutcome { decode_tokens, prefill_tokens, compute_us })
-    }
-
-    fn fwd_profile(&self) -> &FwdProfile {
-        &self.profile
-    }
-
-    fn swap_model(&self) -> &SwapModel {
-        &self.swap
-    }
-
-    fn max_decode_batch(&self) -> usize {
-        self.max_batch
-    }
-
-    fn prefill_chunk_sizes(&self) -> &[usize] {
-        &self.chunk_sizes
-    }
-
-    fn max_blocks_per_seq(&self) -> usize {
-        self.rt.entry.geometry.max_blocks_per_seq
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    #[allow(unused_imports)]
-    use super::*;
-
-    #[test]
-    fn sub_batches_cover_any_n() {
-        // emulate with compiled sizes {1,2,4,8} via a fake — exercised more
-        // fully in integration tests with real artifacts.
-        let sizes = [1usize, 2, 4, 8];
-        for n in 1..40usize {
-            let mut rem = n;
-            let mut total = 0;
-            while rem > 0 {
-                let fit = sizes.iter().rev().find(|&&s| s <= rem).copied().unwrap();
-                total += fit;
-                rem -= fit;
-            }
-            assert_eq!(total, n);
-        }
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtBackend, PjrtRuntime};

@@ -1,0 +1,114 @@
+//! Determinism + scheduling-behavior regression pinning.
+//!
+//! Two layers of protection for refactors of the scheduling pipeline:
+//!
+//!  1. **Within-build determinism** (always enforced): running the same
+//!     policy twice on the same trace yields bit-identical aggregate
+//!     counters.
+//!  2. **Golden counters** (snapshot): the aggregate `RunReport` counters
+//!     for a fixed mixed-workload trace under `vllm`, `preserve`, and
+//!     `infercept` are compared against `tests/golden_determinism.json`.
+//!     On first run (file absent — e.g. a fresh environment without a
+//!     committed golden) the file is generated and the test passes with a
+//!     notice; **commit the generated file** so later refactors are
+//!     checked against today's scheduling behavior (CI fails until it is
+//!     committed — see the "golden counters committed" step in
+//!     `.github/workflows/ci.yml`). Any intentional policy-behavior change
+//!     must regenerate it (delete + rerun) and call that out in review.
+//!
+//! The counters cover every scheduling-visible quantity: completions,
+//! iteration count, token mix (decode/prefill/recompute), swap traffic,
+//! evictions, per-stage disposition decisions, waste breakdown, and the
+//! latency medians.
+
+use std::path::PathBuf;
+
+use infercept::config::EngineConfig;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::Engine;
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::json::Json;
+use infercept::workload::{RequestTrace, WorkloadGen, WorkloadKind};
+
+fn fixed_trace() -> RequestTrace {
+    WorkloadGen::new(WorkloadKind::Mixed, 20260730).generate(60, 3.0)
+}
+
+/// Aggregate counters as stable JSON (floats rendered with fixed precision
+/// so text comparison is exact).
+fn run_counters(policy: Policy, trace: &RequestTrace) -> Json {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    let mut e = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    let rep = e.run_trace(trace).unwrap();
+    e.check_invariants().unwrap();
+    let f = |x: f64| Json::str(format!("{x:.9e}"));
+    Json::obj(vec![
+        ("completed", Json::num(rep.completed as f64)),
+        ("iterations", Json::num(rep.iterations as f64)),
+        ("decode_tokens", Json::num(e.metrics.decode_tokens as f64)),
+        ("prefill_tokens", Json::num(e.metrics.prefill_tokens as f64)),
+        ("recompute_tokens", Json::num(e.metrics.recompute_tokens as f64)),
+        ("swapped_out_tokens", Json::num(rep.swapped_out_tokens as f64)),
+        ("swapped_in_tokens", Json::num(rep.swapped_in_tokens as f64)),
+        ("evictions", Json::num(rep.evictions as f64)),
+        ("preserve_decisions", Json::num(rep.preserve_decisions as f64)),
+        ("discard_decisions", Json::num(rep.discard_decisions as f64)),
+        ("swap_decisions", Json::num(rep.swap_decisions as f64)),
+        ("duration_s", f(rep.duration_s)),
+        ("compute_s", f(rep.compute_s)),
+        ("stall_s", f(rep.stall_s)),
+        ("waste_preserve_gbs", f(rep.waste.preserve_gbs)),
+        ("waste_recompute_gbs", f(rep.waste.recompute_gbs)),
+        ("waste_stall_gbs", f(rep.waste.stall_gbs)),
+        ("norm_latency_ms", f(rep.normalized_latency_ms())),
+        ("median_ttft_ms", f(rep.median_ttft_ms())),
+        ("recompute_fwd_fraction", f(rep.recompute_fwd_fraction)),
+    ])
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_determinism.json")
+}
+
+#[test]
+fn scheduling_counters_are_deterministic_and_match_golden() {
+    let trace = fixed_trace();
+    let mut all = Vec::new();
+    for policy in [Policy::vllm(), Policy::preserve(), Policy::infercept()] {
+        let name = policy.name;
+        let a = run_counters(policy.clone(), &trace);
+        let b = run_counters(policy, &trace);
+        assert_eq!(
+            a.to_string(),
+            b.to_string(),
+            "{name}: same trace, same build, different counters"
+        );
+        all.push((name, a));
+    }
+    let snapshot = Json::obj(all.iter().map(|(n, j)| (*n, j.clone())).collect());
+
+    let path = golden_path();
+    if path.exists() {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let golden = Json::parse(&text).unwrap();
+        for (name, got) in &all {
+            let want = golden.get(name).unwrap_or_else(|_| {
+                panic!("policy '{name}' missing from {path:?}; delete the file to regenerate")
+            });
+            assert_eq!(
+                want.to_string(),
+                got.to_string(),
+                "policy '{name}' diverged from the golden counters in {path:?}.\n\
+                 If this change is intentional, delete the file, rerun the test, \
+                 and commit the regenerated golden."
+            );
+        }
+    } else {
+        std::fs::write(&path, snapshot.to_string_pretty()).unwrap();
+        eprintln!(
+            "NOTE: wrote fresh golden counters to {path:?} — commit this file so \
+             future refactors are pinned to today's scheduling behavior"
+        );
+    }
+}

@@ -213,3 +213,148 @@ fn heavier_load_does_not_lose_requests() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Engine behavior (formerly engine/mod.rs unit tests; the engine is now a
+// thin plan-applier, so these exercise the planner + engine composition
+// through the public API).
+// ---------------------------------------------------------------------------
+
+fn engine(policy: Policy) -> Engine {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    Engine::new(Box::new(SimBackend::new(spec)), cfg)
+}
+
+fn small_trace(n: usize, seed: u64) -> RequestTrace {
+    WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0)
+}
+
+#[test]
+fn completes_all_requests_under_every_policy() {
+    for policy in Policy::fig2_set() {
+        let name = policy.name;
+        let mut e = engine(policy);
+        let rep = e.run_trace(&small_trace(20, 1)).unwrap();
+        assert_eq!(rep.completed, 20, "{name}");
+        assert_eq!(e.queue_depths(), (0, 0, 0, 0), "{name}");
+        e.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn output_tokens_match_script() {
+    let mut e = engine(Policy::infercept());
+    let trace = small_trace(10, 2);
+    e.run_trace(&trace).unwrap();
+    for (i, tr) in trace.iter().enumerate() {
+        let rq = e.request(i as u64 + 1).unwrap();
+        assert_eq!(rq.output_tokens, tr.script.total_gen_tokens(), "req {i}");
+        assert_eq!(rq.interceptions_fired, tr.script.num_interceptions());
+    }
+}
+
+#[test]
+fn intercepted_time_accounted() {
+    let mut e = engine(Policy::infercept());
+    let trace = small_trace(10, 3);
+    e.run_trace(&trace).unwrap();
+    for (i, tr) in trace.iter().enumerate() {
+        let rq = e.request(i as u64 + 1).unwrap();
+        let script_pause: u64 = tr
+            .script
+            .segments
+            .iter()
+            .filter_map(|s| s.interception.as_ref())
+            .map(|int| int.duration_us)
+            .sum();
+        // paused at least the scripted durations (plus queueing until
+        // the engine notices completion)
+        assert!(rq.intercepted_us >= script_pause, "req {i}");
+    }
+}
+
+#[test]
+fn infercept_wastes_less_than_discard_and_preserve() {
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 7).generate(60, 3.0);
+    let run = |p: Policy| {
+        let mut e = engine(p);
+        e.run_trace(&trace).unwrap()
+    };
+    let vllm = run(Policy::vllm());
+    let pres = run(Policy::preserve());
+    let inf = run(Policy::infercept());
+    assert!(
+        inf.waste.total() < vllm.waste.total(),
+        "infercept {} vs vllm {}",
+        inf.waste.total(),
+        vllm.waste.total()
+    );
+    assert!(
+        inf.waste.total() < pres.waste.total(),
+        "infercept {} vs preserve {}",
+        inf.waste.total(),
+        pres.waste.total()
+    );
+}
+
+#[test]
+fn vllm_pays_recompute_preserve_does_not() {
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 9).generate(40, 3.0);
+    let mut ev = engine(Policy::vllm());
+    let rv = ev.run_trace(&trace).unwrap();
+    let mut ep = engine(Policy::preserve());
+    let rp = ep.run_trace(&trace).unwrap();
+    assert!(rv.recompute_fwd_fraction > 0.05, "{}", rv.recompute_fwd_fraction);
+    assert!(rp.recompute_fwd_fraction < 0.01, "{}", rp.recompute_fwd_fraction);
+    assert!(rp.waste.preserve_gbs > rv.waste.preserve_gbs);
+    // Per-stage decision accounting matches the policies' nature.
+    assert_eq!(ev.metrics.preserve_decisions, 0, "vllm never preserves");
+    assert_eq!(ep.metrics.discard_decisions, 0, "preserve-all never discards");
+    assert!(ep.metrics.preserve_decisions > 0);
+}
+
+#[test]
+fn swap_policy_moves_data() {
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(30, 3.0);
+    let mut e = engine(Policy::swap());
+    let rep = e.run_trace(&trace).unwrap();
+    assert!(rep.swapped_out_tokens > 0);
+    assert!(rep.swapped_in_tokens > 0);
+    assert!(rep.stall_s > 0.0, "sync swap must stall");
+}
+
+#[test]
+fn infercept_hides_swap_traffic() {
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(30, 3.0);
+    let mut e = engine(Policy::infercept());
+    let rep = e.run_trace(&trace).unwrap();
+    // budgeted swapping moves data without stalling iterations
+    assert_eq!(rep.stall_s, 0.0);
+}
+
+#[test]
+fn ttft_is_positive_and_bounded_by_finish() {
+    let mut e = engine(Policy::infercept());
+    let rep = e.run_trace(&small_trace(15, 13)).unwrap();
+    for r in &e.metrics.records {
+        let ttft = r.first_token_at.unwrap();
+        assert!(ttft >= r.arrival);
+        assert!(ttft <= r.finished_at.unwrap());
+    }
+    assert!(rep.median_ttft_ms() > 0.0);
+}
+
+#[test]
+fn invariants_hold_mid_run() {
+    let mut e = engine(Policy::infercept());
+    e.load_trace(&small_trace(25, 17));
+    e.metrics.run_started = 0;
+    for _ in 0..200 {
+        let worked = e.step().unwrap();
+        e.check_invariants().unwrap();
+        if !worked && !e.advance_idle() {
+            break;
+        }
+    }
+}
