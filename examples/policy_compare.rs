@@ -1,5 +1,6 @@
-//! Fig. 2-style comparison at one load point: all five systems on the same
-//! trace, across all four model setups.
+//! Fig. 2-style comparison at one load point: all five paper systems plus
+//! the AugServe-style `adaptive` scheduler on the same trace, across all
+//! four model setups.
 //!
 //! ```sh
 //! cargo run --release --example policy_compare -- [--rate 2.0] [--requests 200]
@@ -29,7 +30,7 @@ fn main() -> Result<()> {
             .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
             .generate(n, rate);
         let mut base: Option<f64> = None;
-        for policy in Policy::fig2_set() {
+        for policy in Policy::fig2_set().into_iter().chain([Policy::adaptive()]) {
             let rep = sim_run_once(&spec, policy, &trace, seed)?;
             let lat = rep.normalized_latency_ms();
             if rep.policy == "vllm" {

@@ -7,6 +7,7 @@ use infercept::coordinator::budget::{self, BudgetInputs};
 use infercept::coordinator::estimator::{DurationEstimator, EstimatorKind};
 use infercept::coordinator::planner::{Planner, ReqSnapshot, SchedSnapshot};
 use infercept::coordinator::policy::Policy;
+use infercept::coordinator::sched_policy::InferceptPolicy;
 use infercept::coordinator::scheduler::{
     decide_interceptions, BatchStats, Disposition, FcfsQueue, PausedView,
 };
@@ -50,6 +51,7 @@ fn main() {
         running_query: 64,
         kv_bytes_per_token: spec.kv_bytes_per_token,
         chunk_tokens: 256,
+        block_size: 16,
     };
     let policy = Policy::infercept();
     let est = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
@@ -124,7 +126,7 @@ fn main() {
         // Re-plan from the installed snapshot: planner-internal buffers are
         // reused, so this times the five stages alone — the engine's real
         // per-iteration scheduling cost (capture excluded, no clones).
-        std::hint::black_box(planner.plan(&est));
+        std::hint::black_box(planner.plan(&mut InferceptPolicy, &est));
     });
 
     let _ = AugmentKind::Math; // keep import used in all cfgs

@@ -61,6 +61,7 @@ mod real {
             seed,
             max_seq_tokens: geom.max_seq_tokens(),
             max_iterations: 2_000_000,
+            adaptive_target_wait_us: crate::config::DEFAULT_ADAPTIVE_TARGET_WAIT_US,
         };
 
         // Mini models cap sequences at max_seq_tokens; scale contexts down and

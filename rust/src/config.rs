@@ -6,6 +6,10 @@
 use crate::coordinator::policy::Policy;
 use crate::sim::SimModelSpec;
 
+/// Default [`EngineConfig::adaptive_target_wait_us`] (250 ms of engine
+/// clock), shared by every config constructor.
+pub const DEFAULT_ADAPTIVE_TARGET_WAIT_US: u64 = 250_000;
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub policy: Policy,
@@ -34,6 +38,10 @@ pub struct EngineConfig {
     pub max_seq_tokens: usize,
     /// Abort knob: maximum scheduler iterations (0 = unlimited).
     pub max_iterations: u64,
+    /// Target head-of-queue wait (µs, engine clock) for the AugServe-style
+    /// adaptive admission controller (`--policy adaptive`); ignored by the
+    /// static policies.
+    pub adaptive_target_wait_us: u64,
 }
 
 impl EngineConfig {
@@ -54,6 +62,7 @@ impl EngineConfig {
             seed: 0,
             max_seq_tokens: spec.max_seq_tokens,
             max_iterations: 0,
+            adaptive_target_wait_us: DEFAULT_ADAPTIVE_TARGET_WAIT_US,
         }
     }
 

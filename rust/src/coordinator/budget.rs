@@ -8,6 +8,11 @@
 //!   2. `out ≤ free_cpu + in`     (swap space conservation)
 //!   3. `in + new ≤ out + free_gpu` (GPU space conservation — enforced by
 //!      admission, which runs after this solver with the granted budgets)
+//!
+//! This solver is the paper-faithful default behind
+//! [`crate::coordinator::sched_policy::SchedPolicy::swap_budgets`]; custom
+//! policies may reshape the split but inherit the same feasibility checks
+//! from the planner's ledger.
 
 /// Token budgets granted for this iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -73,7 +73,10 @@ impl DurationEstimator {
             EstimatorKind::Dynamic => {
                 // T̂ = t_now − t_call, floored at one engine tick so a
                 // freshly-paused request isn't treated as a zero-cost hold.
-                (elapsed_us as f64).max(1_000.0)
+                // The floor scales with the clock like every other duration
+                // (under compressed time a 1 ms wall floor would overstate a
+                // fresh pause by 1/time_scale).
+                (elapsed_us as f64).max(1_000.0 * self.time_scale)
             }
         }
     }
@@ -121,6 +124,17 @@ mod tests {
         assert_eq!(late, 20_000_000.0);
         // floor for a brand-new pause
         assert_eq!(e.remaining_us(AugmentKind::Image, 0, 0), 1_000.0);
+    }
+
+    #[test]
+    fn dynamic_floor_scales_with_time() {
+        // Regression: the fresh-pause floor used to be a hard-coded 1 ms of
+        // wall time, overstating a just-paused request's estimate by
+        // 1/time_scale under compressed-time runs.
+        let e = DurationEstimator::new(EstimatorKind::Dynamic, 0.01);
+        assert_eq!(e.remaining_us(AugmentKind::Image, 0, 0), 10.0);
+        // Beyond the floor the elapsed engine time dominates, unscaled.
+        assert_eq!(e.remaining_us(AugmentKind::Image, 5_000, 0), 5_000.0);
     }
 
     #[test]

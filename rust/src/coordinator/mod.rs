@@ -1,6 +1,7 @@
 //! The InferCept coordinator: waste quantification (Eq. 1–5), interception
 //! policies, swap budgeting, recomputation chunking, interception-duration
-//! estimation, the three-queue iteration scheduler, and the staged
+//! estimation, the three-queue iteration scheduler, the pluggable
+//! [`sched_policy::SchedPolicy`] decision trait, and the staged
 //! per-iteration [`planner`] that composes them into a [`planner::SchedPlan`].
 //!
 //! Everything here is *pure* policy logic — no backend, no clocks, no
@@ -13,5 +14,6 @@ pub mod chunking;
 pub mod estimator;
 pub mod planner;
 pub mod policy;
+pub mod sched_policy;
 pub mod scheduler;
 pub mod waste;

@@ -8,18 +8,24 @@
 //!  1. **Forward estimate** ([`estimate_forward`]) — the expected iteration
 //!     time `T_fwd(B_i)` from the decode candidates and the §4.2 recompute
 //!     chunk, which sizes the swap limit `N_i` (§4.1).
-//!  2. **Swap budgets** ([`solve_budgets`]) — split `N_i` between swap-in
-//!     and swap-out under the space-conservation constraints (§4.1,
+//!  2. **Swap budgets** — split `N_i` between swap-in and swap-out under
+//!     the space-conservation constraints (§4.1,
 //!     [`crate::coordinator::budget`]).
 //!  3. **Interception dispositions** — preserve / chunked-discard /
-//!     budgeted-swap per paused request by min-waste
-//!     ([`crate::coordinator::scheduler::decide_interceptions`], §4.3),
-//!     re-evaluated every iteration (§4.4).
+//!     budgeted-swap per paused request by min-waste (§4.3), re-evaluated
+//!     every iteration (§4.4).
 //!  4. **Swap-in** — drain the resumed swap queue within the granted
 //!     budget; fully-resident requests join the waiting queue (§4.3).
 //!  5. **Batch formation** — decode admissions then FCFS prefill/recompute
 //!     chunks up to the saturation point (§4.2/§4.3), with vLLM-style
 //!     eviction of latest-arrived requests under memory pressure.
+//!
+//! Every *decision* (budgets, dispositions, admission shaping) dispatches
+//! through the [`crate::coordinator::sched_policy::SchedPolicy`] trait; the
+//! planner owns only the mechanics (snapshotting, the feasibility ledger,
+//! FCFS iteration, plan assembly). [`solve_budgets`] and
+//! [`crate::coordinator::scheduler::decide_interceptions`] remain the
+//! paper-faithful defaults those trait methods delegate to.
 //!
 //! Planning is side-effect-free: stages 3–5 run against a cloned
 //! [`CacheSnapshot`] ledger (never `&mut CacheManager` or the backend), so
@@ -37,8 +43,9 @@ use crate::coordinator::budget::{self, BudgetInputs};
 use crate::coordinator::chunking;
 use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::policy::{Policy, SwapMode};
+use crate::coordinator::sched_policy::{InferceptPolicy, SchedPolicy};
 use crate::coordinator::scheduler::{
-    decide_interceptions, BatchStats, Disposition, FcfsQueue, InterceptAction, PausedView,
+    BatchStats, Disposition, FcfsQueue, InterceptAction, PausedView,
 };
 use crate::coordinator::waste::FwdProfile;
 use crate::engine::backend::ExecBackend;
@@ -428,10 +435,12 @@ impl SimState {
 // Stages 3–5
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn stage_dispositions(
     snap: &SchedSnapshot,
     fwd: &FwdEstimate,
     out_budget: usize,
+    policy: &mut dyn SchedPolicy,
     estimator: &DurationEstimator,
     views: &mut Vec<PausedView>,
     sim: &mut SimState,
@@ -455,15 +464,10 @@ fn stage_dispositions(
         running_query: fwd.decode_cands,
         kv_bytes_per_token: snap.kv_bytes_per_token,
         chunk_tokens: fwd.chunk_tokens,
+        block_size: snap.block_size,
     };
-    let actions = decide_interceptions(
-        &snap.policy,
-        estimator,
-        &snap.profile,
-        views.as_slice(),
-        &stats,
-        out_budget,
-    );
+    let actions =
+        policy.decide_interceptions(snap, estimator, views.as_slice(), &stats, out_budget);
     for (req, action) in actions {
         match action {
             InterceptAction::Preserve => {
@@ -525,12 +529,14 @@ fn stage_swap_in(snap: &SchedSnapshot, in_budget: usize, sim: &mut SimState, pla
 
 fn stage_batch(
     snap: &SchedSnapshot,
+    policy: &mut dyn SchedPolicy,
     sim: &mut SimState,
     plan: &mut SchedPlan,
     prefill_order: &mut Vec<(Micros, ReqId)>,
 ) {
     // ---- Decode admission (running requests, FCFS, bounded batch) --------
-    for &req in snap.running.iter().take(snap.max_decode_batch) {
+    let decode_cap = policy.decode_batch_cap(snap).min(snap.max_decode_batch);
+    for &req in snap.running.iter().take(decode_cap) {
         if sim.reqs[&req].state != ReqState::Running {
             continue; // evicted by an earlier admission this iteration
         }
@@ -552,11 +558,7 @@ fn stage_batch(
 
     // ---- Prefill/recompute admission (FCFS to saturation, §4.2/§4.3) ----
     let chunked = snap.policy.chunked_recompute;
-    let mut q_left = if chunked {
-        chunking::chunk_budget(snap.saturation_tokens, plan.admitted_decode(), snap.min_chunk)
-    } else {
-        snap.max_batched_tokens
-    };
+    let mut q_left = policy.prefill_budget(snap, plan.admitted_decode());
     // Iterate a snapshot of the waiting order taken now: requests that
     // join `waiting` during this loop (evicted running victims) wait for
     // the next iteration, but waiting victims already in the list restart
@@ -704,31 +706,50 @@ impl Planner {
         }
     }
 
-    /// Plan from the captured snapshot. Pure with respect to the engine:
-    /// only planner-internal buffers are written.
-    pub fn plan(&mut self, estimator: &DurationEstimator) -> &SchedPlan {
+    /// Plan from the captured snapshot, dispatching every decision through
+    /// `policy` (see [`SchedPolicy`] for the stage contract). Pure with
+    /// respect to the engine: only planner-internal buffers and the
+    /// policy's own state are written.
+    pub fn plan(
+        &mut self,
+        policy: &mut dyn SchedPolicy,
+        estimator: &DurationEstimator,
+    ) -> &SchedPlan {
         let Planner { snap, plan, views, sim, prefill_order } = self;
         plan.clear();
         sim.reset_from(snap);
         let fwd = estimate_forward(snap);
-        let (out_budget, in_budget) = solve_budgets(snap, &fwd);
+        policy.begin_iteration(snap, &fwd);
+        let (out_budget, in_budget) = policy.swap_budgets(snap, &fwd);
         plan.expected_fwd_us = fwd.expected_fwd_us;
         plan.swap_out_budget = out_budget;
         plan.swap_in_budget = in_budget;
-        stage_dispositions(snap, &fwd, out_budget, estimator, views, sim, plan);
+        stage_dispositions(snap, &fwd, out_budget, policy, estimator, views, sim, plan);
         stage_swap_in(snap, in_budget, sim, plan);
-        stage_batch(snap, sim, plan, prefill_order);
+        stage_batch(snap, policy, sim, plan, prefill_order);
         &self.plan
     }
 
-    /// Plan from an explicitly provided snapshot (tests and benches).
+    /// Plan from an explicitly provided snapshot under the default
+    /// [`InferceptPolicy`] (tests and benches).
     pub fn plan_for(
         &mut self,
         snap: SchedSnapshot,
         estimator: &DurationEstimator,
     ) -> &SchedPlan {
+        self.plan_with(snap, &mut InferceptPolicy, estimator)
+    }
+
+    /// Plan from an explicitly provided snapshot with a caller-supplied
+    /// policy object (tests, custom schedulers).
+    pub fn plan_with(
+        &mut self,
+        snap: SchedSnapshot,
+        policy: &mut dyn SchedPolicy,
+        estimator: &DurationEstimator,
+    ) -> &SchedPlan {
         self.snap = snap;
-        self.plan(estimator)
+        self.plan(policy, estimator)
     }
 
     pub fn snapshot(&self) -> &SchedSnapshot {

@@ -106,6 +106,14 @@ impl Policy {
         Policy { estimator, ..Policy::infercept() }
     }
 
+    /// AugServe-style adaptive serving (PAPERS.md): InferCept's full
+    /// switch-set plus a queue-latency feedback controller on the prefill
+    /// admission budget
+    /// (see [`crate::coordinator::sched_policy::AdaptivePolicy`]).
+    pub fn adaptive() -> Policy {
+        Policy { name: "adaptive", ..Policy::infercept() }
+    }
+
     // ---- Fig. 3 ablation ladder (each adds one technique) ----------------
 
     /// Step 2: + chunked recomputation.
@@ -162,6 +170,7 @@ impl Policy {
             "preserve" => Some(Policy::preserve()),
             "swap" => Some(Policy::swap()),
             "infercept" => Some(Policy::infercept()),
+            "adaptive" => Some(Policy::adaptive()),
             _ => None,
         }
     }
@@ -204,9 +213,19 @@ mod tests {
 
     #[test]
     fn parse_known_names() {
-        for n in ["vllm", "improved-discard", "preserve", "swap", "infercept"] {
+        for n in ["vllm", "improved-discard", "preserve", "swap", "infercept", "adaptive"] {
             assert!(Policy::parse(n).is_some(), "{n}");
         }
         assert!(Policy::parse("nope").is_none());
+    }
+
+    #[test]
+    fn adaptive_keeps_infercept_switches() {
+        let a = Policy::adaptive();
+        let i = Policy::infercept();
+        assert_eq!(a.name, "adaptive");
+        assert_eq!(a.swap, i.swap);
+        assert_eq!(a.preserve, i.preserve);
+        assert!(a.chunked_recompute && a.keep_original_arrival);
     }
 }

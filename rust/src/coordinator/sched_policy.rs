@@ -1,0 +1,399 @@
+//! The pluggable per-iteration scheduling policy: every *decision* the
+//! staged planner makes is dispatched through the [`SchedPolicy`] trait, so
+//! alternative schedulers (AugServe-style adaptive admission, learned
+//! policies, multi-tenant fairness, …) plug in without touching the planner
+//! or the engine.
+//!
+//! # The stage contract
+//!
+//! [`crate::coordinator::planner::Planner::plan`] calls the trait once per
+//! stage, in a fixed order, against the immutable
+//! [`SchedSnapshot`] captured at the start of the iteration:
+//!
+//!  1. [`SchedPolicy::begin_iteration`] — feedback hook, called exactly once
+//!     per planning pass after the stage-1 forward estimate. Stateful
+//!     policies (EWMAs, controllers) update themselves here; the snapshot
+//!     carries the observable signals (queue arrival times, occupancy,
+//!     `now`).
+//!  2. [`SchedPolicy::swap_budgets`] — split the §4.1 swap link budget
+//!     `N_i` into (swap-out, swap-in) token grants.
+//!  3. [`SchedPolicy::decide_interceptions`] — one [`InterceptAction`] per
+//!     paused request (§4.3), in application order. A request may get a
+//!     `SwapOut` *followed by* a `Discard` (budget-spillover discard, §4.1).
+//!  4. [`SchedPolicy::decode_batch_cap`] — how many running requests may
+//!     decode this iteration (clamped to the backend maximum).
+//!  5. [`SchedPolicy::prefill_budget`] — the prefill/recompute admission
+//!     token budget (§4.2), queried after decode admission so chunk sizing
+//!     can depend on the admitted decode count.
+//!
+//! Methods must be deterministic functions of the snapshot and the policy's
+//! own state: planning is replayed in tests and pinned by the golden
+//! determinism counters. Feasibility (never over-committing blocks) is the
+//! planner's job, not the policy's — a policy can only *shape* budgets and
+//! dispositions, and the planner's ledger keeps any shape feasible.
+//!
+//! Two implementations ship in-tree:
+//!  * [`InferceptPolicy`] — the paper's behavior, bit-for-bit: it reads the
+//!    [`crate::coordinator::policy::Policy`] switch-set from the snapshot,
+//!    so it covers the vLLM / improved-discard / preserve / swap baselines
+//!    and full InferCept (every default trait method delegates to the
+//!    free functions the planner used before this trait existed).
+//!  * [`AdaptivePolicy`] — an AugServe-style adaptive scheduler that
+//!    watches head-of-queue latency and scales the admission budget.
+
+use crate::config::EngineConfig;
+use crate::coordinator::chunking;
+use crate::coordinator::estimator::DurationEstimator;
+use crate::coordinator::planner::{solve_budgets, FwdEstimate, SchedSnapshot};
+use crate::coordinator::scheduler::{decide_interceptions, BatchStats, InterceptAction, PausedView};
+use crate::kvcache::ReqId;
+
+/// The default (paper-faithful) prefill/recompute admission budget:
+/// saturation-sized chunks when chunked recomputation is on (§4.2),
+/// otherwise the vLLM-style batched-token cap.
+pub fn default_prefill_budget(snap: &SchedSnapshot, admitted_decode: usize) -> usize {
+    if snap.policy.chunked_recompute {
+        chunking::chunk_budget(snap.saturation_tokens, admitted_decode, snap.min_chunk)
+    } else {
+        snap.max_batched_tokens
+    }
+}
+
+/// Per-iteration scheduling decisions (see the module docs for the stage
+/// contract). Every method has a default that reproduces InferCept's
+/// behavior from the snapshot's `Policy` switches; implementations override
+/// only the stages they want to reshape.
+pub trait SchedPolicy {
+    /// Display name (reports, logs).
+    fn name(&self) -> &'static str;
+
+    /// Feedback hook: called once per planning pass, before any decision.
+    fn begin_iteration(&mut self, _snap: &SchedSnapshot, _fwd: &FwdEstimate) {}
+
+    /// Stage 2 — split the §4.1 swap link budget: returns granted
+    /// `(swap_out_tokens, swap_in_tokens)`.
+    fn swap_budgets(&mut self, snap: &SchedSnapshot, fwd: &FwdEstimate) -> (usize, usize) {
+        solve_budgets(snap, fwd)
+    }
+
+    /// Stage 3 — one action per paused request, in application order (a
+    /// request may legally appear twice: `SwapOut` then `Discard` for a
+    /// budget-spillover discard).
+    fn decide_interceptions(
+        &mut self,
+        snap: &SchedSnapshot,
+        estimator: &DurationEstimator,
+        views: &[PausedView],
+        stats: &BatchStats,
+        out_budget: usize,
+    ) -> Vec<(ReqId, InterceptAction)> {
+        decide_interceptions(&snap.policy, estimator, &snap.profile, views, stats, out_budget)
+    }
+
+    /// Stage 5a — decode admissions this iteration (the planner clamps the
+    /// result to the backend's `max_decode_batch`).
+    fn decode_batch_cap(&mut self, snap: &SchedSnapshot) -> usize {
+        snap.max_decode_batch
+    }
+
+    /// Stage 5b — prefill/recompute admission token budget, queried after
+    /// decode admission (`admitted_decode` decodes joined the batch).
+    fn prefill_budget(&mut self, snap: &SchedSnapshot, admitted_decode: usize) -> usize {
+        default_prefill_budget(snap, admitted_decode)
+    }
+}
+
+/// The paper's scheduler as a policy object: pure delegation to the
+/// snapshot's [`crate::coordinator::policy::Policy`] switch-set, preserving
+/// the pre-trait planner behavior bit-for-bit (pinned by the parity test
+/// and the golden determinism counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InferceptPolicy;
+
+impl SchedPolicy for InferceptPolicy {
+    fn name(&self) -> &'static str {
+        "builtin"
+    }
+}
+
+/// AugServe-style adaptive admission (PAPERS.md): a multiplicative
+/// increase/decrease controller on the prefill admission budget, driven by
+/// an EWMA of the observed first-service queue wait (the longest wait among
+/// never-served waiting requests).
+///
+/// When requests queue longer than `target_wait_us`, the controller grows
+/// `gain` (admitting more prefill tokens per iteration drains the queue at
+/// some cost to decode latency); when the queue is comfortably fast it
+/// decays `gain` back toward the paper's saturation-sized chunks.
+/// Dispositions and swap budgets keep InferCept's min-waste behavior.
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    /// Head-of-queue wait the controller steers toward, µs (engine clock).
+    pub target_wait_us: f64,
+    /// EWMA smoothing factor in (0, 1]; higher reacts faster.
+    pub alpha: f64,
+    /// Clamp range for the admission multiplier.
+    pub min_gain: f64,
+    pub max_gain: f64,
+    ewma_wait_us: f64,
+    gain: f64,
+}
+
+impl AdaptivePolicy {
+    pub fn new(target_wait_us: u64) -> AdaptivePolicy {
+        AdaptivePolicy {
+            target_wait_us: target_wait_us as f64,
+            alpha: 0.2,
+            min_gain: 0.5,
+            max_gain: 4.0,
+            ewma_wait_us: 0.0,
+            gain: 1.0,
+        }
+    }
+
+    /// Current admission multiplier (observability / tests).
+    pub fn gain(&self) -> f64 {
+        self.gain
+    }
+
+    /// Smoothed head-of-queue wait estimate, µs.
+    pub fn observed_wait_us(&self) -> f64 {
+        self.ewma_wait_us
+    }
+}
+
+impl SchedPolicy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn begin_iteration(&mut self, snap: &SchedSnapshot, _fwd: &FwdEstimate) {
+        // Observed queue latency: the longest wait among never-served
+        // waiting requests (processed == 0 and no recompute high-water
+        // mark). Under `keep_original_arrival` a discarded-resumed or
+        // mid-prefill request's `queue_arrival` is its *original* arrival,
+        // so its age counts service history, not queue pressure — only
+        // genuinely unserved arrivals measure first-service wait.
+        let head_wait = snap
+            .waiting
+            .iter()
+            .map(|r| &snap.reqs[r])
+            .filter(|q| q.processed == 0 && q.recompute_hwm == 0)
+            .map(|q| snap.now.saturating_sub(q.queue_arrival))
+            .max()
+            .unwrap_or(0) as f64;
+        self.ewma_wait_us += self.alpha * (head_wait - self.ewma_wait_us);
+        self.gain = if self.ewma_wait_us > self.target_wait_us {
+            (self.gain * 1.25).min(self.max_gain)
+        } else {
+            (self.gain * 0.9).max(self.min_gain)
+        };
+    }
+
+    fn prefill_budget(&mut self, snap: &SchedSnapshot, admitted_decode: usize) -> usize {
+        let base = default_prefill_budget(snap, admitted_decode);
+        ((base as f64 * self.gain) as usize).max(snap.min_chunk)
+    }
+}
+
+/// Build the scheduling-policy object an engine configuration asks for:
+/// `--policy adaptive` gets the [`AdaptivePolicy`] controller (tuned by
+/// [`EngineConfig::adaptive_target_wait_us`]); every other preset runs
+/// through [`InferceptPolicy`], whose behavior the preset's switch-set
+/// fully determines.
+pub fn build(cfg: &EngineConfig) -> Box<dyn SchedPolicy> {
+    match cfg.policy.name {
+        "adaptive" => Box::new(AdaptivePolicy::new(cfg.adaptive_target_wait_us)),
+        _ => Box::new(InferceptPolicy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::augment::AugmentKind;
+    use crate::coordinator::planner::{estimate_forward, ReqSnapshot};
+    use crate::coordinator::policy::Policy;
+    use crate::coordinator::scheduler::Disposition;
+    use crate::coordinator::waste::FwdProfile;
+    use crate::engine::request::ReqState;
+    use crate::kvcache::swap::SwapModel;
+    use crate::kvcache::CacheSnapshot;
+    use crate::util::Micros;
+
+    const BS: usize = 16;
+
+    fn profile() -> FwdProfile {
+        FwdProfile {
+            t_base_us: 6_000.0,
+            us_per_ctx_token: 0.23,
+            us_per_query_unsat: 10.0,
+            us_per_query_sat: 80.0,
+            saturation_tokens: 512,
+        }
+    }
+
+    fn swap_model() -> SwapModel {
+        SwapModel {
+            bandwidth_bytes_per_sec: 16e9,
+            per_block_launch_us: 5.0,
+            kv_bytes_per_token: 458_752,
+            block_size: BS,
+            pipelined: true,
+        }
+    }
+
+    /// A snapshot with two paused requests, one swap-queue entry, and one
+    /// waiting request whose head-of-line wait is `wait_us`.
+    fn snapshot(policy: Policy, wait_us: Micros) -> SchedSnapshot {
+        let mut s = SchedSnapshot::new(policy, profile(), swap_model());
+        s.now = wait_us;
+        s.cache = CacheSnapshot::for_test(BS, 0, 64, 64);
+        s.waiting.push(1);
+        s.reqs.insert(1, ReqSnapshot::basic(ReqState::Waiting, 0, 200, 0));
+        for (req, kind, ctx) in [(2, AugmentKind::Math, 320), (3, AugmentKind::Chatbot, 640)] {
+            s.paused.push(req);
+            let mut r = ReqSnapshot::basic(ReqState::Paused, 0, ctx + 1, ctx);
+            r.pause_kind = kind;
+            r.pause_duration_us = 1_000_000;
+            s.reqs.insert(req, r);
+            s.cache.set_seq(req, ctx.div_ceil(BS), 0, ctx);
+        }
+        s.swapq.push(4);
+        s.reqs.insert(4, ReqSnapshot::basic(ReqState::SwapQueue, 0, 2 * BS + 8, 2 * BS));
+        s.cache.set_seq(4, 2, 2, 2 * BS);
+        s
+    }
+
+    fn views_of(s: &SchedSnapshot) -> Vec<PausedView> {
+        s.paused
+            .iter()
+            .map(|&r| {
+                let q = &s.reqs[&r];
+                PausedView {
+                    req: r,
+                    kind: q.pause_kind,
+                    disposition: Disposition::Fresh,
+                    ctx_tokens: q.processed,
+                    gpu_tokens: s.cache.gpu_tokens_of(r),
+                    elapsed_us: s.now.saturating_sub(q.paused_at),
+                    actual_total_us: q.pause_duration_us,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builtin_policy_matches_free_functions() {
+        // The trait migration's parity pin: InferceptPolicy's defaults must
+        // reproduce the pre-trait free functions for every preset.
+        let presets = [
+            Policy::vllm(),
+            Policy::improved_discard(),
+            Policy::preserve(),
+            Policy::swap(),
+            Policy::ablation_chunked(),
+            Policy::ablation_swap(),
+            Policy::ablation_heuristic_preserve(),
+            Policy::infercept(),
+        ];
+        for policy in presets {
+            let s = snapshot(policy, 10_000);
+            let fwd = estimate_forward(&s);
+            let est = DurationEstimator::new(s.policy.estimator, 1.0);
+            let views = views_of(&s);
+            let stats = BatchStats {
+                other_tokens: fwd.running_ctx,
+                running_query: fwd.decode_cands,
+                kv_bytes_per_token: s.kv_bytes_per_token,
+                chunk_tokens: fwd.chunk_tokens,
+                block_size: s.block_size,
+            };
+            let mut p = InferceptPolicy;
+            assert_eq!(p.swap_budgets(&s, &fwd), solve_budgets(&s, &fwd), "{}", s.policy.name);
+            for budget in [0, 64, 10_000] {
+                assert_eq!(
+                    p.decide_interceptions(&s, &est, &views, &stats, budget),
+                    decide_interceptions(&s.policy, &est, &s.profile, &views, &stats, budget),
+                    "{} budget {budget}",
+                    s.policy.name
+                );
+            }
+            assert_eq!(p.decode_batch_cap(&s), s.max_decode_batch);
+            for decodes in [0, 3] {
+                assert_eq!(
+                    p.prefill_budget(&s, decodes),
+                    default_prefill_budget(&s, decodes),
+                    "{}",
+                    s.policy.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_gain_rises_under_pressure_and_decays_when_idle() {
+        let mut p = AdaptivePolicy::new(200_000);
+        let busy = snapshot(Policy::adaptive(), 2_000_000); // 2 s head wait
+        let fwd = estimate_forward(&busy);
+        for _ in 0..30 {
+            p.begin_iteration(&busy, &fwd);
+        }
+        assert!(p.gain() > 1.0, "gain {}", p.gain());
+        assert!(p.observed_wait_us() > 200_000.0);
+        let busy_budget = p.prefill_budget(&busy, 0);
+
+        let mut idle = snapshot(Policy::adaptive(), 0);
+        idle.waiting.clear(); // empty queue: zero observed wait
+        for _ in 0..60 {
+            p.begin_iteration(&idle, &fwd);
+        }
+        assert!(p.gain() < 1.0, "gain {}", p.gain());
+        let idle_budget = p.prefill_budget(&idle, 0);
+        assert!(busy_budget > idle_budget, "{busy_budget} vs {idle_budget}");
+        assert!(idle_budget >= idle.min_chunk);
+    }
+
+    #[test]
+    fn adaptive_ignores_recomputing_requests_in_the_wait_signal() {
+        // A 30 s old discarded-resumed request mid-rebuild is service
+        // history, not queue pressure: it must not saturate the controller.
+        let mut p = AdaptivePolicy::new(200_000);
+        let mut s = snapshot(Policy::adaptive(), 30_000_000);
+        s.reqs.get_mut(&1).unwrap().recompute_hwm = 150;
+        let fwd = estimate_forward(&s);
+        for _ in 0..20 {
+            p.begin_iteration(&s, &fwd);
+        }
+        assert_eq!(p.observed_wait_us(), 0.0);
+        assert!(p.gain() < 1.0, "gain {}", p.gain());
+    }
+
+    #[test]
+    fn adaptive_gain_stays_clamped() {
+        let mut p = AdaptivePolicy::new(100);
+        let busy = snapshot(Policy::adaptive(), 50_000_000);
+        let fwd = estimate_forward(&busy);
+        for _ in 0..200 {
+            p.begin_iteration(&busy, &fwd);
+        }
+        assert!(p.gain() <= p.max_gain);
+        let mut idle = snapshot(Policy::adaptive(), 0);
+        idle.waiting.clear();
+        for _ in 0..200 {
+            p.begin_iteration(&idle, &fwd);
+        }
+        assert!(p.gain() >= p.min_gain);
+    }
+
+    #[test]
+    fn factory_selects_by_policy_name() {
+        let spec = crate::sim::SimModelSpec::gptj_6b();
+        let cfg = EngineConfig::for_sim(&spec, Policy::adaptive());
+        assert_eq!(build(&cfg).name(), "adaptive");
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        assert_eq!(build(&cfg).name(), "builtin");
+        let cfg = EngineConfig::for_sim(&spec, Policy::vllm());
+        assert_eq!(build(&cfg).name(), "builtin");
+    }
+}

@@ -114,11 +114,47 @@ pub struct BatchStats {
     pub kv_bytes_per_token: usize,
     /// Recompute chunk size this iteration (§4.2).
     pub chunk_tokens: usize,
+    /// KV block size in tokens (swap moves whole blocks).
+    pub block_size: usize,
+}
+
+/// The preserve-vs-discard arm of the disposition decision (what happens
+/// when no swap budget applies, and how §4.1 budget spillover is settled).
+fn preserve_or_discard(
+    mode: PreserveMode,
+    prefer_preserve: bool,
+    kind: AugmentKind,
+) -> InterceptAction {
+    match mode {
+        PreserveMode::Never => InterceptAction::Discard,
+        PreserveMode::Always => InterceptAction::Preserve,
+        PreserveMode::Heuristic => {
+            if kind.short_running() {
+                InterceptAction::Preserve
+            } else {
+                InterceptAction::Discard
+            }
+        }
+        PreserveMode::MinWaste => {
+            if prefer_preserve {
+                InterceptAction::Preserve
+            } else {
+                InterceptAction::Discard
+            }
+        }
+    }
 }
 
 /// Decide the action for every paused request (§4.3 "scheduling intercepted
 /// requests"). `swap_out_budget` is this iteration's granted swap-out token
 /// budget; it is consumed in descending-waste order.
+///
+/// Actions are returned in application order, and a request may appear
+/// twice: when the granted budget covers only part of its GPU-resident
+/// context, the residual is routed through the preserve-mode match (§4.1's
+/// "spillover handled by preserve/discard") — a residual the mode would
+/// discard yields `SwapOut` *followed by* `Discard` in the same iteration,
+/// never an implicit preserve.
 pub fn decide_interceptions(
     policy: &Policy,
     estimator: &DurationEstimator,
@@ -138,6 +174,9 @@ pub fn decide_interceptions(
     swapping.sort_by(|a, b| b.gpu_tokens.cmp(&a.gpu_tokens));
     for v in swapping {
         let grant = v.gpu_tokens.min(swap_out_budget);
+        if grant == 0 {
+            break; // budget exhausted: no zero-grant decision entries
+        }
         swap_out_budget -= grant;
         out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
     }
@@ -170,38 +209,37 @@ pub fn decide_interceptions(
     candidates.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
 
     for (_, prefer_preserve, v) in candidates {
-        let action = match (policy.swap, policy.preserve) {
+        match (policy.swap, policy.preserve) {
             // Sync swap baseline: whole context moves, no budget.
-            (SwapMode::Sync, _) => InterceptAction::SwapOut { tokens: v.gpu_tokens },
+            (SwapMode::Sync, _) => {
+                out.push((v.req, InterceptAction::SwapOut { tokens: v.gpu_tokens }));
+            }
             (swap_mode, preserve_mode) => {
                 // Budgeted swap takes the highest-waste requests first.
                 if swap_mode == SwapMode::Budgeted && swap_out_budget > 0 && v.gpu_tokens > 0 {
                     let grant = v.gpu_tokens.min(swap_out_budget);
                     swap_out_budget -= grant;
-                    InterceptAction::SwapOut { tokens: grant }
-                } else {
-                    match preserve_mode {
-                        PreserveMode::Never => InterceptAction::Discard,
-                        PreserveMode::Always => InterceptAction::Preserve,
-                        PreserveMode::Heuristic => {
-                            if v.kind.short_running() {
-                                InterceptAction::Preserve
-                            } else {
-                                InterceptAction::Discard
-                            }
-                        }
-                        PreserveMode::MinWaste => {
-                            if prefer_preserve {
-                                InterceptAction::Preserve
-                            } else {
-                                InterceptAction::Discard
-                            }
-                        }
+                    out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
+                    // §4.1: spillover past the budget is settled by the
+                    // preserve/discard decision, not implicitly preserved.
+                    // A discard-side residual frees its GPU tail now (the
+                    // CPU-resident prefix from the partial swap stays).
+                    // Swap moves whole blocks, so a residual exists only
+                    // when the grant rounds to fewer blocks than the
+                    // GPU-resident context occupies.
+                    let bs = batch.block_size.max(1);
+                    if grant.div_ceil(bs) < v.gpu_tokens.div_ceil(bs)
+                        && preserve_or_discard(preserve_mode, prefer_preserve, v.kind)
+                            == InterceptAction::Discard
+                    {
+                        out.push((v.req, InterceptAction::Discard));
                     }
+                } else {
+                    let act = preserve_or_discard(preserve_mode, prefer_preserve, v.kind);
+                    out.push((v.req, act));
                 }
             }
-        };
-        out.push((v.req, action));
+        }
     }
     out
 }
@@ -227,6 +265,7 @@ mod tests {
             running_query: 16,
             kv_bytes_per_token: 458_752,
             chunk_tokens: 256,
+            block_size: 16,
         }
     }
 
@@ -343,6 +382,70 @@ mod tests {
         let acts = decide_interceptions(&p, &est(), &profile(), &[v1, v2], &batch(), 500);
         assert_eq!(acts[0], (1, InterceptAction::SwapOut { tokens: 400 }));
         assert_eq!(acts[1], (2, InterceptAction::SwapOut { tokens: 100 }));
+        // The 28.6 s chatbot's residual loses the min-waste argmin: the
+        // partial grant's spillover is discarded, not implicitly preserved.
+        assert_eq!(acts[2], (2, InterceptAction::Discard));
+        assert_eq!(acts.len(), 3);
+    }
+
+    #[test]
+    fn exhausted_budget_emits_no_zero_grant_entries() {
+        // A mid-swap request under a zero budget gets no decision entry at
+        // all (it simply stays SwappingOut) — zero-token SwapOut entries
+        // would inflate the swap_decisions counter every idle iteration.
+        let p = Policy::infercept();
+        let mut v = view(1, AugmentKind::Chatbot, 1000);
+        v.disposition = Disposition::SwappingOut;
+        v.gpu_tokens = 400;
+        let acts = decide_interceptions(&p, &est(), &profile(), &[v], &batch(), 0);
+        assert!(acts.is_empty(), "{acts:?}");
+    }
+
+    #[test]
+    fn partial_grant_routes_discard_residual() {
+        // PreserveMode::Never (the +budgeted-swap ablation rung): whatever
+        // the budget cannot move must be discarded (§4.1 spillover), so the
+        // plan carries SwapOut then Discard for the same request.
+        let p = Policy::ablation_swap();
+        let views = [view(1, AugmentKind::Chatbot, 2000)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 500);
+        assert_eq!(
+            acts,
+            vec![
+                (1, InterceptAction::SwapOut { tokens: 500 }),
+                (1, InterceptAction::Discard),
+            ]
+        );
+    }
+
+    #[test]
+    fn partial_grant_keeps_residual_when_preserve_wins() {
+        // A 90 µs math call: the min-waste argmin prefers preserve, so the
+        // residual stays resident and keeps draining the budget next
+        // iteration (disposition SwappingOut).
+        let p = Policy::infercept();
+        let views = [view(1, AugmentKind::Math, 2000)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 500);
+        assert_eq!(acts, vec![(1, InterceptAction::SwapOut { tokens: 500 })]);
+    }
+
+    #[test]
+    fn full_grant_needs_no_residual_decision() {
+        let p = Policy::ablation_swap();
+        let views = [view(1, AugmentKind::Chatbot, 400)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 500);
+        assert_eq!(acts, vec![(1, InterceptAction::SwapOut { tokens: 400 })]);
+    }
+
+    #[test]
+    fn block_rounded_full_grant_skips_residual() {
+        // A 17-token grant against 20 GPU tokens still moves both 16-token
+        // blocks (swap is block-granular), so there is no residual to
+        // discard and no spurious Discard entry.
+        let p = Policy::ablation_swap();
+        let views = [view(1, AugmentKind::Chatbot, 20)];
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 17);
+        assert_eq!(acts, vec![(1, InterceptAction::SwapOut { tokens: 17 })]);
     }
 
     #[test]

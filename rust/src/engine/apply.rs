@@ -25,6 +25,9 @@ impl Engine {
         let mut stall: Micros = 0;
 
         // ---- Interception dispositions (§4.3 / §4.4) ---------------------
+        // Applied in plan order; a request may carry two entries (`SwapOut`
+        // then `Discard`) when the swap budget covered only part of its
+        // context and the spillover was routed to discard (§4.1).
         for &(req, action) in &plan.dispositions {
             match action {
                 InterceptAction::Preserve => {

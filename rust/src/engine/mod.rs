@@ -5,7 +5,9 @@
 //!  2. capture an immutable snapshot of queues + cache occupancy and hand
 //!     it to the staged planner ([`crate::coordinator::planner`]), which
 //!     decides dispositions (§4.3/§4.4), swap budgets (§4.1), and the
-//!     prefill/decode batch (§4.2) as a pure function,
+//!     prefill/decode batch (§4.2) as a pure function — every decision
+//!     dispatched through the engine's pluggable
+//!     [`crate::coordinator::sched_policy::SchedPolicy`] object,
 //!  3. *apply* the plan: real cache mutations, backend execution, token
 //!     sampling, interception firing, and waste accounting.
 //!
@@ -29,6 +31,7 @@ use crate::augment::executor::ApiExecutor;
 use crate::config::EngineConfig;
 use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::planner::Planner;
+use crate::coordinator::sched_policy::{self, SchedPolicy};
 use crate::coordinator::scheduler::{Disposition, FcfsQueue};
 use crate::kvcache::{CacheManager, ReqId};
 use crate::metrics::{Recorder, RequestRecord, RunReport};
@@ -48,6 +51,9 @@ pub struct Engine {
     executor: ApiExecutor,
     estimator: DurationEstimator,
     planner: Planner,
+    /// The pluggable decision object every planning pass dispatches through
+    /// (selected from `cfg.policy`; swappable via [`Engine::set_sched_policy`]).
+    sched: Box<dyn SchedPolicy>,
     pub metrics: Recorder,
     rng: Pcg,
     /// Pending arrivals, soonest last (popped from the back).
@@ -64,6 +70,7 @@ impl Engine {
         cache.watermark_blocks = cfg.watermark_blocks;
         let estimator = DurationEstimator::new(cfg.policy.estimator, cfg.time_scale);
         let executor = ApiExecutor::new(cfg.time_scale);
+        let sched = sched_policy::build(&cfg);
         let rng = Pcg::new(cfg.seed ^ 0xabcdef);
         Engine {
             backend,
@@ -77,6 +84,7 @@ impl Engine {
             executor,
             estimator,
             planner: Planner::new(),
+            sched,
             metrics: Recorder::default(),
             rng,
             pending: Vec::new(),
@@ -95,6 +103,16 @@ impl Engine {
 
     pub fn request(&self, id: ReqId) -> Option<&Request> {
         self.requests.get(&id)
+    }
+
+    /// Swap in a custom scheduling-policy object (must happen before the
+    /// run; decisions from the previous object are not revisited).
+    pub fn set_sched_policy(&mut self, policy: Box<dyn SchedPolicy>) {
+        self.sched = policy;
+    }
+
+    pub fn sched_policy_name(&self) -> &'static str {
+        self.sched.name()
     }
 
     /// Load a trace: requests materialize at their arrival times.
@@ -187,7 +205,7 @@ impl Engine {
             &self.paused,
             &self.requests,
         );
-        self.planner.plan(&self.estimator);
+        self.planner.plan(&mut *self.sched, &self.estimator);
 
         // Apply (all mutation lives here).
         let plan = self.planner.take_plan();

@@ -62,6 +62,7 @@ pub mod prelude {
     pub use crate::augment::{AugmentKind, AugmentProfile};
     pub use crate::config::EngineConfig;
     pub use crate::coordinator::policy::Policy;
+    pub use crate::coordinator::sched_policy::{AdaptivePolicy, InferceptPolicy, SchedPolicy};
     pub use crate::engine::{Engine, ExecBackend};
     pub use crate::metrics::RunReport;
     pub use crate::sim::{SimBackend, SimModelSpec};

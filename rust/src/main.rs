@@ -52,7 +52,7 @@ COMMANDS:
 COMMON OPTIONS:
   --model <6b|13b|13b-tp2|70b>      sim model   (default 6b)
   --workload <mixed|qa|chatbot|math|ve|image|tts>  (default mixed)
-  --policy <vllm|improved-discard|preserve|swap|infercept>
+  --policy <vllm|improved-discard|preserve|swap|infercept|adaptive>
   --rate <req/s>   --requests <n>   --seed <n>
   --out <path>     write results (CSV)
 ";

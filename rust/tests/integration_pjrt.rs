@@ -129,6 +129,7 @@ fn engine_serves_end_to_end_on_pjrt() {
         seed: 7,
         max_seq_tokens: geom.max_seq_tokens(),
         max_iterations: 100_000,
+        adaptive_target_wait_us: infercept::config::DEFAULT_ADAPTIVE_TARGET_WAIT_US,
     };
     let _ = backend.max_decode_batch();
     let trace = WorkloadGen::new(WorkloadKind::Mixed, 7)

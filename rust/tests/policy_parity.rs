@@ -1,0 +1,157 @@
+//! Parity pins for the `SchedPolicy` trait migration: the engine must make
+//! exactly the decisions the policy object returns, an injected
+//! [`InferceptPolicy`] must reproduce the built-in path bit-for-bit, and
+//! the new adaptive policy must serve real workloads end to end.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use infercept::config::EngineConfig;
+use infercept::coordinator::estimator::DurationEstimator;
+use infercept::coordinator::planner::SchedSnapshot;
+use infercept::coordinator::policy::Policy;
+use infercept::coordinator::sched_policy::{AdaptivePolicy, InferceptPolicy, SchedPolicy};
+use infercept::coordinator::scheduler::{BatchStats, InterceptAction, PausedView};
+use infercept::engine::Engine;
+use infercept::kvcache::ReqId;
+use infercept::metrics::RunReport;
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::workload::{RequestTrace, WorkloadGen, WorkloadKind};
+
+fn trace() -> RequestTrace {
+    WorkloadGen::new(WorkloadKind::Mixed, 20260730).generate(60, 3.0)
+}
+
+fn engine(policy: Policy) -> Engine {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    Engine::new(Box::new(SimBackend::new(spec)), cfg)
+}
+
+/// The scheduling-visible counter tuple compared across runs.
+fn counters(rep: &RunReport) -> (usize, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        rep.completed,
+        rep.iterations,
+        rep.preserve_decisions,
+        rep.discard_decisions,
+        rep.swap_decisions,
+        rep.evictions,
+        rep.swapped_out_tokens,
+        rep.swapped_in_tokens,
+    )
+}
+
+/// Wraps [`InferceptPolicy`] and tallies every action it returns, so the
+/// test can check the engine applied exactly the policy's decisions.
+struct CountingPolicy {
+    preserve: Rc<Cell<u64>>,
+    discard: Rc<Cell<u64>>,
+    swap: Rc<Cell<u64>>,
+}
+
+impl SchedPolicy for CountingPolicy {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn decide_interceptions(
+        &mut self,
+        snap: &SchedSnapshot,
+        estimator: &DurationEstimator,
+        views: &[PausedView],
+        stats: &BatchStats,
+        out_budget: usize,
+    ) -> Vec<(ReqId, InterceptAction)> {
+        let acts =
+            InferceptPolicy.decide_interceptions(snap, estimator, views, stats, out_budget);
+        for (_, a) in &acts {
+            let c = match a {
+                InterceptAction::Preserve => &self.preserve,
+                InterceptAction::Discard => &self.discard,
+                InterceptAction::SwapOut { .. } => &self.swap,
+            };
+            c.set(c.get() + 1);
+        }
+        acts
+    }
+}
+
+#[test]
+fn injected_infercept_policy_reproduces_builtin_counters() {
+    let trace = trace();
+    for policy in Policy::fig2_set() {
+        let name = policy.name;
+        let mut builtin = engine(policy.clone());
+        let a = builtin.run_trace(&trace).unwrap();
+        let mut injected = engine(policy);
+        injected.set_sched_policy(Box::new(InferceptPolicy));
+        let b = injected.run_trace(&trace).unwrap();
+        assert_eq!(counters(&a), counters(&b), "{name}");
+        assert_eq!(a.waste.total(), b.waste.total(), "{name}");
+        assert_eq!(a.normalized_latency_ms(), b.normalized_latency_ms(), "{name}");
+    }
+}
+
+#[test]
+fn engine_applies_exactly_the_policy_decisions() {
+    // Every disposition counter the engine reports must equal what the
+    // policy object returned — i.e. all decisions flow through the trait.
+    let trace = trace();
+    for policy in [Policy::infercept(), Policy::preserve(), Policy::vllm()] {
+        let name = policy.name;
+        let (preserve, discard, swap) =
+            (Rc::new(Cell::new(0)), Rc::new(Cell::new(0)), Rc::new(Cell::new(0)));
+        let mut e = engine(policy);
+        e.set_sched_policy(Box::new(CountingPolicy {
+            preserve: preserve.clone(),
+            discard: discard.clone(),
+            swap: swap.clone(),
+        }));
+        assert_eq!(e.sched_policy_name(), "counting");
+        let rep = e.run_trace(&trace).unwrap();
+        e.check_invariants().unwrap();
+        assert_eq!(rep.preserve_decisions, preserve.get(), "{name}");
+        assert_eq!(rep.discard_decisions, discard.get(), "{name}");
+        assert_eq!(rep.swap_decisions, swap.get(), "{name}");
+        assert!(rep.completed > 0, "{name}");
+    }
+}
+
+#[test]
+fn adaptive_policy_serves_the_mixed_workload() {
+    let trace = trace();
+    let mut e = engine(Policy::adaptive());
+    assert_eq!(e.sched_policy_name(), "adaptive");
+    let rep = e.run_trace(&trace).unwrap();
+    e.check_invariants().unwrap();
+    assert_eq!(rep.completed, 60);
+    assert_eq!(e.queue_depths(), (0, 0, 0, 0));
+}
+
+#[test]
+fn adaptive_policy_runs_are_deterministic() {
+    let trace = trace();
+    let run = || {
+        let mut e = engine(Policy::adaptive());
+        let rep = e.run_trace(&trace).unwrap();
+        (rep.iterations, rep.normalized_latency_ms(), rep.waste.total())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn injected_adaptive_equals_config_selected_adaptive() {
+    // `EngineConfig { policy: adaptive }` and an explicitly injected
+    // AdaptivePolicy with the same target must be the same scheduler.
+    let trace = trace();
+    let mut by_cfg = engine(Policy::adaptive());
+    let a = by_cfg.run_trace(&trace).unwrap();
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::adaptive());
+    let target = cfg.adaptive_target_wait_us;
+    let mut by_inject = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    by_inject.set_sched_policy(Box::new(AdaptivePolicy::new(target)));
+    let b = by_inject.run_trace(&trace).unwrap();
+    assert_eq!(counters(&a), counters(&b));
+}
