@@ -52,6 +52,7 @@ fn main() {
         kv_bytes_per_token: spec.kv_bytes_per_token,
         chunk_tokens: 256,
         block_size: 16,
+        free_cpu_blocks: 4096,
     };
     let policy = Policy::infercept();
     let est = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);

@@ -1,11 +1,14 @@
-//! The API executor (Fig. 6): dispatches interceptions and reports their
-//! completion to the engine.
+//! The API executor (Fig. 6): the timer substrate for scripted
+//! interceptions.
 //!
 //! Interceptions are timed events on the engine clock — a calculator call
 //! resolves in ~0.1 ms of (virtual or scaled wall) time, a human chat turn
-//! in ~30 s. For the short, fully-automated tools we also *actually run* a
-//! tiny tool implementation (arithmetic evaluator / text synthesizer) so the
-//! real-backend path exercises genuine side effects, not just timers.
+//! in ~30 s. The engine no longer talks to this type directly: it dispatches
+//! through the [`crate::serving::InterceptSource`] trait, whose scripted
+//! implementation ([`crate::serving::ScriptedTimers`]) wraps an
+//! `ApiExecutor` and additionally *actually runs* a tiny tool implementation
+//! ([`run_tool`]) for the short, fully-automated augmentations, streaming
+//! the output to event subscribers.
 
 use std::collections::BinaryHeap;
 
@@ -50,19 +53,10 @@ impl ApiExecutor {
     }
 
     /// Dispatch an interception of `duration_us` for `req`; returns the
-    /// completion time on the engine clock.
-    pub fn dispatch(
-        &mut self,
-        req: ReqId,
-        kind: AugmentKind,
-        duration_us: Micros,
-        now: Micros,
-    ) -> Micros {
-        // Run the actual tool for automated augmentations (side effect only;
-        // the script fixes returned token counts for determinism).
-        if kind.short_running() {
-            let _ = run_tool(kind, req);
-        }
+    /// completion time on the engine clock. Pure timer bookkeeping — tool
+    /// side effects belong to the caller
+    /// ([`crate::serving::ScriptedTimers`]).
+    pub fn dispatch(&mut self, req: ReqId, duration_us: Micros, now: Micros) -> Micros {
         let scaled = ((duration_us as f64) * self.time_scale).round().max(1.0) as Micros;
         let resume_at = now + scaled;
         self.heap.push(Pending { resume_at, req });
@@ -124,9 +118,9 @@ mod tests {
     #[test]
     fn completes_in_time_order() {
         let mut ex = ApiExecutor::new(1.0);
-        ex.dispatch(1, AugmentKind::Chatbot, 500, 0);
-        ex.dispatch(2, AugmentKind::Math, 100, 0);
-        ex.dispatch(3, AugmentKind::Qa, 300, 0);
+        ex.dispatch(1, 500, 0);
+        ex.dispatch(2, 100, 0);
+        ex.dispatch(3, 300, 0);
         assert_eq!(ex.next_completion(), Some(100));
         assert_eq!(ex.poll(99), Vec::<ReqId>::new());
         assert_eq!(ex.poll(100), vec![2]);
@@ -139,14 +133,14 @@ mod tests {
     #[test]
     fn time_scale_compresses_durations() {
         let mut ex = ApiExecutor::new(0.01);
-        let resume = ex.dispatch(7, AugmentKind::Tts, 1_000_000, 50);
+        let resume = ex.dispatch(7, 1_000_000, 50);
         assert_eq!(resume, 50 + 10_000);
     }
 
     #[test]
     fn zero_duration_still_takes_one_microsecond() {
         let mut ex = ApiExecutor::new(1.0);
-        let resume = ex.dispatch(1, AugmentKind::Math, 0, 10);
+        let resume = ex.dispatch(1, 0, 10);
         assert_eq!(resume, 11);
     }
 

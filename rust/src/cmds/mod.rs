@@ -14,10 +14,25 @@ use anyhow::Result;
 
 use crate::config::EngineConfig;
 use crate::coordinator::policy::Policy;
-use crate::engine::Engine;
+use crate::engine::ExecBackend;
 use crate::metrics::RunReport;
+use crate::serving::EngineFront;
 use crate::sim::{SimBackend, SimModelSpec};
+use crate::util::cli::Args;
 use crate::workload::RequestTrace;
+
+/// Replay one trace through the serving front (the canonical client path:
+/// every traced request becomes a scripted session).
+pub fn run_once_with(
+    cfg: EngineConfig,
+    backend: Box<dyn ExecBackend>,
+    trace: &RequestTrace,
+) -> Result<RunReport> {
+    let mut front = EngineFront::new(backend, cfg);
+    let rep = front.run_trace(trace)?;
+    front.engine().check_invariants()?;
+    Ok(rep)
+}
 
 /// Run one policy on one trace against a fresh simulated backend.
 pub fn sim_run_once(
@@ -27,8 +42,28 @@ pub fn sim_run_once(
     seed: u64,
 ) -> Result<RunReport> {
     let cfg = EngineConfig::for_sim(spec, policy).with_seed(seed);
-    let mut engine = Engine::new(Box::new(SimBackend::new(spec.clone())), cfg);
-    engine.run_trace(trace)
+    run_once_with(cfg, Box::new(SimBackend::new(spec.clone())), trace)
+}
+
+/// Apply the `--adaptive-*` CLI knobs to an engine configuration
+/// (`serve` / `sim`): target head-of-queue wait (ms), EWMA alpha, and the
+/// admission-gain clamp range. No-ops when the flags are absent.
+pub fn apply_adaptive_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
+    let target_ms =
+        args.f64_or("adaptive-target-wait-ms", cfg.adaptive_target_wait_us as f64 / 1e3)?;
+    cfg.adaptive_target_wait_us = (target_ms * 1e3).round().max(0.0) as u64;
+    cfg.adaptive_alpha = args.f64_or("adaptive-alpha", cfg.adaptive_alpha)?;
+    cfg.adaptive_min_gain = args.f64_or("adaptive-min-gain", cfg.adaptive_min_gain)?;
+    cfg.adaptive_max_gain = args.f64_or("adaptive-max-gain", cfg.adaptive_max_gain)?;
+    anyhow::ensure!(
+        cfg.adaptive_alpha > 0.0 && cfg.adaptive_alpha <= 1.0,
+        "--adaptive-alpha must be in (0, 1]"
+    );
+    anyhow::ensure!(
+        cfg.adaptive_min_gain > 0.0 && cfg.adaptive_min_gain <= cfg.adaptive_max_gain,
+        "--adaptive-min-gain must be in (0, --adaptive-max-gain]"
+    );
+    Ok(())
 }
 
 /// Append CSV rows to a file, writing the header when the file is new.

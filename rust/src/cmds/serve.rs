@@ -1,7 +1,8 @@
 //! `infercept serve` — the end-to-end real-execution path: AOT-compiled
 //! mini model on the PJRT CPU client, serving a generated augmented-LLM
-//! workload with real batched forward passes, real KV paging, real swap
-//! copies, and real (scaled) interception timers.
+//! workload through the session front ([`crate::serving::EngineFront`])
+//! with real batched forward passes, real KV paging, real swap copies, and
+//! real (scaled) interception timers.
 
 use anyhow::Result;
 
@@ -11,11 +12,12 @@ use crate::util::cli::Args;
 mod real {
     use anyhow::{anyhow, Result};
 
+    use crate::cmds::apply_adaptive_args;
     use crate::config::EngineConfig;
     use crate::coordinator::policy::Policy;
-    use crate::engine::Engine;
     use crate::profiler;
     use crate::runtime::PjrtBackend;
+    use crate::serving::EngineFront;
     use crate::util::cli::Args;
     use crate::workload::{WorkloadGen, WorkloadKind};
 
@@ -46,7 +48,7 @@ mod real {
         );
         backend.set_profile(profile.clone());
 
-        let cfg = EngineConfig {
+        let mut cfg = EngineConfig {
             policy,
             block_size: geom.block_size,
             num_gpu_blocks: geom.num_blocks,
@@ -62,7 +64,11 @@ mod real {
             max_seq_tokens: geom.max_seq_tokens(),
             max_iterations: 2_000_000,
             adaptive_target_wait_us: crate::config::DEFAULT_ADAPTIVE_TARGET_WAIT_US,
+            adaptive_alpha: crate::config::DEFAULT_ADAPTIVE_ALPHA,
+            adaptive_min_gain: crate::config::DEFAULT_ADAPTIVE_MIN_GAIN,
+            adaptive_max_gain: crate::config::DEFAULT_ADAPTIVE_MAX_GAIN,
         };
+        apply_adaptive_args(&mut cfg, args)?;
 
         // Mini models cap sequences at max_seq_tokens; scale contexts down and
         // leave one max-chunk headroom for padded prefill.
@@ -78,10 +84,11 @@ mod real {
             cfg.policy.name
         );
 
-        let mut engine = Engine::new(Box::new(backend), cfg);
+        let mut front = EngineFront::new(Box::new(backend), cfg);
         let t0 = std::time::Instant::now();
-        let rep = engine.run_trace(&trace)?;
-        engine.check_invariants()?;
+        let rep = front.run_trace(&trace)?;
+        front.engine().check_invariants()?;
+        let metrics = &front.engine().metrics;
         println!("\ncompleted in {:.1}s wall", t0.elapsed().as_secs_f64());
         println!("{}", rep.summary_line());
         println!(
@@ -89,9 +96,9 @@ mod real {
              recompute-fwd {:.1}%  swap out/in {}/{} tokens",
             rep.iterations,
             rep.compute_s,
-            engine.metrics.decode_tokens,
-            engine.metrics.prefill_tokens,
-            engine.metrics.recompute_tokens,
+            metrics.decode_tokens,
+            metrics.prefill_tokens,
+            metrics.recompute_tokens,
             rep.recompute_fwd_fraction * 100.0,
             rep.swapped_out_tokens,
             rep.swapped_in_tokens,

@@ -1,10 +1,12 @@
-//! `infercept sim` — one policy × one workload on the simulated backend.
+//! `infercept sim` — one policy × one workload on the simulated backend,
+//! replayed through the serving front ([`crate::serving::EngineFront`]).
 
 use anyhow::{anyhow, Result};
 
-use crate::cmds::sim_run_once;
+use crate::cmds::{apply_adaptive_args, run_once_with};
+use crate::config::EngineConfig;
 use crate::coordinator::policy::Policy;
-use crate::sim::SimModelSpec;
+use crate::sim::{SimBackend, SimModelSpec};
 use crate::util::cli::Args;
 use crate::workload::{WorkloadGen, WorkloadKind};
 
@@ -22,7 +24,9 @@ pub fn run(args: &Args) -> Result<()> {
     let trace = WorkloadGen::new(kind, seed)
         .with_ctx_scale(1.0, spec.max_seq_tokens.min(spec.gpu_blocks * spec.block_size / 4))
         .generate(n, rate);
-    let rep = sim_run_once(&spec, policy, &trace, seed)?;
+    let mut cfg = EngineConfig::for_sim(&spec, policy).with_seed(seed);
+    apply_adaptive_args(&mut cfg, args)?;
+    let rep = run_once_with(cfg, Box::new(SimBackend::new(spec.clone())), &trace)?;
     println!("model={} workload={} rate={rate} n={n}", spec.name, kind.name());
     println!("{}", rep.summary_line());
     println!(

@@ -9,6 +9,11 @@ use crate::sim::SimModelSpec;
 /// Default [`EngineConfig::adaptive_target_wait_us`] (250 ms of engine
 /// clock), shared by every config constructor.
 pub const DEFAULT_ADAPTIVE_TARGET_WAIT_US: u64 = 250_000;
+/// Default EWMA smoothing factor of the adaptive admission controller.
+pub const DEFAULT_ADAPTIVE_ALPHA: f64 = 0.2;
+/// Default clamp range for the adaptive admission multiplier.
+pub const DEFAULT_ADAPTIVE_MIN_GAIN: f64 = 0.5;
+pub const DEFAULT_ADAPTIVE_MAX_GAIN: f64 = 4.0;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -42,6 +47,11 @@ pub struct EngineConfig {
     /// adaptive admission controller (`--policy adaptive`); ignored by the
     /// static policies.
     pub adaptive_target_wait_us: u64,
+    /// EWMA smoothing factor of the adaptive controller, in (0, 1].
+    pub adaptive_alpha: f64,
+    /// Clamp range for the adaptive admission multiplier.
+    pub adaptive_min_gain: f64,
+    pub adaptive_max_gain: f64,
 }
 
 impl EngineConfig {
@@ -63,6 +73,9 @@ impl EngineConfig {
             max_seq_tokens: spec.max_seq_tokens,
             max_iterations: 0,
             adaptive_target_wait_us: DEFAULT_ADAPTIVE_TARGET_WAIT_US,
+            adaptive_alpha: DEFAULT_ADAPTIVE_ALPHA,
+            adaptive_min_gain: DEFAULT_ADAPTIVE_MIN_GAIN,
+            adaptive_max_gain: DEFAULT_ADAPTIVE_MAX_GAIN,
         }
     }
 

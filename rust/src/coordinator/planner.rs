@@ -5,8 +5,11 @@
 //! (queues, per-request state, cache occupancy, forward profile) and the
 //! planner turns it into a typed [`SchedPlan`] through five stages:
 //!
-//!  1. **Forward estimate** ([`estimate_forward`]) — the expected iteration
-//!     time `T_fwd(B_i)` from the decode candidates and the §4.2 recompute
+//!  1. **Forward estimate** ([`estimate_forward`] /
+//!     [`estimate_forward_scaled`], dispatched through
+//!     `SchedPolicy::estimate_forward` so a policy that reshapes admission
+//!     also reshapes the estimate) — the expected iteration time
+//!     `T_fwd(B_i)` from the decode candidates and the §4.2 recompute
 //!     chunk, which sizes the swap limit `N_i` (§4.1).
 //!  2. **Swap budgets** — split `N_i` between swap-in and swap-out under
 //!     the space-conservation constraints (§4.1,
@@ -279,12 +282,28 @@ pub struct FwdEstimate {
     pub expected_fwd_us: Micros,
 }
 
+/// The paper's estimate: decode candidates capped by the backend batch,
+/// chunk sized by §4.2, no admission scaling.
 pub fn estimate_forward(snap: &SchedSnapshot) -> FwdEstimate {
-    let decode_cands = snap.running.len().min(snap.max_decode_batch);
+    estimate_forward_scaled(snap, snap.max_decode_batch, 1.0)
+}
+
+/// Policy-aware estimate: `decode_cap` bounds the decode candidates (a
+/// policy that shrinks its `decode_batch_cap` passes its own cap), and
+/// `admission_scale` scales the expected recompute chunk
+/// (admission-scaling controllers pass their gain). With
+/// `decode_cap == snap.max_decode_batch` and `admission_scale == 1.0` this
+/// is exactly [`estimate_forward`].
+pub fn estimate_forward_scaled(
+    snap: &SchedSnapshot,
+    decode_cap: usize,
+    admission_scale: f64,
+) -> FwdEstimate {
+    let decode_cands = snap.running.len().min(decode_cap);
     let running_ctx: usize = snap
         .running
         .iter()
-        .take(snap.max_decode_batch)
+        .take(decode_cap)
         .map(|r| snap.reqs[r].processed + 1)
         .sum();
     let pending_head: usize = snap
@@ -293,11 +312,14 @@ pub fn estimate_forward(snap: &SchedSnapshot) -> FwdEstimate {
         .take(4)
         .map(|r| snap.reqs[r].pending_prefill())
         .sum();
-    let chunk_tokens = if snap.policy.chunked_recompute {
+    let mut chunk_tokens = if snap.policy.chunked_recompute {
         chunking::chunk_budget(snap.saturation_tokens, decode_cands, snap.min_chunk)
     } else {
         snap.saturation_tokens.max(pending_head)
     };
+    if admission_scale != 1.0 {
+        chunk_tokens = ((chunk_tokens as f64 * admission_scale) as usize).max(snap.min_chunk);
+    }
     let expected_q = decode_cands + chunk_tokens.min(pending_head);
     let expected_fwd_us = snap.profile.t_fwd(expected_q.max(1), running_ctx);
     FwdEstimate { decode_cands, running_ctx, chunk_tokens, expected_fwd_us }
@@ -465,6 +487,10 @@ fn stage_dispositions(
         kv_bytes_per_token: snap.kv_bytes_per_token,
         chunk_tokens: fwd.chunk_tokens,
         block_size: snap.block_size,
+        // CPU space free *now*, at block granularity: swap-outs apply
+        // before this iteration's swap-ins, so a grant beyond this cannot
+        // move and must be settled by preserve/discard (§4.1 spillover).
+        free_cpu_blocks: snap.cache.cpu_free(),
     };
     let actions =
         policy.decide_interceptions(snap, estimator, views.as_slice(), &stats, out_budget);
@@ -718,8 +744,10 @@ impl Planner {
         let Planner { snap, plan, views, sim, prefill_order } = self;
         plan.clear();
         sim.reset_from(snap);
-        let fwd = estimate_forward(snap);
-        policy.begin_iteration(snap, &fwd);
+        // Feedback first, then the (policy-aware) stage-1 estimate: a
+        // controller's state update may reshape its own estimate.
+        policy.begin_iteration(snap);
+        let fwd = policy.estimate_forward(snap);
         let (out_budget, in_budget) = policy.swap_budgets(snap, &fwd);
         plan.expected_fwd_us = fwd.expected_fwd_us;
         plan.swap_out_budget = out_budget;

@@ -11,18 +11,23 @@
 //! [`SchedSnapshot`] captured at the start of the iteration:
 //!
 //!  1. [`SchedPolicy::begin_iteration`] — feedback hook, called exactly once
-//!     per planning pass after the stage-1 forward estimate. Stateful
-//!     policies (EWMAs, controllers) update themselves here; the snapshot
-//!     carries the observable signals (queue arrival times, occupancy,
-//!     `now`).
-//!  2. [`SchedPolicy::swap_budgets`] — split the §4.1 swap link budget
+//!     per planning pass, before any decision. Stateful policies (EWMAs,
+//!     controllers) update themselves here; the snapshot carries the
+//!     observable signals (queue arrival times, occupancy, `now`).
+//!  2. [`SchedPolicy::estimate_forward`] — the stage-1 expected batch shape
+//!     and `T_fwd(B_i)`, which sizes the §4.1 swap limit. The default
+//!     consults the policy's own [`SchedPolicy::decode_batch_cap`], so a
+//!     policy that shrinks the decode batch automatically reshapes the
+//!     estimate; admission-scaling policies override it to scale the
+//!     expected chunk too.
+//!  3. [`SchedPolicy::swap_budgets`] — split the §4.1 swap link budget
 //!     `N_i` into (swap-out, swap-in) token grants.
-//!  3. [`SchedPolicy::decide_interceptions`] — one [`InterceptAction`] per
+//!  4. [`SchedPolicy::decide_interceptions`] — one [`InterceptAction`] per
 //!     paused request (§4.3), in application order. A request may get a
 //!     `SwapOut` *followed by* a `Discard` (budget-spillover discard, §4.1).
-//!  4. [`SchedPolicy::decode_batch_cap`] — how many running requests may
+//!  5. [`SchedPolicy::decode_batch_cap`] — how many running requests may
 //!     decode this iteration (clamped to the backend maximum).
-//!  5. [`SchedPolicy::prefill_budget`] — the prefill/recompute admission
+//!  6. [`SchedPolicy::prefill_budget`] — the prefill/recompute admission
 //!     token budget (§4.2), queried after decode admission so chunk sizing
 //!     can depend on the admitted decode count.
 //!
@@ -44,7 +49,9 @@
 use crate::config::EngineConfig;
 use crate::coordinator::chunking;
 use crate::coordinator::estimator::DurationEstimator;
-use crate::coordinator::planner::{solve_budgets, FwdEstimate, SchedSnapshot};
+use crate::coordinator::planner::{
+    estimate_forward_scaled, solve_budgets, FwdEstimate, SchedSnapshot,
+};
 use crate::coordinator::scheduler::{decide_interceptions, BatchStats, InterceptAction, PausedView};
 use crate::kvcache::ReqId;
 
@@ -68,7 +75,17 @@ pub trait SchedPolicy {
     fn name(&self) -> &'static str;
 
     /// Feedback hook: called once per planning pass, before any decision.
-    fn begin_iteration(&mut self, _snap: &SchedSnapshot, _fwd: &FwdEstimate) {}
+    fn begin_iteration(&mut self, _snap: &SchedSnapshot) {}
+
+    /// Stage 1 — the expected batch shape and `T_fwd(B_i)` that size the
+    /// §4.1 swap limit. The default is policy-aware: it caps the decode
+    /// candidates by the policy's own [`SchedPolicy::decode_batch_cap`]
+    /// (identical to the paper's estimate when the cap is the backend
+    /// maximum).
+    fn estimate_forward(&mut self, snap: &SchedSnapshot) -> FwdEstimate {
+        let cap = self.decode_batch_cap(snap).min(snap.max_decode_batch);
+        estimate_forward_scaled(snap, cap, 1.0)
+    }
 
     /// Stage 2 — split the §4.1 swap link budget: returns granted
     /// `(swap_out_tokens, swap_in_tokens)`.
@@ -143,12 +160,23 @@ impl AdaptivePolicy {
     pub fn new(target_wait_us: u64) -> AdaptivePolicy {
         AdaptivePolicy {
             target_wait_us: target_wait_us as f64,
-            alpha: 0.2,
-            min_gain: 0.5,
-            max_gain: 4.0,
+            alpha: crate::config::DEFAULT_ADAPTIVE_ALPHA,
+            min_gain: crate::config::DEFAULT_ADAPTIVE_MIN_GAIN,
+            max_gain: crate::config::DEFAULT_ADAPTIVE_MAX_GAIN,
             ewma_wait_us: 0.0,
             gain: 1.0,
         }
+    }
+
+    /// Constructor with every knob explicit (the CLI path:
+    /// `--adaptive-alpha` / `--adaptive-min-gain` / `--adaptive-max-gain`).
+    pub fn with_knobs(
+        target_wait_us: u64,
+        alpha: f64,
+        min_gain: f64,
+        max_gain: f64,
+    ) -> AdaptivePolicy {
+        AdaptivePolicy { alpha, min_gain, max_gain, ..AdaptivePolicy::new(target_wait_us) }
     }
 
     /// Current admission multiplier (observability / tests).
@@ -167,7 +195,7 @@ impl SchedPolicy for AdaptivePolicy {
         "adaptive"
     }
 
-    fn begin_iteration(&mut self, snap: &SchedSnapshot, _fwd: &FwdEstimate) {
+    fn begin_iteration(&mut self, snap: &SchedSnapshot) {
         // Observed queue latency: the longest wait among never-served
         // waiting requests (processed == 0 and no recompute high-water
         // mark). Under `keep_original_arrival` a discarded-resumed or
@@ -190,6 +218,14 @@ impl SchedPolicy for AdaptivePolicy {
         };
     }
 
+    /// Admission scaling also reshapes the stage-1 estimate (ROADMAP
+    /// follow-on): the same gain that scales `prefill_budget` scales the
+    /// expected recompute chunk, so the §4.1 swap limit `N_i` tracks the
+    /// batch this policy will actually admit.
+    fn estimate_forward(&mut self, snap: &SchedSnapshot) -> FwdEstimate {
+        estimate_forward_scaled(snap, snap.max_decode_batch, self.gain)
+    }
+
     fn prefill_budget(&mut self, snap: &SchedSnapshot, admitted_decode: usize) -> usize {
         let base = default_prefill_budget(snap, admitted_decode);
         ((base as f64 * self.gain) as usize).max(snap.min_chunk)
@@ -198,12 +234,17 @@ impl SchedPolicy for AdaptivePolicy {
 
 /// Build the scheduling-policy object an engine configuration asks for:
 /// `--policy adaptive` gets the [`AdaptivePolicy`] controller (tuned by
-/// [`EngineConfig::adaptive_target_wait_us`]); every other preset runs
-/// through [`InferceptPolicy`], whose behavior the preset's switch-set
-/// fully determines.
+/// [`EngineConfig::adaptive_target_wait_us`] and the alpha/gain-clamp
+/// knobs); every other preset runs through [`InferceptPolicy`], whose
+/// behavior the preset's switch-set fully determines.
 pub fn build(cfg: &EngineConfig) -> Box<dyn SchedPolicy> {
     match cfg.policy.name {
-        "adaptive" => Box::new(AdaptivePolicy::new(cfg.adaptive_target_wait_us)),
+        "adaptive" => Box::new(AdaptivePolicy::with_knobs(
+            cfg.adaptive_target_wait_us,
+            cfg.adaptive_alpha,
+            cfg.adaptive_min_gain,
+            cfg.adaptive_max_gain,
+        )),
         _ => Box::new(InferceptPolicy),
     }
 }
@@ -308,8 +349,18 @@ mod tests {
                 kv_bytes_per_token: s.kv_bytes_per_token,
                 chunk_tokens: fwd.chunk_tokens,
                 block_size: s.block_size,
+                free_cpu_blocks: s.cache.cpu_free(),
             };
             let mut p = InferceptPolicy;
+            // The default estimate must reproduce the free function exactly
+            // (decode cap == backend maximum, no admission scaling).
+            let pf = p.estimate_forward(&s);
+            assert_eq!(
+                (pf.decode_cands, pf.running_ctx, pf.chunk_tokens, pf.expected_fwd_us),
+                (fwd.decode_cands, fwd.running_ctx, fwd.chunk_tokens, fwd.expected_fwd_us),
+                "{}",
+                s.policy.name
+            );
             assert_eq!(p.swap_budgets(&s, &fwd), solve_budgets(&s, &fwd), "{}", s.policy.name);
             for budget in [0, 64, 10_000] {
                 assert_eq!(
@@ -335,9 +386,8 @@ mod tests {
     fn adaptive_gain_rises_under_pressure_and_decays_when_idle() {
         let mut p = AdaptivePolicy::new(200_000);
         let busy = snapshot(Policy::adaptive(), 2_000_000); // 2 s head wait
-        let fwd = estimate_forward(&busy);
         for _ in 0..30 {
-            p.begin_iteration(&busy, &fwd);
+            p.begin_iteration(&busy);
         }
         assert!(p.gain() > 1.0, "gain {}", p.gain());
         assert!(p.observed_wait_us() > 200_000.0);
@@ -346,7 +396,7 @@ mod tests {
         let mut idle = snapshot(Policy::adaptive(), 0);
         idle.waiting.clear(); // empty queue: zero observed wait
         for _ in 0..60 {
-            p.begin_iteration(&idle, &fwd);
+            p.begin_iteration(&idle);
         }
         assert!(p.gain() < 1.0, "gain {}", p.gain());
         let idle_budget = p.prefill_budget(&idle, 0);
@@ -361,9 +411,8 @@ mod tests {
         let mut p = AdaptivePolicy::new(200_000);
         let mut s = snapshot(Policy::adaptive(), 30_000_000);
         s.reqs.get_mut(&1).unwrap().recompute_hwm = 150;
-        let fwd = estimate_forward(&s);
         for _ in 0..20 {
-            p.begin_iteration(&s, &fwd);
+            p.begin_iteration(&s);
         }
         assert_eq!(p.observed_wait_us(), 0.0);
         assert!(p.gain() < 1.0, "gain {}", p.gain());
@@ -373,17 +422,80 @@ mod tests {
     fn adaptive_gain_stays_clamped() {
         let mut p = AdaptivePolicy::new(100);
         let busy = snapshot(Policy::adaptive(), 50_000_000);
-        let fwd = estimate_forward(&busy);
         for _ in 0..200 {
-            p.begin_iteration(&busy, &fwd);
+            p.begin_iteration(&busy);
         }
         assert!(p.gain() <= p.max_gain);
         let mut idle = snapshot(Policy::adaptive(), 0);
         idle.waiting.clear();
         for _ in 0..200 {
-            p.begin_iteration(&idle, &fwd);
+            p.begin_iteration(&idle);
         }
         assert!(p.gain() >= p.min_gain);
+    }
+
+    #[test]
+    fn adaptive_estimate_tracks_admission_scaling() {
+        // ROADMAP follow-on: the gain that scales prefill admission must
+        // also scale the stage-1 expected chunk (which sizes the §4.1 swap
+        // limit via T_fwd).
+        let mut p = AdaptivePolicy::new(200_000);
+        let busy = snapshot(Policy::adaptive(), 2_000_000);
+        let base = estimate_forward(&busy);
+        for _ in 0..30 {
+            p.begin_iteration(&busy);
+        }
+        assert!(p.gain() > 1.0);
+        let scaled = p.estimate_forward(&busy);
+        assert!(
+            scaled.chunk_tokens > base.chunk_tokens,
+            "{} vs {}",
+            scaled.chunk_tokens,
+            base.chunk_tokens
+        );
+        assert!(scaled.expected_fwd_us >= base.expected_fwd_us);
+    }
+
+    /// A test policy that halves the decode batch.
+    struct HalfDecode;
+    impl SchedPolicy for HalfDecode {
+        fn name(&self) -> &'static str {
+            "half-decode"
+        }
+        fn decode_batch_cap(&mut self, snap: &SchedSnapshot) -> usize {
+            (snap.max_decode_batch / 2).max(1)
+        }
+    }
+
+    #[test]
+    fn default_estimate_respects_decode_batch_cap() {
+        // A policy that shrinks decode_batch_cap reshapes the stage-1
+        // estimate without overriding estimate_forward.
+        let mut s = snapshot(Policy::infercept(), 10_000);
+        s.max_decode_batch = 4;
+        let ctx: usize = 64;
+        for req in [10u64, 11, 12, 13] {
+            s.running.push(req);
+            s.reqs
+                .insert(req, ReqSnapshot::basic(ReqState::Running, 0, ctx + 1, ctx));
+            s.cache.set_seq(req, ctx.div_ceil(BS), 0, ctx);
+        }
+        let full = estimate_forward(&s);
+        assert_eq!(full.decode_cands, 4);
+        let mut half = HalfDecode;
+        let capped = half.estimate_forward(&s);
+        assert_eq!(capped.decode_cands, 2);
+        assert!(capped.running_ctx < full.running_ctx);
+    }
+
+    #[test]
+    fn with_knobs_sets_every_field() {
+        let p = AdaptivePolicy::with_knobs(10_000, 0.5, 0.25, 8.0);
+        assert_eq!(p.target_wait_us, 10_000.0);
+        assert_eq!(p.alpha, 0.5);
+        assert_eq!(p.min_gain, 0.25);
+        assert_eq!(p.max_gain, 8.0);
+        assert_eq!(p.gain(), 1.0);
     }
 
     #[test]

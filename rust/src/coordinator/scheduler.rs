@@ -116,6 +116,11 @@ pub struct BatchStats {
     pub chunk_tokens: usize,
     /// KV block size in tokens (swap moves whole blocks).
     pub block_size: usize,
+    /// CPU swap slots free at decision time, in blocks. Swap-outs apply
+    /// *before* this iteration's swap-ins, so a budgeted grant beyond this
+    /// moves nothing — the decision clamps to it and settles the residual
+    /// by preserve/discard (§4.1 spillover at block granularity).
+    pub free_cpu_blocks: usize,
 }
 
 /// The preserve-vs-discard arm of the disposition decision (what happens
@@ -164,6 +169,18 @@ pub fn decide_interceptions(
     mut swap_out_budget: usize,
 ) -> Vec<(ReqId, InterceptAction)> {
     let mut out = Vec::with_capacity(views.len());
+    let bs = batch.block_size.max(1);
+    let budgeted = policy.swap == SwapMode::Budgeted;
+    // CPU swap slots free *now*, at block granularity. Budgeted grants are
+    // clamped to this: apply order is out-then-in, so CPU space freed by
+    // this iteration's swap-ins is only usable next iteration, and a grant
+    // beyond `cpu_left` would move zero blocks while parking the request as
+    // SwappingOut. (The Sync baseline keeps its paper semantics: whole-
+    // context moves, clamped only by the cache at apply time.)
+    let mut cpu_left = batch.free_cpu_blocks;
+    // Mid-swap requests whose grant was CPU-clamped to zero blocks: their
+    // GPU remainder re-enters the preserve/discard decision below.
+    let mut clamped: Vec<ReqId> = Vec::new();
 
     // Requests already mid-swap keep draining the budget first: their GPU
     // remainder is pure waste until it moves.
@@ -177,17 +194,31 @@ pub fn decide_interceptions(
         if grant == 0 {
             break; // budget exhausted: no zero-grant decision entries
         }
-        swap_out_budget -= grant;
-        out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
+        if budgeted {
+            let movable = grant.div_ceil(bs).min(cpu_left);
+            if movable == 0 {
+                clamped.push(v.req);
+                continue;
+            }
+            let tokens = grant.min(movable * bs);
+            swap_out_budget -= tokens;
+            cpu_left -= movable;
+            out.push((v.req, InterceptAction::SwapOut { tokens }));
+        } else {
+            swap_out_budget -= grant;
+            out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
+        }
     }
 
-    // Fresh interceptions + re-evaluated preserved requests.
+    // Fresh interceptions + re-evaluated preserved requests + CPU-clamped
+    // mid-swap residuals.
     let mut candidates: Vec<(f64, bool, &PausedView)> = views
         .iter()
         .filter(|v| {
             matches!(v.disposition, Disposition::Fresh)
                 || (v.disposition == Disposition::Preserved
                     && policy.preserve == PreserveMode::MinWaste)
+                || clamped.contains(&v.req)
         })
         .map(|v| {
             let est = estimator.remaining_us(v.kind, v.elapsed_us, v.actual_total_us);
@@ -215,26 +246,37 @@ pub fn decide_interceptions(
                 out.push((v.req, InterceptAction::SwapOut { tokens: v.gpu_tokens }));
             }
             (swap_mode, preserve_mode) => {
-                // Budgeted swap takes the highest-waste requests first.
-                if swap_mode == SwapMode::Budgeted && swap_out_budget > 0 && v.gpu_tokens > 0 {
-                    let grant = v.gpu_tokens.min(swap_out_budget);
+                // Budgeted swap takes the highest-waste requests first —
+                // bounded by the link budget AND by free CPU blocks.
+                let want = v.gpu_tokens.min(swap_out_budget);
+                let movable = if swap_mode == SwapMode::Budgeted {
+                    want.div_ceil(bs).min(cpu_left)
+                } else {
+                    0
+                };
+                if movable > 0 {
+                    let grant = want.min(movable * bs);
                     swap_out_budget -= grant;
+                    cpu_left -= movable;
                     out.push((v.req, InterceptAction::SwapOut { tokens: grant }));
-                    // §4.1: spillover past the budget is settled by the
-                    // preserve/discard decision, not implicitly preserved.
-                    // A discard-side residual frees its GPU tail now (the
-                    // CPU-resident prefix from the partial swap stays).
-                    // Swap moves whole blocks, so a residual exists only
-                    // when the grant rounds to fewer blocks than the
-                    // GPU-resident context occupies.
-                    let bs = batch.block_size.max(1);
-                    if grant.div_ceil(bs) < v.gpu_tokens.div_ceil(bs)
+                    // §4.1: spillover past the budget (or past free CPU
+                    // space) is settled by the preserve/discard decision,
+                    // not implicitly preserved. A discard-side residual
+                    // frees its GPU tail now (the CPU-resident prefix from
+                    // the partial swap stays). Swap moves whole blocks, so
+                    // a residual exists only when fewer blocks move than
+                    // the GPU-resident context occupies.
+                    if movable < v.gpu_tokens.div_ceil(bs)
                         && preserve_or_discard(preserve_mode, prefer_preserve, v.kind)
                             == InterceptAction::Discard
                     {
                         out.push((v.req, InterceptAction::Discard));
                     }
                 } else {
+                    // No budget, no CPU space, or nothing GPU-resident:
+                    // the whole (remaining) context is settled by
+                    // preserve/discard — including CPU-clamped grants that
+                    // would otherwise park as zero-moved SwappingOut.
                     let act = preserve_or_discard(preserve_mode, prefer_preserve, v.kind);
                     out.push((v.req, act));
                 }
@@ -266,6 +308,7 @@ mod tests {
             kv_bytes_per_token: 458_752,
             chunk_tokens: 256,
             block_size: 16,
+            free_cpu_blocks: 4096, // plentiful unless a test says otherwise
         }
     }
 
@@ -435,6 +478,89 @@ mod tests {
         let views = [view(1, AugmentKind::Chatbot, 400)];
         let acts = decide_interceptions(&p, &est(), &profile(), &views, &batch(), 500);
         assert_eq!(acts, vec![(1, InterceptAction::SwapOut { tokens: 400 })]);
+    }
+
+    #[test]
+    fn cpu_clamped_grant_routes_through_discard() {
+        // Zero free CPU blocks: a budgeted grant cannot move anything this
+        // iteration (swap-ins only free CPU space *after* outs apply), so
+        // instead of parking as a zero-moved SwappingOut the context is
+        // settled by preserve/discard — here PreserveMode::Never discards.
+        let p = Policy::ablation_swap();
+        let views = [view(1, AugmentKind::Chatbot, 2000)];
+        let mut b = batch();
+        b.free_cpu_blocks = 0;
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &b, 500);
+        assert_eq!(acts, vec![(1, InterceptAction::Discard)]);
+    }
+
+    #[test]
+    fn cpu_clamp_is_block_granular() {
+        // One free CPU block: exactly one 16-token block moves; the §4.1
+        // residual routes through discard in the same plan.
+        let p = Policy::ablation_swap();
+        let views = [view(1, AugmentKind::Chatbot, 2000)];
+        let mut b = batch();
+        b.free_cpu_blocks = 1;
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &b, 500);
+        assert_eq!(
+            acts,
+            vec![
+                (1, InterceptAction::SwapOut { tokens: 16 }),
+                (1, InterceptAction::Discard),
+            ]
+        );
+    }
+
+    #[test]
+    fn cpu_clamped_mid_swap_routes_through_preserve_or_discard() {
+        // A mid-swap request whose next grant is CPU-clamped to zero blocks
+        // must not linger as SwappingOut: its GPU remainder re-enters the
+        // preserve/discard decision (the ROADMAP spillover gap).
+        let p = Policy::ablation_swap();
+        let mut v = view(1, AugmentKind::Chatbot, 1000);
+        v.disposition = Disposition::SwappingOut;
+        v.gpu_tokens = 400;
+        let mut b = batch();
+        b.free_cpu_blocks = 0;
+        let acts = decide_interceptions(&p, &est(), &profile(), &[v], &b, 500);
+        assert_eq!(acts, vec![(1, InterceptAction::Discard)]);
+    }
+
+    #[test]
+    fn cpu_clamped_mid_swap_can_win_preserve() {
+        // Under min-waste, a short automated call's clamped residual stays
+        // resident (Preserve) rather than being discarded.
+        let p = Policy::infercept();
+        let mut v = view(1, AugmentKind::Math, 1400);
+        v.disposition = Disposition::SwappingOut;
+        v.gpu_tokens = 400;
+        let mut b = batch();
+        b.free_cpu_blocks = 0;
+        let acts = decide_interceptions(&p, &est(), &profile(), &[v], &b, 500);
+        assert_eq!(acts, vec![(1, InterceptAction::Preserve)]);
+    }
+
+    #[test]
+    fn cpu_clamp_shared_across_candidates() {
+        // Two high-waste chatbots, CPU space for only the first's grant:
+        // the second gets no budget-backed swap and falls to the argmin.
+        let p = Policy::ablation_swap();
+        let views = [
+            view(1, AugmentKind::Chatbot, 2000),
+            view(2, AugmentKind::Chatbot, 1900),
+        ];
+        let mut b = batch();
+        b.free_cpu_blocks = 2000_usize.div_ceil(16);
+        let acts = decide_interceptions(&p, &est(), &profile(), &views, &b, 10_000);
+        let get_all = |r| {
+            acts.iter()
+                .filter(|(q, _)| *q == r)
+                .map(|(_, a)| *a)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(get_all(1), vec![InterceptAction::SwapOut { tokens: 2000 }]);
+        assert_eq!(get_all(2), vec![InterceptAction::Discard]);
     }
 
     #[test]

@@ -177,6 +177,9 @@ impl Engine {
 
         // ---- Sampled tokens: generation progress --------------------------
         for &(req, tok) in outcome.decode_tokens.iter().chain(outcome.prefill_tokens.iter()) {
+            self.events.emit(req, || {
+                crate::serving::EngineEvent::Token { req, token: tok, at: now_end }
+            });
             self.handle_sampled(req, tok, now_end);
         }
 

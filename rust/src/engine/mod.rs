@@ -1,7 +1,9 @@
 //! The serving engine: event loop + plan application (Fig. 6).
 //!
 //! Each iteration:
-//!  1. admit arrivals and collect completed API calls (resumptions),
+//!  1. admit arrivals and collect resolved interceptions from the pluggable
+//!     [`crate::serving::InterceptSource`] (scripted timers by default;
+//!     client-resolved resumptions under the serving front),
 //!  2. capture an immutable snapshot of queues + cache occupancy and hand
 //!     it to the staged planner ([`crate::coordinator::planner`]), which
 //!     decides dispositions (§4.3/§4.4), swap budgets (§4.1), and the
@@ -14,6 +16,27 @@
 //! All scheduling policy lives in `coordinator/`; this module only owns
 //! request lifecycle state and the mechanical replay of a
 //! [`crate::coordinator::planner::SchedPlan`] (see `engine/apply.rs`).
+//!
+//! # Serving entry points
+//!
+//! The engine exposes two client surfaces over the same loop:
+//!
+//! * **Trace replay** — [`Engine::load_trace`] / [`Engine::run_trace`]:
+//!   requests materialize at scripted arrival times and every interception
+//!   resolves on an internal timer. This is the experiment path (`sim`,
+//!   `fig2`, …) and is itself implemented on [`Engine::submit_script`].
+//! * **Sessions** — [`crate::serving::EngineFront`] wraps the engine,
+//!   accepting live [`crate::serving::SessionSpec`] submissions whose
+//!   lifecycle streams to clients as typed
+//!   [`crate::serving::EngineEvent`]s, and whose interceptions may be
+//!   *externally resolved*: the request pauses (context preserved /
+//!   swapped / discarded per policy, §4.3) until the client calls
+//!   [`crate::serving::SessionHandle::resume_with`] with the API's
+//!   returned tokens.
+//!
+//! Event emission ([`crate::serving::EventBus`]) is strictly observational
+//! — a run with subscribers makes bit-identical scheduling decisions to a
+//! run without them.
 
 mod apply;
 pub mod backend;
@@ -27,7 +50,6 @@ use anyhow::{bail, Result};
 pub use backend::ExecBackend;
 use request::{ReqState, Request};
 
-use crate::augment::executor::ApiExecutor;
 use crate::config::EngineConfig;
 use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::planner::Planner;
@@ -35,9 +57,23 @@ use crate::coordinator::sched_policy::{self, SchedPolicy};
 use crate::coordinator::scheduler::{Disposition, FcfsQueue};
 use crate::kvcache::{CacheManager, ReqId};
 use crate::metrics::{Recorder, RequestRecord, RunReport};
+use crate::serving::events::{EngineEvent, EventBus};
+use crate::serving::intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
 use crate::util::rng::Pcg;
 use crate::util::Micros;
-use crate::workload::RequestTrace;
+use crate::workload::{RequestScript, RequestTrace};
+
+/// Outcome of one [`Engine::pump_round`] of the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PumpRound {
+    /// Progress was made, or the clock jumped to a future event.
+    Progressed,
+    /// Nothing runnable and no future engine-clock event, but interceptions
+    /// await external resolution — a client must act.
+    AwaitingExternal,
+    /// Every submitted request finished.
+    Drained,
+}
 
 pub struct Engine {
     backend: Box<dyn ExecBackend>,
@@ -48,7 +84,11 @@ pub struct Engine {
     running: FcfsQueue,
     paused: Vec<ReqId>,
     requests: HashMap<ReqId, Request>,
-    executor: ApiExecutor,
+    /// Who resolves interceptions (scripted timers by default; the serving
+    /// front installs a client-aware source).
+    intercepts: Box<dyn InterceptSource>,
+    /// Per-session event fan-out (no subscribers in plain trace replay).
+    events: EventBus,
     estimator: DurationEstimator,
     planner: Planner,
     /// The pluggable decision object every planning pass dispatches through
@@ -58,6 +98,7 @@ pub struct Engine {
     rng: Pcg,
     /// Pending arrivals, soonest last (popped from the back).
     pending: Vec<(Micros, ReqId)>,
+    next_id: ReqId,
     unfinished: usize,
     /// Scratch for the Eq. 1/4 rebuild set (reused across iterations).
     rebuild_scratch: Vec<ReqId>,
@@ -69,7 +110,8 @@ impl Engine {
             CacheManager::new(cfg.block_size, cfg.num_gpu_blocks, cfg.num_cpu_blocks);
         cache.watermark_blocks = cfg.watermark_blocks;
         let estimator = DurationEstimator::new(cfg.policy.estimator, cfg.time_scale);
-        let executor = ApiExecutor::new(cfg.time_scale);
+        let intercepts: Box<dyn InterceptSource> =
+            Box::new(ScriptedTimers::new(cfg.time_scale));
         let sched = sched_policy::build(&cfg);
         let rng = Pcg::new(cfg.seed ^ 0xabcdef);
         Engine {
@@ -81,13 +123,15 @@ impl Engine {
             running: FcfsQueue::default(),
             paused: Vec::new(),
             requests: HashMap::new(),
-            executor,
+            intercepts,
+            events: EventBus::default(),
             estimator,
             planner: Planner::new(),
             sched,
             metrics: Recorder::default(),
             rng,
             pending: Vec::new(),
+            next_id: 1,
             unfinished: 0,
             rebuild_scratch: Vec::new(),
         }
@@ -105,6 +149,22 @@ impl Engine {
         self.requests.get(&id)
     }
 
+    /// Current engine-clock time.
+    pub fn now(&self) -> Micros {
+        self.backend.now()
+    }
+
+    /// Requests submitted but not yet finished.
+    pub fn unfinished(&self) -> usize {
+        self.unfinished
+    }
+
+    /// In-flight interceptions waiting on a client (no engine-clock
+    /// completion time). The engine is not stuck while this is non-zero.
+    pub fn awaiting_external(&self) -> usize {
+        self.intercepts.awaiting_external()
+    }
+
     /// Swap in a custom scheduling-policy object (must happen before the
     /// run; decisions from the previous object are not revisited).
     pub fn set_sched_policy(&mut self, policy: Box<dyn SchedPolicy>) {
@@ -115,29 +175,74 @@ impl Engine {
         self.sched.name()
     }
 
-    /// Load a trace: requests materialize at their arrival times.
-    pub fn load_trace(&mut self, trace: &RequestTrace) {
+    /// Swap in a custom interception-resolution source (must happen before
+    /// any interception fires; in-flight state does not transfer).
+    pub fn set_intercept_source(&mut self, source: Box<dyn InterceptSource>) {
+        self.intercepts = source;
+    }
+
+    /// Route `req`'s lifecycle events to `tx` (used by the serving front).
+    pub fn subscribe_events(&mut self, req: ReqId, tx: std::sync::mpsc::Sender<EngineEvent>) {
+        self.events.subscribe(req, tx);
+    }
+
+    /// Register one request; it materializes at `arrival_us`. Prompt tokens
+    /// are synthesized from the engine RNG when `prompt` is `None` (the
+    /// trace-replay path — synthesis order is the submission order, so
+    /// sequential submissions reproduce [`Engine::load_trace`] exactly).
+    /// Returns the assigned request id (sequential from 1).
+    ///
+    /// Errors (rather than panics) on a script that cannot fit the engine —
+    /// this is a client-facing surface through the serving front, so a bad
+    /// submission must not take the process down. Rejected submissions
+    /// consume no request id and no RNG draws.
+    pub fn submit_script(
+        &mut self,
+        arrival_us: Micros,
+        script: RequestScript,
+        prompt: Option<Vec<u32>>,
+    ) -> Result<ReqId> {
         let pool_tokens = self.cfg.num_gpu_blocks * self.cfg.block_size;
-        for (i, tr) in trace.iter().enumerate() {
-            let id = i as ReqId + 1;
-            assert!(
-                tr.script.final_context() <= self.cfg.max_seq_tokens
-                    && tr.script.final_context() < pool_tokens,
-                "script {} needs {} tokens; max_seq {} / pool {}",
-                id,
-                tr.script.final_context(),
-                self.cfg.max_seq_tokens,
-                pool_tokens,
+        anyhow::ensure!(
+            script.final_context() <= self.cfg.max_seq_tokens
+                && script.final_context() < pool_tokens,
+            "script needs {} tokens; max_seq {} / pool {}",
+            script.final_context(),
+            self.cfg.max_seq_tokens,
+            pool_tokens,
+        );
+        if let Some(p) = &prompt {
+            anyhow::ensure!(
+                p.len() == script.prompt_tokens as usize,
+                "prompt length {} != script prompt_tokens {}",
+                p.len(),
+                script.prompt_tokens,
             );
-            let prompt: Vec<u32> = (0..tr.script.prompt_tokens)
-                .map(|_| self.rng.next_u32() % self.cfg.vocab)
-                .collect();
-            let req = Request::new(id, tr.arrival_us, tr.script.clone(), prompt);
-            self.requests.insert(id, req);
-            self.pending.push((tr.arrival_us, id));
-            self.unfinished += 1;
         }
-        self.pending.sort_by(|a, b| b.cmp(a)); // soonest last
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt: Vec<u32> = prompt.unwrap_or_else(|| {
+            (0..script.prompt_tokens)
+                .map(|_| self.rng.next_u32() % self.cfg.vocab)
+                .collect()
+        });
+        let req = Request::new(id, arrival_us, script, prompt);
+        self.requests.insert(id, req);
+        // Keep `pending` sorted soonest-last (popped from the back).
+        let pos = self.pending.partition_point(|&(t, r)| (t, r) > (arrival_us, id));
+        self.pending.insert(pos, (arrival_us, id));
+        self.unfinished += 1;
+        Ok(id)
+    }
+
+    /// Load a trace: requests materialize at their arrival times. Panics on
+    /// an unservable script (trace generators are trusted; live sessions go
+    /// through the fallible [`Engine::submit_script`]).
+    pub fn load_trace(&mut self, trace: &RequestTrace) {
+        for tr in trace.iter() {
+            self.submit_script(tr.arrival_us, tr.script.clone(), None)
+                .expect("trace script exceeds engine capacity");
+        }
     }
 
     /// Run until every loaded request finishes. Returns the aggregate report.
@@ -145,33 +250,59 @@ impl Engine {
         self.load_trace(trace);
         self.metrics.run_started = self.backend.now();
         let mut iters: u64 = 0;
-        while self.unfinished > 0 {
-            let worked = self.step()?;
-            iters += 1;
-            if self.cfg.max_iterations > 0 && iters > self.cfg.max_iterations {
-                bail!("max_iterations exceeded with {} unfinished", self.unfinished);
-            }
-            if !worked && !self.advance_idle() {
-                bail!(
-                    "stuck: {} unfinished but no runnable work or future events",
-                    self.unfinished
-                );
+        loop {
+            match self.pump_round(&mut iters)? {
+                PumpRound::Progressed => {}
+                PumpRound::AwaitingExternal => bail!(
+                    "{} interception(s) await external resolution — drive this \
+                     engine through serving::EngineFront",
+                    self.awaiting_external()
+                ),
+                PumpRound::Drained => break,
             }
         }
         self.metrics.run_ended = self.backend.now();
         Ok(self.metrics.report(self.cfg.policy.name, "run"))
     }
 
+    /// Drive one round of the serving loop (shared by [`Engine::run_trace`]
+    /// and the serving front's pump): run an iteration and, if nothing
+    /// could run, jump the clock to the next future event. `iters` is the
+    /// caller's running iteration count, checked against
+    /// `cfg.max_iterations` (the trace path resets it per run; the front
+    /// counts cumulatively over its lifetime).
+    pub fn pump_round(&mut self, iters: &mut u64) -> Result<PumpRound> {
+        if self.unfinished == 0 {
+            return Ok(PumpRound::Drained);
+        }
+        let worked = self.step()?;
+        *iters += 1;
+        if self.cfg.max_iterations > 0 && *iters > self.cfg.max_iterations {
+            bail!("max_iterations exceeded with {} unfinished", self.unfinished);
+        }
+        if !worked && !self.advance_idle() {
+            if self.awaiting_external() > 0 {
+                return Ok(PumpRound::AwaitingExternal);
+            }
+            bail!(
+                "stuck: {} unfinished but no runnable work or future events",
+                self.unfinished
+            );
+        }
+        Ok(if self.unfinished == 0 { PumpRound::Drained } else { PumpRound::Progressed })
+    }
+
     /// Completion time of the next future event (arrival or API return).
     pub fn next_event(&self) -> Option<Micros> {
-        [self.pending.last().map(|(t, _)| *t), self.executor.next_completion()]
+        [self.pending.last().map(|(t, _)| *t), self.intercepts.next_completion()]
             .into_iter()
             .flatten()
             .min()
     }
 
     /// Idle: jump the clock to the next future event. Returns false when no
-    /// such event exists (a stuck engine if work remains).
+    /// such event exists (a stuck engine if work remains — unless an
+    /// externally-resolved interception is pending).
     pub fn advance_idle(&mut self) -> bool {
         match self.next_event() {
             Some(t) => {
@@ -188,8 +319,8 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         let now = self.backend.now();
         self.admit_arrivals(now);
-        for req in self.executor.poll(now) {
-            self.resume(req, now);
+        for r in self.intercepts.poll(now) {
+            self.resume(r, now);
         }
 
         // Plan (pure: snapshot in, typed plan out — no cache/backend
@@ -227,18 +358,49 @@ impl Engine {
             let rq = self.requests.get_mut(&id).unwrap();
             rq.state = ReqState::Waiting;
             self.waiting.push(rq.queue_arrival, id);
+            self.events.emit(id, || EngineEvent::Admitted { req: id, at: now });
         }
     }
 
-    /// An API call finished: append returned tokens and re-queue by
-    /// disposition.
-    fn resume(&mut self, req: ReqId, now: Micros) {
+    /// An interception resolved: append the returned tokens (client-supplied
+    /// for external resolutions, script-synthesized for timers) and re-queue
+    /// by disposition.
+    ///
+    /// Client answers are untrusted: token ids are reduced into the
+    /// vocabulary, and the answer is truncated so the remaining script
+    /// (later generation + later returns) still fits the capacity the
+    /// submit-time check guaranteed — one client cannot wedge the engine
+    /// past `max_seq_tokens` or the GPU pool.
+    fn resume(&mut self, r: Resumption, now: Micros) {
+        let req = r.req;
         let vocab = self.cfg.vocab;
-        let ret: Vec<u32> = {
-            let rq = &self.requests[&req];
-            let int = rq.script.segments[rq.segment].interception.as_ref().unwrap();
-            (0..int.ret_tokens).map(|i| (req as u32 ^ i) % vocab).collect()
+        let ret: Vec<u32> = match r.tokens {
+            Some(tokens) => {
+                let rq = &self.requests[&req];
+                // Context still owed to the script after this return: the
+                // later segments' generation and scripted returns.
+                let reserved: usize = rq.script.segments[rq.segment + 1..]
+                    .iter()
+                    .map(|s| {
+                        s.gen_tokens as usize
+                            + s.interception.as_ref().map_or(0, |i| i.ret_tokens as usize)
+                    })
+                    .sum();
+                let pool_tokens = self.cfg.num_gpu_blocks * self.cfg.block_size;
+                let capacity = self.cfg.max_seq_tokens.min(pool_tokens - 1);
+                let allowed = capacity.saturating_sub(rq.tokens.len() + reserved);
+                if tokens.len() > allowed {
+                    self.metrics.clamped_resume_tokens += (tokens.len() - allowed) as u64;
+                }
+                tokens.into_iter().take(allowed).map(|t| t % vocab).collect()
+            }
+            None => {
+                let rq = &self.requests[&req];
+                let int = rq.script.segments[rq.segment].interception.as_ref().unwrap();
+                (0..int.ret_tokens).map(|i| (req as u32 ^ i) % vocab).collect()
+            }
         };
+        let ret_len = ret.len();
         let keep_arrival = self.cfg.policy.keep_original_arrival;
         let has_cpu = self.cache.cpu_blocks_of(req) > 0;
         let rq = self.requests.get_mut(&req).unwrap();
@@ -246,6 +408,7 @@ impl Engine {
         rq.tokens.extend(ret);
         rq.segment += 1;
         rq.seg_generated = 0;
+        rq.external_pause = false;
         rq.queue_arrival = if keep_arrival { rq.arrival } else { now };
         self.paused.retain(|r| *r != req);
         if has_cpu {
@@ -255,6 +418,9 @@ impl Engine {
             rq.state = ReqState::Waiting;
             self.waiting.push(rq.queue_arrival, req);
         }
+        self.metrics.interceptions_resolved += 1;
+        self.events
+            .emit(req, || EngineEvent::Resumed { req, tokens: ret_len, at: now });
     }
 
     /// Free a paused request's GPU context (keeping any CPU prefix).
@@ -315,17 +481,37 @@ impl Engine {
             let int = rq.script.segments[rq.segment].interception.as_ref().unwrap();
             (int.kind, int.duration_us)
         };
-        let resume_at = self.executor.dispatch(req, kind, duration, now);
+        let resolution = self.intercepts.dispatch(req, kind, duration, now);
+        let (resume_at, pause_hint, external, payload) = match resolution {
+            InterceptResolution::Internal { resume_at, payload } => {
+                (resume_at, resume_at - now, false, payload)
+            }
+            // No engine-clock completion time: the client resolves this
+            // pause. The scaled script duration remains the estimator's
+            // oracle hint (what the client-side latency is expected to be).
+            InterceptResolution::External { payload } => {
+                let hint =
+                    ((duration as f64) * self.cfg.time_scale).round().max(1.0) as Micros;
+                (0, hint, true, payload)
+            }
+        };
         let rq = self.requests.get_mut(&req).unwrap();
         rq.state = ReqState::Paused;
         rq.disposition = Disposition::Fresh;
         rq.paused_at = now;
         rq.resume_at = resume_at;
         rq.pause_kind = kind;
-        rq.pause_duration_us = resume_at - now;
+        rq.pause_duration_us = pause_hint;
+        rq.external_pause = external;
         rq.interceptions_fired += 1;
         self.running.remove(req);
         self.paused.push(req);
+        self.metrics.interceptions_dispatched += 1;
+        if external {
+            self.metrics.external_interceptions += 1;
+        }
+        self.events
+            .emit(req, move || EngineEvent::Intercepted { req, kind, payload, at: now });
     }
 
     fn finish(&mut self, req: ReqId, now: Micros) {
@@ -336,7 +522,7 @@ impl Engine {
         self.cache.release(req);
         self.unfinished -= 1;
         let rq = &self.requests[&req];
-        self.metrics.finish_request(RequestRecord {
+        let record = RequestRecord {
             req,
             arrival: rq.arrival,
             first_token_at: rq.first_token_at,
@@ -344,7 +530,11 @@ impl Engine {
             intercepted_us: rq.intercepted_us,
             output_tokens: rq.output_tokens,
             interceptions: rq.interceptions_fired,
-        });
+        };
+        self.events
+            .emit_final(req, || EngineEvent::Finished { req, record: record.clone() });
+        self.intercepts.on_finished(req);
+        self.metrics.finish_request(record);
     }
 
     /// Test/bench hook: number of in-flight + queued requests by state.

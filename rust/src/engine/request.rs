@@ -56,10 +56,18 @@ pub struct Request {
     /// Pause bookkeeping.
     pub disposition: Disposition,
     pub paused_at: Micros,
+    /// Engine-clock completion time of an internally-timed interception
+    /// (0 while externally paused — no completion time exists until the
+    /// client resumes the session).
     pub resume_at: Micros,
     pub pause_kind: AugmentKind,
-    /// Scaled (engine-clock) duration of the in-flight interception.
+    /// Scaled (engine-clock) duration of the in-flight interception; for
+    /// external pauses this is the script's expectation, kept as the
+    /// oracle estimator's hint.
     pub pause_duration_us: Micros,
+    /// True while paused on an externally-resolved interception (the
+    /// client finishes the call via `SessionHandle::resume_with`).
+    pub external_pause: bool,
 
     /// Metrics.
     pub first_token_at: Option<Micros>,
@@ -90,6 +98,7 @@ impl Request {
             resume_at: 0,
             pause_kind: kind,
             pause_duration_us: 0,
+            external_pause: false,
             first_token_at: None,
             finished_at: None,
             intercepted_us: 0,

@@ -14,7 +14,10 @@
 //! * **L3 (this crate)** — the serving coordinator: iteration-level
 //!   scheduler, paged KV-cache manager, waste estimator, swap budgets,
 //!   augmentation executor, metrics ([`engine`], [`coordinator`],
-//!   [`kvcache`], [`augment`], [`workload`], [`metrics`]).
+//!   [`kvcache`], [`augment`], [`workload`], [`metrics`]), and the
+//!   session-oriented serving front ([`serving`]): submit sessions, stream
+//!   typed events, resolve interceptions externally via
+//!   [`serving::SessionHandle::resume_with`].
 //! * **L2/L1 (python/, build-time only)** — a paged-KV transformer whose
 //!   attention hot-spots are Pallas kernels; AOT-lowered to HLO text and
 //!   executed from Rust via PJRT ([`runtime`]).
@@ -53,6 +56,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod profiler;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod util;
 pub mod workload;
@@ -65,6 +69,10 @@ pub mod prelude {
     pub use crate::coordinator::sched_policy::{AdaptivePolicy, InferceptPolicy, SchedPolicy};
     pub use crate::engine::{Engine, ExecBackend};
     pub use crate::metrics::RunReport;
+    pub use crate::serving::{
+        EngineEvent, EngineFront, FrontStatus, InterceptSource, ResolutionMode, SessionHandle,
+        SessionSpec,
+    };
     pub use crate::sim::{SimBackend, SimModelSpec};
-    pub use crate::workload::{RequestTrace, WorkloadGen, WorkloadKind};
+    pub use crate::workload::{RequestScript, RequestTrace, WorkloadGen, WorkloadKind};
 }

@@ -55,4 +55,10 @@ COMMON OPTIONS:
   --policy <vllm|improved-discard|preserve|swap|infercept|adaptive>
   --rate <req/s>   --requests <n>   --seed <n>
   --out <path>     write results (CSV)
+
+ADAPTIVE-POLICY KNOBS (serve / sim, --policy adaptive):
+  --adaptive-target-wait-ms <ms>    head-of-queue wait target (default 250)
+  --adaptive-alpha <0..1]           EWMA smoothing factor     (default 0.2)
+  --adaptive-min-gain <g>           admission gain clamp low  (default 0.5)
+  --adaptive-max-gain <g>           admission gain clamp high (default 4.0)
 ";

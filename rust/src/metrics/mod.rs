@@ -82,6 +82,14 @@ pub struct Recorder {
     pub preserve_decisions: u64,
     pub discard_decisions: u64,
     pub swap_decisions: u64,
+    /// Interception lifecycle: fired / resolved (any origin), and the
+    /// subset resolved externally by clients (serving front sessions).
+    pub interceptions_dispatched: u64,
+    pub interceptions_resolved: u64,
+    pub external_interceptions: u64,
+    /// Client-supplied resumption tokens dropped because they would have
+    /// pushed the context past the submit-time capacity guarantee.
+    pub clamped_resume_tokens: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -121,6 +129,15 @@ impl Recorder {
         }
     }
 
+    /// Like [`Recorder::report`], but valid mid-run: the duration runs to
+    /// `now` when the run has not ended yet (a drained run's `run_ended`
+    /// equals the final clock, so this is identical after completion).
+    pub fn report_as_of(&self, now: Micros, policy: &str, label: &str) -> RunReport {
+        let mut rep = self.report(policy, label);
+        rep.duration_s = to_secs(self.run_ended.max(now).saturating_sub(self.run_started));
+        rep
+    }
+
     pub fn report(&self, policy: &str, label: &str) -> RunReport {
         RunReport {
             policy: policy.to_string(),
@@ -146,6 +163,9 @@ impl Recorder {
             preserve_decisions: self.preserve_decisions,
             discard_decisions: self.discard_decisions,
             swap_decisions: self.swap_decisions,
+            interceptions_dispatched: self.interceptions_dispatched,
+            interceptions_resolved: self.interceptions_resolved,
+            external_interceptions: self.external_interceptions,
         }
     }
 }
@@ -173,6 +193,10 @@ pub struct RunReport {
     pub preserve_decisions: u64,
     pub discard_decisions: u64,
     pub swap_decisions: u64,
+    /// Interception lifecycle counts (see [`Recorder`]).
+    pub interceptions_dispatched: u64,
+    pub interceptions_resolved: u64,
+    pub external_interceptions: u64,
 }
 
 impl RunReport {

@@ -1,0 +1,145 @@
+//! Typed engine events streamed to session clients.
+//!
+//! Every session submitted through [`crate::serving::EngineFront`] observes
+//! its request's lifecycle as a stream of [`EngineEvent`]s delivered over an
+//! `mpsc` channel. Events arrive in the documented order:
+//!
+//! ```text
+//! Admitted → Token* → (Intercepted → Resumed → Token*)* → Finished
+//! ```
+//!
+//! Emission is strictly observational: the [`EventBus`] never touches
+//! scheduling state, the RNG, or the clock, so a run with subscribers makes
+//! bit-identical scheduling decisions to a run without them (pinned by the
+//! serving parity tests). Dropped receivers auto-unsubscribe on the next
+//! failed send, so detached replay pays one failed send per request at most.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+
+use crate::augment::AugmentKind;
+use crate::kvcache::ReqId;
+use crate::metrics::RequestRecord;
+use crate::util::Micros;
+
+/// One observable step in a session's lifecycle (engine-clock timestamps).
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// The request entered the serving queues.
+    Admitted { req: ReqId, at: Micros },
+    /// One generated token (decode, or the sample closing a prefill).
+    Token { req: ReqId, token: u32, at: Micros },
+    /// Generation paused on an interception. `payload` carries the output
+    /// of an engine-side tool run (empty for externally-resolved calls —
+    /// the client executes those and answers with
+    /// [`crate::serving::SessionHandle::resume_with`]).
+    Intercepted { req: ReqId, kind: AugmentKind, payload: String, at: Micros },
+    /// The interception resolved; `tokens` counts the appended API returns.
+    Resumed { req: ReqId, tokens: usize, at: Micros },
+    /// The request completed; `record` is its final metrics record.
+    Finished { req: ReqId, record: RequestRecord },
+}
+
+impl EngineEvent {
+    /// The request this event belongs to.
+    pub fn req(&self) -> ReqId {
+        match self {
+            EngineEvent::Admitted { req, .. }
+            | EngineEvent::Token { req, .. }
+            | EngineEvent::Intercepted { req, .. }
+            | EngineEvent::Resumed { req, .. }
+            | EngineEvent::Finished { req, .. } => *req,
+        }
+    }
+
+    /// Short tag for logs / order assertions.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EngineEvent::Admitted { .. } => "admitted",
+            EngineEvent::Token { .. } => "token",
+            EngineEvent::Intercepted { .. } => "intercepted",
+            EngineEvent::Resumed { .. } => "resumed",
+            EngineEvent::Finished { .. } => "finished",
+        }
+    }
+}
+
+/// Per-request event fan-out. Events are built lazily (the closure only
+/// runs when a live subscriber exists), so unsubscribed requests — the
+/// whole trace-replay path — cost one hash lookup per emission point.
+#[derive(Debug, Default)]
+pub struct EventBus {
+    subs: HashMap<ReqId, Sender<EngineEvent>>,
+}
+
+impl EventBus {
+    /// Route `req`'s events to `tx` (one subscriber per request; a second
+    /// subscription replaces the first).
+    pub fn subscribe(&mut self, req: ReqId, tx: Sender<EngineEvent>) {
+        self.subs.insert(req, tx);
+    }
+
+    pub fn is_subscribed(&self, req: ReqId) -> bool {
+        self.subs.contains_key(&req)
+    }
+
+    /// Emit an event for `req` if anyone is listening. A dropped receiver
+    /// unsubscribes the request.
+    pub fn emit<F: FnOnce() -> EngineEvent>(&mut self, req: ReqId, make: F) {
+        if let Some(tx) = self.subs.get(&req) {
+            if tx.send(make()).is_err() {
+                self.subs.remove(&req);
+            }
+        }
+    }
+
+    /// Emit a terminal event and drop the subscription.
+    pub fn emit_final<F: FnOnce() -> EngineEvent>(&mut self, req: ReqId, make: F) {
+        if let Some(tx) = self.subs.remove(&req) {
+            let _ = tx.send(make());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn emits_only_to_subscribers() {
+        let mut bus = EventBus::default();
+        let (tx, rx) = channel();
+        bus.subscribe(7, tx);
+        bus.emit(7, || EngineEvent::Admitted { req: 7, at: 1 });
+        bus.emit(8, || panic!("unsubscribed request must not build an event"));
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn dropped_receiver_unsubscribes() {
+        let mut bus = EventBus::default();
+        let (tx, rx) = channel();
+        bus.subscribe(7, tx);
+        drop(rx);
+        bus.emit(7, || EngineEvent::Admitted { req: 7, at: 1 });
+        assert!(!bus.is_subscribed(7));
+    }
+
+    #[test]
+    fn final_event_closes_the_stream() {
+        let mut bus = EventBus::default();
+        let (tx, rx) = channel();
+        bus.subscribe(3, tx);
+        bus.emit_final(3, || EngineEvent::Token { req: 3, token: 0, at: 2 });
+        assert!(!bus.is_subscribed(3));
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn event_accessors() {
+        let e = EngineEvent::Token { req: 9, token: 4, at: 5 };
+        assert_eq!(e.req(), 9);
+        assert_eq!(e.tag(), "token");
+    }
+}

@@ -1,0 +1,427 @@
+//! The session-oriented serving front: submit → stream events → resume.
+//!
+//! [`EngineFront`] owns the engine loop and exposes interception as a
+//! first-class serving primitive instead of "request ends, new request
+//! begins":
+//!
+//! ```text
+//! let mut front = EngineFront::new(backend, cfg);
+//! let session = front.submit(SessionSpec::interactive(script))?;
+//! loop {
+//!     match front.run_until_blocked()? {
+//!         FrontStatus::Drained => break,
+//!         FrontStatus::AwaitingClient => {
+//!             for ev in session.drain_events() { /* stream to the user */ }
+//!             session.resume_with_after(answer_tokens, think_time_us);
+//!         }
+//!     }
+//! }
+//! ```
+//!
+//! Sessions submitted [`ResolutionMode::Scripted`] replay exactly the
+//! engine's classic trace path (internal timers, script-synthesized
+//! returns) — [`EngineFront::run_trace`] is trace replay re-implemented as
+//! just another client, and makes bit-identical scheduling decisions to
+//! [`crate::engine::Engine::run_trace`] (pinned by `tests/serving_api.rs`
+//! and the determinism golden). Sessions submitted
+//! [`ResolutionMode::External`] pause at each interception until the client
+//! answers via [`SessionHandle::resume_with`]; the paused context is
+//! preserved / swapped / discarded by the scheduling policy exactly as for
+//! timed interceptions — the paper's §3 waste math applies unchanged, the
+//! only difference being who finishes the call.
+//!
+//! The front is a synchronous pump: `run_until_blocked` drives iterations
+//! on the caller's thread and returns when every session finished
+//! ([`FrontStatus::Drained`]) or when the only remaining work waits on a
+//! client ([`FrontStatus::AwaitingClient`]). Handles are `Send` — events
+//! can be consumed and resumptions produced from other threads — but the
+//! pump itself stays on one thread so simulated-clock runs remain
+//! deterministic.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::augment::AugmentKind;
+use crate::config::EngineConfig;
+use crate::engine::{Engine, ExecBackend, PumpRound};
+use crate::kvcache::ReqId;
+use crate::metrics::RunReport;
+use crate::serving::events::EngineEvent;
+use crate::serving::intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
+use crate::util::Micros;
+use crate::workload::{RequestScript, RequestTrace};
+
+/// How a session's interceptions resolve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolutionMode {
+    /// Internal timers from the script (trace replay; the engine default).
+    Scripted,
+    /// Every interception returns to the client, which answers with
+    /// [`SessionHandle::resume_with`].
+    External,
+}
+
+/// One session to serve.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub script: RequestScript,
+    /// Engine-clock arrival; `None` means "now" (live submission).
+    pub arrival_us: Option<Micros>,
+    /// Prompt tokens; `None` synthesizes them from the engine RNG (the
+    /// trace-replay path — keeps the RNG stream identical to `load_trace`).
+    pub prompt: Option<Vec<u32>>,
+    pub mode: ResolutionMode,
+}
+
+impl SessionSpec {
+    /// A trace-replay session: scripted timers, synthesized prompt.
+    pub fn scripted(script: RequestScript, arrival_us: Micros) -> SessionSpec {
+        SessionSpec {
+            script,
+            arrival_us: Some(arrival_us),
+            prompt: None,
+            mode: ResolutionMode::Scripted,
+        }
+    }
+
+    /// An interactive session: arrives now, every interception is resolved
+    /// by the client.
+    pub fn interactive(script: RequestScript) -> SessionSpec {
+        SessionSpec { script, arrival_us: None, prompt: None, mode: ResolutionMode::External }
+    }
+
+    /// Use the client's own prompt tokens (the script's prompt length is
+    /// adjusted to match).
+    pub fn with_prompt(mut self, prompt: Vec<u32>) -> SessionSpec {
+        self.script.prompt_tokens = prompt.len() as u32;
+        self.prompt = Some(prompt);
+        self
+    }
+
+    /// Pin the arrival time (engine clock).
+    pub fn at(mut self, arrival_us: Micros) -> SessionSpec {
+        self.arrival_us = Some(arrival_us);
+        self
+    }
+}
+
+/// Why the pump returned control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontStatus {
+    /// Every submitted session finished.
+    Drained,
+    /// The only remaining work is paused on externally-resolved
+    /// interceptions — the engine waits for `resume_with`.
+    AwaitingClient,
+}
+
+/// A client's answer to an externally-resolved interception.
+#[derive(Debug)]
+struct InboxEntry {
+    req: ReqId,
+    tokens: Vec<u32>,
+    /// Engine-clock delay after the interception fired before the answer
+    /// counts as available (models the human / external-tool latency).
+    delay_us: Micros,
+}
+
+/// State shared between the front, its intercept source, and every handle.
+#[derive(Debug, Default)]
+struct FrontShared {
+    /// Sessions whose interceptions resolve externally.
+    external: Mutex<HashSet<ReqId>>,
+    /// Client answers not yet collected by the source.
+    inbox: Mutex<VecDeque<InboxEntry>>,
+    /// Answers dropped because no interception was awaiting them.
+    stray: Mutex<u64>,
+}
+
+/// A client's handle to one submitted session: an event stream plus the
+/// resumption path for externally-resolved interceptions.
+#[derive(Debug)]
+pub struct SessionHandle {
+    req: ReqId,
+    events: Receiver<EngineEvent>,
+    shared: Arc<FrontShared>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> ReqId {
+        self.req
+    }
+
+    /// Next pending event, if any (non-blocking).
+    pub fn try_event(&self) -> Option<EngineEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Every event delivered since the last drain (non-blocking).
+    pub fn drain_events(&self) -> Vec<EngineEvent> {
+        self.events.try_iter().collect()
+    }
+
+    /// Answer the pending externally-resolved interception with the API's
+    /// returned tokens; the resumption is available to the very next engine
+    /// iteration. Call only after observing [`EngineEvent::Intercepted`] —
+    /// earlier answers are dropped as stray.
+    pub fn resume_with(&self, tokens: Vec<u32>) {
+        self.resume_with_after(tokens, 0);
+    }
+
+    /// Like [`SessionHandle::resume_with`], but the answer only becomes
+    /// available `delay_us` of engine-clock time after the interception
+    /// fired — modelling the human read-and-type or external-tool latency,
+    /// so paused time accrues on the engine clock as it would in the paper's
+    /// timed traces.
+    pub fn resume_with_after(&self, tokens: Vec<u32>, delay_us: Micros) {
+        self.shared
+            .inbox
+            .lock()
+            .unwrap()
+            .push_back(InboxEntry { req: self.req, tokens, delay_us });
+    }
+}
+
+/// A client answer scheduled on the engine clock.
+#[derive(Debug)]
+struct ReadyEntry {
+    at: Micros,
+    req: ReqId,
+    tokens: Vec<u32>,
+}
+
+/// The front's [`InterceptSource`]: scripted sessions delegate to the
+/// paper's timers; external sessions pause until the shared inbox delivers
+/// the client's answer.
+#[derive(Debug)]
+struct FrontSource {
+    scripted: ScriptedTimers,
+    shared: Arc<FrontShared>,
+    /// Dispatch time of each interception awaiting a client, by request.
+    awaiting: HashMap<ReqId, Micros>,
+    /// Collected answers ordered by (available-at, req).
+    ready: Vec<ReadyEntry>,
+}
+
+impl FrontSource {
+    fn new(shared: Arc<FrontShared>, time_scale: f64) -> FrontSource {
+        FrontSource {
+            scripted: ScriptedTimers::new(time_scale),
+            shared,
+            awaiting: HashMap::new(),
+            ready: Vec::new(),
+        }
+    }
+
+    fn count_stray(&self) {
+        *self.shared.stray.lock().unwrap() += 1;
+    }
+
+    /// Move inbox entries onto the engine clock (answer available at
+    /// dispatch time + client delay).
+    fn intake(&mut self) {
+        let mut inbox = self.shared.inbox.lock().unwrap();
+        while let Some(e) = inbox.pop_front() {
+            match self.awaiting.get(&e.req) {
+                Some(&t0) => self.ready.push(ReadyEntry {
+                    at: t0.saturating_add(e.delay_us),
+                    req: e.req,
+                    tokens: e.tokens,
+                }),
+                None => self.count_stray(),
+            }
+        }
+        drop(inbox);
+        self.ready.sort_by(|a, b| (a.at, a.req).cmp(&(b.at, b.req)));
+    }
+}
+
+impl InterceptSource for FrontSource {
+    fn dispatch(
+        &mut self,
+        req: ReqId,
+        kind: AugmentKind,
+        duration_us: Micros,
+        now: Micros,
+    ) -> InterceptResolution {
+        if self.shared.external.lock().unwrap().contains(&req) {
+            self.awaiting.insert(req, now);
+            // Nothing runs engine-side: the client executes the call and
+            // answers with the returned tokens.
+            InterceptResolution::External { payload: String::new() }
+        } else {
+            self.scripted.dispatch(req, kind, duration_us, now)
+        }
+    }
+
+    fn poll(&mut self, now: Micros) -> Vec<Resumption> {
+        self.intake();
+        let mut out = self.scripted.poll(now);
+        while self.ready.first().is_some_and(|e| e.at <= now) {
+            let e = self.ready.remove(0);
+            // A duplicate answer for an already-resumed request is stray.
+            if self.awaiting.remove(&e.req).is_some() {
+                out.push(Resumption { req: e.req, tokens: Some(e.tokens) });
+            } else {
+                self.count_stray();
+            }
+        }
+        out
+    }
+
+    fn next_completion(&self) -> Option<Micros> {
+        // Include not-yet-collected inbox entries so the idle loop can jump
+        // straight to a delayed client answer.
+        let inbox_min = self
+            .shared
+            .inbox
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|e| self.awaiting.get(&e.req).map(|&t0| t0.saturating_add(e.delay_us)))
+            .min();
+        [self.scripted.next_completion(), self.ready.first().map(|e| e.at), inbox_min]
+            .into_iter()
+            .flatten()
+            .min()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.scripted.in_flight() + self.awaiting.len()
+    }
+
+    fn awaiting_external(&self) -> usize {
+        self.awaiting.len()
+    }
+
+    fn on_finished(&mut self, req: ReqId) {
+        // Drop all per-session bookkeeping so a long-lived front does not
+        // leak one entry per interactive session.
+        self.shared.external.lock().unwrap().remove(&req);
+        self.awaiting.remove(&req);
+        self.ready.retain(|e| e.req != req);
+    }
+}
+
+/// The intercept-first serving front: owns the engine, hands out session
+/// handles, and pumps the iteration loop.
+pub struct EngineFront {
+    engine: Engine,
+    shared: Arc<FrontShared>,
+    iters: u64,
+    started: bool,
+}
+
+impl EngineFront {
+    pub fn new(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> EngineFront {
+        EngineFront::from_engine(Engine::new(backend, cfg))
+    }
+
+    /// Wrap an existing engine (custom policy objects already injected).
+    /// Replaces its intercept source with the front's client-aware one —
+    /// scripted sessions behave identically to the engine default.
+    pub fn from_engine(mut engine: Engine) -> EngineFront {
+        let shared = Arc::new(FrontShared::default());
+        let time_scale = engine.cfg.time_scale;
+        engine.set_intercept_source(Box::new(FrontSource::new(shared.clone(), time_scale)));
+        EngineFront { engine, shared, iters: 0, started: false }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Submit a session and stream its events through the returned handle.
+    /// Errors on a script the engine cannot serve (too long for the
+    /// sequence cap or the GPU pool) — a bad client submission never
+    /// aborts the front.
+    pub fn submit(&mut self, spec: SessionSpec) -> Result<SessionHandle> {
+        let id = self.submit_inner(spec)?;
+        let (tx, rx) = channel();
+        self.engine.subscribe_events(id, tx);
+        Ok(SessionHandle { req: id, events: rx, shared: self.shared.clone() })
+    }
+
+    /// Submit without an event stream (bulk replay). Only scripted sessions
+    /// may be detached: an external session's interceptions can only be
+    /// answered through its [`SessionHandle`], so a detached one would wait
+    /// on a client forever.
+    pub fn submit_detached(&mut self, spec: SessionSpec) -> Result<ReqId> {
+        anyhow::ensure!(
+            spec.mode == ResolutionMode::Scripted,
+            "external sessions need a handle to be resumed — use EngineFront::submit"
+        );
+        self.submit_inner(spec)
+    }
+
+    fn submit_inner(&mut self, spec: SessionSpec) -> Result<ReqId> {
+        let arrival = spec.arrival_us.unwrap_or_else(|| self.engine.now());
+        let id = self.engine.submit_script(arrival, spec.script, spec.prompt)?;
+        if spec.mode == ResolutionMode::External {
+            self.shared.external.lock().unwrap().insert(id);
+        }
+        Ok(id)
+    }
+
+    /// Answers dropped because no interception was awaiting them (clients
+    /// calling `resume_with` before `Intercepted`, or twice).
+    pub fn stray_resolutions(&self) -> u64 {
+        *self.shared.stray.lock().unwrap()
+    }
+
+    /// Pump scheduler iterations until every session finished or the only
+    /// remaining work awaits a client. Shares [`Engine::pump_round`] with
+    /// the trace path so stuck/cap semantics cannot drift; the front's
+    /// iteration count (checked against `cfg.max_iterations`) accumulates
+    /// over its whole lifetime.
+    pub fn run_until_blocked(&mut self) -> Result<FrontStatus> {
+        if !self.started {
+            self.engine.metrics.run_started = self.engine.now();
+            self.started = true;
+        }
+        loop {
+            match self.engine.pump_round(&mut self.iters)? {
+                PumpRound::Progressed => {}
+                PumpRound::AwaitingExternal => return Ok(FrontStatus::AwaitingClient),
+                PumpRound::Drained => {
+                    self.engine.metrics.run_ended = self.engine.now();
+                    return Ok(FrontStatus::Drained);
+                }
+            }
+        }
+    }
+
+    /// Aggregate report over everything served so far. Valid mid-flight:
+    /// the duration extends to the current engine clock while sessions are
+    /// still being served (`run_ended` is only stamped on drain).
+    pub fn report(&self) -> RunReport {
+        self.engine
+            .metrics
+            .report_as_of(self.engine.now(), self.engine.cfg.policy.name, "front")
+    }
+
+    /// Trace replay as a front client: every traced request becomes a
+    /// scripted session, then the loop drains. Scheduling is bit-identical
+    /// to [`Engine::run_trace`] on the same trace (see `tests/serving_api.rs`
+    /// and the determinism golden).
+    pub fn run_trace(&mut self, trace: &RequestTrace) -> Result<RunReport> {
+        for tr in trace.iter() {
+            self.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us))?;
+        }
+        match self.run_until_blocked()? {
+            FrontStatus::Drained => {
+                Ok(self.engine.metrics.report(self.engine.cfg.policy.name, "run"))
+            }
+            FrontStatus::AwaitingClient => {
+                bail!("scripted trace replay cannot await a client")
+            }
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! The interception-resolution abstraction: *who* finishes an API call.
+//!
+//! The paper's Fig. 6 wires the engine to an `ApiExecutor` that resolves
+//! every interception on an internal timer — fine for trace replay, but a
+//! real augmented-LLM serving system hands tool calls, chat turns, and
+//! environment steps back to the *caller* and waits for the answer. The
+//! [`InterceptSource`] trait makes that choice pluggable: at dispatch the
+//! engine asks "is this interception internal-timed or external?", and at
+//! each iteration it polls for resolved interceptions regardless of origin.
+//!
+//! Two implementations ship in-tree:
+//!  * [`ScriptedTimers`] — the paper's behavior: every interception resolves
+//!    after its scripted (scaled) duration, and short-running automated
+//!    tools also actually run ([`crate::augment::executor::run_tool`]).
+//!    This is the engine default; trace replay is bit-identical to the
+//!    pre-trait `ApiExecutor` wiring.
+//!  * The serving front's client-resolved source (private to
+//!    [`crate::serving::front`]) — sessions marked external pause until the
+//!    client answers via [`crate::serving::SessionHandle::resume_with`].
+
+use crate::augment::executor::{run_tool, ApiExecutor};
+use crate::augment::AugmentKind;
+use crate::kvcache::ReqId;
+use crate::util::Micros;
+
+/// How a dispatched interception will resolve.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InterceptResolution {
+    /// Internally timed: [`InterceptSource::poll`] returns the request once
+    /// the engine clock reaches `resume_at`. `payload` is the output of an
+    /// engine-side tool run (streamed to subscribers, empty for pure
+    /// timers).
+    Internal { resume_at: Micros, payload: String },
+    /// Externally resolved: the request stays paused until a client supplies
+    /// the API-returned tokens. The engine clock has no completion time for
+    /// it — the source reports it via [`InterceptSource::awaiting_external`]
+    /// so the serving front can distinguish "waiting on a client" from
+    /// "stuck".
+    External { payload: String },
+}
+
+/// A resolved interception handed back to the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resumption {
+    pub req: ReqId,
+    /// API-returned tokens. `None` means "synthesize from the script"
+    /// (internal timers — preserves trace-replay determinism);
+    /// `Some(tokens)` carries a client's actual answer.
+    pub tokens: Option<Vec<u32>>,
+}
+
+/// Dispatch + completion tracking for in-flight interceptions, pluggable
+/// per engine (see [`crate::engine::Engine::set_intercept_source`]).
+///
+/// Implementations must be deterministic given the same dispatch/poll
+/// sequence: `poll` returns resolutions in a stable order, and
+/// `next_completion` is the exact engine-clock time of the soonest internal
+/// (or client-scheduled) resolution so the idle loop can jump to it.
+pub trait InterceptSource {
+    /// An interception of `duration_us` (unscaled script time) fired for
+    /// `req` at `now`. Decide how it resolves.
+    fn dispatch(
+        &mut self,
+        req: ReqId,
+        kind: AugmentKind,
+        duration_us: Micros,
+        now: Micros,
+    ) -> InterceptResolution;
+
+    /// Every interception resolved by `now`, in resolution order.
+    fn poll(&mut self, now: Micros) -> Vec<Resumption>;
+
+    /// Engine-clock time of the soonest known future resolution.
+    fn next_completion(&self) -> Option<Micros>;
+
+    /// Interceptions dispatched but not yet resolved (any origin).
+    fn in_flight(&self) -> usize;
+
+    /// In-flight interceptions with no engine-clock completion time —
+    /// waiting on a client. The engine is not stuck while this is non-zero.
+    fn awaiting_external(&self) -> usize {
+        0
+    }
+
+    /// `req` finished and was released by the engine: drop any per-request
+    /// state (long-lived serving fronts must not leak session bookkeeping).
+    fn on_finished(&mut self, _req: ReqId) {}
+}
+
+/// The paper-faithful default source: every interception is a scripted
+/// timer on the engine clock ([`ApiExecutor`] heap), and short-running
+/// automated augmentations also run their tiny real tool implementation.
+#[derive(Debug, Default)]
+pub struct ScriptedTimers {
+    timers: ApiExecutor,
+}
+
+impl ScriptedTimers {
+    pub fn new(time_scale: f64) -> ScriptedTimers {
+        ScriptedTimers { timers: ApiExecutor::new(time_scale) }
+    }
+
+    /// (dispatched, completed) counters, for observability.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.timers.dispatched, self.timers.completed)
+    }
+}
+
+impl InterceptSource for ScriptedTimers {
+    fn dispatch(
+        &mut self,
+        req: ReqId,
+        kind: AugmentKind,
+        duration_us: Micros,
+        now: Micros,
+    ) -> InterceptResolution {
+        // Run the actual tool for automated augmentations (§2.2) — the
+        // scripted token counts stay authoritative, but the call is real
+        // and its output streams to event subscribers.
+        let payload = if kind.short_running() { run_tool(kind, req) } else { String::new() };
+        let resume_at = self.timers.dispatch(req, duration_us, now);
+        InterceptResolution::Internal { resume_at, payload }
+    }
+
+    fn poll(&mut self, now: Micros) -> Vec<Resumption> {
+        self.timers
+            .poll(now)
+            .into_iter()
+            .map(|req| Resumption { req, tokens: None })
+            .collect()
+    }
+
+    fn next_completion(&self) -> Option<Micros> {
+        self.timers.next_completion()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.timers.in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_timers_resolve_in_time_order() {
+        let mut s = ScriptedTimers::new(1.0);
+        let r1 = s.dispatch(1, AugmentKind::Chatbot, 500, 0);
+        let r2 = s.dispatch(2, AugmentKind::Math, 100, 0);
+        assert!(matches!(r1, InterceptResolution::Internal { resume_at: 500, .. }));
+        // The math tool actually ran and produced a payload.
+        match r2 {
+            InterceptResolution::Internal { resume_at, payload } => {
+                assert_eq!(resume_at, 100);
+                assert!(!payload.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.next_completion(), Some(100));
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.awaiting_external(), 0);
+        let done = s.poll(1000);
+        assert_eq!(
+            done,
+            vec![
+                Resumption { req: 2, tokens: None },
+                Resumption { req: 1, tokens: None }
+            ]
+        );
+        assert_eq!(s.stats(), (2, 2));
+    }
+
+    #[test]
+    fn long_running_kinds_carry_no_payload() {
+        let mut s = ScriptedTimers::new(1.0);
+        match s.dispatch(1, AugmentKind::Tts, 10, 0) {
+            InterceptResolution::Internal { payload, .. } => assert!(payload.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Intercept-first serving: sessions, event streams, and externally-
+//! resolved interceptions.
+//!
+//! InferCept's core claim is that interception should be a first-class
+//! serving primitive. This subsystem turns the reproduction into a servable
+//! system around that idea:
+//!
+//! * [`EngineFront`] owns the engine loop; clients
+//!   [`EngineFront::submit`] a [`SessionSpec`] and get a [`SessionHandle`].
+//! * Handles stream typed [`EngineEvent`]s (`Admitted`, `Token`,
+//!   `Intercepted`, `Resumed`, `Finished`) over channels.
+//! * The [`InterceptSource`] trait decides *who* resolves an interception:
+//!   [`ScriptedTimers`] replays the paper's timed traces;
+//!   the front's client-resolved source parks external sessions until
+//!   [`SessionHandle::resume_with`] supplies the API's returned tokens —
+//!   the paper's chat/human pauses become externally resolved instead of
+//!   timer-faked, while the §4 scheduling (preserve / chunked discard /
+//!   budgeted swap) applies to the paused context unchanged.
+//!
+//! Trace replay ([`EngineFront::run_trace`]) is re-implemented on top of
+//! the same API and makes bit-identical scheduling decisions to the classic
+//! [`crate::engine::Engine::run_trace`] path (pinned by
+//! `tests/serving_api.rs` and the determinism golden).
+
+pub mod events;
+pub mod front;
+pub mod intercept;
+
+pub use events::{EngineEvent, EventBus};
+pub use front::{EngineFront, FrontStatus, ResolutionMode, SessionHandle, SessionSpec};
+pub use intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};

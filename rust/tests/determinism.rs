@@ -25,7 +25,7 @@ use std::path::PathBuf;
 
 use infercept::config::EngineConfig;
 use infercept::coordinator::policy::Policy;
-use infercept::engine::Engine;
+use infercept::serving::EngineFront;
 use infercept::sim::{SimBackend, SimModelSpec};
 use infercept::util::json::Json;
 use infercept::workload::{RequestTrace, WorkloadGen, WorkloadKind};
@@ -35,13 +35,17 @@ fn fixed_trace() -> RequestTrace {
 }
 
 /// Aggregate counters as stable JSON (floats rendered with fixed precision
-/// so text comparison is exact).
+/// so text comparison is exact). Runs through the serving front — the
+/// canonical replay path — so the golden also pins the session-API layer
+/// (front replay must be bit-identical to `Engine::run_trace`; see
+/// `tests/serving_api.rs`).
 fn run_counters(policy: Policy, trace: &RequestTrace) -> Json {
     let spec = SimModelSpec::gptj_6b();
     let cfg = EngineConfig::for_sim(&spec, policy);
-    let mut e = Engine::new(Box::new(SimBackend::new(spec)), cfg);
-    let rep = e.run_trace(trace).unwrap();
-    e.check_invariants().unwrap();
+    let mut front = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+    let rep = front.run_trace(trace).unwrap();
+    front.engine().check_invariants().unwrap();
+    let e = front.engine();
     let f = |x: f64| Json::str(format!("{x:.9e}"));
     Json::obj(vec![
         ("completed", Json::num(rep.completed as f64)),

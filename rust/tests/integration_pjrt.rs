@@ -130,6 +130,9 @@ fn engine_serves_end_to_end_on_pjrt() {
         max_seq_tokens: geom.max_seq_tokens(),
         max_iterations: 100_000,
         adaptive_target_wait_us: infercept::config::DEFAULT_ADAPTIVE_TARGET_WAIT_US,
+        adaptive_alpha: infercept::config::DEFAULT_ADAPTIVE_ALPHA,
+        adaptive_min_gain: infercept::config::DEFAULT_ADAPTIVE_MIN_GAIN,
+        adaptive_max_gain: infercept::config::DEFAULT_ADAPTIVE_MAX_GAIN,
     };
     let _ = backend.max_decode_batch();
     let trace = WorkloadGen::new(WorkloadKind::Mixed, 7)

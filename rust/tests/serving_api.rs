@@ -1,0 +1,298 @@
+//! Session/event API integration tests: the serving front must (a) replay
+//! scripted traces with bit-identical scheduling to the classic engine
+//! path, (b) stream lifecycle events in the documented order, and (c)
+//! support externally-resolved interceptions whose paused KV context is
+//! preserved / swapped per policy rather than recomputed (§3 waste
+//! avoided).
+
+use infercept::augment::AugmentKind;
+use infercept::config::EngineConfig;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::Engine;
+use infercept::metrics::RunReport;
+use infercept::serving::{EngineFront, FrontStatus, SessionSpec};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::workload::{
+    Interception, RequestScript, RequestTrace, Segment, WorkloadGen, WorkloadKind,
+};
+
+fn trace() -> RequestTrace {
+    WorkloadGen::new(WorkloadKind::Mixed, 20260730).generate(60, 3.0)
+}
+
+fn front(policy: Policy) -> EngineFront {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    EngineFront::new(Box::new(SimBackend::new(spec)), cfg)
+}
+
+/// The scheduling-visible counter tuple compared across serving paths.
+fn counters(rep: &RunReport) -> (usize, u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        rep.completed,
+        rep.iterations,
+        rep.preserve_decisions,
+        rep.discard_decisions,
+        rep.swap_decisions,
+        rep.evictions,
+        rep.swapped_out_tokens,
+        rep.swapped_in_tokens,
+        rep.interceptions_dispatched,
+        rep.interceptions_resolved,
+    )
+}
+
+/// One generation segment, one interception, one closing segment.
+fn two_turn_script(kind: AugmentKind) -> RequestScript {
+    RequestScript {
+        kind,
+        prompt_tokens: 64,
+        segments: vec![
+            Segment {
+                gen_tokens: 4,
+                interception: Some(Interception { kind, duration_us: 1_000_000, ret_tokens: 8 }),
+            },
+            Segment { gen_tokens: 4, interception: None },
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay parity: the API redesign is behavior-preserving for scripted
+// workloads (acceptance criterion; the determinism golden pins the same
+// path against history).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn front_replay_matches_direct_engine_counters() {
+    let trace = trace();
+    let mut policies = Policy::fig2_set();
+    policies.push(Policy::adaptive());
+    for policy in policies {
+        let name = policy.name;
+        let spec = SimModelSpec::gptj_6b();
+        let mut engine = Engine::new(
+            Box::new(SimBackend::new(spec.clone())),
+            EngineConfig::for_sim(&spec, policy.clone()),
+        );
+        let a = engine.run_trace(&trace).unwrap();
+        engine.check_invariants().unwrap();
+        let mut f = front(policy);
+        let b = f.run_trace(&trace).unwrap();
+        f.engine().check_invariants().unwrap();
+        assert_eq!(counters(&a), counters(&b), "{name}");
+        assert_eq!(a.waste.total(), b.waste.total(), "{name}");
+        assert_eq!(a.normalized_latency_ms(), b.normalized_latency_ms(), "{name}");
+        assert_eq!(a.median_ttft_ms(), b.median_ttft_ms(), "{name}");
+    }
+}
+
+#[test]
+fn subscribed_sessions_do_not_perturb_scheduling() {
+    // Event emission is observational: replaying with live event streams
+    // must make the same decisions as detached replay.
+    let trace = trace();
+    let mut detached = front(Policy::infercept());
+    let a = detached.run_trace(&trace).unwrap();
+
+    let mut f = front(Policy::infercept());
+    let handles: Vec<_> = trace
+        .iter()
+        .map(|tr| f.submit(SessionSpec::scripted(tr.script.clone(), tr.arrival_us)).unwrap())
+        .collect();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let b = f.report();
+    assert_eq!(counters(&a), counters(&b));
+
+    // Every session's stream is coherent: Admitted first, Finished last,
+    // one Token per generated token, one Intercepted per script pause.
+    for (handle, tr) in handles.iter().zip(trace.iter()) {
+        let events = handle.drain_events();
+        assert_eq!(events.first().unwrap().tag(), "admitted", "req {}", handle.id());
+        assert_eq!(events.last().unwrap().tag(), "finished", "req {}", handle.id());
+        let tokens = events.iter().filter(|e| e.tag() == "token").count();
+        assert_eq!(tokens, tr.script.total_gen_tokens(), "req {}", handle.id());
+        let ints = events.iter().filter(|e| e.tag() == "intercepted").count();
+        assert_eq!(ints, tr.script.num_interceptions(), "req {}", handle.id());
+        let resumed = events.iter().filter(|e| e.tag() == "resumed").count();
+        assert_eq!(resumed, ints, "req {}", handle.id());
+        assert!(events.iter().all(|e| e.req() == handle.id()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Externally-resolved interceptions (acceptance criterion).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn external_resolution_preserves_context_and_orders_events() {
+    // Preserve policy: the paused KV context stays GPU-resident across the
+    // client-resolved interception — zero recomputation on resume.
+    let mut f = front(Policy::preserve());
+    let session =
+        f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Chatbot))).unwrap();
+    let id = session.id();
+
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    let tags: Vec<_> = session.drain_events().iter().map(|e| e.tag().to_string()).collect();
+    assert_eq!(
+        tags,
+        vec!["admitted", "token", "token", "token", "token", "intercepted"]
+    );
+    {
+        let engine = f.engine();
+        assert_eq!(engine.awaiting_external(), 1);
+        let rq = engine.request(id).unwrap();
+        assert!(rq.external_pause);
+        assert_eq!(rq.resume_at, 0, "no engine-clock completion for external pauses");
+        // Prompt + first segment are cached; nothing was discarded.
+        assert!(rq.processed >= 64, "processed {}", rq.processed);
+        assert_eq!(rq.recompute_hwm, 0);
+        assert!(engine.cache().gpu_tokens_of(id) > 0, "context must stay resident");
+        assert!(engine.metrics.preserve_decisions >= 1);
+        assert_eq!(engine.metrics.external_interceptions, 1);
+    }
+
+    // The client "thinks" for 0.5 s of engine time, then answers.
+    let answer = vec![101, 102, 103, 104, 105, 106, 107, 108];
+    session.resume_with_after(answer.clone(), 500_000);
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+
+    let tags: Vec<_> = session.drain_events().iter().map(|e| e.tag().to_string()).collect();
+    assert_eq!(
+        tags,
+        vec!["resumed", "token", "token", "token", "token", "finished"]
+    );
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    let rq = engine.request(id).unwrap();
+    // The client's exact tokens were appended at the pause point
+    // (64 prompt + 4 generated), and the pause accrued the client's delay.
+    assert_eq!(&rq.tokens[68..76], answer.as_slice());
+    assert!(rq.intercepted_us >= 500_000, "intercepted_us {}", rq.intercepted_us);
+    // §3 waste avoided: nothing was recomputed.
+    assert_eq!(engine.metrics.recompute_tokens, 0);
+    assert_eq!(engine.metrics.interceptions_resolved, 1);
+}
+
+#[test]
+fn external_resolution_follows_policy_disposition() {
+    // infercept (min-waste): the context survives the pause via preserve or
+    // budgeted swap — never recomputed. vllm (discard): the same session
+    // pays recomputation on resume. Same client behavior, policy decides.
+    let run = |policy: Policy| {
+        let mut f = front(policy);
+        let session = f
+            .submit(SessionSpec::interactive(two_turn_script(AugmentKind::Chatbot)))
+            .unwrap();
+        assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+        session.resume_with_after(vec![7; 8], 2_000_000);
+        assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+        f.engine().check_invariants().unwrap();
+        let m = &f.engine().metrics;
+        (
+            m.recompute_tokens,
+            m.preserve_decisions + m.swap_decisions,
+            m.discard_decisions,
+            m.records.len(),
+        )
+    };
+    let (inf_recompute, inf_kept, _, inf_done) = run(Policy::infercept());
+    assert_eq!(inf_done, 1);
+    assert_eq!(inf_recompute, 0, "min-waste must not recompute this pause");
+    assert!(inf_kept >= 1, "context survives via preserve or swap");
+    let (vllm_recompute, _, vllm_discards, vllm_done) = run(Policy::vllm());
+    assert_eq!(vllm_done, 1);
+    assert!(vllm_discards >= 1);
+    assert!(vllm_recompute > 0, "discard family pays recomputation on resume");
+}
+
+#[test]
+fn external_sessions_interleave_with_scripted_load() {
+    // An interactive session rides along with 20 scripted ones: everything
+    // completes, and the interactive pause does not wedge the loop.
+    let mut f = front(Policy::infercept());
+    for tr in WorkloadGen::new(WorkloadKind::Mixed, 7).generate(20, 4.0) {
+        f.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us)).unwrap();
+    }
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    loop {
+        match f.run_until_blocked().unwrap() {
+            FrontStatus::Drained => break,
+            FrontStatus::AwaitingClient => {
+                // Answer whatever interception is pending.
+                session.resume_with_after(vec![1, 2, 3, 4, 5, 6, 7, 8], 100_000);
+            }
+        }
+    }
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.metrics.records.len(), 21);
+    assert_eq!(engine.unfinished(), 0);
+    assert_eq!(engine.metrics.external_interceptions, 1);
+    let events = session.drain_events();
+    assert_eq!(events.last().unwrap().tag(), "finished");
+}
+
+#[test]
+fn unservable_or_detached_external_submissions_are_rejected() {
+    // A script too large for the engine is an Err, not a panic (submit is a
+    // client-facing surface), and an external session cannot be submitted
+    // detached (nothing could ever resume it). Rejections leave the front
+    // fully serviceable.
+    let mut f = front(Policy::infercept());
+    let mut huge = two_turn_script(AugmentKind::Qa);
+    huge.prompt_tokens = 100_000;
+    assert!(f.submit(SessionSpec::interactive(huge)).is_err());
+    let err = f
+        .submit_detached(SessionSpec::interactive(two_turn_script(AugmentKind::Qa)))
+        .unwrap_err();
+    assert!(err.to_string().contains("handle"), "{err}");
+    let ok = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    ok.resume_with(vec![1; 8]);
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+}
+
+#[test]
+fn oversized_client_answers_are_clamped_to_capacity() {
+    // A hostile/buggy client answers with far more tokens than any context
+    // can hold: the engine clamps the answer to the submit-time capacity
+    // guarantee (max_seq / pool, minus what the script still owes) instead
+    // of wedging the pump for every other session.
+    let mut f = front(Policy::infercept());
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    session.resume_with(vec![3; 100_000]);
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert!(engine.metrics.clamped_resume_tokens > 0);
+    let rq = engine.request(session.id()).unwrap();
+    assert!(rq.tokens.len() <= engine.cfg.max_seq_tokens, "{}", rq.tokens.len());
+}
+
+#[test]
+fn premature_resolutions_are_dropped_as_stray() {
+    let mut f = front(Policy::infercept());
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Math))).unwrap();
+    session.resume_with(vec![9; 8]); // before any interception fired
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    assert_eq!(f.stray_resolutions(), 1);
+    session.resume_with(vec![9; 8]); // the real answer
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    assert_eq!(f.stray_resolutions(), 1);
+    f.engine().check_invariants().unwrap();
+}
+
+#[test]
+fn plain_engine_rejects_external_waits_with_guidance() {
+    // Driving an externally-paused engine through the trace loop (no front
+    // pump) must fail loudly instead of spinning or reporting "stuck".
+    let mut f = front(Policy::infercept());
+    let _session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    let err = f.engine_mut().run_trace(&RequestTrace::new()).unwrap_err();
+    assert!(err.to_string().contains("EngineFront"), "{err}");
+}
