@@ -1,0 +1,325 @@
+//! End-to-end scheduler hot-path benchmark — the tracked throughput
+//! trajectory behind `BENCH_sched.json` (repo root).
+//!
+//! InferCept's planner runs on *every* iteration (§4.4 re-evaluates every
+//! paused request per decode step), so `capture → plan` is a per-token tax
+//! on serving throughput. This bench drives that cycle at realistic scale
+//! (256 running / 128 paused / 512 waiting / 32 swap-queue, populated
+//! caches) against a real `CacheManager` + `ReqTable`, times a faithful
+//! replica of the pre-slab HashMap capture as the comparison baseline, and
+//! measures whole-run scheduler throughput via a sim-replay
+//! iterations-per-second figure.
+//!
+//! Run `cargo bench --bench bench_planner_e2e` (add `-- --quick` for the
+//! CI profile); the JSON report lands at the repo root (override with
+//! `BENCH_OUT=<path>`).
+
+use std::collections::HashMap;
+
+use infercept::augment::{AugmentKind, ALL_KINDS};
+use infercept::config::EngineConfig;
+use infercept::coordinator::estimator::{DurationEstimator, EstimatorKind};
+use infercept::coordinator::planner::{Planner, ReqSnapshot};
+use infercept::coordinator::policy::Policy;
+use infercept::coordinator::sched_policy::InferceptPolicy;
+use infercept::coordinator::scheduler::{Disposition, FcfsQueue};
+use infercept::coordinator::waste::FwdProfile;
+use infercept::engine::request::{ReqState, ReqTable, Request};
+use infercept::engine::{Engine, ExecBackend};
+use infercept::kvcache::swap::SwapModel;
+use infercept::kvcache::{BlockLoc, CacheManager, ReqId};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::bench::{Bench, BenchReport};
+use infercept::util::json::Json;
+use infercept::util::Micros;
+use infercept::workload::{RequestScript, Segment, WorkloadGen, WorkloadKind};
+
+const RUNNING: usize = 256;
+const PAUSED: usize = 128;
+const WAITING: usize = 512;
+const SWAPQ: usize = 32;
+const BS: usize = 16;
+
+/// Engine-shaped state at production scale: queues, request table, and a
+/// populated cache manager, ids dense from 1 (the engine invariant).
+struct EngineState {
+    cfg: EngineConfig,
+    backend: SimBackend,
+    cache: CacheManager,
+    waiting: FcfsQueue,
+    swapq: FcfsQueue,
+    running: FcfsQueue,
+    paused: Vec<ReqId>,
+    requests: ReqTable,
+    now: Micros,
+}
+
+fn script_of(tokens: usize) -> RequestScript {
+    RequestScript {
+        kind: AugmentKind::Math,
+        prompt_tokens: tokens as u32,
+        segments: vec![Segment { gen_tokens: 32, interception: None }],
+    }
+}
+
+/// `aged_prefix` requests are submitted, given cache, and fully released
+/// before the live set is built — modelling a long-running engine whose
+/// low ids have all finished. The slab's edge-tombstone compaction must
+/// keep capture cost proportional to the *live* set, not run age; the
+/// aged bench variant pins exactly that.
+fn build_state(aged_prefix: usize) -> EngineState {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    let backend = SimBackend::new(spec);
+    // A pool sized for ~900 live sequences (the engine normally derives
+    // this from HBM capacity; the bench just needs headroom).
+    let mut cache = CacheManager::new(BS, 65_536, 16_384);
+    cache.watermark_blocks = cfg.watermark_blocks;
+    let mut requests = ReqTable::new();
+    let mut waiting = FcfsQueue::default();
+    let mut swapq = FcfsQueue::default();
+    let mut running = FcfsQueue::default();
+    let mut paused = Vec::new();
+    let now: Micros = 60_000_000;
+    let mut id: ReqId = 0;
+    let mut submit = |requests: &mut ReqTable, tokens: usize, arrival: Micros| -> ReqId {
+        id += 1;
+        let mut rq = Request::new(id, arrival, script_of(tokens), vec![1; tokens]);
+        rq.queue_arrival = arrival;
+        requests.insert_next(rq);
+        id
+    };
+
+    // Hold all aged sequences at once, then release front-to-back: the
+    // slab accumulates (and must compact away) a long leading-tombstone
+    // run, like a real engine draining its oldest requests.
+    let mut aged_ids = Vec::with_capacity(aged_prefix);
+    for _ in 0..aged_prefix {
+        let id = submit(&mut requests, 4, 0);
+        requests[id].state = ReqState::Finished;
+        cache.grow(id, 2 * BS).unwrap();
+        cache.advance(id, 2 * BS);
+        aged_ids.push(id);
+    }
+    for id in aged_ids {
+        cache.release(id);
+    }
+    for i in 0..RUNNING {
+        let ctx = 200 + (i * 37) % 1200;
+        let arrival = (i as Micros) * 1_000;
+        let id = submit(&mut requests, ctx + 1, arrival);
+        let rq = &mut requests[id];
+        rq.state = ReqState::Running;
+        rq.processed = ctx;
+        cache.grow(id, ctx).unwrap();
+        cache.advance(id, ctx);
+        running.push(arrival, id);
+    }
+    for i in 0..PAUSED {
+        let ctx = 160 + (i * 53) % 1600;
+        let arrival = (i as Micros) * 900 + 11;
+        let id = submit(&mut requests, ctx + 1, arrival);
+        let rq = &mut requests[id];
+        rq.state = ReqState::Paused;
+        rq.processed = ctx;
+        rq.pause_kind = ALL_KINDS[i % ALL_KINDS.len()];
+        rq.paused_at = now - 2_000_000;
+        rq.pause_duration_us = 1_000_000 + (i as Micros) * 10_000;
+        rq.disposition = match i % 3 {
+            0 => Disposition::Fresh,
+            1 => Disposition::Preserved,
+            _ => Disposition::SwappingOut,
+        };
+        cache.grow(id, ctx).unwrap();
+        cache.advance(id, ctx);
+        if i % 4 == 0 {
+            // Partially swapped: CPU-prefix layout, like a budgeted §4.1 grant.
+            cache.swap_out(id, 2 + i % 3);
+        }
+        paused.push(id);
+    }
+    for i in 0..WAITING {
+        let tokens = 300 + (i * 91) % 900;
+        let arrival = (i as Micros) * 800 + 7;
+        let id = submit(&mut requests, tokens, arrival);
+        let rq = &mut requests[id];
+        rq.state = ReqState::Waiting;
+        if i % 8 == 0 {
+            // Mid-prefill / recomputing entries exercise the hwm paths.
+            rq.processed = 128;
+            rq.recompute_hwm = 256;
+            cache.grow(id, 128).unwrap();
+            cache.advance(id, 128);
+        }
+        waiting.push(arrival, id);
+    }
+    for i in 0..SWAPQ {
+        let blocks = 3 + i % 4;
+        let tokens = blocks * BS + 8;
+        let arrival = (i as Micros) * 700 + 3;
+        let id = submit(&mut requests, tokens, arrival);
+        let rq = &mut requests[id];
+        rq.state = ReqState::SwapQueue;
+        rq.processed = blocks * BS;
+        cache.grow(id, blocks * BS).unwrap();
+        cache.advance(id, blocks * BS);
+        cache.swap_out(id, blocks);
+        swapq.push(arrival, id);
+    }
+    cache.check_conservation().expect("bench state is self-consistent");
+    EngineState { cfg, backend, cache, waiting, swapq, running, paused, requests, now }
+}
+
+// ---------------------------------------------------------------------------
+// HashMap baseline: a faithful replica of the pre-slab capture
+// ---------------------------------------------------------------------------
+
+/// What `Planner::capture` rebuilt per iteration before the dense-table
+/// refactor: hash maps keyed by request id for both per-request state and
+/// per-sequence cache counts, with a per-block residency scan per sequence
+/// and by-value clones of the profile/swap-model. Fields exist to be
+/// *written* at captured cost, not read back.
+#[allow(dead_code)]
+#[derive(Default)]
+struct BaselineSnapshot {
+    waiting: Vec<ReqId>,
+    swapq: Vec<ReqId>,
+    running: Vec<ReqId>,
+    paused: Vec<ReqId>,
+    reqs: HashMap<ReqId, ReqSnapshot>,
+    seqs: HashMap<ReqId, (usize, usize, usize)>,
+    profile: Option<FwdProfile>,
+    swap_model: Option<SwapModel>,
+    prefill_chunk_sizes: Vec<usize>,
+}
+
+fn capture_hashmap_baseline(st: &EngineState, out: &mut BaselineSnapshot) {
+    out.prefill_chunk_sizes.clear();
+    out.prefill_chunk_sizes.extend_from_slice(st.backend.prefill_chunk_sizes());
+    // The old capture cloned these every iteration (planner.rs pre-refactor).
+    out.profile = Some(*st.backend.fwd_profile());
+    out.swap_model = Some(*st.backend.swap_model());
+    out.waiting.clear();
+    out.waiting.extend(st.waiting.iter());
+    out.swapq.clear();
+    out.swapq.extend(st.swapq.iter());
+    out.running.clear();
+    out.running.extend(st.running.iter());
+    out.paused.clear();
+    out.paused.extend_from_slice(&st.paused);
+    out.seqs.clear();
+    out.reqs.clear();
+    for &id in out.waiting.iter().chain(&out.swapq).chain(&out.running).chain(&out.paused) {
+        if let Some(s) = st.cache.seq(id) {
+            // The pre-counter SeqCache answered gpu/cpu residency with a
+            // per-block filter-count — the O(total-blocks) rescan this PR
+            // removed from the capture path.
+            let gpu = s.blocks.iter().filter(|b| matches!(b, BlockLoc::Gpu(_))).count();
+            out.seqs.insert(id, (s.blocks.len(), s.blocks.len() - gpu, s.len_tokens));
+        }
+        out.reqs.insert(id, ReqSnapshot::of(&st.requests[id]));
+    }
+    std::hint::black_box(&out.reqs);
+}
+
+fn main() {
+    let (bench, profile_name) = Bench::from_args();
+    let mut report = BenchReport::new("bench_planner_e2e", profile_name);
+    let est = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
+    let st = build_state(0);
+    let scale = format!("{RUNNING}r/{PAUSED}p/{WAITING}w/{SWAPQ}s");
+
+    // ---- the real per-iteration cycle: capture → plan --------------------
+    let mut planner = Planner::new();
+    let mut policy = InferceptPolicy;
+    let capture = |planner: &mut Planner| {
+        planner.capture(
+            st.now,
+            &st.cfg,
+            &st.backend,
+            &st.cache,
+            &st.waiting,
+            &st.swapq,
+            &st.running,
+            &st.paused,
+            &st.requests,
+        );
+    };
+    let r_cycle = bench.run(&format!("planner_e2e/capture+plan {scale}"), || {
+        capture(&mut planner);
+        std::hint::black_box(planner.plan(&mut policy, &est));
+    });
+    let r_capture = bench.run(&format!("planner_e2e/capture {scale}"), || {
+        capture(&mut planner);
+        std::hint::black_box(planner.snapshot());
+    });
+    let r_plan = bench.run(&format!("planner_e2e/plan {scale}"), || {
+        std::hint::black_box(planner.plan(&mut policy, &est));
+    });
+
+    // ---- the pre-refactor baseline --------------------------------------
+    let mut baseline = BaselineSnapshot::default();
+    let r_baseline = bench.run(&format!("planner_e2e/capture_hashmap_baseline {scale}"), || {
+        capture_hashmap_baseline(&st, &mut baseline);
+    });
+
+    // ---- aged engine: 10k finished ids below the live set ----------------
+    // Guards the slab's edge-tombstone compaction: capture must cost the
+    // same as the fresh state, not O(historical max id).
+    let aged = build_state(10_000);
+    let mut aged_planner = Planner::new();
+    let r_capture_aged = bench.run(&format!("planner_e2e/capture aged-10k {scale}"), || {
+        aged_planner.capture(
+            aged.now,
+            &aged.cfg,
+            &aged.backend,
+            &aged.cache,
+            &aged.waiting,
+            &aged.swapq,
+            &aged.running,
+            &aged.paused,
+            &aged.requests,
+        );
+        std::hint::black_box(aged_planner.snapshot());
+    });
+
+    // ---- whole-run scheduler throughput (sim replay) ---------------------
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 20260730).generate(120, 3.0);
+    let run_once = || {
+        let spec = SimModelSpec::gptj_6b();
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+        engine.run_trace(&trace).unwrap()
+    };
+    let iters_per_run = run_once().iterations;
+    let r_replay = bench.run("planner_e2e/sim_replay mixed120@3rps infercept", || {
+        std::hint::black_box(run_once());
+    });
+
+    // ---- machine-readable trajectory -------------------------------------
+    for r in [&r_cycle, &r_capture, &r_capture_aged, &r_plan, &r_baseline, &r_replay] {
+        report.push(r);
+    }
+    report.derived(
+        "capture_speedup_vs_hashmap",
+        Json::num(((r_baseline.mean_ns / r_capture.mean_ns) * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "capture_aged_over_fresh",
+        Json::num(((r_capture_aged.mean_ns / r_capture.mean_ns) * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "capture_plan_cycle_us",
+        Json::num((r_cycle.mean_ns / 1e3 * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "sim_replay_iters_per_sec",
+        Json::num((iters_per_run as f64 * 1e9 / r_replay.mean_ns).round()),
+    );
+    report.derived("sim_replay_iterations", Json::num(iters_per_run as f64));
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sched.json").to_string()
+    });
+    report.write(std::path::Path::new(&out)).expect("write bench report");
+}

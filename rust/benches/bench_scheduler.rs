@@ -20,7 +20,7 @@ use infercept::util::bench::Bench;
 fn main() {
     let bench = Bench::quick();
     let spec = SimModelSpec::gptj_6b();
-    let profile = spec.profile.clone();
+    let profile = spec.profile;
 
     bench.run("waste/min_waste eq1-5", || {
         let w = WasteInputs {
@@ -85,7 +85,7 @@ fn main() {
     // This is the whole per-iteration scheduling cost of the refactored
     // engine (capture excluded), so it bounds coordinator overhead.
     let bs = 16usize;
-    let mut snap = SchedSnapshot::new(Policy::infercept(), profile.clone(), spec.swap_model(true));
+    let mut snap = SchedSnapshot::new(Policy::infercept(), profile, spec.swap_model(true));
     snap.kv_bytes_per_token = spec.kv_bytes_per_token;
     snap.max_decode_batch = 256;
     snap.max_blocks_per_seq = 256;

@@ -46,7 +46,7 @@ mod real {
             "profiled: t_base {:.0} µs, {:.2} µs/ctx-tok, {:.0} µs/query-tok",
             profile.t_base_us, profile.us_per_ctx_token, profile.us_per_query_unsat
         );
-        backend.set_profile(profile.clone());
+        backend.set_profile(profile);
 
         let mut cfg = EngineConfig {
             policy,

@@ -21,27 +21,38 @@ pub fn chunk_budget(saturation: usize, running_query_tokens: usize, floor: usize
 /// `python/compile/model.py`). With an empty `sizes` (sim backend) the
 /// answer is a single exact chunk.
 pub fn decompose(tokens: usize, sizes: &[usize]) -> Vec<usize> {
-    if tokens == 0 {
-        return vec![];
-    }
-    if sizes.is_empty() {
-        return vec![tokens];
-    }
     let mut sorted = sizes.to_vec();
     sorted.sort_unstable();
     let mut out = Vec::new();
+    decompose_sorted_into(tokens, &sorted, &mut out);
+    out
+}
+
+/// Allocation-free [`decompose`] for the scheduling hot path: `sizes` must
+/// already be sorted ascending (the planner sorts its snapshot's compiled
+/// sizes once per iteration), and the decomposition is appended into the
+/// caller's reused `out` buffer (cleared first).
+pub fn decompose_sorted_into(tokens: usize, sizes: &[usize], out: &mut Vec<usize>) {
+    debug_assert!(sizes.windows(2).all(|w| w[0] <= w[1]), "sizes must be sorted");
+    out.clear();
+    if tokens == 0 {
+        return;
+    }
+    if sizes.is_empty() {
+        out.push(tokens);
+        return;
+    }
     let mut rem = tokens;
     while rem > 0 {
-        if let Some(&fit) = sorted.iter().rev().find(|&&s| s <= rem) {
+        if let Some(&fit) = sizes.iter().rev().find(|&&s| s <= rem) {
             out.push(fit);
             rem -= fit;
         } else {
             // Tail smaller than every compiled size: use the smallest (pad).
-            out.push(sorted[0]);
+            out.push(sizes[0]);
             rem = 0;
         }
     }
-    out
 }
 
 /// Tokens actually covered by a decomposition (== tokens, capped per chunk).
@@ -89,6 +100,20 @@ mod tests {
             let total: usize = decompose(tokens, &SIZES).iter().sum();
             assert!(total >= tokens, "{total} < {tokens}");
             assert!(total < tokens + 16, "overpadded: {total} for {tokens}");
+        });
+    }
+
+    #[test]
+    fn prop_sorted_into_matches_decompose() {
+        // The hot-path variant must reproduce the allocating one exactly
+        // (the planner's bit-identical-plans guarantee depends on it).
+        prop::check("decompose_sorted_into_parity", 300, |rng| {
+            let tokens = rng.usize(0, 3000);
+            let mut out = vec![7usize; 3]; // dirty reused buffer
+            decompose_sorted_into(tokens, &SIZES, &mut out);
+            assert_eq!(out, decompose(tokens, &SIZES));
+            decompose_sorted_into(tokens, &[], &mut out);
+            assert_eq!(out, decompose(tokens, &[]));
         });
     }
 

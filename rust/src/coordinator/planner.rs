@@ -38,8 +38,6 @@
 //! deterministically. The engine merely *applies* the plan: real cache
 //! mutations, backend execution, and metrics.
 
-use std::collections::{HashMap, HashSet};
-
 use crate::augment::AugmentKind;
 use crate::config::EngineConfig;
 use crate::coordinator::budget::{self, BudgetInputs};
@@ -52,9 +50,9 @@ use crate::coordinator::scheduler::{
 };
 use crate::coordinator::waste::FwdProfile;
 use crate::engine::backend::ExecBackend;
-use crate::engine::request::{ReqState, Request};
+use crate::engine::request::{ReqState, ReqTable, Request};
 use crate::kvcache::swap::SwapModel;
-use crate::kvcache::{CacheManager, CacheSnapshot, ReqId};
+use crate::kvcache::{CacheManager, CacheSnapshot, ReqId, ReqSlots};
 use crate::util::Micros;
 
 // ---------------------------------------------------------------------------
@@ -134,6 +132,9 @@ pub struct SchedSnapshot {
     // -- backend capabilities ---------------------------------------------
     pub max_decode_batch: usize,
     pub max_blocks_per_seq: usize,
+    /// Compiled prefill chunk sizes, kept **sorted ascending** by
+    /// [`Planner::plan`] so every admission's §4.2 decomposition skips the
+    /// per-call copy+sort.
     pub prefill_chunk_sizes: Vec<usize>,
     pub profile: FwdProfile,
     pub swap_model: SwapModel,
@@ -143,7 +144,16 @@ pub struct SchedSnapshot {
     pub running: Vec<ReqId>,
     /// Engine insertion order (decision order must match).
     pub paused: Vec<ReqId>,
-    pub reqs: HashMap<ReqId, ReqSnapshot>,
+    /// Per-request state, dense over the live id range (ids are sequential
+    /// — see `engine/request.rs`): stage loops index this slab instead of
+    /// hashing, and capture re-bases it onto `[min live id, max live id]`
+    /// each iteration. Capture cost is therefore O(newest − oldest *live*
+    /// id), so the oldest unfinished request anchors the span — a session
+    /// parked indefinitely on a never-resumed external interception grows
+    /// it without bound (production deployments need session
+    /// timeouts/cancellation, a listed serving-front follow-on, to bound
+    /// request lifetime).
+    pub reqs: ReqSlots<ReqSnapshot>,
     pub cache: CacheSnapshot,
 }
 
@@ -168,7 +178,7 @@ impl SchedSnapshot {
             swapq: Vec::new(),
             running: Vec::new(),
             paused: Vec::new(),
-            reqs: HashMap::new(),
+            reqs: ReqSlots::new(),
             cache: CacheSnapshot::default(),
         }
     }
@@ -368,33 +378,31 @@ pub fn solve_budgets(snap: &SchedSnapshot, fwd: &FwdEstimate) -> (usize, usize) 
 
 /// Mutable simulation the later stages plan against: a cloned cache ledger
 /// plus per-request overrides. Entirely planner-private state; the real
-/// engine is untouched.
+/// engine is untouched. Both per-request tables are dense slabs, so the
+/// per-iteration reset is a flat copy and stage lookups never hash.
 #[derive(Debug, Default)]
 struct SimState {
     cache: CacheSnapshot,
-    reqs: HashMap<ReqId, ReqSnapshot>,
+    reqs: ReqSlots<ReqSnapshot>,
     /// Waiting queue ordered by (queue_arrival, req) — grows with swap-in
     /// completions and evicted running requests.
     waiting: Vec<(Micros, ReqId)>,
     /// Requests already in this plan: their cache entries are referenced by
     /// plan entries and must not be evicted.
-    planned: HashSet<ReqId>,
+    planned: ReqSlots<()>,
 }
 
 impl SimState {
     fn reset_from(&mut self, snap: &SchedSnapshot) {
         self.cache.clone_from(&snap.cache);
-        self.reqs.clear();
-        for (k, v) in &snap.reqs {
-            self.reqs.insert(*k, *v);
-        }
+        self.reqs.clone_from(&snap.reqs);
         self.waiting.clear();
-        self.waiting.extend(snap.waiting.iter().map(|&r| (snap.reqs[&r].queue_arrival, r)));
-        self.planned.clear();
+        self.waiting.extend(snap.waiting.iter().map(|&r| (snap.reqs[r].queue_arrival, r)));
+        self.planned.reset_like(&snap.reqs);
     }
 
     fn insert_waiting(&mut self, req: ReqId) {
-        let arr = self.reqs[&req].queue_arrival;
+        let arr = self.reqs[req].queue_arrival;
         let pos = self.waiting.partition_point(|&(a, r)| (a, r) <= (arr, req));
         self.waiting.insert(pos, (arr, req));
     }
@@ -402,13 +410,13 @@ impl SimState {
     /// Mirror of the engine's preemption-by-recompute.
     fn evict(&mut self, req: ReqId) {
         {
-            let r = self.reqs.get_mut(&req).unwrap();
+            let r = &mut self.reqs[req];
             r.recompute_hwm = r.recompute_hwm.max(r.processed);
             r.processed = 0;
         }
         self.cache.release(req);
-        if self.reqs[&req].state == ReqState::Running {
-            self.reqs.get_mut(&req).unwrap().state = ReqState::Waiting;
+        if self.reqs[req].state == ReqState::Running {
+            self.reqs[req].state = ReqState::Waiting;
             self.insert_waiting(req);
         }
         // Waiting victims stay queued and restart from zero.
@@ -430,21 +438,21 @@ impl SimState {
                 self.cache.reserve_grow(req, target);
                 return true;
             }
-            let req_arrival = self.reqs[&req].queue_arrival;
+            let req_arrival = self.reqs[req].queue_arrival;
             let victim = snap
                 .running
                 .iter()
                 .copied()
                 .filter(|r| self.reqs[r].state == ReqState::Running)
                 .chain(self.waiting.iter().map(|&(_, r)| r))
-                .filter(|r| {
-                    *r != req && !self.planned.contains(r) && self.cache.gpu_tokens_of(*r) > 0
+                .filter(|&r| {
+                    r != req && !self.planned.contains(r) && self.cache.gpu_tokens_of(r) > 0
                 })
                 .max_by_key(|r| (self.reqs[r].queue_arrival, *r));
             let Some(v) = victim else {
                 return false;
             };
-            if self.reqs[&v].queue_arrival < req_arrival {
+            if self.reqs[v].queue_arrival < req_arrival {
                 return false; // only strictly lower-priority victims
             }
             self.evict(v);
@@ -497,20 +505,20 @@ fn stage_dispositions(
     for (req, action) in actions {
         match action {
             InterceptAction::Preserve => {
-                sim.reqs.get_mut(&req).unwrap().disposition = Disposition::Preserved;
+                sim.reqs[req].disposition = Disposition::Preserved;
             }
             InterceptAction::Discard => {
                 {
-                    let r = sim.reqs.get_mut(&req).unwrap();
+                    let r = &mut sim.reqs[req];
                     r.recompute_hwm = r.recompute_hwm.max(r.processed);
                     r.disposition = Disposition::Discarded;
                 }
                 if sim.cache.cpu_blocks_of(req) > 0 {
                     let new_len = sim.cache.discard_gpu_tail(req);
-                    sim.reqs.get_mut(&req).unwrap().processed = new_len;
+                    sim.reqs[req].processed = new_len;
                 } else {
                     sim.cache.release(req);
-                    sim.reqs.get_mut(&req).unwrap().processed = 0;
+                    sim.reqs[req].processed = 0;
                 }
             }
             InterceptAction::SwapOut { tokens } => {
@@ -518,7 +526,7 @@ fn stage_dispositions(
                     plan.swap_out_blocks +=
                         sim.cache.swap_out(req, tokens.div_ceil(snap.block_size));
                 }
-                sim.reqs.get_mut(&req).unwrap().disposition = Disposition::SwappingOut;
+                sim.reqs[req].disposition = Disposition::SwappingOut;
             }
         }
         plan.dispositions.push((req, action));
@@ -547,7 +555,7 @@ fn stage_swap_in(snap: &SchedSnapshot, in_budget: usize, sim: &mut SimState, pla
         if completes {
             // Fully resident: continues as a waiting (prefill) request and
             // is eligible for admission later this very iteration.
-            sim.reqs.get_mut(&req).unwrap().state = ReqState::Waiting;
+            sim.reqs[req].state = ReqState::Waiting;
             sim.insert_waiting(req);
         }
     }
@@ -559,18 +567,19 @@ fn stage_batch(
     sim: &mut SimState,
     plan: &mut SchedPlan,
     prefill_order: &mut Vec<(Micros, ReqId)>,
+    pools: &mut PlanPools,
 ) {
     // ---- Decode admission (running requests, FCFS, bounded batch) --------
     let decode_cap = policy.decode_batch_cap(snap).min(snap.max_decode_batch);
     for &req in snap.running.iter().take(decode_cap) {
-        if sim.reqs[&req].state != ReqState::Running {
+        if sim.reqs[req].state != ReqState::Running {
             continue; // evicted by an earlier admission this iteration
         }
-        let target = sim.reqs[&req].processed + 1;
-        let mut ev = Vec::new();
+        let target = sim.reqs[req].processed + 1;
+        let mut ev = pools.evictions.pop().unwrap_or_default();
         let ok = sim.ensure_blocks(snap, req, target, &mut ev);
         if ok {
-            sim.planned.insert(req);
+            sim.planned.insert(req, ());
         }
         if ok || !ev.is_empty() {
             plan.decode.push(DecodeAdmission {
@@ -579,6 +588,8 @@ fn stage_batch(
                 admitted: ok,
                 target_tokens: target,
             });
+        } else {
+            pools.evictions.push(ev); // unused (still empty): back to the pool
         }
     }
 
@@ -595,7 +606,7 @@ fn stage_batch(
         if q_left == 0 {
             break;
         }
-        let r = sim.reqs[&req];
+        let r = sim.reqs[req];
         if r.state != ReqState::Waiting {
             continue;
         }
@@ -605,16 +616,21 @@ fn stage_batch(
         if !chunked {
             chunk_real = pending; // whole context in one iteration
         }
-        let chunks = chunking::decompose(chunk_real, &snap.prefill_chunk_sizes);
+        let mut chunks = pools.chunks.pop().unwrap_or_default();
+        chunking::decompose_sorted_into(chunk_real, &snap.prefill_chunk_sizes, &mut chunks);
         let padded: usize = chunks.iter().sum();
         // Respect the per-sequence block-table capacity incl. padding.
         if r.processed + padded > snap.max_blocks_per_seq * snap.block_size {
+            chunks.clear();
+            pools.chunks.push(chunks);
             continue; // cannot pad past capacity; wait for exact fit
         }
         let target = r.processed + padded;
-        let mut ev = Vec::new();
+        let mut ev = pools.evictions.pop().unwrap_or_default();
         let ok = sim.ensure_blocks(snap, req, target, &mut ev);
         if !ok {
+            chunks.clear();
+            pools.chunks.push(chunks);
             if !ev.is_empty() {
                 plan.prefill.push(PrefillAdmission {
                     req,
@@ -624,10 +640,12 @@ fn stage_batch(
                     from_tokens: r.processed,
                     ..Default::default()
                 });
+            } else {
+                pools.evictions.push(ev);
             }
             break; // FCFS head-of-line blocks until memory frees up
         }
-        sim.planned.insert(req);
+        sim.planned.insert(req, ());
         let finishes = chunk_real == pending;
         let recompute_tokens = r.recompute_hwm.saturating_sub(r.processed).min(chunk_real);
         plan.prefill.push(PrefillAdmission {
@@ -649,6 +667,43 @@ fn stage_batch(
 // Planner (snapshot capture + staged planning, reusable buffers)
 // ---------------------------------------------------------------------------
 
+/// Recycled per-admission vectors: plan entries own `Vec`s (`evictions`,
+/// `chunks`), so clearing a plan would otherwise drop one heap buffer per
+/// admission per iteration. The planner drains finished plan entries back
+/// into these pools and hands the (cleared, capacity-retaining) buffers to
+/// the next iteration's admissions.
+#[derive(Debug, Default)]
+struct PlanPools {
+    evictions: Vec<Vec<ReqId>>,
+    chunks: Vec<Vec<usize>>,
+}
+
+impl PlanPools {
+    /// Reclaim the per-entry buffers of a finished plan (leaves `plan`'s
+    /// entry lists empty, outer capacity retained).
+    fn reclaim(&mut self, plan: &mut SchedPlan) {
+        for a in plan.decode.drain(..) {
+            let mut v = a.evictions;
+            if v.capacity() > 0 {
+                v.clear();
+                self.evictions.push(v);
+            }
+        }
+        for a in plan.prefill.drain(..) {
+            let mut v = a.evictions;
+            if v.capacity() > 0 {
+                v.clear();
+                self.evictions.push(v);
+            }
+            let mut c = a.chunks;
+            if c.capacity() > 0 {
+                c.clear();
+                self.chunks.push(c);
+            }
+        }
+    }
+}
+
 /// Owns the snapshot, the plan, and all scratch buffers, so the per-
 /// iteration hot path allocates nothing in steady state (buffers are
 /// cleared, not dropped).
@@ -659,6 +714,7 @@ pub struct Planner {
     views: Vec<PausedView>,
     sim: SimState,
     prefill_order: Vec<(Micros, ReqId)>,
+    pools: PlanPools,
 }
 
 impl Planner {
@@ -685,11 +741,18 @@ impl Planner {
             views: Vec::new(),
             sim: SimState::default(),
             prefill_order: Vec::new(),
+            pools: PlanPools::default(),
         }
     }
 
     /// Capture the engine's current state into the internal snapshot,
     /// reusing buffers (no `&mut` escapes; the engine stays untouched).
+    ///
+    /// Hot-path cost: O(live requests + live cache id range). Queue lists
+    /// are memcpy'd, the cache snapshot is a dense counter copy (see
+    /// [`CacheManager::snapshot_into`]), the per-request table re-bases
+    /// onto the live id range without hashing, and the immutable-per-run
+    /// profile/swap-model are embedded by `Copy` assignment.
     #[allow(clippy::too_many_arguments)]
     pub fn capture(
         &mut self,
@@ -701,7 +764,7 @@ impl Planner {
         swapq: &FcfsQueue,
         running: &FcfsQueue,
         paused: &[ReqId],
-        requests: &HashMap<ReqId, Request>,
+        requests: &ReqTable,
     ) {
         let s = &mut self.snap;
         s.now = now;
@@ -715,8 +778,8 @@ impl Planner {
         s.max_blocks_per_seq = backend.max_blocks_per_seq();
         s.prefill_chunk_sizes.clear();
         s.prefill_chunk_sizes.extend_from_slice(backend.prefill_chunk_sizes());
-        s.profile = backend.fwd_profile().clone();
-        s.swap_model = backend.swap_model().clone();
+        s.profile = *backend.fwd_profile();
+        s.swap_model = *backend.swap_model();
         s.waiting.clear();
         s.waiting.extend(waiting.iter());
         s.swapq.clear();
@@ -726,9 +789,21 @@ impl Planner {
         s.paused.clear();
         s.paused.extend_from_slice(paused);
         cache.snapshot_into(&mut s.cache);
-        s.reqs.clear();
-        for &id in s.waiting.iter().chain(&s.swapq).chain(&s.running).chain(&s.paused) {
-            s.reqs.insert(id, ReqSnapshot::of(&requests[&id]));
+        let SchedSnapshot { waiting, swapq, running, paused, reqs, .. } = s;
+        let live =
+            || waiting.iter().chain(swapq.iter()).chain(running.iter()).chain(paused.iter());
+        let (mut lo, mut hi) = (ReqId::MAX, ReqId::MIN);
+        for &id in live() {
+            lo = lo.min(id);
+            hi = hi.max(id);
+        }
+        if lo > hi {
+            reqs.clear(); // nothing live this iteration
+        } else {
+            reqs.reset_range(lo, hi);
+            for &id in live() {
+                reqs.insert(id, ReqSnapshot::of(&requests[id]));
+            }
         }
     }
 
@@ -741,8 +816,13 @@ impl Planner {
         policy: &mut dyn SchedPolicy,
         estimator: &DurationEstimator,
     ) -> &SchedPlan {
-        let Planner { snap, plan, views, sim, prefill_order } = self;
+        let Planner { snap, plan, views, sim, prefill_order, pools } = self;
+        pools.reclaim(plan);
         plan.clear();
+        // The §4.2 chunk decomposition expects the compiled sizes sorted
+        // ascending; sort once per plan (a no-op on already-sorted input)
+        // instead of copy+sorting inside every prefill admission.
+        snap.prefill_chunk_sizes.sort_unstable();
         sim.reset_from(snap);
         // Feedback first, then the (policy-aware) stage-1 estimate: a
         // controller's state update may reshape its own estimate.
@@ -754,7 +834,7 @@ impl Planner {
         plan.swap_in_budget = in_budget;
         stage_dispositions(snap, &fwd, out_budget, policy, estimator, views, sim, plan);
         stage_swap_in(snap, in_budget, sim, plan);
-        stage_batch(snap, policy, sim, plan, prefill_order);
+        stage_batch(snap, policy, sim, plan, prefill_order, pools);
         &self.plan
     }
 
@@ -1152,9 +1232,52 @@ mod tests {
         });
     }
 
+    #[test]
+    fn prop_dense_tables_plan_identically_across_buffer_reuse() {
+        // The slab refactor's parity pin: for random snapshots with sparse
+        // live-id patterns (released requests leave tombstones), a planner
+        // whose dense tables / pools are warm from planning a *different*
+        // snapshot must produce a `Debug`-identical `SchedPlan` to a fresh
+        // planner — stale slab slots or recycled buffers leaking across
+        // iterations would show up here. Covers every fig2 policy plus the
+        // adaptive controller.
+        use crate::coordinator::sched_policy::AdaptivePolicy;
+        let policies = Policy::fig2_set();
+        prop::check("dense_plan_reuse_parity", 60, |rng| {
+            for policy in &policies {
+                let warm = random_snapshot(rng, policy.clone());
+                let s = random_snapshot(rng, policy.clone());
+                let mut fresh = Planner::new();
+                let a = format!("{:?}", fresh.plan_for(s.clone(), &est()));
+                let mut reused = Planner::new();
+                reused.plan_for(warm.clone(), &est()); // dirty every buffer
+                let b = format!("{:?}", reused.plan_for(s.clone(), &est()));
+                assert_eq!(a, b, "{} (fresh vs reused planner)", policy.name);
+                let plan = reused.take_plan();
+                replay_asserts_feasible(&s, &plan);
+                reused.put_back_plan(plan);
+            }
+            // Adaptive: fresh controller state per plan, planner buffers warm.
+            let warm = random_snapshot(rng, Policy::adaptive());
+            let s = random_snapshot(rng, Policy::adaptive());
+            let mut fresh = Planner::new();
+            let a =
+                format!("{:?}", fresh.plan_with(s.clone(), &mut AdaptivePolicy::new(1000), &est()));
+            let mut reused = Planner::new();
+            reused.plan_with(warm, &mut AdaptivePolicy::new(1000), &est());
+            let b = format!(
+                "{:?}",
+                reused.plan_with(s.clone(), &mut AdaptivePolicy::new(1000), &est())
+            );
+            assert_eq!(a, b, "adaptive (fresh vs reused planner)");
+        });
+    }
+
     /// A random but *consistent* engine state: queue membership matches
     /// request state, cache lengths match `processed`, paused requests have
-    /// CPU-prefix layouts, and total block usage fits the pool.
+    /// CPU-prefix layouts, and total block usage fits the pool. Ids are
+    /// drawn with random gaps (finished/released requests leave holes), so
+    /// the dense slab tables are exercised on sparse live-id patterns.
     fn random_snapshot(rng: &mut Pcg, policy: Policy) -> SchedSnapshot {
         let total_gpu = rng.usize(4, 30);
         let total_cpu = rng.usize(2, 12);
@@ -1164,12 +1287,12 @@ mod tests {
         s.max_blocks_per_seq = 8;
         let mut gpu_used = 0usize;
         let mut cpu_used = 0usize;
-        let mut id: ReqId = 0;
+        let mut id: ReqId = rng.range(0, 40);
         for _ in 0..rng.usize(0, 3) {
             let ctx = rng.usize(1, 48);
             let blocks = ctx.div_ceil(BS);
             if gpu_used + blocks <= total_gpu {
-                id += 1;
+                id += rng.range(1, 17);
                 gpu_used += blocks;
                 add_running(&mut s, id, rng.range(0, 500), ctx);
             }
@@ -1179,11 +1302,11 @@ mod tests {
             let processed = rng.usize(0, tokens - 1);
             let blocks = processed.div_ceil(BS);
             if gpu_used + blocks <= total_gpu {
-                id += 1;
+                id += rng.range(1, 17);
                 gpu_used += blocks;
                 add_waiting(&mut s, id, rng.range(0, 500), tokens, processed);
                 if rng.usize(0, 1) == 0 {
-                    s.reqs.get_mut(&id).unwrap().recompute_hwm = rng.usize(0, tokens);
+                    s.reqs[id].recompute_hwm = rng.usize(0, tokens);
                 }
             }
         }
@@ -1192,12 +1315,12 @@ mod tests {
             let blocks = ctx.div_ceil(BS);
             let cpu = rng.usize(0, blocks.min(total_cpu.saturating_sub(cpu_used)));
             if gpu_used + (blocks - cpu) <= total_gpu {
-                id += 1;
+                id += rng.range(1, 17);
                 gpu_used += blocks - cpu;
                 cpu_used += cpu;
                 let kind = *rng.choose(&ALL_KINDS);
                 add_paused(&mut s, id, rng.range(0, 500), ctx, kind, cpu);
-                let r = s.reqs.get_mut(&id).unwrap();
+                let r = &mut s.reqs[id];
                 r.paused_at = rng.range(0, 1_000_000);
                 r.pause_duration_us = rng.range(1_000, 30_000_000);
                 r.disposition = match rng.usize(0, 2) {
@@ -1210,7 +1333,7 @@ mod tests {
         for _ in 0..rng.usize(0, 2) {
             let cpu = rng.usize(1, 3);
             if cpu_used + cpu <= total_cpu {
-                id += 1;
+                id += rng.range(1, 17);
                 cpu_used += cpu;
                 add_swapq(&mut s, id, rng.range(0, 500), cpu);
             }
@@ -1223,7 +1346,7 @@ mod tests {
                 total_cpu - cpu_used,
             );
             // Rebuild seq entries recorded by the helpers.
-            for (&r, q) in &s.reqs {
+            for (r, q) in s.reqs.iter() {
                 let (blocks, cpu_blocks) = match q.state {
                     ReqState::Running | ReqState::Waiting => (q.processed.div_ceil(BS), 0),
                     ReqState::Paused => {

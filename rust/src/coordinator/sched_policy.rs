@@ -410,7 +410,7 @@ mod tests {
         // history, not queue pressure: it must not saturate the controller.
         let mut p = AdaptivePolicy::new(200_000);
         let mut s = snapshot(Policy::adaptive(), 30_000_000);
-        s.reqs.get_mut(&1).unwrap().recompute_hwm = 150;
+        s.reqs[1].recompute_hwm = 150;
         for _ in 0..20 {
             p.begin_iteration(&s);
         }

@@ -10,7 +10,11 @@ use crate::util::Micros;
 /// Piecewise-linear iteration-time model `T_fwd` obtained by offline
 /// profiling (§4.5): fixed cost + per-context-token memory term + per-query-
 /// token compute term that steepens past the GPU saturation point `S` (§4.2).
-#[derive(Debug, Clone)]
+///
+/// `Copy`: the profile is immutable for the lifetime of a run, and the
+/// per-iteration snapshot capture embeds it by plain assignment — no
+/// allocation, no indirection on the scheduling hot path.
+#[derive(Debug, Clone, Copy)]
 pub struct FwdProfile {
     /// Fixed per-iteration cost in µs (weight streaming, launch overhead).
     pub t_base_us: f64,

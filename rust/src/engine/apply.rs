@@ -32,7 +32,7 @@ impl Engine {
             match action {
                 InterceptAction::Preserve => {
                     self.metrics.preserve_decisions += 1;
-                    self.requests.get_mut(&req).unwrap().disposition = Disposition::Preserved;
+                    self.requests[req].disposition = Disposition::Preserved;
                 }
                 InterceptAction::Discard => {
                     self.metrics.discard_decisions += 1;
@@ -49,8 +49,7 @@ impl Engine {
                         }
                         exec.swap_out.extend(moves);
                     }
-                    self.requests.get_mut(&req).unwrap().disposition =
-                        Disposition::SwappingOut;
+                    self.requests[req].disposition = Disposition::SwappingOut;
                 }
             }
         }
@@ -68,7 +67,7 @@ impl Engine {
             if g.completes {
                 debug_assert_eq!(self.cache.cpu_blocks_of(g.req), 0);
                 self.swapq.remove(g.req);
-                let rq = self.requests.get_mut(&g.req).unwrap();
+                let rq = &mut self.requests[g.req];
                 rq.state = ReqState::Waiting;
                 self.waiting.push(rq.queue_arrival, g.req);
             }
@@ -83,7 +82,7 @@ impl Engine {
                 continue;
             }
             self.cache.grow(adm.req, adm.target_tokens)?;
-            let rq = &self.requests[&adm.req];
+            let rq = &self.requests[adm.req];
             exec.decode.push(DecodeEntry {
                 req: adm.req,
                 token: rq.tokens[rq.processed],
@@ -103,7 +102,7 @@ impl Engine {
                 continue;
             }
             self.cache.grow(adm.req, adm.target_tokens)?;
-            let rq = &self.requests[&adm.req];
+            let rq = &self.requests[adm.req];
             debug_assert_eq!(rq.processed, adm.from_tokens, "sim/real prefill divergence");
             if adm.recompute_tokens > 0 {
                 self.rebuild_scratch.push(adm.req);
@@ -145,7 +144,7 @@ impl Engine {
         for e in &exec.prefill {
             let attended = e.cache_len as usize + e.real_len as usize;
             total_ctx += attended;
-            let hwm = self.requests[&e.req].recompute_hwm;
+            let hwm = self.requests[e.req].recompute_hwm;
             let rp = hwm.saturating_sub(e.cache_len as usize).min(e.real_len as usize);
             if e.real_len > 0 {
                 rq_ctx += attended * rp / e.real_len as usize;
@@ -156,20 +155,18 @@ impl Engine {
 
         // ---- Bookkeeping: advance caches ---------------------------------
         for e in &exec.decode {
-            let rq = self.requests.get_mut(&e.req).unwrap();
-            rq.processed += 1;
+            self.requests[e.req].processed += 1;
             self.cache.advance(e.req, 1);
         }
         for e in &exec.prefill {
-            let rq = self.requests.get_mut(&e.req).unwrap();
-            rq.processed += e.real_len as usize;
+            self.requests[e.req].processed += e.real_len as usize;
             self.cache.advance(e.req, e.real_len as usize);
         }
         // Requests that completed their pending prefill become Running.
         for adm in plan.prefill.iter().filter(|a| a.admitted) {
-            if self.requests[&adm.req].pending_prefill() == 0 {
+            if self.requests[adm.req].pending_prefill() == 0 {
                 self.waiting.remove(adm.req);
-                let rq = self.requests.get_mut(&adm.req).unwrap();
+                let rq = &mut self.requests[adm.req];
                 rq.state = ReqState::Running;
                 self.running.push(rq.queue_arrival, adm.req);
             }
@@ -225,7 +222,7 @@ impl Engine {
         // requests that recomputed this iteration plus those parked
         // mid-rebuild in the waiting queue.
         for r in self.waiting.iter() {
-            let rq = &self.requests[&r];
+            let rq = &self.requests[r];
             if rq.processed < rq.recompute_hwm && !self.rebuild_scratch.contains(&r) {
                 self.rebuild_scratch.push(r);
             }
@@ -233,9 +230,9 @@ impl Engine {
         let rebuilding: f64 = self
             .rebuild_scratch
             .iter()
-            .map(|r| {
+            .map(|&r| {
                 let rq = &self.requests[r];
-                self.cache.gpu_tokens_of(*r).min(rq.recompute_hwm) as f64
+                self.cache.gpu_tokens_of(r).min(rq.recompute_hwm) as f64
             })
             .sum();
         // Eq. 1/4's second term: every OTHER resident context is held idle

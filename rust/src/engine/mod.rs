@@ -43,12 +43,10 @@ pub mod backend;
 pub mod request;
 pub mod sampling;
 
-use std::collections::HashMap;
-
 use anyhow::{bail, Result};
 
 pub use backend::ExecBackend;
-use request::{ReqState, Request};
+use request::{ReqState, ReqTable, Request};
 
 use crate::config::EngineConfig;
 use crate::coordinator::estimator::DurationEstimator;
@@ -83,7 +81,9 @@ pub struct Engine {
     swapq: FcfsQueue,
     running: FcfsQueue,
     paused: Vec<ReqId>,
-    requests: HashMap<ReqId, Request>,
+    /// Dense id-indexed request store (ids are sequential from 1; finished
+    /// requests stay for reporting — see `engine/request.rs`).
+    requests: ReqTable,
     /// Who resolves interceptions (scripted timers by default; the serving
     /// front installs a client-aware source).
     intercepts: Box<dyn InterceptSource>,
@@ -122,7 +122,7 @@ impl Engine {
             swapq: FcfsQueue::default(),
             running: FcfsQueue::default(),
             paused: Vec::new(),
-            requests: HashMap::new(),
+            requests: ReqTable::new(),
             intercepts,
             events: EventBus::default(),
             estimator,
@@ -146,7 +146,7 @@ impl Engine {
     }
 
     pub fn request(&self, id: ReqId) -> Option<&Request> {
-        self.requests.get(&id)
+        self.requests.get(id)
     }
 
     /// Current engine-clock time.
@@ -227,7 +227,7 @@ impl Engine {
                 .collect()
         });
         let req = Request::new(id, arrival_us, script, prompt);
-        self.requests.insert(id, req);
+        self.requests.insert_next(req);
         // Keep `pending` sorted soonest-last (popped from the back).
         let pos = self.pending.partition_point(|&(t, r)| (t, r) > (arrival_us, id));
         self.pending.insert(pos, (arrival_us, id));
@@ -355,7 +355,7 @@ impl Engine {
                 break;
             }
             self.pending.pop();
-            let rq = self.requests.get_mut(&id).unwrap();
+            let rq = &mut self.requests[id];
             rq.state = ReqState::Waiting;
             self.waiting.push(rq.queue_arrival, id);
             self.events.emit(id, || EngineEvent::Admitted { req: id, at: now });
@@ -376,7 +376,7 @@ impl Engine {
         let vocab = self.cfg.vocab;
         let ret: Vec<u32> = match r.tokens {
             Some(tokens) => {
-                let rq = &self.requests[&req];
+                let rq = &self.requests[req];
                 // Context still owed to the script after this return: the
                 // later segments' generation and scripted returns.
                 let reserved: usize = rq.script.segments[rq.segment + 1..]
@@ -395,7 +395,7 @@ impl Engine {
                 tokens.into_iter().take(allowed).map(|t| t % vocab).collect()
             }
             None => {
-                let rq = &self.requests[&req];
+                let rq = &self.requests[req];
                 let int = rq.script.segments[rq.segment].interception.as_ref().unwrap();
                 (0..int.ret_tokens).map(|i| (req as u32 ^ i) % vocab).collect()
             }
@@ -403,7 +403,7 @@ impl Engine {
         let ret_len = ret.len();
         let keep_arrival = self.cfg.policy.keep_original_arrival;
         let has_cpu = self.cache.cpu_blocks_of(req) > 0;
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.intercepted_us += now.saturating_sub(rq.paused_at);
         rq.tokens.extend(ret);
         rq.segment += 1;
@@ -425,22 +425,22 @@ impl Engine {
 
     /// Free a paused request's GPU context (keeping any CPU prefix).
     fn discard_context(&mut self, req: ReqId) {
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.recompute_hwm = rq.recompute_hwm.max(rq.processed);
         rq.disposition = Disposition::Discarded;
         if self.cache.cpu_blocks_of(req) > 0 {
             let new_len = self.cache.discard_gpu_tail(req);
-            self.requests.get_mut(&req).unwrap().processed = new_len;
+            self.requests[req].processed = new_len;
         } else {
             self.cache.release(req);
-            self.requests.get_mut(&req).unwrap().processed = 0;
+            self.requests[req].processed = 0;
         }
     }
 
     /// vLLM-style preemption-by-recompute of a running/waiting request.
     fn evict(&mut self, req: ReqId) {
         self.metrics.evictions += 1;
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.recompute_hwm = rq.recompute_hwm.max(rq.processed);
         rq.processed = 0;
         self.cache.release(req);
@@ -457,7 +457,7 @@ impl Engine {
 
     /// A new token was sampled for `req` (decode, or last prefill chunk).
     fn handle_sampled(&mut self, req: ReqId, tok: u32, now: Micros) {
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.tokens.push(tok);
         rq.output_tokens += 1;
         rq.seg_generated += 1;
@@ -477,7 +477,7 @@ impl Engine {
 
     fn fire_interception(&mut self, req: ReqId, now: Micros) {
         let (kind, duration) = {
-            let rq = &self.requests[&req];
+            let rq = &self.requests[req];
             let int = rq.script.segments[rq.segment].interception.as_ref().unwrap();
             (int.kind, int.duration_us)
         };
@@ -495,7 +495,7 @@ impl Engine {
                 (0, hint, true, payload)
             }
         };
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.state = ReqState::Paused;
         rq.disposition = Disposition::Fresh;
         rq.paused_at = now;
@@ -515,13 +515,13 @@ impl Engine {
     }
 
     fn finish(&mut self, req: ReqId, now: Micros) {
-        let rq = self.requests.get_mut(&req).unwrap();
+        let rq = &mut self.requests[req];
         rq.state = ReqState::Finished;
         rq.finished_at = Some(now);
         self.running.remove(req);
         self.cache.release(req);
         self.unfinished -= 1;
-        let rq = &self.requests[&req];
+        let rq = &self.requests[req];
         let record = RequestRecord {
             req,
             arrival: rq.arrival,
@@ -545,20 +545,21 @@ impl Engine {
     /// Invariant check used by integration tests.
     pub fn check_invariants(&self) -> Result<()> {
         self.cache.check_conservation()?;
-        for (id, rq) in &self.requests {
+        for rq in self.requests.iter() {
+            let id = rq.id;
             match rq.state {
                 ReqState::Pending => {
-                    if !self.pending.iter().any(|(_, r)| r == id) {
+                    if !self.pending.iter().any(|&(_, r)| r == id) {
                         bail!("req {id} Pending but not in arrival list");
                     }
                 }
                 ReqState::Waiting => {
-                    if !self.waiting.contains(*id) {
+                    if !self.waiting.contains(id) {
                         bail!("req {id} Waiting but not queued");
                     }
                 }
                 ReqState::Running => {
-                    if !self.running.contains(*id) {
+                    if !self.running.contains(id) {
                         bail!("req {id} Running but not in running queue");
                     }
                     // A Running request always holds exactly one unfed
@@ -571,26 +572,26 @@ impl Engine {
                     }
                 }
                 ReqState::SwapQueue => {
-                    if !self.swapq.contains(*id) {
+                    if !self.swapq.contains(id) {
                         bail!("req {id} SwapQueue but not queued");
                     }
                 }
                 ReqState::Paused => {
-                    if !self.paused.contains(id) {
+                    if !self.paused.contains(&id) {
                         bail!("req {id} Paused but not tracked");
                     }
                 }
                 ReqState::Finished => {
-                    if self.cache.has_seq(*id) {
+                    if self.cache.has_seq(id) {
                         bail!("req {id} finished but holds cache");
                     }
                 }
             }
-            if rq.processed != self.cache.len_tokens(*id) && rq.state != ReqState::Finished {
+            if rq.processed != self.cache.len_tokens(id) && rq.state != ReqState::Finished {
                 bail!(
                     "req {id}: processed {} != cache len {}",
                     rq.processed,
-                    self.cache.len_tokens(*id)
+                    self.cache.len_tokens(id)
                 );
             }
         }

@@ -6,12 +6,91 @@
 //! as prefill chunks (prompt processing and recomputation are the same
 //! operation); when `processed == tokens.len()` and more generation is due,
 //! the request decodes.
+//!
+//! # The dense-sequential-`ReqId` invariant
+//!
+//! `Engine::submit_script` allocates request ids as **consecutive integers
+//! starting at 1** — there are no gaps in the id sequence, ever. Every
+//! per-request table in the scheduling hot path relies on this: the
+//! engine's [`ReqTable`] is a plain vector indexed by `id − 1`, and the
+//! planner/kv-cache side tables are [`crate::kvcache::ReqSlots`] slabs.
+//! "Holes" exist only in the *live* set — a finished request stays in the
+//! `ReqTable` (end-of-run reporting reads it) but leaves every queue and
+//! releases its cache, so the cache slab and each iteration's snapshot
+//! tables see its id as a tombstone (no entry). Anything extending the
+//! engine must preserve sequential allocation or the slabs degrade to
+//! sparse ranges.
 
 use crate::augment::AugmentKind;
 use crate::coordinator::scheduler::Disposition;
 use crate::kvcache::ReqId;
 use crate::util::Micros;
 use crate::workload::RequestScript;
+
+/// Dense request table: the engine's `ReqId → Request` store, a vector
+/// indexed by `id − 1` (ids are dense and sequential, see the module docs).
+/// Requests are never removed — finished requests remain for reporting —
+/// so every id in `1..=len` is always present.
+#[derive(Debug, Default)]
+pub struct ReqTable {
+    reqs: Vec<Request>,
+}
+
+impl ReqTable {
+    pub fn new() -> ReqTable {
+        ReqTable { reqs: Vec::new() }
+    }
+
+    /// Append the next request. Its id must be exactly `len + 1` — the
+    /// engine's sequential allocation.
+    pub fn insert_next(&mut self, req: Request) {
+        debug_assert_eq!(
+            req.id,
+            self.reqs.len() as ReqId + 1,
+            "request ids must be allocated sequentially"
+        );
+        self.reqs.push(req);
+    }
+
+    #[inline]
+    pub fn get(&self, id: ReqId) -> Option<&Request> {
+        self.reqs.get(id.checked_sub(1)? as usize)
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: ReqId) -> Option<&mut Request> {
+        self.reqs.get_mut(id.checked_sub(1)? as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// All requests ever submitted, in id order.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> + '_ {
+        self.reqs.iter()
+    }
+}
+
+impl std::ops::Index<ReqId> for ReqTable {
+    type Output = Request;
+
+    #[inline]
+    fn index(&self, id: ReqId) -> &Request {
+        self.get(id).unwrap_or_else(|| panic!("no request {id}"))
+    }
+}
+
+impl std::ops::IndexMut<ReqId> for ReqTable {
+    #[inline]
+    fn index_mut(&mut self, id: ReqId) -> &mut Request {
+        self.get_mut(id).unwrap_or_else(|| panic!("no request {id}"))
+    }
+}
 
 /// Which phase of its life the request is in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -181,5 +260,21 @@ mod tests {
     #[should_panic]
     fn prompt_length_must_match_script() {
         Request::new(1, 0, script(), vec![1, 2]);
+    }
+
+    #[test]
+    fn req_table_is_dense_and_id_indexed() {
+        let mut t = ReqTable::new();
+        assert!(t.is_empty());
+        t.insert_next(Request::new(1, 0, script(), vec![1, 2, 3, 4]));
+        t.insert_next(Request::new(2, 5, script(), vec![5, 6, 7, 8]));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(1).unwrap().arrival, 0);
+        assert_eq!(t[2].arrival, 5);
+        assert!(t.get(0).is_none());
+        assert!(t.get(3).is_none());
+        t[1].output_tokens = 7;
+        assert_eq!(t.get_mut(1).unwrap().output_tokens, 7);
+        assert_eq!(t.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
     }
 }

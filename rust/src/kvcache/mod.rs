@@ -5,12 +5,25 @@
 //! cache is a vector of logical blocks, each resident on GPU or CPU. The L3
 //! block size equals the L1 Pallas kernel's page tile, so the allocator's
 //! block ids *are* the kernel's block-table entries.
+//!
+//! # Dense request ids
+//!
+//! [`ReqId`]s are allocated by the engine as dense sequential integers, so
+//! every per-request table here is a [`ReqSlots`] slab rather than a hash
+//! map: sequence lookups on the scheduling hot path are array indexing, and
+//! the per-iteration [`CacheManager::snapshot_into`] capture is a dense
+//! O(live-id-range) copy of incrementally maintained per-sequence counters
+//! (no per-block residency rescans). A *released* id (request finished or
+//! discarded its cache) leaves a tombstone in the slab that reads as "no
+//! sequence", exactly like a removed hash-map key — see the
+//! [`slots`] module docs for the full tombstone rules.
 
+pub mod slots;
 pub mod swap;
 
-use std::collections::HashMap;
-
 use anyhow::{bail, Result};
+
+pub use slots::ReqSlots;
 
 pub type BlockId = u32;
 pub type CpuSlot = u32;
@@ -91,23 +104,32 @@ impl BlockAllocator {
 }
 
 /// One sequence's cache: logical blocks + the number of valid tokens.
+///
+/// `cpu_resident` is a residency *counter* maintained at mutation time by
+/// [`CacheManager`], so [`SeqCache::gpu_blocks`] / [`SeqCache::cpu_blocks`]
+/// are O(1) instead of per-block scans (the old scans ran inside every
+/// snapshot capture, §4.4's per-iteration tax). Mutate `blocks` only
+/// through the manager; `check_conservation` re-derives the counter from
+/// the block list and fails on divergence.
 #[derive(Debug, Clone, Default)]
 pub struct SeqCache {
     pub blocks: Vec<BlockLoc>,
     pub len_tokens: usize,
+    /// How many of `blocks` are currently [`BlockLoc::Cpu`].
+    cpu_resident: usize,
 }
 
 impl SeqCache {
     pub fn gpu_blocks(&self) -> usize {
-        self.blocks.iter().filter(|b| matches!(b, BlockLoc::Gpu(_))).count()
+        self.blocks.len() - self.cpu_resident
     }
 
     pub fn cpu_blocks(&self) -> usize {
-        self.blocks.len() - self.gpu_blocks()
+        self.cpu_resident
     }
 
     pub fn fully_on_gpu(&self) -> bool {
-        self.blocks.iter().all(|b| matches!(b, BlockLoc::Gpu(_)))
+        self.cpu_resident == 0
     }
 }
 
@@ -120,11 +142,12 @@ pub struct BlockMove {
     pub cpu: CpuSlot,
 }
 
-/// The cache manager: allocator + per-request sequence caches.
+/// The cache manager: allocator + per-request sequence caches (a dense
+/// [`ReqSlots`] slab — see the module docs for the id/tombstone contract).
 #[derive(Debug)]
 pub struct CacheManager {
     alloc: BlockAllocator,
-    seqs: HashMap<ReqId, SeqCache>,
+    seqs: ReqSlots<SeqCache>,
     /// Blocks the engine keeps free as headroom for in-flight decodes.
     pub watermark_blocks: usize,
 }
@@ -133,7 +156,7 @@ impl CacheManager {
     pub fn new(block_size: usize, num_gpu: usize, num_cpu: usize) -> Self {
         CacheManager {
             alloc: BlockAllocator::new(block_size, num_gpu, num_cpu),
-            seqs: HashMap::new(),
+            seqs: ReqSlots::new(),
             watermark_blocks: 0,
         }
     }
@@ -147,11 +170,11 @@ impl CacheManager {
     }
 
     pub fn seq(&self, req: ReqId) -> Option<&SeqCache> {
-        self.seqs.get(&req)
+        self.seqs.get(req)
     }
 
     pub fn has_seq(&self, req: ReqId) -> bool {
-        self.seqs.contains_key(&req)
+        self.seqs.contains(req)
     }
 
     pub fn gpu_free(&self) -> usize {
@@ -163,11 +186,17 @@ impl CacheManager {
     }
 
     /// Tokens currently occupying GPU blocks across all sequences.
+    ///
+    /// Deliberately an exact per-block scan: mid-swap-in layouts (restored
+    /// GPU prefix, partial tail block still on CPU) break the `len −
+    /// cpu_blocks·bs` shortcut the planning snapshot uses for its
+    /// CPU-prefix paused layouts, and this sum feeds the golden-pinned
+    /// waste accounting.
     pub fn gpu_tokens(&self) -> usize {
         let bs = self.alloc.block_size();
         self.seqs
-            .values()
-            .map(|s| {
+            .iter()
+            .map(|(_, s)| {
                 s.blocks
                     .iter()
                     .enumerate()
@@ -182,7 +211,7 @@ impl CacheManager {
     /// `target_tokens` valid tokens.
     pub fn blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
         let bs = self.alloc.block_size();
-        let have = self.seqs.get(&req).map(|s| s.blocks.len()).unwrap_or(0);
+        let have = self.seqs.get(req).map(|s| s.blocks.len()).unwrap_or(0);
         let need = target_tokens.div_ceil(bs);
         need.saturating_sub(have)
     }
@@ -205,7 +234,7 @@ impl CacheManager {
                 self.alloc.gpu_free_count()
             );
         }
-        let seq = self.seqs.entry(req).or_default();
+        let seq = self.seqs.get_or_default(req);
         for _ in 0..need {
             let b = self.alloc.alloc_gpu().expect("checked above");
             seq.blocks.push(BlockLoc::Gpu(b));
@@ -216,7 +245,7 @@ impl CacheManager {
     /// Advance the valid-token count after the backend wrote `n` new tokens.
     pub fn advance(&mut self, req: ReqId, n: usize) {
         let bs = self.alloc.block_size();
-        let seq = self.seqs.get_mut(&req).expect("advance on unknown seq");
+        let seq = self.seqs.get_mut(req).expect("advance on unknown seq");
         seq.len_tokens += n;
         assert!(
             seq.len_tokens <= seq.blocks.len() * bs,
@@ -229,15 +258,16 @@ impl CacheManager {
     /// Truncate the valid-token count (recompute restart bookkeeping).
     pub fn set_len(&mut self, req: ReqId, len: usize) {
         let bs = self.alloc.block_size();
-        let seq = self.seqs.get_mut(&req).expect("set_len on unknown seq");
+        let seq = self.seqs.get_mut(req).expect("set_len on unknown seq");
         assert!(len <= seq.blocks.len() * bs);
         seq.len_tokens = len;
     }
 
     /// Free everything the request holds (GPU and CPU) — Discard, or request
-    /// completion.
+    /// completion. Leaves a tombstone in the slab: the id reads as "no
+    /// sequence" from then on.
     pub fn release(&mut self, req: ReqId) {
-        if let Some(seq) = self.seqs.remove(&req) {
+        if let Some(seq) = self.seqs.remove(req) {
             for b in seq.blocks {
                 match b {
                     BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
@@ -254,7 +284,7 @@ impl CacheManager {
     /// (InferCept's hybrid restore). Returns the moves; the mapping is
     /// updated immediately, the backend copies data this iteration.
     pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> Vec<BlockMove> {
-        let Some(seq) = self.seqs.get_mut(&req) else {
+        let Some(seq) = self.seqs.get_mut(req) else {
             return vec![];
         };
         let mut moves = Vec::new();
@@ -267,6 +297,7 @@ impl CacheManager {
                     break; // CPU swap space exhausted
                 };
                 seq.blocks[i] = BlockLoc::Cpu(c);
+                seq.cpu_resident += 1;
                 self.alloc.free_gpu(g);
                 moves.push(BlockMove { req, gpu: g, cpu: c });
             }
@@ -280,7 +311,7 @@ impl CacheManager {
     /// precedes a CPU block (swap_out is front-first, so this cannot occur).
     pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
         let bs = self.alloc.block_size();
-        let Some(seq) = self.seqs.get_mut(&req) else {
+        let Some(seq) = self.seqs.get_mut(req) else {
             return 0;
         };
         let prefix = seq
@@ -288,6 +319,7 @@ impl CacheManager {
             .iter()
             .position(|b| matches!(b, BlockLoc::Gpu(_)))
             .unwrap_or(seq.blocks.len());
+        debug_assert_eq!(prefix, seq.cpu_resident, "CPU prefix / counter divergence");
         for b in seq.blocks.drain(prefix..) {
             match b {
                 BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
@@ -301,7 +333,7 @@ impl CacheManager {
     /// Plan swapping IN up to `max_blocks` CPU-resident blocks of `req`
     /// (earliest logical blocks first). Stops at GPU exhaustion.
     pub fn swap_in(&mut self, req: ReqId, max_blocks: usize) -> Vec<BlockMove> {
-        let Some(seq) = self.seqs.get_mut(&req) else {
+        let Some(seq) = self.seqs.get_mut(req) else {
             return vec![];
         };
         let mut moves = Vec::new();
@@ -314,6 +346,7 @@ impl CacheManager {
                     break;
                 };
                 seq.blocks[i] = BlockLoc::Gpu(g);
+                seq.cpu_resident -= 1;
                 self.alloc.free_cpu(c);
                 moves.push(BlockMove { req, gpu: g, cpu: c });
             }
@@ -323,7 +356,7 @@ impl CacheManager {
 
     /// GPU block table for the kernels. Errors if any block is on CPU.
     pub fn gpu_block_table(&self, req: ReqId) -> Result<Vec<BlockId>> {
-        let seq = self.seqs.get(&req).ok_or_else(|| anyhow::anyhow!("no seq {req}"))?;
+        let seq = self.seqs.get(req).ok_or_else(|| anyhow::anyhow!("no seq {req}"))?;
         seq.blocks
             .iter()
             .map(|b| match b {
@@ -333,11 +366,12 @@ impl CacheManager {
             .collect()
     }
 
-    /// Sum of valid tokens held in GPU blocks by `req`.
+    /// Sum of valid tokens held in GPU blocks by `req` (exact per-block
+    /// scan — see [`CacheManager::gpu_tokens`] for why).
     pub fn gpu_tokens_of(&self, req: ReqId) -> usize {
         let bs = self.alloc.block_size();
         self.seqs
-            .get(&req)
+            .get(req)
             .map(|s| {
                 s.blocks
                     .iter()
@@ -349,14 +383,15 @@ impl CacheManager {
             .unwrap_or(0)
     }
 
-    /// CPU-resident blocks of `req` (for swap-in budgeting).
+    /// CPU-resident blocks of `req` (for swap-in budgeting). O(1): reads
+    /// the incrementally maintained residency counter.
     pub fn cpu_blocks_of(&self, req: ReqId) -> usize {
-        self.seqs.get(&req).map(|s| s.cpu_blocks()).unwrap_or(0)
+        self.seqs.get(req).map(|s| s.cpu_blocks()).unwrap_or(0)
     }
 
     /// Total valid tokens of `req`'s cache.
     pub fn len_tokens(&self, req: ReqId) -> usize {
-        self.seqs.get(&req).map(|s| s.len_tokens).unwrap_or(0)
+        self.seqs.get(req).map(|s| s.len_tokens).unwrap_or(0)
     }
 
     /// Capture a side-effect-free [`CacheSnapshot`] into `out` (buffers are
@@ -364,22 +399,20 @@ impl CacheManager {
     /// what the scheduling planner plans against: it answers the same
     /// feasibility questions as the manager and supports *simulated*
     /// reservations without `&mut CacheManager`.
+    ///
+    /// O(live id range): a dense slot-for-slot copy of the per-sequence
+    /// counters (`blocks`, `cpu_resident`, `len_tokens`) — residency is
+    /// maintained at mutation time, so capture never rescans block lists.
     pub fn snapshot_into(&self, out: &mut CacheSnapshot) {
         out.block_size = self.alloc.block_size();
         out.watermark_blocks = self.watermark_blocks;
         out.gpu_free = self.alloc.gpu_free_count();
         out.cpu_free = self.alloc.cpu_free_count();
-        out.seqs.clear();
-        for (id, s) in &self.seqs {
-            out.seqs.insert(
-                *id,
-                SeqSnapshot {
-                    blocks: s.blocks.len(),
-                    cpu_blocks: s.cpu_blocks(),
-                    len_tokens: s.len_tokens,
-                },
-            );
-        }
+        self.seqs.map_into(&mut out.seqs, |s| SeqSnapshot {
+            blocks: s.blocks.len(),
+            cpu_blocks: s.cpu_resident,
+            len_tokens: s.len_tokens,
+        });
     }
 
     /// Convenience: a freshly allocated [`CacheSnapshot`].
@@ -390,7 +423,8 @@ impl CacheManager {
     }
 
     /// Invariant check used by tests: every block id appears exactly once
-    /// across free lists and sequence tables.
+    /// across free lists and sequence tables, and every sequence's
+    /// incrementally maintained residency counter matches its block list.
     pub fn check_conservation(&self) -> Result<()> {
         let mut gpu_seen = vec![0u32; self.alloc.num_gpu()];
         let mut cpu_seen = vec![0u32; self.alloc.num_cpu()];
@@ -400,12 +434,19 @@ impl CacheManager {
         for id in &self.alloc.cpu_free {
             cpu_seen[*id as usize] += 1;
         }
-        for seq in self.seqs.values() {
+        for (req, seq) in self.seqs.iter() {
+            let mut cpu = 0usize;
             for b in &seq.blocks {
                 match b {
                     BlockLoc::Gpu(id) => gpu_seen[*id as usize] += 1,
-                    BlockLoc::Cpu(id) => cpu_seen[*id as usize] += 1,
+                    BlockLoc::Cpu(id) => {
+                        cpu += 1;
+                        cpu_seen[*id as usize] += 1;
+                    }
                 }
+            }
+            if cpu != seq.cpu_resident {
+                bail!("req {req}: cpu_resident counter {} != {cpu} actual", seq.cpu_resident);
             }
         }
         if let Some(i) = gpu_seen.iter().position(|&c| c != 1) {
@@ -443,13 +484,38 @@ pub struct SeqSnapshot {
 /// then replays the decisions against the real `CacheManager`, whose
 /// count-level outcomes match the ledger's by construction (see the
 /// `prop_snapshot_mirrors_manager_ops` parity property below).
-#[derive(Debug, Clone, Default)]
+///
+/// `seqs` is a dense [`ReqSlots`] slab like the manager's: the per-
+/// iteration clone the planner's simulation state takes (`clone_from`) is
+/// a flat `Copy`-element vector copy, not a hash-map rebuild.
+#[derive(Debug, Default)]
 pub struct CacheSnapshot {
     block_size: usize,
     watermark_blocks: usize,
     gpu_free: usize,
     cpu_free: usize,
-    seqs: HashMap<ReqId, SeqSnapshot>,
+    seqs: ReqSlots<SeqSnapshot>,
+}
+
+impl Clone for CacheSnapshot {
+    fn clone(&self) -> Self {
+        CacheSnapshot {
+            block_size: self.block_size,
+            watermark_blocks: self.watermark_blocks,
+            gpu_free: self.gpu_free,
+            cpu_free: self.cpu_free,
+            seqs: self.seqs.clone(),
+        }
+    }
+
+    /// Allocation-reusing copy — the planner's per-iteration ledger reset.
+    fn clone_from(&mut self, src: &Self) {
+        self.block_size = src.block_size;
+        self.watermark_blocks = src.watermark_blocks;
+        self.gpu_free = src.gpu_free;
+        self.cpu_free = src.cpu_free;
+        self.seqs.clone_from(&src.seqs);
+    }
 }
 
 impl CacheSnapshot {
@@ -465,7 +531,7 @@ impl CacheSnapshot {
             watermark_blocks,
             gpu_free,
             cpu_free,
-            seqs: HashMap::new(),
+            seqs: ReqSlots::new(),
         }
     }
 
@@ -492,15 +558,15 @@ impl CacheSnapshot {
     }
 
     pub fn seq(&self, req: ReqId) -> Option<&SeqSnapshot> {
-        self.seqs.get(&req)
+        self.seqs.get(req)
     }
 
     pub fn cpu_blocks_of(&self, req: ReqId) -> usize {
-        self.seqs.get(&req).map(|s| s.cpu_blocks).unwrap_or(0)
+        self.seqs.get(req).map(|s| s.cpu_blocks).unwrap_or(0)
     }
 
     pub fn len_tokens(&self, req: ReqId) -> usize {
-        self.seqs.get(&req).map(|s| s.len_tokens).unwrap_or(0)
+        self.seqs.get(req).map(|s| s.len_tokens).unwrap_or(0)
     }
 
     /// Valid tokens held in GPU blocks. Exact for the layouts the planner
@@ -509,7 +575,7 @@ impl CacheSnapshot {
     /// it equals `len − min(len, cpu_blocks·bs)`.
     pub fn gpu_tokens_of(&self, req: ReqId) -> usize {
         self.seqs
-            .get(&req)
+            .get(req)
             .map(|s| s.len_tokens - s.len_tokens.min(s.cpu_blocks * self.block_size))
             .unwrap_or(0)
     }
@@ -517,7 +583,7 @@ impl CacheSnapshot {
     /// New GPU blocks needed to cover `target_tokens` (mirror of
     /// [`CacheManager::blocks_needed`]).
     pub fn blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
-        let have = self.seqs.get(&req).map(|s| s.blocks).unwrap_or(0);
+        let have = self.seqs.get(req).map(|s| s.blocks).unwrap_or(0);
         target_tokens.div_ceil(self.block_size).saturating_sub(have)
     }
 
@@ -536,12 +602,12 @@ impl CacheSnapshot {
             self.gpu_free
         );
         self.gpu_free -= need;
-        self.seqs.entry(req).or_default().blocks += need;
+        self.seqs.get_or_default(req).blocks += need;
     }
 
     /// Mirror of [`CacheManager::release`].
     pub fn release(&mut self, req: ReqId) {
-        if let Some(s) = self.seqs.remove(&req) {
+        if let Some(s) = self.seqs.remove(req) {
             self.gpu_free += s.blocks - s.cpu_blocks;
             self.cpu_free += s.cpu_blocks;
         }
@@ -550,7 +616,7 @@ impl CacheSnapshot {
     /// Mirror of [`CacheManager::discard_gpu_tail`]: free the GPU blocks,
     /// keep the CPU prefix, return the new valid length.
     pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
-        let Some(s) = self.seqs.get_mut(&req) else {
+        let Some(s) = self.seqs.get_mut(req) else {
             return 0;
         };
         self.gpu_free += s.blocks - s.cpu_blocks;
@@ -562,7 +628,7 @@ impl CacheSnapshot {
     /// Mirror of [`CacheManager::swap_out`] at count level: moves
     /// `min(max_blocks, gpu_blocks, cpu_free)` blocks; returns the count.
     pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> usize {
-        let Some(s) = self.seqs.get_mut(&req) else {
+        let Some(s) = self.seqs.get_mut(req) else {
             return 0;
         };
         let n = max_blocks.min(s.blocks - s.cpu_blocks).min(self.cpu_free);
@@ -576,7 +642,7 @@ impl CacheSnapshot {
     /// real swap-in, this ignores the watermark — it allocates down to GPU
     /// exhaustion).
     pub fn swap_in(&mut self, req: ReqId, max_blocks: usize) -> usize {
-        let Some(s) = self.seqs.get_mut(&req) else {
+        let Some(s) = self.seqs.get_mut(req) else {
             return 0;
         };
         let n = max_blocks.min(s.cpu_blocks).min(self.gpu_free);
@@ -588,7 +654,7 @@ impl CacheSnapshot {
 
     /// Mirror of [`CacheManager::advance`] (parity tests).
     pub fn advance(&mut self, req: ReqId, n: usize) {
-        let s = self.seqs.get_mut(&req).expect("advance on unknown seq");
+        let s = self.seqs.get_mut(req).expect("advance on unknown seq");
         s.len_tokens += n;
         debug_assert!(s.len_tokens <= s.blocks * self.block_size);
     }
@@ -912,7 +978,11 @@ mod tests {
                 assert_eq!(m.gpu_free(), s.gpu_free());
                 assert_eq!(m.cpu_free(), s.cpu_free());
                 for &r in &live {
-                    assert_eq!(m.seq(r).map(|q| q.blocks.len()).unwrap_or(0), s.seq(r).map(|q| q.blocks).unwrap_or(0), "req {r}");
+                    assert_eq!(
+                        m.seq(r).map(|q| q.blocks.len()).unwrap_or(0),
+                        s.seq(r).map(|q| q.blocks).unwrap_or(0),
+                        "req {r}"
+                    );
                     assert_eq!(m.cpu_blocks_of(r), s.cpu_blocks_of(r), "req {r}");
                     assert_eq!(m.len_tokens(r), s.len_tokens(r), "req {r}");
                 }

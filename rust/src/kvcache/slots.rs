@@ -1,0 +1,381 @@
+//! Dense request-id-indexed tables — the scheduling hot path's slab
+//! substrate.
+//!
+//! The engine allocates [`ReqId`]s as **dense sequential integers**
+//! (`Engine::submit_script` hands out 1, 2, 3, …), so every per-request
+//! side table can be a base-offset vector instead of a hash map: lookups
+//! are a bounds check + array index, inserts never hash, and bulk capture
+//! (the planner snapshot taken every iteration, §4.4) degenerates to a
+//! dense copy. [`ReqSlots`] is that table.
+//!
+//! # Tombstones
+//!
+//! A slot holds `None` when the id was never inserted in the covered range
+//! *or* when the entry was [`ReqSlots::remove`]d (a finished request
+//! releasing its cache, a snapshot range spanning already-completed ids).
+//! The two cases are indistinguishable on purpose: to every reader a
+//! released id simply *has no entry*, exactly like a missing hash-map key.
+//! Callers must therefore never assume an id inside the covered range is
+//! live — use [`ReqSlots::get`] / [`ReqSlots::contains`].
+//!
+//! # Memory
+//!
+//! The vector spans `[base, base + span)`, and the span tracks the *live*
+//! id range, not the run length: [`ReqSlots::remove`] compacts edge
+//! tombstones (immediately at the back, amortized at the front), so a
+//! long-lived slab like the cache manager's stays O(concurrently live
+//! range) even after millions of released ids. Per-iteration tables (the
+//! planner snapshot) additionally re-base onto the exact live range each
+//! capture via [`ReqSlots::reset_range`].
+
+use std::ops::{Index, IndexMut};
+
+use super::ReqId;
+
+/// A dense `ReqId → T` table: base-offset vector of optional slots.
+///
+/// Semantically a map (missing ids read as absent); mechanically a slab
+/// (O(1) index arithmetic, no hashing, cache-line-friendly scans).
+#[derive(Debug, PartialEq, Eq)]
+pub struct ReqSlots<T> {
+    base: ReqId,
+    /// Incrementally tracked lower bound on the leading tombstone run
+    /// (`slots[..lead]` are always `None`), so FIFO removals never rescan
+    /// the run (see [`ReqSlots::remove`]).
+    lead: usize,
+    slots: Vec<Option<T>>,
+}
+
+// Manual impl: the derive would bound `T: Default`, but an empty table
+// needs no such bound (payloads like `ReqSnapshot` have no default).
+impl<T> Default for ReqSlots<T> {
+    fn default() -> Self {
+        ReqSlots::new()
+    }
+}
+
+impl<T> ReqSlots<T> {
+    pub fn new() -> ReqSlots<T> {
+        ReqSlots { base: 0, lead: 0, slots: Vec::new() }
+    }
+
+    #[inline]
+    fn idx(&self, req: ReqId) -> Option<usize> {
+        let i = req.checked_sub(self.base)? as usize;
+        (i < self.slots.len()).then_some(i)
+    }
+
+    #[inline]
+    pub fn get(&self, req: ReqId) -> Option<&T> {
+        self.idx(req).and_then(|i| self.slots[i].as_ref())
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, req: ReqId) -> Option<&mut T> {
+        self.idx(req).and_then(|i| self.slots[i].as_mut())
+    }
+
+    #[inline]
+    pub fn contains(&self, req: ReqId) -> bool {
+        self.get(req).is_some()
+    }
+
+    /// Insert (or overwrite) `req`'s entry, growing the covered range as
+    /// needed. Ids below the current base are supported (tests build tables
+    /// in arbitrary order) but cost a front-fill; the engine's sequential
+    /// allocation only ever appends.
+    pub fn insert(&mut self, req: ReqId, value: T) -> Option<T> {
+        if self.slots.is_empty() {
+            self.base = req;
+            self.lead = 0;
+            self.slots.push(Some(value));
+            return None;
+        }
+        if req < self.base {
+            // Rebase: after this, `req` is the new base so `i == 0` below
+            // and the `i < lead` check zeroes the leading-run bound.
+            let gap = (self.base - req) as usize;
+            self.slots.splice(0..0, std::iter::repeat_with(|| None).take(gap));
+            self.base = req;
+        }
+        let i = (req - self.base) as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        if i < self.lead {
+            self.lead = i; // slots 0..i stay tombstoned; i is now live
+        }
+        self.slots[i].replace(value)
+    }
+
+    /// Take `req`'s entry out, leaving a tombstone (see the module docs).
+    ///
+    /// Edge tombstones are compacted away so the covered span tracks the
+    /// *live* id range, not the historical maximum: trailing empties pop
+    /// immediately, and leading empties (tracked incrementally in `lead`,
+    /// never rescanned) are dropped once they fill half the span. Both are
+    /// amortized O(1) per removal — the `lead` advance visits each slot
+    /// once per compaction cycle, and a drain moves at most as many slots
+    /// as were removed — keeping the span ≤ 2× the live range. Without
+    /// this, a long-lived slab like the cache manager's would make every
+    /// per-iteration dense copy O(run age) instead of O(live state).
+    pub fn remove(&mut self, req: ReqId) -> Option<T> {
+        let i = self.idx(req)?;
+        let v = self.slots[i].take();
+        if v.is_some() {
+            while self.slots.last().is_some_and(|s| s.is_none()) {
+                self.slots.pop();
+            }
+            while self.lead < self.slots.len() && self.slots[self.lead].is_none() {
+                self.lead += 1;
+            }
+            self.lead = self.lead.min(self.slots.len());
+            if self.lead > 0 && self.lead * 2 >= self.slots.len() {
+                self.slots.drain(..self.lead);
+                self.base += self.lead as ReqId;
+                self.lead = 0;
+            }
+            if self.slots.is_empty() {
+                self.base = 0;
+            }
+        }
+        v
+    }
+
+    /// Entry for `req`, default-inserted when absent.
+    pub fn get_or_default(&mut self, req: ReqId) -> &mut T
+    where
+        T: Default,
+    {
+        if !self.contains(req) {
+            self.insert(req, T::default());
+        }
+        self.get_mut(req).expect("just inserted")
+    }
+
+    /// Drop every entry and the covered range (allocation retained).
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.base = 0;
+        self.lead = 0;
+    }
+
+    /// Reset to an *empty* table covering exactly `lo..=hi`, reusing the
+    /// allocation — the per-iteration capture path (O(range), no hashing).
+    pub fn reset_range(&mut self, lo: ReqId, hi: ReqId) {
+        debug_assert!(lo <= hi);
+        self.base = lo;
+        self.lead = 0;
+        self.slots.clear();
+        self.slots.resize_with((hi - lo + 1) as usize, || None);
+    }
+
+    /// Reset to an empty table covering the same id range as `other`.
+    pub fn reset_like<U>(&mut self, other: &ReqSlots<U>) {
+        self.base = other.base;
+        self.lead = 0;
+        self.slots.clear();
+        self.slots.resize_with(other.slots.len(), || None);
+    }
+
+    /// Dense per-slot transform into `out` (same base/range): the O(live
+    /// range) snapshot-capture primitive — no hashing, no per-entry
+    /// allocation, `out`'s buffer reused.
+    pub fn map_into<U>(&self, out: &mut ReqSlots<U>, mut f: impl FnMut(&T) -> U) {
+        out.base = self.base;
+        out.lead = self.lead;
+        out.slots.clear();
+        out.slots.extend(self.slots.iter().map(|s| s.as_ref().map(&mut f)));
+    }
+
+    /// Live entries in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = (ReqId, &T)> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(move |(i, s)| s.as_ref().map(|v| (self.base + i as ReqId, v)))
+    }
+
+    /// Number of live entries (O(span); diagnostics and tests only).
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Width of the covered id range, live or tombstoned (capacity metric).
+    pub fn span(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl<T: Clone> Clone for ReqSlots<T> {
+    fn clone(&self) -> Self {
+        ReqSlots { base: self.base, lead: self.lead, slots: self.slots.clone() }
+    }
+
+    /// Allocation-reusing copy (`Vec::clone_from`): for `Copy` payloads this
+    /// is effectively a memcpy — the planner's per-iteration `SimState`
+    /// reset path.
+    fn clone_from(&mut self, src: &Self) {
+        self.base = src.base;
+        self.lead = src.lead;
+        self.slots.clone_from(&src.slots);
+    }
+}
+
+impl<T> Index<ReqId> for ReqSlots<T> {
+    type Output = T;
+
+    #[inline]
+    fn index(&self, req: ReqId) -> &T {
+        self.get(req).unwrap_or_else(|| panic!("no entry for req {req}"))
+    }
+}
+
+impl<T> Index<&ReqId> for ReqSlots<T> {
+    type Output = T;
+
+    #[inline]
+    fn index(&self, req: &ReqId) -> &T {
+        &self[*req]
+    }
+}
+
+impl<T> IndexMut<ReqId> for ReqSlots<T> {
+    #[inline]
+    fn index_mut(&mut self, req: ReqId) -> &mut T {
+        self.get_mut(req).unwrap_or_else(|| panic!("no entry for req {req}"))
+    }
+}
+
+impl<T> IndexMut<&ReqId> for ReqSlots<T> {
+    #[inline]
+    fn index_mut(&mut self, req: &ReqId) -> &mut T {
+        &mut self[*req]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        assert!(s.is_empty());
+        assert_eq!(s.insert(5, 50), None);
+        assert_eq!(s.insert(7, 70), None);
+        assert_eq!(s.insert(5, 55), Some(50));
+        assert_eq!(s.get(5), Some(&55));
+        assert_eq!(s.get(6), None); // in-range tombstone
+        assert_eq!(s.get(4), None); // below base
+        assert_eq!(s.get(8), None); // above range
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.span(), 3);
+        assert_eq!(s.remove(7), Some(70));
+        assert_eq!(s.remove(7), None);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(5) && !s.contains(7));
+    }
+
+    #[test]
+    fn insert_below_base_rebases() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        s.insert(10, 1);
+        s.insert(3, 2);
+        assert_eq!(s.get(3), Some(&2));
+        assert_eq!(s.get(10), Some(&1));
+        assert_eq!(s.span(), 8);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![(3, &2), (10, &1)]);
+    }
+
+    #[test]
+    fn index_reads_and_writes() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        s.insert(2, 9);
+        assert_eq!(s[2], 9);
+        assert_eq!(s[&2], 9);
+        s[2] = 11;
+        assert_eq!(s[2], 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "no entry for req 3")]
+    fn index_panics_on_missing() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        s.insert(2, 9);
+        let _ = s[3];
+    }
+
+    #[test]
+    fn reset_range_and_map_into() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        s.insert(1, 1);
+        s.reset_range(4, 9);
+        assert!(s.is_empty());
+        assert_eq!(s.span(), 6);
+        s.insert(4, 40);
+        s.insert(9, 90);
+        let mut out: ReqSlots<u64> = ReqSlots::new();
+        s.map_into(&mut out, |&v| v as u64 * 2);
+        assert_eq!(out.get(4), Some(&80));
+        assert_eq!(out.get(9), Some(&180));
+        assert_eq!(out.span(), s.span());
+        let mut like: ReqSlots<()> = ReqSlots::new();
+        like.reset_like(&s);
+        assert!(like.is_empty());
+        assert_eq!(like.span(), s.span());
+        like.insert(5, ());
+        assert!(like.contains(5));
+    }
+
+    #[test]
+    fn remove_compacts_edge_tombstones() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        for id in 10..20 {
+            s.insert(id, id as u32);
+        }
+        assert_eq!(s.span(), 10);
+        s.remove(19);
+        assert_eq!(s.span(), 9, "trailing tombstone drops immediately");
+        for id in 10..15 {
+            s.remove(id);
+        }
+        // Live ids are 15..=18: leading tombstones compact once they
+        // dominate, bounding the span by 2× the live range.
+        assert!(s.span() <= 8, "span {} not compacted", s.span());
+        assert_eq!(s.iter().map(|(r, _)| r).collect::<Vec<_>>(), vec![15, 16, 17, 18]);
+        for id in 15..19 {
+            s.remove(id);
+        }
+        assert_eq!(s.span(), 0);
+        assert!(s.is_empty());
+        s.insert(3, 1); // fully drained: base may rebind below the old range
+        assert_eq!(s.get(3), Some(&1));
+        assert_eq!(s.span(), 1);
+    }
+
+    #[test]
+    fn clone_from_reuses_and_matches() {
+        let mut a: ReqSlots<u32> = ReqSlots::new();
+        a.insert(3, 30);
+        a.insert(6, 60);
+        let mut b: ReqSlots<u32> = ReqSlots::new();
+        b.insert(100, 1);
+        b.clone_from(&a);
+        assert_eq!(b.get(3), Some(&30));
+        assert_eq!(b.get(100), None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn get_or_default_inserts_once() {
+        let mut s: ReqSlots<Vec<u32>> = ReqSlots::new();
+        s.get_or_default(4).push(1);
+        s.get_or_default(4).push(2);
+        assert_eq!(s[4], vec![1, 2]);
+    }
+}

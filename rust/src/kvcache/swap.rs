@@ -12,7 +12,9 @@
 use crate::util::Micros;
 
 /// Parameters of the GPU↔CPU link and the swap implementation.
-#[derive(Debug, Clone)]
+///
+/// `Copy`: fixed per run; snapshot capture embeds it by plain assignment.
+#[derive(Debug, Clone, Copy)]
 pub struct SwapModel {
     /// Link bandwidth in bytes per second (PCIe ~16 GB/s in the paper).
     pub bandwidth_bytes_per_sec: f64,

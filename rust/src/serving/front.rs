@@ -221,21 +221,29 @@ impl FrontSource {
     }
 
     /// Move inbox entries onto the engine clock (answer available at
-    /// dispatch time + client delay).
+    /// dispatch time + client delay). `ready` is kept sorted by `(at, req)`
+    /// with a binary-search insertion per entry — no full re-sort of the
+    /// whole list on every resume push.
     fn intake(&mut self) {
         let mut inbox = self.shared.inbox.lock().unwrap();
         while let Some(e) = inbox.pop_front() {
             match self.awaiting.get(&e.req) {
-                Some(&t0) => self.ready.push(ReadyEntry {
-                    at: t0.saturating_add(e.delay_us),
-                    req: e.req,
-                    tokens: e.tokens,
-                }),
+                Some(&t0) => {
+                    let entry = ReadyEntry {
+                        at: t0.saturating_add(e.delay_us),
+                        req: e.req,
+                        tokens: e.tokens,
+                    };
+                    // `<=` keeps arrival order among equal (at, req) keys,
+                    // matching the previous stable sort.
+                    let pos = self
+                        .ready
+                        .partition_point(|r| (r.at, r.req) <= (entry.at, entry.req));
+                    self.ready.insert(pos, entry);
+                }
                 None => self.count_stray(),
             }
         }
-        drop(inbox);
-        self.ready.sort_by(|a, b| (a.at, a.req).cmp(&(b.at, b.req)));
     }
 }
 

@@ -2,10 +2,14 @@
 //!
 //! `cargo bench` runs `[[bench]] harness = false` binaries that call
 //! [`Bench::run`]: warmup, timed iterations, and a p50/p95/mean report in
-//! criterion-like text output.
+//! criterion-like text output. [`BenchReport`] additionally collects
+//! results into a machine-readable JSON document (see `BENCH_sched.json`
+//! at the repo root for the tracked scheduler-throughput trajectory).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 pub struct Bench {
@@ -46,6 +50,74 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// Machine-readable form (one entry of a [`BenchReport`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns.round())),
+            ("p50_ns", Json::num(self.p50_ns.round())),
+            ("p95_ns", Json::num(self.p95_ns.round())),
+        ])
+    }
+}
+
+/// Collects [`BenchResult`]s (plus derived metrics) into one JSON document
+/// so benchmark numbers become a *tracked artifact* instead of scrollback:
+/// a bench binary pushes every result, then [`BenchReport::write`]s the
+/// file that gets committed / uploaded by CI.
+#[derive(Debug)]
+pub struct BenchReport {
+    suite: String,
+    profile: String,
+    results: Vec<Json>,
+    derived: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str, profile: &str) -> BenchReport {
+        BenchReport {
+            suite: suite.to_string(),
+            profile: profile.to_string(),
+            results: Vec::new(),
+            derived: Vec::new(),
+        }
+    }
+
+    /// Record one benchmark result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Record a derived scalar (speedup ratios, iterations/s, …).
+    pub fn derived(&mut self, key: &str, value: Json) {
+        self.derived.push((key.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("profile", Json::str(self.profile.clone())),
+            (
+                "regenerate",
+                Json::str(format!("cargo bench --bench {} [-- --quick]", self.suite)),
+            ),
+            ("results", Json::Arr(self.results.clone())),
+            (
+                "derived",
+                Json::obj(self.derived.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        println!("wrote bench report: {}", path.display());
+        Ok(())
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -68,6 +140,20 @@ impl Bench {
             measure: Duration::from_millis(600),
             min_iters: 5,
             max_iters: 10_000,
+        }
+    }
+
+    /// Profile selected by the bench binary's CLI: `--quick` (or
+    /// `BENCH_QUICK=1`) picks [`Bench::quick`] — the CI bit-rot check —
+    /// otherwise the full default measurement window. Returns the profile
+    /// name alongside for the JSON report.
+    pub fn from_args() -> (Bench, &'static str) {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1");
+        if quick {
+            (Bench::quick(), "quick")
+        } else {
+            (Bench::default(), "full")
         }
     }
 
@@ -120,5 +206,28 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns > 0.0);
         assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn report_collects_machine_readable_json() {
+        let mut rep = BenchReport::new("bench_planner_e2e", "quick");
+        rep.push(&BenchResult {
+            name: "x/y".into(),
+            iters: 10,
+            mean_ns: 1234.6,
+            p50_ns: 1200.0,
+            p95_ns: 1300.0,
+        });
+        rep.derived("speedup", Json::num(2.5));
+        let j = rep.to_json();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "bench_planner_e2e");
+        assert_eq!(j.get("profile").unwrap().as_str().unwrap(), "quick");
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("mean_ns").unwrap().as_f64().unwrap(), 1235.0);
+        assert_eq!(j.get("derived").unwrap().get("speedup").unwrap().as_f64().unwrap(), 2.5);
+        // Round-trips through the parser (what CI consumers will do).
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("suite").unwrap().as_str().unwrap(), "bench_planner_e2e");
     }
 }
