@@ -1,0 +1,127 @@
+//! Session-lifecycle quickstart: abort, deadline, and backpressure against
+//! scripted background load.
+//!
+//! Three things bound a session's lifetime in the serving front:
+//!
+//!  * a **client abort** (`SessionHandle::cancel`) tears the session out of
+//!    whatever state it is in and frees its KV context immediately;
+//!  * an **interception deadline** (`--external-timeout` semantics:
+//!    `EngineConfig::external_timeout_us`) reclaims a session whose client
+//!    never answers — without it, one abandoned session anchors the dense
+//!    scheduler tables for the rest of the run;
+//!  * **submit backpressure** (`EngineConfig::max_live_sessions`) rejects
+//!    new sessions with a typed, retryable error instead of admitting
+//!    unboundedly.
+//!
+//! ```sh
+//! cargo run --release --example cancel_session
+//! ```
+
+use infercept::prelude::*;
+use infercept::workload::{Interception, Segment};
+
+/// A chat turn the client is expected to answer.
+fn chat_script() -> RequestScript {
+    RequestScript {
+        kind: AugmentKind::Chatbot,
+        prompt_tokens: 96,
+        segments: vec![
+            Segment {
+                gen_tokens: 48,
+                interception: Some(Interception {
+                    kind: AugmentKind::Chatbot,
+                    duration_us: 28_600_000,
+                    ret_tokens: 24,
+                }),
+            },
+            Segment { gen_tokens: 32, interception: None },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. An InferCept engine with a 5 s (engine-clock) interception deadline.
+    let spec = SimModelSpec::gptj_6b();
+    let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    cfg.external_timeout_us = 5_000_000;
+    let mut front = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+
+    // 2. Scripted background load rides along through the same front.
+    for tr in WorkloadGen::new(WorkloadKind::Mixed, 42).generate(30, 4.0) {
+        front.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us))?;
+    }
+
+    // 3. Two interactive chat sessions: one the client will abort once it
+    //    gets control (per-session override: never time out), one simply
+    //    abandoned — the engine's 5 s deadline reclaims it mid-run, while
+    //    the scripted load is still flowing.
+    let aborted =
+        front.submit(SessionSpec::interactive(chat_script()).with_external_timeout(0))?;
+    let abandoned = front.submit(SessionSpec::interactive(chat_script()))?;
+    println!(
+        "sessions {} (will be aborted) and {} (will be abandoned) \
+         alongside 30 scripted requests\n",
+        aborted.id(),
+        abandoned.id()
+    );
+
+    let mut aborted_yet = false;
+    loop {
+        match front.run_until_blocked()? {
+            FrontStatus::Drained => break,
+            FrontStatus::AwaitingClient => {
+                if !aborted_yet {
+                    // The client changed its mind: tear the first session
+                    // down. The second is never answered — re-entering the
+                    // pump lets the engine jump to its deadline.
+                    aborted.cancel();
+                    aborted_yet = true;
+                    println!(
+                        "[{:7.3}s] client aborts session {}",
+                        front.engine().now() as f64 / 1e6,
+                        aborted.id()
+                    );
+                }
+            }
+        }
+    }
+
+    // 4. Both sessions ended with a terminal Cancelled event; all of their
+    //    GPU/CPU blocks are back in the pools (invariant-checked).
+    front.engine().check_invariants()?;
+    for (name, handle) in [("aborted", &aborted), ("abandoned", &abandoned)] {
+        for ev in handle.drain_events() {
+            if let EngineEvent::Cancelled { reason, at, .. } = ev {
+                println!(
+                    "{name} session {}: cancelled at {:.3}s ({reason:?})",
+                    handle.id(),
+                    at as f64 / 1e6
+                );
+            }
+        }
+    }
+    let m = &front.engine().metrics;
+    println!(
+        "\n{} sessions cancelled, {} interception(s) timed out, \
+         {} of {} requests completed",
+        m.sessions_cancelled,
+        m.interceptions_timed_out,
+        m.records.iter().filter(|r| r.finished_at.is_some()).count(),
+        m.records.len(),
+    );
+
+    // 5. Backpressure: a front bounded to the sessions already served
+    //    rejects a new one with a typed, retryable error.
+    let spec = SimModelSpec::gptj_6b();
+    let mut bounded_cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    bounded_cfg.max_live_sessions = 1;
+    let mut bounded = EngineFront::new(Box::new(SimBackend::new(spec)), bounded_cfg);
+    let _first = bounded.submit(SessionSpec::interactive(chat_script()))?;
+    match bounded.submit(SessionSpec::interactive(chat_script())) {
+        Err(SubmitError::AtCapacity { live, limit, .. }) => {
+            println!("\nbackpressure: second submit rejected ({live} live, bound {limit})");
+        }
+        other => anyhow::bail!("expected AtCapacity, got {other:?}"),
+    }
+    Ok(())
+}

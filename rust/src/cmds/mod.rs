@@ -10,9 +10,9 @@ pub mod serve;
 pub mod sim_run;
 pub mod table1;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, TimeoutAction};
 use crate::coordinator::policy::Policy;
 use crate::engine::ExecBackend;
 use crate::metrics::RunReport;
@@ -63,6 +63,28 @@ pub fn apply_adaptive_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
         cfg.adaptive_min_gain > 0.0 && cfg.adaptive_min_gain <= cfg.adaptive_max_gain,
         "--adaptive-min-gain must be in (0, --adaptive-max-gain]"
     );
+    Ok(())
+}
+
+/// Apply the session-lifecycle CLI knobs (`serve` / `sim`): the default
+/// external-interception deadline (`--external-timeout-ms`, engine-clock
+/// ms, 0 = disabled), what an expiry does (`--timeout-action
+/// cancel|resume-empty`), and the submit-backpressure bounds
+/// (`--max-live-sessions` / `--max-waiting`, 0 = unlimited). No-ops when
+/// the flags are absent. Note: the deadline and backpressure act on *live*
+/// front submissions (interactive sessions); pure trace replay pre-loads
+/// its arrivals and resolves every interception on a scripted timer, so
+/// these knobs are pass-through configuration there.
+pub fn apply_lifecycle_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
+    let timeout_ms = args.f64_or("external-timeout-ms", cfg.external_timeout_us as f64 / 1e3)?;
+    anyhow::ensure!(timeout_ms >= 0.0, "--external-timeout-ms must be >= 0");
+    cfg.external_timeout_us = (timeout_ms * 1e3).round() as u64;
+    if let Some(a) = args.get("timeout-action") {
+        cfg.external_timeout_action = TimeoutAction::parse(a)
+            .ok_or_else(|| anyhow!("--timeout-action must be 'cancel' or 'resume-empty'"))?;
+    }
+    cfg.max_live_sessions = args.usize_or("max-live-sessions", cfg.max_live_sessions)?;
+    cfg.max_waiting = args.usize_or("max-waiting", cfg.max_waiting)?;
     Ok(())
 }
 

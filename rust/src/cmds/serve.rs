@@ -12,7 +12,7 @@ use crate::util::cli::Args;
 mod real {
     use anyhow::{anyhow, Result};
 
-    use crate::cmds::apply_adaptive_args;
+    use crate::cmds::{apply_adaptive_args, apply_lifecycle_args};
     use crate::config::EngineConfig;
     use crate::coordinator::policy::Policy;
     use crate::profiler;
@@ -67,8 +67,13 @@ mod real {
             adaptive_alpha: crate::config::DEFAULT_ADAPTIVE_ALPHA,
             adaptive_min_gain: crate::config::DEFAULT_ADAPTIVE_MIN_GAIN,
             adaptive_max_gain: crate::config::DEFAULT_ADAPTIVE_MAX_GAIN,
+            external_timeout_us: 0,
+            external_timeout_action: crate::config::TimeoutAction::Cancel,
+            max_live_sessions: 0,
+            max_waiting: 0,
         };
         apply_adaptive_args(&mut cfg, args)?;
+        apply_lifecycle_args(&mut cfg, args)?;
 
         // Mini models cap sequences at max_seq_tokens; scale contexts down and
         // leave one max-chunk headroom for padded prefill.

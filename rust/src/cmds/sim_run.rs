@@ -3,7 +3,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::cmds::{apply_adaptive_args, run_once_with};
+use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, run_once_with};
 use crate::config::EngineConfig;
 use crate::coordinator::policy::Policy;
 use crate::sim::{SimBackend, SimModelSpec};
@@ -26,6 +26,7 @@ pub fn run(args: &Args) -> Result<()> {
         .generate(n, rate);
     let mut cfg = EngineConfig::for_sim(&spec, policy).with_seed(seed);
     apply_adaptive_args(&mut cfg, args)?;
+    apply_lifecycle_args(&mut cfg, args)?;
     let rep = run_once_with(cfg, Box::new(SimBackend::new(spec.clone())), &trace)?;
     println!("model={} workload={} rate={rate} n={n}", spec.name, kind.name());
     println!("{}", rep.summary_line());
@@ -40,5 +41,11 @@ pub fn run(args: &Args) -> Result<()> {
         rep.paused_majority_s,
         rep.duration_s,
     );
+    if rep.sessions_cancelled + rep.interceptions_timed_out + rep.submits_rejected > 0 {
+        println!(
+            "  lifecycle: {} cancelled  {} timed-out interceptions  {} rejected submits",
+            rep.sessions_cancelled, rep.interceptions_timed_out, rep.submits_rejected,
+        );
+    }
     Ok(())
 }

@@ -6,6 +6,38 @@
 use crate::coordinator::policy::Policy;
 use crate::sim::SimModelSpec;
 
+/// What the engine does when an externally-resolved interception outlives
+/// its deadline without a client answer (`--timeout-action`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimeoutAction {
+    /// Tear the session down: free all GPU/CPU blocks, emit a terminal
+    /// `Cancelled` event (the default — abandoned sessions must not anchor
+    /// the dense capture span).
+    #[default]
+    Cancel,
+    /// Treat the timeout as an empty answer: the paused context (in
+    /// whatever disposition the policy left it) re-queues and the script
+    /// continues with zero returned tokens.
+    ResumeEmpty,
+}
+
+impl TimeoutAction {
+    pub fn parse(s: &str) -> Option<TimeoutAction> {
+        match s {
+            "cancel" => Some(TimeoutAction::Cancel),
+            "resume-empty" => Some(TimeoutAction::ResumeEmpty),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeoutAction::Cancel => "cancel",
+            TimeoutAction::ResumeEmpty => "resume-empty",
+        }
+    }
+}
+
 /// Default [`EngineConfig::adaptive_target_wait_us`] (250 ms of engine
 /// clock), shared by every config constructor.
 pub const DEFAULT_ADAPTIVE_TARGET_WAIT_US: u64 = 250_000;
@@ -52,6 +84,20 @@ pub struct EngineConfig {
     /// Clamp range for the adaptive admission multiplier.
     pub adaptive_min_gain: f64,
     pub adaptive_max_gain: f64,
+    /// Default deadline (engine-clock µs, unscaled) for externally-resolved
+    /// interceptions; 0 disables. Overridable per session
+    /// (`SessionSpec::with_external_timeout`). Bounds request lifetime: a
+    /// never-answered interception fires `external_timeout_action` instead
+    /// of anchoring the dense capture span forever.
+    pub external_timeout_us: u64,
+    /// What an expired interception deadline does (see [`TimeoutAction`]).
+    pub external_timeout_action: TimeoutAction,
+    /// Submit backpressure: reject new sessions once this many are live
+    /// (arrived and unfinished); 0 = unlimited.
+    pub max_live_sessions: usize,
+    /// Submit backpressure: reject new sessions while the waiting queue is
+    /// at least this deep; 0 = unlimited.
+    pub max_waiting: usize,
 }
 
 impl EngineConfig {
@@ -76,6 +122,10 @@ impl EngineConfig {
             adaptive_alpha: DEFAULT_ADAPTIVE_ALPHA,
             adaptive_min_gain: DEFAULT_ADAPTIVE_MIN_GAIN,
             adaptive_max_gain: DEFAULT_ADAPTIVE_MAX_GAIN,
+            external_timeout_us: 0,
+            external_timeout_action: TimeoutAction::Cancel,
+            max_live_sessions: 0,
+            max_waiting: 0,
         }
     }
 

@@ -148,11 +148,12 @@ pub struct SchedSnapshot {
     /// — see `engine/request.rs`): stage loops index this slab instead of
     /// hashing, and capture re-bases it onto `[min live id, max live id]`
     /// each iteration. Capture cost is therefore O(newest − oldest *live*
-    /// id), so the oldest unfinished request anchors the span — a session
-    /// parked indefinitely on a never-resumed external interception grows
-    /// it without bound (production deployments need session
-    /// timeouts/cancellation, a listed serving-front follow-on, to bound
-    /// request lifetime).
+    /// id), so the oldest unfinished request anchors the span. The
+    /// session-lifecycle subsystem bounds that anchor: client aborts
+    /// (`Engine::cancel`) and external-interception deadlines
+    /// (`external_timeout_us`) tear abandoned sessions out of the live set,
+    /// so the span tracks live, non-abandoned sessions — never run age
+    /// (regression-pinned by `tests/session_lifecycle.rs`).
     pub reqs: ReqSlots<ReqSnapshot>,
     pub cache: CacheSnapshot,
 }
@@ -862,6 +863,11 @@ impl Planner {
 
     pub fn snapshot(&self) -> &SchedSnapshot {
         &self.snap
+    }
+
+    /// The most recently produced (or put-back) plan.
+    pub fn current_plan(&self) -> &SchedPlan {
+        &self.plan
     }
 
     /// Move the plan out (the engine applies it without borrowing the

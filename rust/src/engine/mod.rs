@@ -48,14 +48,14 @@ use anyhow::{bail, Result};
 pub use backend::ExecBackend;
 use request::{ReqState, ReqTable, Request};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, TimeoutAction};
 use crate::coordinator::estimator::DurationEstimator;
-use crate::coordinator::planner::Planner;
+use crate::coordinator::planner::{Planner, SchedPlan, SchedSnapshot};
 use crate::coordinator::sched_policy::{self, SchedPolicy};
 use crate::coordinator::scheduler::{Disposition, FcfsQueue};
 use crate::kvcache::{CacheManager, ReqId};
 use crate::metrics::{Recorder, RequestRecord, RunReport};
-use crate::serving::events::{EngineEvent, EventBus};
+use crate::serving::events::{CancelReason, EngineEvent, EventBus};
 use crate::serving::intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
 use crate::util::rng::Pcg;
 use crate::util::Micros;
@@ -100,6 +100,11 @@ pub struct Engine {
     pending: Vec<(Micros, ReqId)>,
     next_id: ReqId,
     unfinished: usize,
+    /// Count of currently armed external-interception deadlines, maintained
+    /// at the arm/clear sites so the per-iteration expiry sweep and the
+    /// idle-clock deadline lookup are free when the feature is off
+    /// (`external_timeout_us == 0` everywhere — the default).
+    deadlines_armed: usize,
     /// Scratch for the Eq. 1/4 rebuild set (reused across iterations).
     rebuild_scratch: Vec<ReqId>,
 }
@@ -133,6 +138,7 @@ impl Engine {
             pending: Vec::new(),
             next_id: 1,
             unfinished: 0,
+            deadlines_armed: 0,
             rebuild_scratch: Vec::new(),
         }
     }
@@ -157,6 +163,29 @@ impl Engine {
     /// Requests submitted but not yet finished.
     pub fn unfinished(&self) -> usize {
         self.unfinished
+    }
+
+    /// Sessions in (or due to enter) the serving queues: unfinished,
+    /// uncancelled, and not waiting on a *future* arrival — what submit
+    /// backpressure bounds. A live submission arriving "now" counts
+    /// immediately, so a burst between pump rounds cannot slip past the
+    /// bound; trace requests parked at future arrival times don't.
+    pub fn live_sessions(&self) -> usize {
+        let now = self.backend.now();
+        // `pending` is sorted soonest-last, so future arrivals are a prefix.
+        let future = self.pending.partition_point(|&(t, _)| t > now);
+        self.unfinished - future
+    }
+
+    /// The snapshot the planner captured for the most recent iteration
+    /// (test/diagnostic hook: its `reqs.span()` is the dense capture cost).
+    pub fn sched_snapshot(&self) -> &SchedSnapshot {
+        self.planner.snapshot()
+    }
+
+    /// The most recently applied plan (test/diagnostic hook).
+    pub fn last_plan(&self) -> &SchedPlan {
+        self.planner.current_plan()
     }
 
     /// In-flight interceptions waiting on a client (no engine-clock
@@ -184,6 +213,15 @@ impl Engine {
     /// Route `req`'s lifecycle events to `tx` (used by the serving front).
     pub fn subscribe_events(&mut self, req: ReqId, tx: std::sync::mpsc::Sender<EngineEvent>) {
         self.events.subscribe(req, tx);
+    }
+
+    /// Per-session override of the external-interception deadline (see
+    /// [`crate::engine::request::Request::external_timeout_us`]): `None`
+    /// falls back to `cfg.external_timeout_us`, `Some(0)` disables.
+    pub fn set_external_timeout(&mut self, req: ReqId, timeout_us: Option<Micros>) {
+        if let Some(rq) = self.requests.get_mut(req) {
+            rq.external_timeout_us = timeout_us;
+        }
     }
 
     /// Register one request; it materializes at `arrival_us`. Prompt tokens
@@ -280,6 +318,11 @@ impl Engine {
         if self.cfg.max_iterations > 0 && *iters > self.cfg.max_iterations {
             bail!("max_iterations exceeded with {} unfinished", self.unfinished);
         }
+        // An expired interception deadline can drain the engine inside a
+        // step that otherwise did no work — check before the stuck logic.
+        if self.unfinished == 0 {
+            return Ok(PumpRound::Drained);
+        }
         if !worked && !self.advance_idle() {
             if self.awaiting_external() > 0 {
                 return Ok(PumpRound::AwaitingExternal);
@@ -289,10 +332,12 @@ impl Engine {
                 self.unfinished
             );
         }
-        Ok(if self.unfinished == 0 { PumpRound::Drained } else { PumpRound::Progressed })
+        Ok(PumpRound::Progressed)
     }
 
     /// Completion time of the next future event (arrival or API return).
+    /// External-interception deadlines are *not* events on their own — see
+    /// [`Engine::advance_idle`].
     pub fn next_event(&self) -> Option<Micros> {
         [self.pending.last().map(|(t, _)| *t), self.intercepts.next_completion()]
             .into_iter()
@@ -300,13 +345,55 @@ impl Engine {
             .min()
     }
 
+    /// Earliest armed deadline among externally-paused requests. O(1) when
+    /// none is armed (the default configuration).
+    pub fn next_external_deadline(&self) -> Option<Micros> {
+        if self.deadlines_armed == 0 {
+            return None;
+        }
+        self.paused
+            .iter()
+            .filter_map(|&r| {
+                let rq = &self.requests[r];
+                if rq.external_pause {
+                    rq.external_deadline
+                } else {
+                    None
+                }
+            })
+            .min()
+    }
+
     /// Idle: jump the clock to the next future event. Returns false when no
     /// such event exists (a stuck engine if work remains — unless an
     /// externally-resolved interception is pending).
+    ///
+    /// An external-interception deadline *caps* the jump — so with other
+    /// work pending, expiry fires at exactly the deadline instant, not at
+    /// the next arrival past it — but never creates a jump on its own:
+    /// when deadlines are the only future events the pump reports
+    /// `AwaitingExternal`, the client gets control, and only a re-entry
+    /// without progress consumes the deadline (see
+    /// [`crate::serving::EngineFront::run_until_blocked`] and
+    /// [`Engine::jump_to_next_external_deadline`]).
     pub fn advance_idle(&mut self) -> bool {
-        match self.next_event() {
-            Some(t) => {
-                self.backend.advance_to(t.max(self.backend.now() + 1));
+        let target = match (self.next_event(), self.next_external_deadline()) {
+            (Some(t), Some(d)) => t.min(d),
+            (Some(t), None) => t,
+            (None, _) => return false,
+        };
+        self.backend.advance_to(target.max(self.backend.now() + 1));
+        true
+    }
+
+    /// Simulated-clock escalation: jump straight to the earliest external
+    /// deadline (the serving front calls this once the client has had, and
+    /// declined, its chance to answer). Returns false when no deadline is
+    /// armed.
+    pub fn jump_to_next_external_deadline(&mut self) -> bool {
+        match self.next_external_deadline() {
+            Some(d) => {
+                self.backend.advance_to(d.max(self.backend.now() + 1));
                 true
             }
             None => false,
@@ -319,7 +406,16 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         let now = self.backend.now();
         self.admit_arrivals(now);
+        // Deadlines are a hard bound: an answer landing in the same instant
+        // as the expiry loses (the expired entry is gone before poll runs).
+        self.expire_external_deadlines(now);
         for r in self.intercepts.poll(now) {
+            // A resolution may surface for a session that no longer awaits
+            // one — a scripted timer outliving a cancelled request, or a
+            // client answer racing a teardown. The id is gone; drop it.
+            if !self.requests.get(r.req).is_some_and(|q| q.state == ReqState::Paused) {
+                continue;
+            }
             self.resume(r, now);
         }
 
@@ -409,7 +505,9 @@ impl Engine {
         rq.segment += 1;
         rq.seg_generated = 0;
         rq.external_pause = false;
+        let disarmed = rq.external_deadline.take().is_some();
         rq.queue_arrival = if keep_arrival { rq.arrival } else { now };
+        self.deadlines_armed -= disarmed as usize;
         self.paused.retain(|r| *r != req);
         if has_cpu {
             rq.state = ReqState::SwapQueue;
@@ -503,9 +601,17 @@ impl Engine {
         rq.pause_kind = kind;
         rq.pause_duration_us = pause_hint;
         rq.external_pause = external;
+        rq.external_deadline = if external {
+            let timeout = rq.external_timeout_us.unwrap_or(self.cfg.external_timeout_us);
+            (timeout > 0).then_some(now.saturating_add(timeout))
+        } else {
+            None
+        };
+        let armed = rq.external_deadline.is_some();
         rq.interceptions_fired += 1;
         self.running.remove(req);
         self.paused.push(req);
+        self.deadlines_armed += armed as usize;
         self.metrics.interceptions_dispatched += 1;
         if external {
             self.metrics.external_interceptions += 1;
@@ -537,6 +643,115 @@ impl Engine {
         self.metrics.finish_request(record);
     }
 
+    /// Client abort: tear `req` out of whatever state it is in — pending,
+    /// waiting, running, paused (internal timer or awaiting a client),
+    /// mid-swap-out, or mid-swap-in — freeing every GPU and CPU block it
+    /// holds. Returns false for unknown or already-terminal ids (cancel is
+    /// idempotent). Exactly one terminal [`EngineEvent::Cancelled`] is
+    /// emitted per cancelled session.
+    ///
+    /// Must be called between iterations (it is `&mut self`, so it cannot
+    /// race an in-flight plan): the next capture simply no longer sees the
+    /// id, and the dense snapshot span re-bases onto the remaining live
+    /// range.
+    pub fn cancel(&mut self, req: ReqId) -> bool {
+        let now = self.backend.now();
+        self.cancel_with(req, now, CancelReason::ClientAbort)
+    }
+
+    fn cancel_with(&mut self, req: ReqId, now: Micros, reason: CancelReason) -> bool {
+        let Some(rq) = self.requests.get(req) else {
+            return false;
+        };
+        let state = rq.state;
+        match state {
+            ReqState::Finished | ReqState::Cancelled => return false,
+            ReqState::Pending => self.pending.retain(|&(_, r)| r != req),
+            ReqState::Waiting => {
+                self.waiting.remove(req);
+            }
+            ReqState::Running => {
+                self.running.remove(req);
+            }
+            ReqState::SwapQueue => {
+                self.swapq.remove(req);
+            }
+            ReqState::Paused => self.paused.retain(|r| *r != req),
+        }
+        // Free everything the session holds. `release` walks the block list
+        // whatever the residency mix — fully GPU-resident, mid-swap-out
+        // (CPU prefix + GPU tail), or mid-swap-in (restored GPU prefix +
+        // CPU tail) — so block conservation holds from any state; there is
+        // no in-flight swap plan to reconcile because plans never span
+        // iterations.
+        self.cache.release(req);
+        // Drop interception-source state (in-flight timer / awaiting entry /
+        // scheduled answers). Late answers become strays; a stale internal
+        // timer's resumption is discarded by the poll guard in `step`.
+        self.intercepts.on_finished(req);
+        let rq = &mut self.requests[req];
+        if state == ReqState::Paused {
+            rq.intercepted_us += now.saturating_sub(rq.paused_at);
+        }
+        rq.state = ReqState::Cancelled;
+        rq.external_pause = false;
+        let disarmed = rq.external_deadline.take().is_some();
+        self.deadlines_armed -= disarmed as usize;
+        self.unfinished -= 1;
+        self.metrics.sessions_cancelled += 1;
+        let rq = &self.requests[req];
+        // Recorded with `finished_at: None`: counts toward totals, never
+        // toward completions or latency percentiles.
+        let record = RequestRecord {
+            req,
+            arrival: rq.arrival,
+            first_token_at: rq.first_token_at,
+            finished_at: None,
+            intercepted_us: rq.intercepted_us,
+            output_tokens: rq.output_tokens,
+            interceptions: rq.interceptions_fired,
+        };
+        self.metrics.finish_request(record);
+        self.events
+            .emit_final(req, move || EngineEvent::Cancelled { req, reason, at: now });
+        true
+    }
+
+    /// Fire `cfg.external_timeout_action` for every externally-paused
+    /// request whose deadline has passed. Runs at the top of each iteration,
+    /// so with any background load the expiry lands on the first iteration
+    /// at or after the deadline (and `advance_idle` caps idle jumps at the
+    /// deadline, so it lands *exactly* on it).
+    fn expire_external_deadlines(&mut self, now: Micros) {
+        if self.deadlines_armed == 0 {
+            return; // free on the default (deadline-less) hot path
+        }
+        let mut i = 0;
+        while i < self.paused.len() {
+            let req = self.paused[i];
+            let rq = &self.requests[req];
+            let expired = rq.external_pause && rq.external_deadline.is_some_and(|d| d <= now);
+            if !expired {
+                i += 1;
+                continue;
+            }
+            self.metrics.interceptions_timed_out += 1;
+            match self.cfg.external_timeout_action {
+                TimeoutAction::Cancel => {
+                    self.cancel_with(req, now, CancelReason::DeadlineExceeded);
+                }
+                TimeoutAction::ResumeEmpty => {
+                    // The source must forget the in-flight entry so a late
+                    // client answer counts as stray — but the session stays
+                    // registered (it may intercept again).
+                    self.intercepts.abandon(req);
+                    self.resume(Resumption { req, tokens: Some(Vec::new()) }, now);
+                }
+            }
+            // Both arms removed `paused[i]`; do not advance `i`.
+        }
+    }
+
     /// Test/bench hook: number of in-flight + queued requests by state.
     pub fn queue_depths(&self) -> (usize, usize, usize, usize) {
         (self.waiting.len(), self.running.len(), self.swapq.len(), self.paused.len())
@@ -545,6 +760,10 @@ impl Engine {
     /// Invariant check used by integration tests.
     pub fn check_invariants(&self) -> Result<()> {
         self.cache.check_conservation()?;
+        let armed = self.requests.iter().filter(|r| r.external_deadline.is_some()).count();
+        if armed != self.deadlines_armed {
+            bail!("deadlines_armed counter {} != {armed} actual", self.deadlines_armed);
+        }
         for rq in self.requests.iter() {
             let id = rq.id;
             match rq.state {
@@ -586,8 +805,24 @@ impl Engine {
                         bail!("req {id} finished but holds cache");
                     }
                 }
+                ReqState::Cancelled => {
+                    if self.cache.has_seq(id) {
+                        bail!("req {id} cancelled but holds cache");
+                    }
+                    if self.waiting.contains(id)
+                        || self.running.contains(id)
+                        || self.swapq.contains(id)
+                        || self.paused.contains(&id)
+                        || self.pending.iter().any(|&(_, r)| r == id)
+                    {
+                        bail!("req {id} cancelled but still queued");
+                    }
+                }
             }
-            if rq.processed != self.cache.len_tokens(id) && rq.state != ReqState::Finished {
+            if rq.processed != self.cache.len_tokens(id)
+                && rq.state != ReqState::Finished
+                && rq.state != ReqState::Cancelled
+            {
                 bail!(
                     "req {id}: processed {} != cache len {}",
                     rq.processed,

@@ -14,12 +14,23 @@
 //! per-request table in the scheduling hot path relies on this: the
 //! engine's [`ReqTable`] is a plain vector indexed by `id − 1`, and the
 //! planner/kv-cache side tables are [`crate::kvcache::ReqSlots`] slabs.
-//! "Holes" exist only in the *live* set — a finished request stays in the
-//! `ReqTable` (end-of-run reporting reads it) but leaves every queue and
-//! releases its cache, so the cache slab and each iteration's snapshot
-//! tables see its id as a tombstone (no entry). Anything extending the
-//! engine must preserve sequential allocation or the slabs degrade to
-//! sparse ranges.
+//! "Holes" exist only in the *live* set — a finished **or cancelled**
+//! request stays in the `ReqTable` (end-of-run reporting reads it) but
+//! leaves every queue and releases its cache, so the cache slab and each
+//! iteration's snapshot tables see its id as a tombstone (no entry).
+//! Anything extending the engine must preserve sequential allocation or the
+//! slabs degrade to sparse ranges.
+//!
+//! # Lifetime bound
+//!
+//! Because the snapshot slabs span `[oldest live id, newest live id]`, the
+//! per-iteration capture cost is anchored by the oldest *live* request.
+//! The session-lifecycle subsystem (client aborts via
+//! [`crate::engine::Engine::cancel`], interception deadlines via
+//! `external_timeout_us`) bounds every request's lifetime: an abandoned
+//! session is torn down instead of anchoring the span forever, so the
+//! capture span tracks **live, non-abandoned sessions** — not run age,
+//! and not the patience of the slowest client.
 
 use crate::augment::AugmentKind;
 use crate::coordinator::scheduler::Disposition;
@@ -107,6 +118,9 @@ pub enum ReqState {
     /// Resumed, but context still (partly) in CPU swap space.
     SwapQueue,
     Finished,
+    /// Torn down before completion (client abort or interception deadline).
+    /// Terminal like `Finished`: out of every queue, cache fully released.
+    Cancelled,
 }
 
 #[derive(Debug, Clone)]
@@ -147,6 +161,13 @@ pub struct Request {
     /// True while paused on an externally-resolved interception (the
     /// client finishes the call via `SessionHandle::resume_with`).
     pub external_pause: bool,
+    /// Per-session external-interception timeout (engine-clock µs).
+    /// `None` = use the engine default (`EngineConfig::external_timeout_us`);
+    /// `Some(0)` = never time out; `Some(t)` = t.
+    pub external_timeout_us: Option<Micros>,
+    /// Armed while externally paused with a timeout in force: the
+    /// engine-clock instant at which the interception expires.
+    pub external_deadline: Option<Micros>,
 
     /// Metrics.
     pub first_token_at: Option<Micros>,
@@ -178,6 +199,8 @@ impl Request {
             pause_kind: kind,
             pause_duration_us: 0,
             external_pause: false,
+            external_timeout_us: None,
+            external_deadline: None,
             first_token_at: None,
             finished_at: None,
             intercepted_us: 0,

@@ -13,10 +13,14 @@
 //! map: sequence lookups on the scheduling hot path are array indexing, and
 //! the per-iteration [`CacheManager::snapshot_into`] capture is a dense
 //! O(live-id-range) copy of incrementally maintained per-sequence counters
-//! (no per-block residency rescans). A *released* id (request finished or
-//! discarded its cache) leaves a tombstone in the slab that reads as "no
-//! sequence", exactly like a removed hash-map key — see the
-//! [`slots`] module docs for the full tombstone rules.
+//! (no per-block residency rescans). A *released* id (request finished,
+//! **cancelled**, or discarded its cache) leaves a tombstone in the slab
+//! that reads as "no sequence", exactly like a removed hash-map key — see
+//! the [`slots`] module docs for the full tombstone rules. "This id is
+//! gone" means exactly one thing everywhere: [`CacheManager::release`] ran,
+//! every GPU and CPU block went back to the free lists (whatever the
+//! residency mix — fully resident, mid-swap-out, or mid-swap-in), and the
+//! slab compacts its edges so long-lived spans track the live id range.
 
 pub mod slots;
 pub mod swap;
@@ -183,6 +187,12 @@ impl CacheManager {
 
     pub fn cpu_free(&self) -> usize {
         self.alloc.cpu_free_count()
+    }
+
+    /// Width of the sequence slab's covered id range (diagnostics: bounded
+    /// by ≤ 2× the live id range — see the [`slots`] tombstone rules).
+    pub fn seq_span(&self) -> usize {
+        self.seqs.span()
     }
 
     /// Tokens currently occupying GPU blocks across all sequences.
@@ -559,6 +569,13 @@ impl CacheSnapshot {
 
     pub fn seq(&self, req: ReqId) -> Option<&SeqSnapshot> {
         self.seqs.get(req)
+    }
+
+    /// Width of the captured slab's covered id range (mirrors
+    /// [`CacheManager::seq_span`]; the per-iteration `snapshot_into` copies
+    /// exactly this many slots).
+    pub fn seq_span(&self) -> usize {
+        self.seqs.span()
     }
 
     pub fn cpu_blocks_of(&self, req: ReqId) -> usize {

@@ -70,8 +70,8 @@ pub mod prelude {
     pub use crate::engine::{Engine, ExecBackend};
     pub use crate::metrics::RunReport;
     pub use crate::serving::{
-        EngineEvent, EngineFront, FrontStatus, InterceptSource, ResolutionMode, SessionHandle,
-        SessionSpec,
+        CancelReason, EngineEvent, EngineFront, FrontStatus, InterceptSource, ResolutionMode,
+        SessionHandle, SessionSpec, SubmitError,
     };
     pub use crate::sim::{SimBackend, SimModelSpec};
     pub use crate::workload::{RequestScript, RequestTrace, WorkloadGen, WorkloadKind};

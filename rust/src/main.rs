@@ -61,4 +61,14 @@ ADAPTIVE-POLICY KNOBS (serve / sim, --policy adaptive):
   --adaptive-alpha <0..1]           EWMA smoothing factor     (default 0.2)
   --adaptive-min-gain <g>           admission gain clamp low  (default 0.5)
   --adaptive-max-gain <g>           admission gain clamp high (default 4.0)
+
+SESSION-LIFECYCLE KNOBS (serve / sim; act on live front sessions):
+  --external-timeout-ms <ms>        default deadline for externally-resolved
+                                    interceptions, engine clock (default 0 = off)
+  --timeout-action <cancel|resume-empty>  what an expired deadline does
+                                    (default cancel: free the session's KV)
+  --max-live-sessions <n>           submit backpressure: reject new sessions
+                                    once n are live (default 0 = unlimited)
+  --max-waiting <n>                 submit backpressure on waiting-queue depth
+                                    (default 0 = unlimited)
 ";

@@ -90,6 +90,13 @@ pub struct Recorder {
     /// Client-supplied resumption tokens dropped because they would have
     /// pushed the context past the submit-time capacity guarantee.
     pub clamped_resume_tokens: u64,
+    /// Session-lifecycle teardowns: sessions cancelled (client aborts plus
+    /// deadline-cancels), external interceptions that hit their deadline
+    /// (whatever the timeout action), and submissions rejected by
+    /// backpressure (`SubmitError::AtCapacity`).
+    pub sessions_cancelled: u64,
+    pub interceptions_timed_out: u64,
+    pub submits_rejected: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -166,6 +173,9 @@ impl Recorder {
             interceptions_dispatched: self.interceptions_dispatched,
             interceptions_resolved: self.interceptions_resolved,
             external_interceptions: self.external_interceptions,
+            sessions_cancelled: self.sessions_cancelled,
+            interceptions_timed_out: self.interceptions_timed_out,
+            submits_rejected: self.submits_rejected,
         }
     }
 }
@@ -197,6 +207,10 @@ pub struct RunReport {
     pub interceptions_dispatched: u64,
     pub interceptions_resolved: u64,
     pub external_interceptions: u64,
+    /// Session-lifecycle counts (see [`Recorder`]).
+    pub sessions_cancelled: u64,
+    pub interceptions_timed_out: u64,
+    pub submits_rejected: u64,
 }
 
 impl RunReport {

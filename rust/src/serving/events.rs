@@ -8,6 +8,10 @@
 //! Admitted → Token* → (Intercepted → Resumed → Token*)* → Finished
 //! ```
 //!
+//! A cancelled session (client abort, or an interception deadline firing)
+//! ends with a single terminal [`EngineEvent::Cancelled`] instead of
+//! `Finished`, at whatever point in the sequence the teardown happened.
+//!
 //! Emission is strictly observational: the [`EventBus`] never touches
 //! scheduling state, the RNG, or the clock, so a run with subscribers makes
 //! bit-identical scheduling decisions to a run without them (pinned by the
@@ -21,6 +25,17 @@ use crate::augment::AugmentKind;
 use crate::kvcache::ReqId;
 use crate::metrics::RequestRecord;
 use crate::util::Micros;
+
+/// Why a session was torn down before completing its script.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The client aborted ([`crate::serving::SessionHandle::cancel`] /
+    /// [`crate::serving::EngineFront::cancel`]).
+    ClientAbort,
+    /// An externally-resolved interception outlived its
+    /// `external_timeout_us` deadline without a client answer.
+    DeadlineExceeded,
+}
 
 /// One observable step in a session's lifecycle (engine-clock timestamps).
 #[derive(Debug, Clone)]
@@ -38,6 +53,10 @@ pub enum EngineEvent {
     Resumed { req: ReqId, tokens: usize, at: Micros },
     /// The request completed; `record` is its final metrics record.
     Finished { req: ReqId, record: RequestRecord },
+    /// Terminal: the session was torn out of the engine (client abort or
+    /// interception deadline). All of its GPU/CPU cache is already freed;
+    /// no further events follow.
+    Cancelled { req: ReqId, reason: CancelReason, at: Micros },
 }
 
 impl EngineEvent {
@@ -48,7 +67,8 @@ impl EngineEvent {
             | EngineEvent::Token { req, .. }
             | EngineEvent::Intercepted { req, .. }
             | EngineEvent::Resumed { req, .. }
-            | EngineEvent::Finished { req, .. } => *req,
+            | EngineEvent::Finished { req, .. }
+            | EngineEvent::Cancelled { req, .. } => *req,
         }
     }
 
@@ -60,6 +80,7 @@ impl EngineEvent {
             EngineEvent::Intercepted { .. } => "intercepted",
             EngineEvent::Resumed { .. } => "resumed",
             EngineEvent::Finished { .. } => "finished",
+            EngineEvent::Cancelled { .. } => "cancelled",
         }
     }
 }

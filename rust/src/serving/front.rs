@@ -37,6 +37,28 @@
 //! can be consumed and resumptions produced from other threads — but the
 //! pump itself stays on one thread so simulated-clock runs remain
 //! deterministic.
+//!
+//! # Session lifecycle bounds
+//!
+//! Three mechanisms bound a session's lifetime end to end (without them,
+//! one abandoned session anchors the dense scheduler tables forever — see
+//! the `engine/request.rs` module docs):
+//!
+//! * **Client aborts** — [`SessionHandle::cancel`] (thread-safe, applied at
+//!   the next pump round) or [`EngineFront::cancel`] (immediate) tear the
+//!   session out of any state, free its KV blocks, and emit a terminal
+//!   [`EngineEvent::Cancelled`].
+//! * **Interception deadlines** — `EngineConfig::external_timeout_us` (or
+//!   the per-session [`SessionSpec::with_external_timeout`]) arms an
+//!   engine-clock deadline on every externally-resolved interception. The
+//!   client always gets one [`FrontStatus::AwaitingClient`] hand-back per
+//!   blocked episode; if it re-enters the pump without making progress, the
+//!   clock jumps straight to the earliest deadline and the timeout action
+//!   fires (cancel, or resume with an empty answer — `TimeoutAction`).
+//! * **Submit backpressure** — [`EngineFront::submit`] returns
+//!   [`SubmitError::AtCapacity`] once `EngineConfig::max_live_sessions` /
+//!   `max_waiting` is reached, instead of admitting unboundedly.
+//!   [`EngineFront::run_trace`] sheds (and counts) rejected arrivals.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver};
@@ -74,6 +96,9 @@ pub struct SessionSpec {
     /// trace-replay path — keeps the RNG stream identical to `load_trace`).
     pub prompt: Option<Vec<u32>>,
     pub mode: ResolutionMode,
+    /// Per-session external-interception deadline (engine-clock µs):
+    /// `None` = engine default, `Some(0)` = never time out.
+    pub external_timeout_us: Option<Micros>,
 }
 
 impl SessionSpec {
@@ -84,13 +109,27 @@ impl SessionSpec {
             arrival_us: Some(arrival_us),
             prompt: None,
             mode: ResolutionMode::Scripted,
+            external_timeout_us: None,
         }
     }
 
     /// An interactive session: arrives now, every interception is resolved
     /// by the client.
     pub fn interactive(script: RequestScript) -> SessionSpec {
-        SessionSpec { script, arrival_us: None, prompt: None, mode: ResolutionMode::External }
+        SessionSpec {
+            script,
+            arrival_us: None,
+            prompt: None,
+            mode: ResolutionMode::External,
+            external_timeout_us: None,
+        }
+    }
+
+    /// Override the engine's default external-interception deadline for
+    /// this session (engine-clock µs; 0 = never time out).
+    pub fn with_external_timeout(mut self, timeout_us: Micros) -> SessionSpec {
+        self.external_timeout_us = Some(timeout_us);
+        self
     }
 
     /// Use the client's own prompt tokens (the script's prompt length is
@@ -118,6 +157,34 @@ pub enum FrontStatus {
     AwaitingClient,
 }
 
+/// Why a submission was refused. `AtCapacity` is retryable backpressure
+/// (admission control); everything else means the spec itself cannot be
+/// served.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The front is at its configured admission bound
+    /// (`EngineConfig::max_live_sessions` / `max_waiting`): shed load or
+    /// retry after sessions finish. Counted in `submits_rejected`.
+    AtCapacity { live: usize, waiting: usize, limit: usize },
+    /// Validation failed (unservable script, detached external session, …).
+    Rejected(anyhow::Error),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::AtCapacity { live, waiting, limit } => write!(
+                f,
+                "at capacity: {live} live sessions / {waiting} waiting (bound {limit}) — \
+                 retry after sessions finish"
+            ),
+            SubmitError::Rejected(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// A client's answer to an externally-resolved interception.
 #[derive(Debug)]
 struct InboxEntry {
@@ -137,6 +204,8 @@ struct FrontShared {
     inbox: Mutex<VecDeque<InboxEntry>>,
     /// Answers dropped because no interception was awaiting them.
     stray: Mutex<u64>,
+    /// Client aborts not yet applied by the pump.
+    cancels: Mutex<Vec<ReqId>>,
 }
 
 /// A client's handle to one submitted session: an event stream plus the
@@ -183,6 +252,16 @@ impl SessionHandle {
             .unwrap()
             .push_back(InboxEntry { req: self.req, tokens, delay_us });
     }
+
+    /// Abort this session. Thread-safe and idempotent: the cancel is
+    /// applied at the pump's next round, tearing the session out of
+    /// whatever state it is in (queued, running, paused, mid-swap) and
+    /// freeing its KV context; the stream ends with one terminal
+    /// [`EngineEvent::Cancelled`]. For an immediate teardown from the
+    /// pump-owning thread, use [`EngineFront::cancel`].
+    pub fn cancel(&self) {
+        self.shared.cancels.lock().unwrap().push(self.req);
+    }
 }
 
 /// A client answer scheduled on the engine clock.
@@ -202,8 +281,10 @@ struct FrontSource {
     shared: Arc<FrontShared>,
     /// Dispatch time of each interception awaiting a client, by request.
     awaiting: HashMap<ReqId, Micros>,
-    /// Collected answers ordered by (available-at, req).
-    ready: Vec<ReadyEntry>,
+    /// Collected answers ordered by (available-at, req). A `VecDeque` so
+    /// the per-iteration poll pops ready answers from the front in O(1)
+    /// instead of shifting the whole list (`Vec::remove(0)`).
+    ready: VecDeque<ReadyEntry>,
 }
 
 impl FrontSource {
@@ -212,7 +293,7 @@ impl FrontSource {
             scripted: ScriptedTimers::new(time_scale),
             shared,
             awaiting: HashMap::new(),
-            ready: Vec::new(),
+            ready: VecDeque::new(),
         }
     }
 
@@ -222,8 +303,8 @@ impl FrontSource {
 
     /// Move inbox entries onto the engine clock (answer available at
     /// dispatch time + client delay). `ready` is kept sorted by `(at, req)`
-    /// with a binary-search insertion per entry — no full re-sort of the
-    /// whole list on every resume push.
+    /// with a binary-search insertion per entry (index math over the ring —
+    /// no `make_contiguous` shuffle, no full re-sort on every resume push).
     fn intake(&mut self) {
         let mut inbox = self.shared.inbox.lock().unwrap();
         while let Some(e) = inbox.pop_front() {
@@ -236,14 +317,38 @@ impl FrontSource {
                     };
                     // `<=` keeps arrival order among equal (at, req) keys,
                     // matching the previous stable sort.
-                    let pos = self
-                        .ready
-                        .partition_point(|r| (r.at, r.req) <= (entry.at, entry.req));
-                    self.ready.insert(pos, entry);
+                    let key = (entry.at, entry.req);
+                    let (mut lo, mut hi) = (0, self.ready.len());
+                    while lo < hi {
+                        let mid = lo + (hi - lo) / 2;
+                        if (self.ready[mid].at, self.ready[mid].req) <= key {
+                            lo = mid + 1;
+                        } else {
+                            hi = mid;
+                        }
+                    }
+                    self.ready.insert(lo, entry);
+                    debug_assert!(
+                        self.ready
+                            .iter()
+                            .zip(self.ready.iter().skip(1))
+                            .all(|(a, b)| (a.at, a.req) <= (b.at, b.req)),
+                        "ready list out of order"
+                    );
                 }
                 None => self.count_stray(),
             }
         }
+    }
+
+    /// Drop `req`'s in-flight wait and any scheduled answers; every answer
+    /// removed here (or arriving later) counts as stray. Shared by the
+    /// finished/cancelled and deadline-abandoned teardown paths.
+    fn drop_pending_answers(&mut self, req: ReqId) {
+        self.awaiting.remove(&req);
+        let before = self.ready.len();
+        self.ready.retain(|e| e.req != req);
+        *self.shared.stray.lock().unwrap() += (before - self.ready.len()) as u64;
     }
 }
 
@@ -268,8 +373,8 @@ impl InterceptSource for FrontSource {
     fn poll(&mut self, now: Micros) -> Vec<Resumption> {
         self.intake();
         let mut out = self.scripted.poll(now);
-        while self.ready.first().is_some_and(|e| e.at <= now) {
-            let e = self.ready.remove(0);
+        while self.ready.front().is_some_and(|e| e.at <= now) {
+            let e = self.ready.pop_front().expect("front checked above");
             // A duplicate answer for an already-resumed request is stray.
             if self.awaiting.remove(&e.req).is_some() {
                 out.push(Resumption { req: e.req, tokens: Some(e.tokens) });
@@ -291,7 +396,7 @@ impl InterceptSource for FrontSource {
             .iter()
             .filter_map(|e| self.awaiting.get(&e.req).map(|&t0| t0.saturating_add(e.delay_us)))
             .min();
-        [self.scripted.next_completion(), self.ready.first().map(|e| e.at), inbox_min]
+        [self.scripted.next_completion(), self.ready.front().map(|e| e.at), inbox_min]
             .into_iter()
             .flatten()
             .min()
@@ -307,10 +412,18 @@ impl InterceptSource for FrontSource {
 
     fn on_finished(&mut self, req: ReqId) {
         // Drop all per-session bookkeeping so a long-lived front does not
-        // leak one entry per interactive session.
+        // leak one entry per interactive session. An answer still scheduled
+        // for a session that just ended (finished, cancelled, or timed out)
+        // was never consumable — count it stray, like a duplicate.
         self.shared.external.lock().unwrap().remove(&req);
-        self.awaiting.remove(&req);
-        self.ready.retain(|e| e.req != req);
+        self.drop_pending_answers(req);
+    }
+
+    fn abandon(&mut self, req: ReqId) {
+        // Deadline fired with a resume-and-requeue action: the in-flight
+        // wait is over but the session lives on (and stays externally
+        // resolved), so the registration entry is kept.
+        self.drop_pending_answers(req);
     }
 }
 
@@ -321,6 +434,11 @@ pub struct EngineFront {
     shared: Arc<FrontShared>,
     iters: u64,
     started: bool,
+    /// True once `AwaitingClient` was returned for the current blocked
+    /// episode; cleared on any pump progress. A second blocked entry with
+    /// this set means the client declined to act — consume the earliest
+    /// external-interception deadline instead of handing back again.
+    awaiting_reported: bool,
 }
 
 impl EngineFront {
@@ -335,7 +453,7 @@ impl EngineFront {
         let shared = Arc::new(FrontShared::default());
         let time_scale = engine.cfg.time_scale;
         engine.set_intercept_source(Box::new(FrontSource::new(shared.clone(), time_scale)));
-        EngineFront { engine, shared, iters: 0, started: false }
+        EngineFront { engine, shared, iters: 0, started: false, awaiting_reported: false }
     }
 
     pub fn engine(&self) -> &Engine {
@@ -348,9 +466,10 @@ impl EngineFront {
 
     /// Submit a session and stream its events through the returned handle.
     /// Errors on a script the engine cannot serve (too long for the
-    /// sequence cap or the GPU pool) — a bad client submission never
-    /// aborts the front.
-    pub fn submit(&mut self, spec: SessionSpec) -> Result<SessionHandle> {
+    /// sequence cap or the GPU pool) and under admission-control
+    /// backpressure ([`SubmitError::AtCapacity`]) — a bad client submission
+    /// never aborts the front.
+    pub fn submit(&mut self, spec: SessionSpec) -> Result<SessionHandle, SubmitError> {
         let id = self.submit_inner(spec)?;
         let (tx, rx) = channel();
         self.engine.subscribe_events(id, tx);
@@ -361,21 +480,78 @@ impl EngineFront {
     /// may be detached: an external session's interceptions can only be
     /// answered through its [`SessionHandle`], so a detached one would wait
     /// on a client forever.
-    pub fn submit_detached(&mut self, spec: SessionSpec) -> Result<ReqId> {
-        anyhow::ensure!(
-            spec.mode == ResolutionMode::Scripted,
-            "external sessions need a handle to be resumed — use EngineFront::submit"
-        );
+    pub fn submit_detached(&mut self, spec: SessionSpec) -> Result<ReqId, SubmitError> {
+        if spec.mode != ResolutionMode::Scripted {
+            return Err(SubmitError::Rejected(anyhow::anyhow!(
+                "external sessions need a handle to be resumed — use EngineFront::submit"
+            )));
+        }
         self.submit_inner(spec)
     }
 
-    fn submit_inner(&mut self, spec: SessionSpec) -> Result<ReqId> {
+    /// The admission bound currently being hit, if any.
+    fn capacity_limit_hit(&self) -> Option<usize> {
+        let cfg = &self.engine.cfg;
+        if cfg.max_live_sessions > 0 && self.engine.live_sessions() >= cfg.max_live_sessions {
+            return Some(cfg.max_live_sessions);
+        }
+        if cfg.max_waiting > 0 && self.engine.queue_depths().0 >= cfg.max_waiting {
+            return Some(cfg.max_waiting);
+        }
+        None
+    }
+
+    fn submit_inner(&mut self, spec: SessionSpec) -> Result<ReqId, SubmitError> {
+        if let Some(limit) = self.capacity_limit_hit() {
+            self.engine.metrics.submits_rejected += 1;
+            return Err(SubmitError::AtCapacity {
+                live: self.engine.live_sessions(),
+                waiting: self.engine.queue_depths().0,
+                limit,
+            });
+        }
         let arrival = spec.arrival_us.unwrap_or_else(|| self.engine.now());
-        let id = self.engine.submit_script(arrival, spec.script, spec.prompt)?;
+        let id = self
+            .engine
+            .submit_script(arrival, spec.script, spec.prompt)
+            .map_err(SubmitError::Rejected)?;
         if spec.mode == ResolutionMode::External {
             self.shared.external.lock().unwrap().insert(id);
         }
+        self.engine.set_external_timeout(id, spec.external_timeout_us);
+        // Stamp the run start at the first accepted submission, not the
+        // first pump: a mid-flight `report` between the two must not span
+        // the whole pre-front engine-clock epoch.
+        if !self.started {
+            self.engine.metrics.run_started = self.engine.now();
+            self.started = true;
+        }
         Ok(id)
+    }
+
+    /// Abort one session now (pump-owning thread). Thread-safe aborts go
+    /// through [`SessionHandle::cancel`]. Returns false if the id is
+    /// unknown or already terminal.
+    pub fn cancel(&mut self, req: ReqId) -> bool {
+        let cancelled = self.engine.cancel(req);
+        if cancelled {
+            // The blocked set changed: remaining sessions get a fresh
+            // AwaitingClient hand-back before any deadline is consumed.
+            self.awaiting_reported = false;
+        }
+        cancelled
+    }
+
+    /// Apply handle-side aborts queued since the last round.
+    fn drain_cancels(&mut self) {
+        let pending: Vec<ReqId> = std::mem::take(&mut *self.shared.cancels.lock().unwrap());
+        for req in pending {
+            if self.engine.cancel(req) {
+                // As in `EngineFront::cancel`: a teardown counts as
+                // progress for the one-hand-back-per-episode contract.
+                self.awaiting_reported = false;
+            }
+        }
     }
 
     /// Answers dropped because no interception was awaiting them (clients
@@ -389,15 +565,36 @@ impl EngineFront {
     /// the trace path so stuck/cap semantics cannot drift; the front's
     /// iteration count (checked against `cfg.max_iterations`) accumulates
     /// over its whole lifetime.
+    ///
+    /// Interception deadlines: each blocked episode hands control to the
+    /// client exactly once. If the caller re-enters without the pump making
+    /// progress (no answer arrived), the engine clock jumps straight to the
+    /// earliest armed deadline and the timeout action fires; with no
+    /// deadline armed the front keeps waiting ([`FrontStatus::AwaitingClient`]
+    /// again).
     pub fn run_until_blocked(&mut self) -> Result<FrontStatus> {
         if !self.started {
             self.engine.metrics.run_started = self.engine.now();
             self.started = true;
         }
         loop {
+            self.drain_cancels();
             match self.engine.pump_round(&mut self.iters)? {
-                PumpRound::Progressed => {}
-                PumpRound::AwaitingExternal => return Ok(FrontStatus::AwaitingClient),
+                PumpRound::Progressed => self.awaiting_reported = false,
+                PumpRound::AwaitingExternal => {
+                    if !self.awaiting_reported {
+                        self.awaiting_reported = true;
+                        return Ok(FrontStatus::AwaitingClient);
+                    }
+                    // The client had its chance and declined: consume the
+                    // earliest deadline (simulated-clock jump), or keep
+                    // waiting if none is armed.
+                    if self.engine.jump_to_next_external_deadline() {
+                        self.awaiting_reported = false;
+                        continue;
+                    }
+                    return Ok(FrontStatus::AwaitingClient);
+                }
                 PumpRound::Drained => {
                     self.engine.metrics.run_ended = self.engine.now();
                     return Ok(FrontStatus::Drained);
@@ -418,10 +615,16 @@ impl EngineFront {
     /// Trace replay as a front client: every traced request becomes a
     /// scripted session, then the loop drains. Scheduling is bit-identical
     /// to [`Engine::run_trace`] on the same trace (see `tests/serving_api.rs`
-    /// and the determinism golden).
+    /// and the determinism golden). With admission bounds configured,
+    /// requests arriving at capacity are shed (counted in
+    /// `submits_rejected`) rather than failing the run — the admission-
+    /// control behavior a live front shows.
     pub fn run_trace(&mut self, trace: &RequestTrace) -> Result<RunReport> {
         for tr in trace.iter() {
-            self.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us))?;
+            match self.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us)) {
+                Ok(_) | Err(SubmitError::AtCapacity { .. }) => {}
+                Err(e) => return Err(e.into()),
+            }
         }
         match self.run_until_blocked()? {
             FrontStatus::Drained => {

@@ -82,9 +82,19 @@ pub trait InterceptSource {
         0
     }
 
-    /// `req` finished and was released by the engine: drop any per-request
-    /// state (long-lived serving fronts must not leak session bookkeeping).
+    /// `req` finished — or was cancelled — and was released by the engine:
+    /// drop **all** per-request state, including session-level registration
+    /// (long-lived serving fronts must not leak session bookkeeping). Any
+    /// answer arriving afterwards is stray.
     fn on_finished(&mut self, _req: ReqId) {}
+
+    /// The engine stopped waiting on `req`'s *in-flight* interception (a
+    /// deadline expired under the resume-and-requeue timeout action): drop
+    /// the in-flight entry so a late answer counts as stray, but keep any
+    /// session-level registration — the session lives on and may intercept
+    /// again. Internal timers may ignore this (the engine discards a stale
+    /// timer's resumption).
+    fn abandon(&mut self, _req: ReqId) {}
 }
 
 /// The paper-faithful default source: every interception is a scripted

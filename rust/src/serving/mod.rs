@@ -21,11 +21,19 @@
 //! the same API and makes bit-identical scheduling decisions to the classic
 //! [`crate::engine::Engine::run_trace`] path (pinned by
 //! `tests/serving_api.rs` and the determinism golden).
+//!
+//! Session lifetime is bounded end to end: client aborts
+//! ([`SessionHandle::cancel`] / [`EngineFront::cancel`]), external-
+//! interception deadlines (`EngineConfig::external_timeout_us`), and
+//! submit backpressure ([`SubmitError::AtCapacity`]) — see the
+//! [`front`] module docs.
 
 pub mod events;
 pub mod front;
 pub mod intercept;
 
-pub use events::{EngineEvent, EventBus};
-pub use front::{EngineFront, FrontStatus, ResolutionMode, SessionHandle, SessionSpec};
+pub use events::{CancelReason, EngineEvent, EventBus};
+pub use front::{
+    EngineFront, FrontStatus, ResolutionMode, SessionHandle, SessionSpec, SubmitError,
+};
 pub use intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};

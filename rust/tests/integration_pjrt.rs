@@ -133,6 +133,10 @@ fn engine_serves_end_to_end_on_pjrt() {
         adaptive_alpha: infercept::config::DEFAULT_ADAPTIVE_ALPHA,
         adaptive_min_gain: infercept::config::DEFAULT_ADAPTIVE_MIN_GAIN,
         adaptive_max_gain: infercept::config::DEFAULT_ADAPTIVE_MAX_GAIN,
+        external_timeout_us: 0,
+        external_timeout_action: infercept::config::TimeoutAction::Cancel,
+        max_live_sessions: 0,
+        max_waiting: 0,
     };
     let _ = backend.max_decode_batch();
     let trace = WorkloadGen::new(WorkloadKind::Mixed, 7)

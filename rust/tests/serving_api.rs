@@ -8,7 +8,7 @@
 use infercept::augment::AugmentKind;
 use infercept::config::EngineConfig;
 use infercept::coordinator::policy::Policy;
-use infercept::engine::Engine;
+use infercept::engine::{Engine, ExecBackend};
 use infercept::metrics::RunReport;
 use infercept::serving::{EngineFront, FrontStatus, SessionSpec};
 use infercept::sim::{SimBackend, SimModelSpec};
@@ -284,6 +284,63 @@ fn premature_resolutions_are_dropped_as_stray() {
     assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
     assert_eq!(f.stray_resolutions(), 1);
     f.engine().check_invariants().unwrap();
+}
+
+#[test]
+fn ready_answers_resume_in_engine_clock_order() {
+    // Three external sessions answered in reverse order with descending
+    // client delays: the front's ready list (a sorted VecDeque popped from
+    // the front) must deliver the resumptions in engine-clock order, not
+    // answer-arrival order.
+    let mut f = front(Policy::preserve());
+    let sessions: Vec<_> = (0..3)
+        .map(|_| f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap())
+        .collect();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    // All three paused at the same instant; answer them newest-first with
+    // delays 3s / 2s / 1s so availability order is the reverse.
+    for (i, s) in sessions.iter().enumerate().rev() {
+        s.resume_with_after(vec![i as u32 + 1; 8], (i as u64 + 1) * 1_000_000);
+    }
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+    assert_eq!(f.stray_resolutions(), 0);
+    // Resumed timestamps must be non-decreasing across sessions in delay
+    // order (session 0 first at +1s, then +2s, then +3s).
+    let resumed_at: Vec<u64> = sessions
+        .iter()
+        .map(|s| {
+            s.drain_events()
+                .iter()
+                .find_map(|e| match e {
+                    infercept::serving::EngineEvent::Resumed { at, .. } => Some(*at),
+                    _ => None,
+                })
+                .unwrap()
+        })
+        .collect();
+    assert!(resumed_at[0] < resumed_at[1] && resumed_at[1] < resumed_at[2], "{resumed_at:?}");
+}
+
+#[test]
+fn report_before_first_run_spans_no_pre_front_epoch() {
+    // A front wrapped around a backend whose clock is already deep into its
+    // epoch (wall-clock backends; reused sim backends): `report` between
+    // the first submit and the first `run_until_blocked` must not span the
+    // whole pre-front epoch — `run_started` is stamped at the first
+    // accepted submission.
+    let spec = SimModelSpec::gptj_6b();
+    let mut backend = SimBackend::new(spec.clone());
+    backend.advance_to(30_000_000); // 30 s of pre-front engine clock
+    let engine = Engine::new(Box::new(backend), EngineConfig::for_sim(&spec, Policy::infercept()));
+    let mut f = EngineFront::from_engine(engine);
+    f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    let rep = f.report();
+    assert!(
+        rep.duration_s < 1.0,
+        "mid-flight duration {}s includes the pre-front epoch",
+        rep.duration_s
+    );
 }
 
 #[test]

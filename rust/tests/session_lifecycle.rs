@@ -1,0 +1,570 @@
+//! Session-lifecycle integration tests: cancellation (client aborts),
+//! interception deadlines, and submit backpressure bound request lifetime
+//! end to end.
+//!
+//! The load-bearing guarantee (PR-4 follow-up): the dense scheduler tables
+//! span `[oldest live id, newest live id]`, so one session abandoned on a
+//! never-resumed external interception used to grow *every* iteration's
+//! capture linearly for the rest of the run. With deadlines enabled the
+//! abandoned session is torn down and the capture span returns to the
+//! live-session bound — pinned by the regression test below.
+
+use infercept::augment::AugmentKind;
+use infercept::config::{EngineConfig, TimeoutAction};
+use infercept::coordinator::estimator::DurationEstimator;
+use infercept::coordinator::planner::Planner;
+use infercept::coordinator::policy::Policy;
+use infercept::coordinator::sched_policy::AdaptivePolicy;
+use infercept::engine::request::ReqState;
+use infercept::engine::{Engine, PumpRound};
+use infercept::kvcache::ReqId;
+use infercept::serving::{
+    CancelReason, EngineEvent, EngineFront, FrontStatus, SessionSpec, SubmitError,
+};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::prop;
+use infercept::workload::{Interception, RequestScript, Segment, WorkloadGen, WorkloadKind};
+
+fn sim_cfg(policy: Policy) -> EngineConfig {
+    EngineConfig::for_sim(&SimModelSpec::gptj_6b(), policy)
+}
+
+fn sim_engine(cfg: EngineConfig) -> Engine {
+    Engine::new(Box::new(SimBackend::new(SimModelSpec::gptj_6b())), cfg)
+}
+
+fn front(cfg: EngineConfig) -> EngineFront {
+    EngineFront::from_engine(sim_engine(cfg))
+}
+
+/// One generation segment, one interception, one closing segment.
+fn two_turn_script(kind: AugmentKind) -> RequestScript {
+    RequestScript {
+        kind,
+        prompt_tokens: 64,
+        segments: vec![
+            Segment {
+                gen_tokens: 4,
+                interception: Some(Interception { kind, duration_us: 1_000_000, ret_tokens: 8 }),
+            },
+            Segment { gen_tokens: 4, interception: None },
+        ],
+    }
+}
+
+/// A plain script: prompt + one generation burst, no interception.
+fn plain_script(prompt_tokens: u32, gen_tokens: u32) -> RequestScript {
+    RequestScript {
+        kind: AugmentKind::Qa,
+        prompt_tokens,
+        segments: vec![Segment { gen_tokens, interception: None }],
+    }
+}
+
+fn drain(engine: &mut Engine) {
+    let mut iters = 0u64;
+    loop {
+        match engine.pump_round(&mut iters).unwrap() {
+            PumpRound::Drained => break,
+            PumpRound::AwaitingExternal => panic!("scripted run awaiting a client"),
+            PumpRound::Progressed => {}
+        }
+        assert!(iters < 1_000_000, "run does not drain");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client aborts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_abort_frees_everything_and_emits_one_terminal_event() {
+    let mut f = front(sim_cfg(Policy::preserve()));
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    let id = session.id();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    // Paused on the client, context resident.
+    assert!(f.engine().cache().gpu_tokens_of(id) > 0);
+    assert_eq!(f.engine().awaiting_external(), 1);
+
+    // Thread-safe handle-side abort: applied at the next pump round.
+    session.cancel();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert!(!engine.cache().has_seq(id), "cancelled session must hold no cache");
+    assert_eq!(engine.awaiting_external(), 0);
+    assert_eq!(engine.metrics.sessions_cancelled, 1);
+    assert_eq!(engine.metrics.interceptions_timed_out, 0);
+    assert_eq!(engine.request(id).unwrap().state, ReqState::Cancelled);
+
+    let events = session.drain_events();
+    let terminal: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.tag(), "finished" | "cancelled"))
+        .collect();
+    assert_eq!(terminal.len(), 1, "exactly one terminal event");
+    match events.last().unwrap() {
+        EngineEvent::Cancelled { req, reason, .. } => {
+            assert_eq!(*req, id);
+            assert_eq!(*reason, CancelReason::ClientAbort);
+        }
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+
+    // Cancel is idempotent: a second abort (handle or front) is a no-op.
+    session.cancel();
+    assert!(!f.cancel(id));
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    assert_eq!(f.engine().metrics.sessions_cancelled, 1);
+}
+
+#[test]
+fn cancel_tears_out_pending_waiting_and_running_states() {
+    // Pending: cancelled before arrival, never admitted.
+    let mut engine = sim_engine(sim_cfg(Policy::infercept()));
+    let id = engine.submit_script(5_000_000, plain_script(64, 4), None).unwrap();
+    assert_eq!(engine.request(id).unwrap().state, ReqState::Pending);
+    assert!(engine.cancel(id));
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.unfinished(), 0);
+
+    // Waiting: a long prompt is still prefilling after one iteration.
+    let mut engine = sim_engine(sim_cfg(Policy::infercept()));
+    let id = engine.submit_script(0, plain_script(1200, 4), None).unwrap();
+    engine.step().unwrap();
+    assert_eq!(engine.request(id).unwrap().state, ReqState::Waiting);
+    assert!(engine.cache().gpu_tokens_of(id) > 0, "partial prefill holds blocks");
+    assert!(engine.cancel(id));
+    engine.cache().check_conservation().unwrap();
+    engine.check_invariants().unwrap();
+    assert!(!engine.cache().has_seq(id));
+    assert_eq!(engine.unfinished(), 0);
+
+    // Running: step until decode-ready, then cancel mid-generation.
+    let mut engine = sim_engine(sim_cfg(Policy::infercept()));
+    let id = engine.submit_script(0, plain_script(256, 64), None).unwrap();
+    for _ in 0..50 {
+        if engine.request(id).unwrap().state == ReqState::Running {
+            break;
+        }
+        engine.step().unwrap();
+    }
+    assert_eq!(engine.request(id).unwrap().state, ReqState::Running);
+    assert!(engine.cancel(id));
+    engine.cache().check_conservation().unwrap();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.cache().gpu_free(), engine.cfg.num_gpu_blocks);
+    drain(&mut engine); // returns Drained immediately: nothing unfinished
+}
+
+#[test]
+fn cancel_of_swapped_out_session_releases_mixed_residency() {
+    // The swap baseline moves every paused context to CPU: cancelling the
+    // paused session must free its CPU slots (and any GPU remainder) with
+    // conservation intact.
+    let mut f = front(sim_cfg(Policy::swap()));
+    let session =
+        f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Chatbot))).unwrap();
+    let id = session.id();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    assert!(
+        f.engine().cache().cpu_blocks_of(id) > 0,
+        "swap policy must have moved the paused context to CPU"
+    );
+    assert!(f.cancel(id));
+    let engine = f.engine();
+    engine.cache().check_conservation().unwrap();
+    engine.check_invariants().unwrap();
+    assert!(!engine.cache().has_seq(id));
+    assert_eq!(engine.cache().cpu_free(), engine.cfg.num_cpu_blocks);
+    assert_eq!(engine.cache().gpu_free(), engine.cfg.num_gpu_blocks);
+}
+
+#[test]
+fn cancel_of_last_pending_request_matches_truncated_trace() {
+    // Cancelling a request before it ever arrives is complete excision:
+    // the run is counter-identical to one that never submitted it.
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 99).generate(16, 4.0);
+    let n = trace.iter().count() as ReqId;
+
+    let mut a = sim_engine(sim_cfg(Policy::infercept()));
+    a.load_trace(&trace);
+    assert!(a.cancel(n)); // the last-arriving request, still Pending
+    drain(&mut a);
+    a.check_invariants().unwrap();
+
+    let mut b = sim_engine(sim_cfg(Policy::infercept()));
+    for tr in trace.iter().take(n as usize - 1) {
+        b.submit_script(tr.arrival_us, tr.script.clone(), None).unwrap();
+    }
+    drain(&mut b);
+    b.check_invariants().unwrap();
+
+    let counters = |e: &Engine| {
+        (
+            e.metrics.iterations,
+            e.metrics.preserve_decisions,
+            e.metrics.discard_decisions,
+            e.metrics.swap_decisions,
+            e.metrics.evictions,
+            e.metrics.swapped_out_tokens,
+            e.metrics.swapped_in_tokens,
+            e.metrics.interceptions_dispatched,
+            e.metrics.interceptions_resolved,
+            e.metrics.records.iter().filter(|r| r.finished_at.is_some()).count(),
+        )
+    };
+    assert_eq!(counters(&a), counters(&b));
+    assert_eq!(a.metrics.sessions_cancelled, 1);
+    assert_eq!(b.metrics.sessions_cancelled, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Interception deadlines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_fires_exactly_on_the_simulated_clock_jump() {
+    let mut cfg = sim_cfg(Policy::preserve());
+    cfg.external_timeout_us = 5_000_000;
+    let mut f = front(cfg);
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    let id = session.id();
+
+    // The client gets exactly one hand-back per blocked episode …
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    let t0 = session
+        .drain_events()
+        .iter()
+        .find_map(|e| match e {
+            EngineEvent::Intercepted { at, .. } => Some(*at),
+            _ => None,
+        })
+        .expect("session must have intercepted");
+
+    // … and a re-entry without progress jumps straight to the deadline.
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let engine = f.engine();
+    assert_eq!(engine.now(), t0 + 5_000_000, "expiry fires exactly at the deadline");
+    engine.check_invariants().unwrap();
+    assert!(!engine.cache().has_seq(id));
+    assert_eq!(engine.metrics.interceptions_timed_out, 1);
+    assert_eq!(engine.metrics.sessions_cancelled, 1);
+    match session.drain_events().last().unwrap() {
+        EngineEvent::Cancelled { reason, .. } => {
+            assert_eq!(*reason, CancelReason::DeadlineExceeded);
+        }
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+}
+
+#[test]
+fn client_answer_beats_the_deadline() {
+    let mut cfg = sim_cfg(Policy::preserve());
+    cfg.external_timeout_us = 5_000_000;
+    let mut f = front(cfg);
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    session.resume_with_after(vec![7; 8], 1_000_000); // well inside the window
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.metrics.interceptions_timed_out, 0);
+    assert_eq!(engine.metrics.sessions_cancelled, 0);
+    assert_eq!(session.drain_events().last().unwrap().tag(), "finished");
+}
+
+#[test]
+fn late_answer_loses_to_the_deadline_and_counts_stray() {
+    let mut cfg = sim_cfg(Policy::preserve());
+    cfg.external_timeout_us = 2_000_000;
+    let mut f = front(cfg);
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    // The answer only becomes available 3 s after dispatch — past the 2 s
+    // deadline. The idle clock stops at the deadline first.
+    session.resume_with_after(vec![7; 8], 3_000_000);
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+    assert_eq!(f.engine().metrics.interceptions_timed_out, 1);
+    assert_eq!(f.engine().metrics.sessions_cancelled, 1);
+    assert_eq!(f.stray_resolutions(), 1, "the too-late answer is stray");
+}
+
+#[test]
+fn resume_empty_timeout_requeues_instead_of_cancelling() {
+    let mut cfg = sim_cfg(Policy::preserve());
+    cfg.external_timeout_us = 2_000_000;
+    cfg.external_timeout_action = TimeoutAction::ResumeEmpty;
+    let mut f = front(cfg);
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    // Never answer: the deadline resumes the session with an empty answer
+    // and the script runs to completion.
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.metrics.interceptions_timed_out, 1);
+    assert_eq!(engine.metrics.sessions_cancelled, 0);
+    let events = session.drain_events();
+    assert_eq!(events.last().unwrap().tag(), "finished");
+    let resumed_tokens = events
+        .iter()
+        .find_map(|e| match e {
+            EngineEvent::Resumed { tokens, .. } => Some(*tokens),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(resumed_tokens, 0, "timeout resumes with an empty answer");
+}
+
+#[test]
+fn per_session_timeout_overrides_the_engine_default() {
+    let mut cfg = sim_cfg(Policy::preserve());
+    cfg.external_timeout_us = 1_000_000;
+    let mut f = front(cfg);
+    // `with_external_timeout(0)`: this session never times out even though
+    // the engine default would.
+    let session = f
+        .submit(
+            SessionSpec::interactive(two_turn_script(AugmentKind::Qa)).with_external_timeout(0),
+        )
+        .unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    // Re-entry without progress: no deadline to jump to — still waiting.
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::AwaitingClient);
+    assert_eq!(f.engine().metrics.interceptions_timed_out, 0);
+    session.resume_with(vec![7; 8]);
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Submit backpressure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn submit_rejects_at_live_session_capacity_and_recovers_after_cancel() {
+    let mut cfg = sim_cfg(Policy::infercept());
+    cfg.max_live_sessions = 2;
+    let mut f = front(cfg);
+    let a = f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)).unwrap();
+    let _b = f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)).unwrap();
+    match f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)) {
+        Err(SubmitError::AtCapacity { live, limit, .. }) => {
+            assert_eq!(live, 2);
+            assert_eq!(limit, 2);
+        }
+        other => panic!("expected AtCapacity, got {other:?}"),
+    }
+    assert_eq!(f.engine().metrics.submits_rejected, 1);
+
+    // Cancelling a live session frees an admission slot immediately.
+    assert!(f.cancel(a));
+    let _d = f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    let completed = engine.metrics.records.iter().filter(|r| r.finished_at.is_some()).count();
+    assert_eq!(completed, 2);
+    assert_eq!(engine.metrics.sessions_cancelled, 1);
+    assert_eq!(engine.metrics.submits_rejected, 1);
+}
+
+// ---------------------------------------------------------------------------
+// The unbounded-capture-leak regression (acceptance criterion)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn abandoned_session_stops_anchoring_the_capture_span_after_timeout() {
+    // One interactive session is abandoned on its interception (id 1, the
+    // oldest live id) while scripted QA load flows through the engine. With
+    // the 20 s deadline enabled, the capture span must return to the
+    // live-session bound once the timeout fires, instead of growing with
+    // every admitted id for the rest of the run.
+    let mut cfg = sim_cfg(Policy::infercept());
+    cfg.external_timeout_us = 20_000_000;
+    let mut f = front(cfg);
+    let session = f.submit(SessionSpec::interactive(two_turn_script(AugmentKind::Qa))).unwrap();
+    let abandoned = session.id();
+    assert_eq!(abandoned, 1);
+    let load = WorkloadGen::new(WorkloadKind::Single(AugmentKind::Qa), 7).generate(160, 4.0);
+    for tr in load.iter() {
+        f.submit_detached(SessionSpec::scripted(tr.script.clone(), tr.arrival_us)).unwrap();
+    }
+
+    let mut iters = 0u64;
+    let (mut span_before, mut span_after) = (0usize, 0usize);
+    loop {
+        let round = match f.engine_mut().pump_round(&mut iters).unwrap() {
+            PumpRound::Drained => break,
+            PumpRound::AwaitingExternal => {
+                // Only possible if the load drained before the deadline;
+                // consume it explicitly either way.
+                assert!(f.engine_mut().jump_to_next_external_deadline());
+                continue;
+            }
+            r => r,
+        };
+        assert_eq!(round, PumpRound::Progressed);
+        let fired = f.engine().metrics.interceptions_timed_out > 0;
+        let snap = f.engine().sched_snapshot();
+        if fired {
+            // Post-timeout captures must not see the abandoned id at all.
+            assert!(snap.reqs.get(abandoned).is_none());
+            assert!(snap.cache.seq(abandoned).is_none());
+            assert!(!snap.paused.contains(&abandoned));
+            span_after = span_after.max(snap.reqs.span());
+        } else {
+            span_before = span_before.max(snap.reqs.span());
+        }
+        assert!(iters < 1_000_000, "run does not drain");
+    }
+
+    let engine = f.engine();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.metrics.interceptions_timed_out, 1);
+    assert_eq!(engine.metrics.sessions_cancelled, 1);
+    // The abandoned session anchored the span while live: by the time the
+    // deadline fired (~20 s in, ~80 arrivals), the span covered every id
+    // admitted since. Afterwards it collapses to the live-session window.
+    assert!(span_before >= 40, "span never grew while anchored ({span_before})");
+    assert!(
+        span_after < span_before / 2,
+        "capture span did not return to the live bound ({span_after} vs {span_before})"
+    );
+    // All cache is released at drain, and the cancelled session freed both
+    // GPU and CPU blocks (conservation holds throughout).
+    assert_eq!(engine.cache().seq_span(), 0);
+    assert_eq!(engine.cache().gpu_free(), engine.cfg.num_gpu_blocks);
+    assert_eq!(engine.cache().cpu_free(), engine.cfg.num_cpu_blocks);
+    // Exactly one terminal event reached the abandoned session's stream.
+    let events = session.drain_events();
+    let terminal = events.iter().filter(|e| matches!(e.tag(), "finished" | "cancelled")).count();
+    assert_eq!(terminal, 1);
+    assert_eq!(events.last().unwrap().tag(), "cancelled");
+}
+
+// ---------------------------------------------------------------------------
+// Property: cancel at a random point is a clean excision (S3)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cancel_anywhere_is_clean_excision() {
+    // For every fig2 policy + adaptive: cancel a random live session at a
+    // random point in a random trace (preferring mid-swap victims when any
+    // exist). Conservation must hold immediately; the next capture must
+    // contain no trace of the id; and a planner whose buffers are warm from
+    // a snapshot that *included* the cancelled session must plan the
+    // post-cancel snapshot Debug-identically to a fresh planner (the "fresh
+    // engine that never saw the session" pin); and the run must drain.
+    let mut policies = Policy::fig2_set();
+    policies.push(Policy::adaptive());
+    prop::check("cancel_anywhere", 10, |rng| {
+        for policy in &policies {
+            let seed = rng.next_u64();
+            let n = rng.usize(6, 14);
+            let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0);
+            let cfg = sim_cfg(policy.clone()).with_seed(seed);
+            let mut engine = sim_engine(cfg);
+            engine.load_trace(&trace);
+            let cancel_at = rng.usize(1, 40) as u64;
+
+            let mut iters = 0u64;
+            let mut victim: Option<ReqId> = None;
+            loop {
+                match engine.pump_round(&mut iters).unwrap() {
+                    PumpRound::Drained => break,
+                    PumpRound::AwaitingExternal => panic!("scripted run awaiting client"),
+                    PumpRound::Progressed => {}
+                }
+                assert!(iters < 1_000_000, "{}: run does not drain", policy.name);
+                if victim.is_some() || iters < cancel_at {
+                    continue;
+                }
+                let live: Vec<ReqId> = (1..=n as ReqId)
+                    .filter(|&id| {
+                        !matches!(
+                            engine.request(id).unwrap().state,
+                            ReqState::Finished | ReqState::Cancelled
+                        )
+                    })
+                    .collect();
+                if live.is_empty() {
+                    continue;
+                }
+                // Prefer a victim holding CPU blocks (mid-swap-out while
+                // paused, or mid-swap-in from the swap queue): the hard
+                // teardown cases.
+                let swappy: Vec<ReqId> = live
+                    .iter()
+                    .copied()
+                    .filter(|&id| engine.cache().cpu_blocks_of(id) > 0)
+                    .collect();
+                let v = if !swappy.is_empty() && rng.usize(0, 2) > 0 {
+                    *rng.choose(&swappy)
+                } else {
+                    *rng.choose(&live)
+                };
+                let pre = engine.sched_snapshot().clone();
+                assert!(engine.cancel(v), "{}: cancel of live req {v}", policy.name);
+                engine.cache().check_conservation().unwrap();
+                engine.check_invariants().unwrap();
+                assert!(!engine.cache().has_seq(v));
+
+                // The very next capture must not see the id anywhere.
+                engine.step().unwrap();
+                let post = engine.sched_snapshot().clone();
+                assert!(post.reqs.get(v).is_none(), "{}: req in snapshot", policy.name);
+                assert!(post.cache.seq(v).is_none(), "{}: cache in snapshot", policy.name);
+                assert!(
+                    !post.waiting.contains(&v)
+                        && !post.running.contains(&v)
+                        && !post.swapq.contains(&v)
+                        && !post.paused.contains(&v),
+                    "{}: queue residue",
+                    policy.name
+                );
+
+                // Warm-vs-fresh planner parity on the post-cancel snapshot.
+                let est = DurationEstimator::new(policy.estimator, 1.0);
+                let (warm_dbg, fresh_dbg) = if policy.name == "adaptive" {
+                    let mut warm = Planner::new();
+                    warm.plan_with(pre, &mut AdaptivePolicy::new(250_000), &est);
+                    let w = format!(
+                        "{:?}",
+                        warm.plan_with(post.clone(), &mut AdaptivePolicy::new(250_000), &est)
+                    );
+                    let mut fresh = Planner::new();
+                    let fr = format!(
+                        "{:?}",
+                        fresh.plan_with(post.clone(), &mut AdaptivePolicy::new(250_000), &est)
+                    );
+                    (w, fr)
+                } else {
+                    let mut warm = Planner::new();
+                    warm.plan_for(pre, &est);
+                    let w = format!("{:?}", warm.plan_for(post.clone(), &est));
+                    let mut fresh = Planner::new();
+                    let fr = format!("{:?}", fresh.plan_for(post.clone(), &est));
+                    (w, fr)
+                };
+                assert_eq!(
+                    warm_dbg, fresh_dbg,
+                    "{}: warm planner diverges on post-cancel snapshot",
+                    policy.name
+                );
+                victim = Some(v);
+            }
+            engine.check_invariants().unwrap();
+            engine.cache().check_conservation().unwrap();
+            if let Some(v) = victim {
+                assert_eq!(engine.request(v).unwrap().state, ReqState::Cancelled);
+                assert!(!engine.cache().has_seq(v));
+                assert_eq!(engine.metrics.sessions_cancelled, 1);
+            }
+        }
+    });
+}
