@@ -10,6 +10,14 @@
 //! measures whole-run scheduler throughput via a sim-replay
 //! iterations-per-second figure.
 //!
+//! Two profiles pin the O(batch) steady state on top of that: the
+//! journal-driven `capture_delta → plan` cycle (a decode-batch-sized dirty
+//! set per iteration, queues synced by edit replay) at the 512-waiting
+//! scale, and the same cycle with a 10k-deep waiting queue — the
+//! incremental capture and the lazy admission frontier must keep the cycle
+//! within the same ballpark no matter how deep the backlog is
+//! (`stress_10k_over_512_delta_cycle` in the JSON report).
+//!
 //! Run `cargo bench --bench bench_planner_e2e` (add `-- --quick` for the
 //! CI profile); the JSON report lands at the repo root (override with
 //! `BENCH_OUT=<path>`).
@@ -29,7 +37,7 @@ use infercept::engine::{Engine, ExecBackend};
 use infercept::kvcache::swap::SwapModel;
 use infercept::kvcache::{BlockLoc, CacheManager, ReqId};
 use infercept::sim::{SimBackend, SimModelSpec};
-use infercept::util::bench::{Bench, BenchReport};
+use infercept::util::bench::{Bench, BenchReport, BenchResult};
 use infercept::util::json::Json;
 use infercept::util::Micros;
 use infercept::workload::{RequestScript, Segment, WorkloadGen, WorkloadKind};
@@ -68,6 +76,12 @@ fn script_of(tokens: usize) -> RequestScript {
 /// keep capture cost proportional to the *live* set, not run age; the
 /// aged bench variant pins exactly that.
 fn build_state(aged_prefix: usize) -> EngineState {
+    build_state_scaled(aged_prefix, WAITING)
+}
+
+/// `build_state` with an overridable waiting-queue depth (the 10k-backlog
+/// stress profile).
+fn build_state_scaled(aged_prefix: usize, waiting_n: usize) -> EngineState {
     let spec = SimModelSpec::gptj_6b();
     let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
     let backend = SimBackend::new(spec);
@@ -138,7 +152,7 @@ fn build_state(aged_prefix: usize) -> EngineState {
         }
         paused.push(id);
     }
-    for i in 0..WAITING {
+    for i in 0..waiting_n {
         let tokens = 300 + (i * 91) % 900;
         let arrival = (i as Micros) * 800 + 7;
         let id = submit(&mut requests, tokens, arrival);
@@ -222,6 +236,79 @@ fn capture_hashmap_baseline(st: &EngineState, out: &mut BaselineSnapshot) {
     std::hint::black_box(&out.reqs);
 }
 
+/// The O(batch) steady-state cycle: each timed iteration mutates a
+/// decode-batch-sized set of requests (dirty-marking them through the
+/// journalled `&mut` accessors), churns one waiting-queue entry (two
+/// journal edits), then runs `capture_delta → plan` exactly as the engine's
+/// `plan_iteration` does. The persistent snapshot is primed outside the
+/// timer, so the measured cost is the incremental path only.
+fn bench_delta_cycle(bench: &Bench, name: &str, st: &mut EngineState) -> BenchResult {
+    let est = DurationEstimator::new(EstimatorKind::TypeProfile, 1.0);
+    let mut planner = Planner::new();
+    let mut policy = InferceptPolicy;
+    let mut req_dirty: Vec<ReqId> = Vec::new();
+    let mut cache_dirty: Vec<ReqId> = Vec::new();
+    // Construction marked every id dirty; drain that noise, then prime the
+    // persistent snapshot (the first capture_delta takes the full-rebuild
+    // path) and the plan-side indexes.
+    st.requests.drain_dirty_into(&mut req_dirty);
+    st.cache.drain_dirty_into(&mut cache_dirty);
+    req_dirty.clear();
+    cache_dirty.clear();
+    planner.capture_delta(
+        st.now,
+        &st.cfg,
+        &st.backend,
+        &st.cache,
+        &mut st.waiting,
+        &mut st.swapq,
+        &mut st.running,
+        &st.paused,
+        &st.requests,
+        &req_dirty,
+        &cache_dirty,
+    );
+    planner.plan(&mut policy, &est);
+
+    let running_ids: Vec<ReqId> = st.running.iter().collect();
+    let churn = st.waiting.iter().last();
+    let mut cursor = 0usize;
+    bench.run(name, || {
+        // A decode batch touches its requests and their cache sequences.
+        for _ in 0..BS {
+            let id = running_ids[cursor % running_ids.len()];
+            cursor += 1;
+            std::hint::black_box(st.requests.get_mut(id));
+            st.cache.advance(id, 0);
+        }
+        // Queue churn: remove + re-push (same key, so the state is stable
+        // across iterations) exercises the mirror's edit replay.
+        if let Some(c) = churn {
+            let arrival = st.waiting.arrival_of(c).expect("churn id stays queued");
+            st.waiting.remove(c);
+            st.waiting.push(arrival, c);
+        }
+        req_dirty.clear();
+        cache_dirty.clear();
+        st.requests.drain_dirty_into(&mut req_dirty);
+        st.cache.drain_dirty_into(&mut cache_dirty);
+        planner.capture_delta(
+            st.now,
+            &st.cfg,
+            &st.backend,
+            &st.cache,
+            &mut st.waiting,
+            &mut st.swapq,
+            &mut st.running,
+            &st.paused,
+            &st.requests,
+            &req_dirty,
+            &cache_dirty,
+        );
+        std::hint::black_box(planner.plan(&mut policy, &est));
+    })
+}
+
 fn main() {
     let (bench, profile_name) = Bench::from_args();
     let mut report = BenchReport::new("bench_planner_e2e", profile_name);
@@ -283,6 +370,40 @@ fn main() {
         std::hint::black_box(aged_planner.snapshot());
     });
 
+    // ---- O(batch) steady state: journal-driven delta capture → plan ------
+    let mut delta_st = build_state(0);
+    let delta_name = format!("planner_e2e/delta_capture+plan {scale}");
+    let r_delta = bench_delta_cycle(&bench, &delta_name, &mut delta_st);
+
+    // ---- 10k-waiting backlog stress --------------------------------------
+    // The acceptance bar for the incremental capture + lazy frontier: a 20×
+    // deeper waiting queue must not inflate the per-iteration cycle beyond
+    // the same ballpark (tracked as `stress_10k_over_512_delta_cycle`).
+    let stress_scale = format!("{RUNNING}r/{PAUSED}p/10000w/{SWAPQ}s");
+    let mut stress = build_state_scaled(0, 10_000);
+    let r_delta_10k = bench_delta_cycle(
+        &bench,
+        &format!("planner_e2e/delta_capture+plan {stress_scale}"),
+        &mut stress,
+    );
+    // Full from-scratch capture at the same depth: the O(live-sessions)
+    // contrast the delta path exists to avoid.
+    let mut stress_planner = Planner::new();
+    let r_capture_10k = bench.run(&format!("planner_e2e/capture {stress_scale}"), || {
+        stress_planner.capture(
+            stress.now,
+            &stress.cfg,
+            &stress.backend,
+            &stress.cache,
+            &stress.waiting,
+            &stress.swapq,
+            &stress.running,
+            &stress.paused,
+            &stress.requests,
+        );
+        std::hint::black_box(stress_planner.snapshot());
+    });
+
     // ---- whole-run scheduler throughput (sim replay) ---------------------
     let trace = WorkloadGen::new(WorkloadKind::Mixed, 20260730).generate(120, 3.0);
     let run_once = || {
@@ -297,7 +418,17 @@ fn main() {
     });
 
     // ---- machine-readable trajectory -------------------------------------
-    for r in [&r_cycle, &r_capture, &r_capture_aged, &r_plan, &r_baseline, &r_replay] {
+    for r in [
+        &r_cycle,
+        &r_capture,
+        &r_capture_aged,
+        &r_plan,
+        &r_baseline,
+        &r_delta,
+        &r_delta_10k,
+        &r_capture_10k,
+        &r_replay,
+    ] {
         report.push(r);
     }
     report.derived(
@@ -311,6 +442,26 @@ fn main() {
     report.derived(
         "capture_plan_cycle_us",
         Json::num((r_cycle.mean_ns / 1e3 * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "delta_cycle_us",
+        Json::num((r_delta.mean_ns / 1e3 * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "stress_10k_delta_cycle_us",
+        Json::num((r_delta_10k.mean_ns / 1e3 * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "stress_10k_over_512_delta_cycle",
+        Json::num(((r_delta_10k.mean_ns / r_delta.mean_ns) * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "delta_over_full_cycle",
+        Json::num(((r_delta.mean_ns / r_cycle.mean_ns) * 100.0).round() / 100.0),
+    );
+    report.derived(
+        "stress_10k_full_capture_over_delta_cycle",
+        Json::num(((r_capture_10k.mean_ns / r_delta_10k.mean_ns) * 100.0).round() / 100.0),
     );
     report.derived(
         "sim_replay_iters_per_sec",

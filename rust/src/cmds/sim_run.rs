@@ -47,5 +47,12 @@ pub fn run(args: &Args) -> Result<()> {
             rep.sessions_cancelled, rep.interceptions_timed_out, rep.submits_rejected,
         );
     }
+    let iters = rep.iterations.max(1);
+    println!(
+        "  o(batch): {:.1} dirty ids/iter  {:.1} frontier/iter  {} token sends coalesced",
+        rep.capture_dirty_ids as f64 / iters as f64,
+        rep.frontier_depth as f64 / iters as f64,
+        rep.events_batched,
+    );
     Ok(())
 }

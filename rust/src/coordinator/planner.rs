@@ -30,13 +30,42 @@
 //! [`crate::coordinator::scheduler::decide_interceptions`] remain the
 //! paper-faithful defaults those trait methods delegate to.
 //!
-//! Planning is side-effect-free: stages 3–5 run against a cloned
-//! [`CacheSnapshot`] ledger (never `&mut CacheManager` or the backend), so
-//! every stage is unit-testable without a backend, the whole plan is
-//! property-testable (a plan never over-commits GPU blocks — see
-//! `prop_plans_never_overcommit`), and a plan can be replayed
+//! Planning is side-effect-free: stages 3–5 run against a
+//! [`crate::kvcache::CacheOverlay`] ledger (never `&mut CacheManager` or
+//! the backend), so every stage is unit-testable without a backend, the
+//! whole plan is property-testable (a plan never over-commits GPU blocks —
+//! see `prop_plans_never_overcommit`), and a plan can be replayed
 //! deterministically. The engine merely *applies* the plan: real cache
 //! mutations, backend execution, and metrics.
+//!
+//! # The O(batch) iteration contract
+//!
+//! The per-iteration hot path — [`Planner::capture_delta`] followed by
+//! [`Planner::plan`] — costs O(running batch + admission frontier + dirty
+//! ids), **not** O(live sessions):
+//!
+//! - **Capture** patches a persistent snapshot instead of rebuilding it:
+//!   queue lists are updated by replaying each [`FcfsQueue`]'s bounded edit
+//!   journal, per-request entries are re-snapshotted only for ids in the
+//!   engine's dirty sets (see the dirty-set invariant in
+//!   `engine/request.rs` and `kvcache`), and the cache ledger is patched by
+//!   [`CacheManager::patch_snapshot_into`]. Anything that mutates request
+//!   or cache state *must* mark the id dirty, or delta capture silently
+//!   diverges — [`Planner::capture`] remains the full-rebuild fallback and
+//!   the fuzz oracle (`tests/capture_delta.rs`).
+//! - **Simulation state** resets in O(1): generation-stamped overlays
+//!   ([`crate::kvcache::Overlay`], [`crate::kvcache::CacheOverlay`])
+//!   replace the per-plan snapshot clones.
+//! - **Admission** materializes only the *frontier* of the waiting queue it
+//!   actually reaches: the prefill loop lazily merges `snap.waiting`
+//!   (kept sorted by `(queue_arrival, id)` — the `FcfsQueue` order) with
+//!   the requests that joined during planning, stopping at budget
+//!   exhaustion or head-of-line blocking, and eviction victim scans consult
+//!   an incrementally maintained index of waiting GPU holders. Plans are
+//!   bit-identical to the unbounded scan (pinned by
+//!   `prop_lazy_frontier_matches_unbounded`); snapshots whose waiting list
+//!   is *not* sorted (hand-built tests) transparently fall back to full
+//!   materialization.
 
 use crate::augment::AugmentKind;
 use crate::config::EngineConfig;
@@ -52,7 +81,7 @@ use crate::coordinator::waste::FwdProfile;
 use crate::engine::backend::ExecBackend;
 use crate::engine::request::{ReqState, ReqTable, Request};
 use crate::kvcache::swap::SwapModel;
-use crate::kvcache::{CacheManager, CacheSnapshot, ReqId, ReqSlots};
+use crate::kvcache::{CacheManager, CacheOverlay, CacheSnapshot, Overlay, ReqId, ReqSlots};
 use crate::util::Micros;
 
 // ---------------------------------------------------------------------------
@@ -377,48 +406,63 @@ pub fn solve_budgets(snap: &SchedSnapshot, fwd: &FwdEstimate) -> (usize, usize) 
 // Simulated engine state for stages 3–5
 // ---------------------------------------------------------------------------
 
-/// Mutable simulation the later stages plan against: a cloned cache ledger
-/// plus per-request overrides. Entirely planner-private state; the real
-/// engine is untouched. Both per-request tables are dense slabs, so the
-/// per-iteration reset is a flat copy and stage lookups never hash.
+/// Mutable simulation the later stages plan against: generation-stamped
+/// overlays over the immutable snapshot plus the set of requests that
+/// joined the waiting order *during* planning. Entirely planner-private
+/// state; the real engine is untouched. The per-iteration reset is O(1)
+/// (overlay generation bumps — see [`Overlay`]), and per-plan cost is
+/// O(requests the plan actually touches).
 #[derive(Debug, Default)]
 struct SimState {
-    cache: CacheSnapshot,
-    reqs: ReqSlots<ReqSnapshot>,
-    /// Waiting queue ordered by (queue_arrival, req) — grows with swap-in
-    /// completions and evicted running requests.
-    waiting: Vec<(Micros, ReqId)>,
+    cache: CacheOverlay,
+    reqs: Overlay<ReqSnapshot>,
+    /// Requests that joined the waiting set during this plan (swap-in
+    /// completions, evicted running victims), ordered by (queue_arrival,
+    /// req). In the exhaustive-frontier fallback this instead holds the
+    /// *entire* materialized waiting list (in snapshot order).
+    buffer: Vec<(Micros, ReqId)>,
     /// Requests already in this plan: their cache entries are referenced by
     /// plan entries and must not be evicted.
-    planned: ReqSlots<()>,
+    planned: Overlay<()>,
 }
 
 impl SimState {
-    fn reset_from(&mut self, snap: &SchedSnapshot) {
-        self.cache.clone_from(&snap.cache);
-        self.reqs.clone_from(&snap.reqs);
-        self.waiting.clear();
-        self.waiting.extend(snap.waiting.iter().map(|&r| (snap.reqs[r].queue_arrival, r)));
-        self.planned.reset_like(&snap.reqs);
+    fn begin(&mut self, snap: &SchedSnapshot) {
+        self.cache.begin(&snap.cache);
+        self.reqs.begin();
+        self.buffer.clear();
+        self.planned.begin();
     }
 
-    fn insert_waiting(&mut self, req: ReqId) {
-        let arr = self.reqs[req].queue_arrival;
-        let pos = self.waiting.partition_point(|&(a, r)| (a, r) <= (arr, req));
-        self.waiting.insert(pos, (arr, req));
+    /// `req`'s state as of this point in the plan (overlay write if any,
+    /// else the snapshot).
+    #[inline]
+    fn req(&self, snap: &SchedSnapshot, req: ReqId) -> ReqSnapshot {
+        match self.reqs.get(req) {
+            Some(r) => *r,
+            None => snap.reqs[req],
+        }
+    }
+
+    fn insert_waiting(&mut self, snap: &SchedSnapshot, req: ReqId) {
+        let arr = self.req(snap, req).queue_arrival;
+        let pos = self.buffer.partition_point(|&(a, r)| (a, r) <= (arr, req));
+        self.buffer.insert(pos, (arr, req));
     }
 
     /// Mirror of the engine's preemption-by-recompute.
-    fn evict(&mut self, req: ReqId) {
-        {
-            let r = &mut self.reqs[req];
-            r.recompute_hwm = r.recompute_hwm.max(r.processed);
-            r.processed = 0;
+    fn evict(&mut self, snap: &SchedSnapshot, req: ReqId) {
+        let mut r = self.req(snap, req);
+        r.recompute_hwm = r.recompute_hwm.max(r.processed);
+        r.processed = 0;
+        let was_running = r.state == ReqState::Running;
+        if was_running {
+            r.state = ReqState::Waiting;
         }
-        self.cache.release(req);
-        if self.reqs[req].state == ReqState::Running {
-            self.reqs[req].state = ReqState::Waiting;
-            self.insert_waiting(req);
+        self.reqs.set(req, r);
+        self.cache.release(&snap.cache, req);
+        if was_running {
+            self.insert_waiting(snap, req);
         }
         // Waiting victims stay queued and restart from zero.
     }
@@ -427,36 +471,46 @@ impl SimState {
     /// `req` up to `target` tokens, evicting strictly later-arrived
     /// running/waiting requests under pressure. Victims are recorded in
     /// `evictions` (they apply even if the reservation ultimately fails).
+    ///
+    /// Waiting-queue candidates are `buffer` plus `holders` — under the
+    /// lazy frontier, `holders` is the maintained index of waiting requests
+    /// holding GPU tokens (the only waiting requests that can be victims);
+    /// under the exhaustive fallback the full list lives in `buffer` and
+    /// `holders` is empty.
     fn ensure_blocks(
         &mut self,
         snap: &SchedSnapshot,
         req: ReqId,
         target: usize,
+        holders: &[ReqId],
         evictions: &mut Vec<ReqId>,
     ) -> bool {
         loop {
-            if self.cache.can_grow(req, target) {
-                self.cache.reserve_grow(req, target);
+            if self.cache.can_grow(&snap.cache, req, target) {
+                self.cache.reserve_grow(&snap.cache, req, target);
                 return true;
             }
-            let req_arrival = self.reqs[req].queue_arrival;
+            let req_arrival = self.req(snap, req).queue_arrival;
             let victim = snap
                 .running
                 .iter()
                 .copied()
-                .filter(|r| self.reqs[r].state == ReqState::Running)
-                .chain(self.waiting.iter().map(|&(_, r)| r))
+                .filter(|&r| self.req(snap, r).state == ReqState::Running)
+                .chain(self.buffer.iter().map(|&(_, r)| r))
+                .chain(holders.iter().copied())
                 .filter(|&r| {
-                    r != req && !self.planned.contains(r) && self.cache.gpu_tokens_of(r) > 0
+                    r != req
+                        && self.planned.get(r).is_none()
+                        && self.cache.gpu_tokens_of(&snap.cache, r) > 0
                 })
-                .max_by_key(|r| (self.reqs[r].queue_arrival, *r));
+                .max_by_key(|&r| (self.req(snap, r).queue_arrival, r));
             let Some(v) = victim else {
                 return false;
             };
-            if self.reqs[v].queue_arrival < req_arrival {
+            if self.req(snap, v).queue_arrival < req_arrival {
                 return false; // only strictly lower-priority victims
             }
-            self.evict(v);
+            self.evict(snap, v);
             evictions.push(v);
         }
     }
@@ -504,32 +558,30 @@ fn stage_dispositions(
     let actions =
         policy.decide_interceptions(snap, estimator, views.as_slice(), &stats, out_budget);
     for (req, action) in actions {
+        let mut r = sim.req(snap, req);
         match action {
             InterceptAction::Preserve => {
-                sim.reqs[req].disposition = Disposition::Preserved;
+                r.disposition = Disposition::Preserved;
             }
             InterceptAction::Discard => {
-                {
-                    let r = &mut sim.reqs[req];
-                    r.recompute_hwm = r.recompute_hwm.max(r.processed);
-                    r.disposition = Disposition::Discarded;
-                }
-                if sim.cache.cpu_blocks_of(req) > 0 {
-                    let new_len = sim.cache.discard_gpu_tail(req);
-                    sim.reqs[req].processed = new_len;
+                r.recompute_hwm = r.recompute_hwm.max(r.processed);
+                r.disposition = Disposition::Discarded;
+                if sim.cache.cpu_blocks_of(&snap.cache, req) > 0 {
+                    r.processed = sim.cache.discard_gpu_tail(&snap.cache, req);
                 } else {
-                    sim.cache.release(req);
-                    sim.reqs[req].processed = 0;
+                    sim.cache.release(&snap.cache, req);
+                    r.processed = 0;
                 }
             }
             InterceptAction::SwapOut { tokens } => {
                 if tokens > 0 {
                     plan.swap_out_blocks +=
-                        sim.cache.swap_out(req, tokens.div_ceil(snap.block_size));
+                        sim.cache.swap_out(&snap.cache, req, tokens.div_ceil(snap.block_size));
                 }
-                sim.reqs[req].disposition = Disposition::SwappingOut;
+                r.disposition = Disposition::SwappingOut;
             }
         }
+        sim.reqs.set(req, r);
         plan.dispositions.push((req, action));
     }
 }
@@ -541,27 +593,33 @@ fn stage_swap_in(snap: &SchedSnapshot, in_budget: usize, sim: &mut SimState, pla
         if in_left == 0 {
             break;
         }
-        let want = sim.cache.cpu_blocks_of(req);
+        let want = sim.cache.cpu_blocks_of(&snap.cache, req);
         if want == 0 {
             continue;
         }
         let grant = want.min(in_left.div_ceil(bs));
-        let moved = sim.cache.swap_in(req, grant);
+        let moved = sim.cache.swap_in(&snap.cache, req, grant);
         in_left = in_left.saturating_sub(moved * bs);
         if moved == 0 {
             continue; // GPU exhausted; nothing to record
         }
-        let completes = sim.cache.cpu_blocks_of(req) == 0;
+        let completes = sim.cache.cpu_blocks_of(&snap.cache, req) == 0;
         plan.swap_in.push(SwapInGrant { req, blocks: moved, completes });
         if completes {
             // Fully resident: continues as a waiting (prefill) request and
             // is eligible for admission later this very iteration.
-            sim.reqs[req].state = ReqState::Waiting;
-            sim.insert_waiting(req);
+            let mut r = sim.req(snap, req);
+            r.state = ReqState::Waiting;
+            sim.reqs.set(req, r);
+            sim.insert_waiting(snap, req);
         }
     }
 }
 
+/// Returns the admission-frontier depth: how many `snap.waiting` entries
+/// the prefill loop materialized (the whole list under the exhaustive
+/// fallback).
+#[allow(clippy::too_many_arguments)]
 fn stage_batch(
     snap: &SchedSnapshot,
     policy: &mut dyn SchedPolicy,
@@ -569,18 +627,21 @@ fn stage_batch(
     plan: &mut SchedPlan,
     prefill_order: &mut Vec<(Micros, ReqId)>,
     pools: &mut PlanPools,
-) {
+    holders: &[ReqId],
+    lazy: bool,
+) -> usize {
     // ---- Decode admission (running requests, FCFS, bounded batch) --------
     let decode_cap = policy.decode_batch_cap(snap).min(snap.max_decode_batch);
     for &req in snap.running.iter().take(decode_cap) {
-        if sim.reqs[req].state != ReqState::Running {
+        let r = sim.req(snap, req);
+        if r.state != ReqState::Running {
             continue; // evicted by an earlier admission this iteration
         }
-        let target = sim.reqs[req].processed + 1;
+        let target = r.processed + 1;
         let mut ev = pools.evictions.pop().unwrap_or_default();
-        let ok = sim.ensure_blocks(snap, req, target, &mut ev);
+        let ok = sim.ensure_blocks(snap, req, target, holders, &mut ev);
         if ok {
-            sim.planned.insert(req, ());
+            sim.planned.set(req, ());
         }
         if ok || !ev.is_empty() {
             plan.decode.push(DecodeAdmission {
@@ -598,16 +659,49 @@ fn stage_batch(
     let chunked = snap.policy.chunked_recompute;
     let mut q_left = policy.prefill_budget(snap, plan.admitted_decode());
     // Iterate a snapshot of the waiting order taken now: requests that
-    // join `waiting` during this loop (evicted running victims) wait for
-    // the next iteration, but waiting victims already in the list restart
-    // from zero and may be re-admitted.
+    // join the waiting set during this loop (evicted running victims) wait
+    // for the next iteration, but waiting victims already in the order
+    // restart from zero and may be re-admitted. Under the lazy frontier the
+    // order is the on-the-fly merge of two (queue_arrival, req)-sorted
+    // streams — the untouched tail of `snap.waiting` and the loop-start
+    // copy of `sim.buffer` — so only the prefix the budget reaches is ever
+    // materialized; the exhaustive fallback has everything in `sim.buffer`
+    // already and merges against an empty waiting stream.
     prefill_order.clear();
-    prefill_order.extend_from_slice(&sim.waiting);
-    for &(_, req) in prefill_order.iter() {
+    prefill_order.extend_from_slice(&sim.buffer);
+    let mut bi = 0usize; // cursor into prefill_order (the frozen buffer)
+    let mut wi = 0usize; // cursor into snap.waiting (lazy stream)
+    loop {
         if q_left == 0 {
             break;
         }
-        let r = sim.reqs[req];
+        let from_buf = prefill_order.get(bi).copied();
+        let from_wait = if lazy {
+            snap.waiting.get(wi).map(|&r| (snap.reqs[r].queue_arrival, r))
+        } else {
+            None
+        };
+        let req = match (from_buf, from_wait) {
+            (None, None) => break,
+            (Some((_, b)), None) => {
+                bi += 1;
+                b
+            }
+            (None, Some((_, w))) => {
+                wi += 1;
+                w
+            }
+            (Some(b), Some(w)) => {
+                if b <= w {
+                    bi += 1;
+                    b.1
+                } else {
+                    wi += 1;
+                    w.1
+                }
+            }
+        };
+        let r = sim.req(snap, req);
         if r.state != ReqState::Waiting {
             continue;
         }
@@ -628,7 +722,7 @@ fn stage_batch(
         }
         let target = r.processed + padded;
         let mut ev = pools.evictions.pop().unwrap_or_default();
-        let ok = sim.ensure_blocks(snap, req, target, &mut ev);
+        let ok = sim.ensure_blocks(snap, req, target, holders, &mut ev);
         if !ok {
             chunks.clear();
             pools.chunks.push(chunks);
@@ -646,7 +740,7 @@ fn stage_batch(
             }
             break; // FCFS head-of-line blocks until memory frees up
         }
-        sim.planned.insert(req, ());
+        sim.planned.set(req, ());
         let finishes = chunk_real == pending;
         let recompute_tokens = r.recompute_hwm.saturating_sub(r.processed).min(chunk_real);
         plan.prefill.push(PrefillAdmission {
@@ -661,6 +755,31 @@ fn stage_batch(
             recompute_tokens,
         });
         q_left = q_left.saturating_sub(chunk_real);
+    }
+    if lazy {
+        wi
+    } else {
+        snap.waiting.len()
+    }
+}
+
+/// Rebuild a snapshot's per-request table from scratch for its live id set
+/// (the full-capture path; `capture_delta` patches instead).
+fn rebuild_reqs(s: &mut SchedSnapshot, requests: &ReqTable) {
+    let SchedSnapshot { waiting, swapq, running, paused, reqs, .. } = s;
+    let live = || waiting.iter().chain(swapq.iter()).chain(running.iter()).chain(paused.iter());
+    let (mut lo, mut hi) = (ReqId::MAX, ReqId::MIN);
+    for &id in live() {
+        lo = lo.min(id);
+        hi = hi.max(id);
+    }
+    if lo > hi {
+        reqs.clear(); // nothing live this iteration
+    } else {
+        reqs.reset_range(lo, hi);
+        for &id in live() {
+            reqs.insert(id, ReqSnapshot::of(&requests[id]));
+        }
     }
 }
 
@@ -707,7 +826,8 @@ impl PlanPools {
 
 /// Owns the snapshot, the plan, and all scratch buffers, so the per-
 /// iteration hot path allocates nothing in steady state (buffers are
-/// cleared, not dropped).
+/// cleared, not dropped). See the module docs for the O(batch) iteration
+/// contract binding [`Planner::capture_delta`] and [`Planner::plan`].
 #[derive(Debug)]
 pub struct Planner {
     snap: SchedSnapshot,
@@ -716,6 +836,38 @@ pub struct Planner {
     sim: SimState,
     prefill_order: Vec<(Micros, ReqId)>,
     pools: PlanPools,
+    // -- incremental-capture state (see capture_delta) ---------------------
+    /// True when `snap` plus the planner's queue mirrors were produced by
+    /// `capture_delta` and can be patched forward; `capture` / `plan_with`
+    /// clear it, forcing the next `capture_delta` into a full rebuild.
+    delta_ready: bool,
+    /// Arrival mirrors paired with `snap.{waiting,swapq,running}` — the
+    /// journal-replay targets of [`FcfsQueue::sync_mirror`].
+    waiting_arrivals: Vec<Micros>,
+    swapq_arrivals: Vec<Micros>,
+    running_arrivals: Vec<Micros>,
+    waiting_ver: u64,
+    swapq_ver: u64,
+    running_ver: u64,
+    // -- admission-frontier index (see stage_batch) ------------------------
+    /// Waiting requests currently holding GPU tokens (the only waiting
+    /// requests an eviction scan can pick) — unordered; `holders_pos` maps
+    /// id → index for O(1) membership updates.
+    holders: Vec<ReqId>,
+    holders_pos: ReqSlots<usize>,
+    /// False after `capture`/`plan_with`: `plan` rebuilds the index (and
+    /// re-checks `frontier_sorted`) in one O(waiting) pass.
+    holders_valid: bool,
+    /// Is `snap.waiting` sorted by `(queue_arrival, id)`? Engine-built
+    /// snapshots always are ([`FcfsQueue`] order); hand-built test
+    /// snapshots may not be, and fall back to exhaustive materialization.
+    frontier_sorted: bool,
+    /// Test/reference mode: force the exhaustive (unbounded) admission scan
+    /// even when the lazy frontier is usable.
+    exhaust_frontier: bool,
+    // -- O(batch) gauges ---------------------------------------------------
+    last_capture_dirty: u64,
+    last_frontier_depth: u64,
 }
 
 impl Planner {
@@ -743,6 +895,20 @@ impl Planner {
             sim: SimState::default(),
             prefill_order: Vec::new(),
             pools: PlanPools::default(),
+            delta_ready: false,
+            waiting_arrivals: Vec::new(),
+            swapq_arrivals: Vec::new(),
+            running_arrivals: Vec::new(),
+            waiting_ver: 0,
+            swapq_ver: 0,
+            running_ver: 0,
+            holders: Vec::new(),
+            holders_pos: ReqSlots::new(),
+            holders_valid: false,
+            frontier_sorted: false,
+            exhaust_frontier: false,
+            last_capture_dirty: 0,
+            last_frontier_depth: 0,
         }
     }
 
@@ -790,22 +956,145 @@ impl Planner {
         s.paused.clear();
         s.paused.extend_from_slice(paused);
         cache.snapshot_into(&mut s.cache);
-        let SchedSnapshot { waiting, swapq, running, paused, reqs, .. } = s;
-        let live =
-            || waiting.iter().chain(swapq.iter()).chain(running.iter()).chain(paused.iter());
-        let (mut lo, mut hi) = (ReqId::MAX, ReqId::MIN);
-        for &id in live() {
-            lo = lo.min(id);
-            hi = hi.max(id);
+        rebuild_reqs(s, requests);
+        // A full capture leaves the queue journals and the planner's
+        // mirrors unsynchronized: the next capture_delta must rebuild.
+        self.delta_ready = false;
+        self.holders_valid = false;
+    }
+
+    /// Incremental counterpart of [`Planner::capture`]: patch the persistent
+    /// snapshot forward instead of rebuilding it. O(queue edits + dirty
+    /// ids), independent of the number of live sessions (see the module
+    /// docs' O(batch) contract).
+    ///
+    /// `req_dirty` / `cache_dirty` are the drained mutation journals of the
+    /// engine's `ReqTable` and [`CacheManager`]; the queues are taken
+    /// `&mut` so their edit journals can be consumed
+    /// ([`FcfsQueue::sync_mirror`]). The first call after construction, a
+    /// full [`Planner::capture`], or a [`Planner::plan_with`] transparently
+    /// performs a full rebuild.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture_delta(
+        &mut self,
+        now: Micros,
+        cfg: &EngineConfig,
+        backend: &dyn ExecBackend,
+        cache: &CacheManager,
+        waiting: &mut FcfsQueue,
+        swapq: &mut FcfsQueue,
+        running: &mut FcfsQueue,
+        paused: &[ReqId],
+        requests: &ReqTable,
+        req_dirty: &[ReqId],
+        cache_dirty: &[ReqId],
+    ) {
+        {
+            let s = &mut self.snap;
+            s.now = now;
+            s.policy = cfg.policy.clone();
+            s.block_size = cfg.block_size;
+            s.saturation_tokens = cfg.saturation_tokens;
+            s.min_chunk = cfg.min_chunk;
+            s.max_batched_tokens = cfg.max_batched_tokens;
+            s.kv_bytes_per_token = cfg.kv_bytes_per_token;
+            s.max_decode_batch = backend.max_decode_batch();
+            s.max_blocks_per_seq = backend.max_blocks_per_seq();
+            s.prefill_chunk_sizes.clear();
+            s.prefill_chunk_sizes.extend_from_slice(backend.prefill_chunk_sizes());
+            s.profile = *backend.fwd_profile();
+            s.swap_model = *backend.swap_model();
+            s.paused.clear();
+            s.paused.extend_from_slice(paused);
         }
-        if lo > hi {
-            reqs.clear(); // nothing live this iteration
+        let full = !self.delta_ready;
+        // An impossible journal base forces sync_mirror into a full recopy
+        // (which also resets the queue's journal) — the mirrors may be
+        // arbitrarily stale after a full capture or a test-injected plan.
+        let (w_since, q_since, r_since) = if full {
+            (u64::MAX, u64::MAX, u64::MAX)
         } else {
-            reqs.reset_range(lo, hi);
-            for &id in live() {
-                reqs.insert(id, ReqSnapshot::of(&requests[id]));
+            (self.waiting_ver, self.swapq_ver, self.running_ver)
+        };
+        self.waiting_ver =
+            waiting.sync_mirror(w_since, &mut self.snap.waiting, &mut self.waiting_arrivals);
+        self.swapq_ver =
+            swapq.sync_mirror(q_since, &mut self.snap.swapq, &mut self.swapq_arrivals);
+        self.running_ver =
+            running.sync_mirror(r_since, &mut self.snap.running, &mut self.running_arrivals);
+        if full {
+            cache.snapshot_into(&mut self.snap.cache);
+            rebuild_reqs(&mut self.snap, requests);
+            self.holders_valid = false;
+            self.delta_ready = true;
+        } else {
+            cache.patch_snapshot_into(&mut self.snap.cache, cache_dirty);
+            for &id in req_dirty {
+                match requests.get(id) {
+                    Some(rq)
+                        if matches!(
+                            rq.state,
+                            ReqState::Waiting
+                                | ReqState::Running
+                                | ReqState::SwapQueue
+                                | ReqState::Paused
+                        ) =>
+                    {
+                        self.snap.reqs.insert(id, ReqSnapshot::of(rq));
+                    }
+                    _ => {
+                        self.snap.reqs.remove(id);
+                    }
+                }
+            }
+            if self.holders_valid {
+                for &id in req_dirty.iter().chain(cache_dirty.iter()) {
+                    self.sync_holder(id);
+                }
             }
         }
+        self.last_capture_dirty = (req_dirty.len() + cache_dirty.len()) as u64;
+    }
+
+    /// Keep the waiting-GPU-holders index consistent with the (already
+    /// patched) snapshot for one id. O(1).
+    fn sync_holder(&mut self, id: ReqId) {
+        let member = self.snap.reqs.get(id).is_some_and(|q| q.state == ReqState::Waiting)
+            && self.snap.cache.gpu_tokens_of(id) > 0;
+        match (member, self.holders_pos.contains(id)) {
+            (true, false) => {
+                self.holders_pos.insert(id, self.holders.len());
+                self.holders.push(id);
+            }
+            (false, true) => {
+                let i = self.holders_pos.remove(id).expect("checked present");
+                let last = self.holders.pop().expect("non-empty while a member is present");
+                if last != id {
+                    self.holders[i] = last;
+                    self.holders_pos.insert(last, i);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Dirty-id count consumed by the most recent [`Planner::capture_delta`]
+    /// (0 after a full rebuild — nothing was patched).
+    pub fn last_capture_dirty(&self) -> u64 {
+        self.last_capture_dirty
+    }
+
+    /// Waiting-queue entries materialized by the most recent
+    /// [`Planner::plan`]'s admission loop.
+    pub fn last_frontier_depth(&self) -> u64 {
+        self.last_frontier_depth
+    }
+
+    /// Lower bound of the live id range in the current snapshot: every id
+    /// below it is finished and absent. Safe feed for the engine's journal
+    /// compaction (`DirtySet::compact_below`).
+    pub fn live_floor(&self) -> ReqId {
+        self.snap.reqs.coverage_lo()
     }
 
     /// Plan from the captured snapshot, dispatching every decision through
@@ -817,14 +1106,65 @@ impl Planner {
         policy: &mut dyn SchedPolicy,
         estimator: &DurationEstimator,
     ) -> &SchedPlan {
-        let Planner { snap, plan, views, sim, prefill_order, pools } = self;
+        let Planner {
+            snap,
+            plan,
+            views,
+            sim,
+            prefill_order,
+            pools,
+            holders,
+            holders_pos,
+            holders_valid,
+            frontier_sorted,
+            exhaust_frontier,
+            last_frontier_depth,
+            ..
+        } = self;
         pools.reclaim(plan);
         plan.clear();
         // The §4.2 chunk decomposition expects the compiled sizes sorted
         // ascending; sort once per plan (a no-op on already-sorted input)
         // instead of copy+sorting inside every prefill admission.
         snap.prefill_chunk_sizes.sort_unstable();
-        sim.reset_from(snap);
+        if !*holders_valid {
+            // One O(waiting) pass re-derives what capture_delta maintains
+            // incrementally: the waiting-GPU-holders index, and whether the
+            // waiting list is FCFS-sorted (the lazy-frontier precondition —
+            // engine-built snapshots always are, hand-built ones may not be).
+            holders.clear();
+            holders_pos.clear();
+            let mut sorted = true;
+            let mut prev = (Micros::MIN, ReqId::MIN);
+            for &r in snap.waiting.iter() {
+                let key = (snap.reqs[r].queue_arrival, r);
+                if key < prev {
+                    sorted = false;
+                }
+                prev = key;
+                if snap.cache.gpu_tokens_of(r) > 0 {
+                    holders_pos.insert(r, holders.len());
+                    holders.push(r);
+                }
+            }
+            *frontier_sorted = sorted;
+            *holders_valid = true;
+        }
+        let lazy = *frontier_sorted && !*exhaust_frontier;
+        sim.begin(snap);
+        if lazy {
+            debug_assert!(
+                snap.waiting.windows(2).all(|w| {
+                    (snap.reqs[w[0]].queue_arrival, w[0]) <= (snap.reqs[w[1]].queue_arrival, w[1])
+                }),
+                "lazy frontier requires an FCFS-sorted waiting list"
+            );
+        } else {
+            // Exhaustive fallback: pre-materialize the entire waiting list
+            // (snapshot order) so stage_batch's merge degenerates to the
+            // unbounded scan over exactly the same candidate sequence.
+            sim.buffer.extend(snap.waiting.iter().map(|&r| (snap.reqs[r].queue_arrival, r)));
+        }
         // Feedback first, then the (policy-aware) stage-1 estimate: a
         // controller's state update may reshape its own estimate.
         policy.begin_iteration(snap);
@@ -835,7 +1175,11 @@ impl Planner {
         plan.swap_in_budget = in_budget;
         stage_dispositions(snap, &fwd, out_budget, policy, estimator, views, sim, plan);
         stage_swap_in(snap, in_budget, sim, plan);
-        stage_batch(snap, policy, sim, plan, prefill_order, pools);
+        // In exhaustive mode every holder is already in the buffer; pass an
+        // empty slice so the eviction scan sees each candidate once.
+        let holders_slice: &[ReqId] = if lazy { holders } else { &[] };
+        *last_frontier_depth =
+            stage_batch(snap, policy, sim, plan, prefill_order, pools, holders_slice, lazy) as u64;
         &self.plan
     }
 
@@ -858,6 +1202,9 @@ impl Planner {
         estimator: &DurationEstimator,
     ) -> &SchedPlan {
         self.snap = snap;
+        // An injected snapshot invalidates both incremental structures.
+        self.delta_ready = false;
+        self.holders_valid = false;
         self.plan(policy, estimator)
     }
 
@@ -1276,6 +1623,63 @@ mod tests {
                 reused.plan_with(s.clone(), &mut AdaptivePolicy::new(1000), &est())
             );
             assert_eq!(a, b, "adaptive (fresh vs reused planner)");
+        });
+    }
+
+    #[test]
+    fn prop_lazy_frontier_matches_unbounded() {
+        // Engine-built snapshots keep `waiting` FCFS-sorted, so `plan` takes
+        // the lazy merge path and only materializes the admission frontier;
+        // `exhaust_frontier` forces the unbounded scan over the same
+        // snapshot. The two must produce Debug-identical plans, and the
+        // frontier can never be deeper than the full list. Unsorted waiting
+        // lists (the raw random snapshots) must be detected and fall back —
+        // also pinned here.
+        use crate::coordinator::sched_policy::AdaptivePolicy;
+        let policies = Policy::fig2_set();
+        prop::check("lazy_frontier_parity", 80, |rng| {
+            for policy in &policies {
+                let mut s = random_snapshot(rng, policy.clone());
+                {
+                    let SchedSnapshot { waiting, reqs, .. } = &mut s;
+                    waiting.sort_by_key(|&r| (reqs[r].queue_arrival, r));
+                }
+                let mut lazy_p = Planner::new();
+                let a = format!("{:?}", lazy_p.plan_for(s.clone(), &est()));
+                assert!(lazy_p.frontier_sorted, "sorted waiting must enable the lazy path");
+                let mut full_p = Planner::new();
+                full_p.exhaust_frontier = true;
+                let b = format!("{:?}", full_p.plan_for(s.clone(), &est()));
+                assert_eq!(a, b, "{} (lazy vs exhaustive admission)", policy.name);
+                assert_eq!(full_p.last_frontier_depth(), s.waiting.len() as u64);
+                assert!(lazy_p.last_frontier_depth() <= full_p.last_frontier_depth());
+                let plan = lazy_p.take_plan();
+                replay_asserts_feasible(&s, &plan);
+                lazy_p.put_back_plan(plan);
+
+                // Fallback detection: the unsorted original must plan the
+                // same whether or not exhaustion is forced.
+                let u = random_snapshot(rng, policy.clone());
+                let mut auto_p = Planner::new();
+                let ua = format!("{:?}", auto_p.plan_for(u.clone(), &est()));
+                let mut forced = Planner::new();
+                forced.exhaust_frontier = true;
+                let ub = format!("{:?}", forced.plan_for(u, &est()));
+                assert_eq!(ua, ub, "{} (fallback parity)", policy.name);
+            }
+            // Adaptive controller over the lazy path.
+            let mut s = random_snapshot(rng, Policy::adaptive());
+            {
+                let SchedSnapshot { waiting, reqs, .. } = &mut s;
+                waiting.sort_by_key(|&r| (reqs[r].queue_arrival, r));
+            }
+            let mut lazy_p = Planner::new();
+            let mut adaptive = AdaptivePolicy::new(1000);
+            let a = format!("{:?}", lazy_p.plan_with(s.clone(), &mut adaptive, &est()));
+            let mut full_p = Planner::new();
+            full_p.exhaust_frontier = true;
+            let b = format!("{:?}", full_p.plan_with(s, &mut AdaptivePolicy::new(1000), &est()));
+            assert_eq!(a, b, "adaptive (lazy vs exhaustive admission)");
         });
     }
 

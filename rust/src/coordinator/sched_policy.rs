@@ -37,6 +37,26 @@
 //! planner's job, not the policy's — a policy can only *shape* budgets and
 //! dispositions, and the planner's ledger keeps any shape feasible.
 //!
+//! # The O(batch) contract
+//!
+//! Since the incremental-capture refactor the snapshot a policy sees is
+//! normally *patched forward* from the previous iteration
+//! ([`crate::coordinator::planner::Planner::capture_delta`]) rather than
+//! rebuilt, and the admission loop materializes waiting candidates lazily.
+//! Two consequences for policy authors:
+//!
+//!  * Read per-request state through the queue vectors (`snap.waiting`,
+//!    `snap.running`, `snap.swapq`, `snap.paused`) and keyed lookups
+//!    (`snap.reqs[r]`, `snap.cache.seq(r)`); never iterate or size work by
+//!    the backing slab span — a patched slab may cover a wider id range
+//!    than the live set, with logically identical contents (pinned by
+//!    `tests/capture_delta.rs`).
+//!  * Keep per-iteration work bounded by the *batch* the stages hand you
+//!    (paused views, admitted decode count), not by total or waiting
+//!    session counts — an O(waiting) scan inside a stage hook would undo
+//!    the planner's O(batch) iteration cost at 10k-deep backlogs (the
+//!    bench's stress profile).
+//!
 //! Two implementations ship in-tree:
 //!  * [`InferceptPolicy`] — the paper's behavior, bit-for-bit: it reads the
 //!    [`crate::coordinator::policy::Policy`] switch-set from the snapshot,

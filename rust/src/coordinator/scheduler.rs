@@ -11,58 +11,239 @@
 //! changes as an interception drags on, so a request preserved at t₀ can be
 //! demoted to swap/discard later — exactly Fig. 1's adaptive green path.
 
+use std::collections::VecDeque;
+
 use crate::augment::AugmentKind;
 use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::policy::{Policy, PreserveMode, SwapMode};
 use crate::coordinator::waste::{self, FwdProfile, WasteInputs};
-use crate::kvcache::ReqId;
+use crate::kvcache::{ReqId, ReqSlots};
 use crate::util::Micros;
 
+/// One structural mutation of an [`FcfsQueue`], journaled so a snapshot
+/// mirror can be patched by replay instead of recopied (see
+/// [`FcfsQueue::sync_mirror`]). `Remove` carries the arrival recorded at
+/// removal time so replay is self-contained — it never consults request
+/// state that may itself already have been patched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueEdit {
+    Push { arrival: Micros, req: ReqId },
+    PopFront,
+    Remove { arrival: Micros, req: ReqId },
+}
+
+/// Journal entries kept before the queue gives up and flags an overflow
+/// (mirrors then fall back to a full recopy). Sized to comfortably hold one
+/// iteration's worth of admissions/requeues at the max batch sizes we run.
+const JOURNAL_CAP: usize = 192;
+
 /// FCFS queue keyed by original arrival time.
+///
+/// Mechanically a ring buffer: a `VecDeque` sorted by `(arrival, req)` plus
+/// a dense id-indexed side table ([`ReqSlots`]) mapping each live request to
+/// its `(arrival, seq)` tag. [`FcfsQueue::pop_front`] is amortized O(1)
+/// (the old `Vec::remove(0)` shifted the whole queue), and
+/// [`FcfsQueue::remove`] is O(1): it deletes the id from the side table and
+/// leaves the ring entry behind as *stale* — recognized by its `seq` tag no
+/// longer matching — to be skipped by `pop_front`/`iter` and reclaimed in
+/// batch once stale entries outnumber live ones. `contains`/`len` are O(1).
+///
+/// Every mutation additionally bumps `version` and appends a [`QueueEdit`]
+/// to a bounded journal, the substrate for O(edits) snapshot-mirror
+/// patching in the planner's incremental capture path.
 #[derive(Debug, Default, Clone)]
 pub struct FcfsQueue {
-    items: Vec<(Micros, ReqId)>,
+    /// Sorted by `(arrival, req)`; an entry is live iff its `seq` matches
+    /// the side table's. Stale entries are tolerated between live ones.
+    ring: VecDeque<(Micros, ReqId, u64)>,
+    /// Live membership: req → (arrival, seq).
+    live: ReqSlots<(Micros, u64)>,
+    /// Live entry count (`ring.len() - stale`).
+    count: usize,
+    next_seq: u64,
+    /// Stale (removed-but-unreclaimed) entries still in the ring.
+    stale: usize,
+    /// Total mutations ever applied; mirrors record the version they are
+    /// synced to.
+    version: u64,
+    /// Edits since `journal_base` (cleared by [`FcfsQueue::sync_mirror`]).
+    journal: Vec<QueueEdit>,
+    /// `version` as of the last journal reset.
+    journal_base: u64,
+    journal_overflow: bool,
 }
 
 impl FcfsQueue {
+    fn record(&mut self, edit: QueueEdit) {
+        self.version += 1;
+        if self.journal_overflow {
+            return;
+        }
+        if self.journal.len() >= JOURNAL_CAP {
+            self.journal_overflow = true;
+            self.journal.clear();
+        } else {
+            self.journal.push(edit);
+        }
+    }
+
     pub fn push(&mut self, arrival: Micros, req: ReqId) {
-        debug_assert!(!self.items.iter().any(|(_, r)| *r == req), "req {req} already queued");
-        let pos = self.items.partition_point(|(a, r)| (*a, *r) <= (arrival, req));
-        self.items.insert(pos, (arrival, req));
+        debug_assert!(!self.contains(req), "req {req} already queued");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let pos = self.ring.partition_point(|&(a, r, _)| (a, r) <= (arrival, req));
+        self.ring.insert(pos, (arrival, req, seq));
+        self.live.insert(req, (arrival, seq));
+        self.count += 1;
+        self.record(QueueEdit::Push { arrival, req });
     }
 
     pub fn pop_front(&mut self) -> Option<ReqId> {
-        if self.items.is_empty() {
-            None
-        } else {
-            Some(self.items.remove(0).1)
+        while let Some(&(_, req, seq)) = self.ring.front() {
+            let valid = self.live.get(req).is_some_and(|&(_, s)| s == seq);
+            self.ring.pop_front();
+            if valid {
+                self.live.remove(req);
+                self.count -= 1;
+                self.record(QueueEdit::PopFront);
+                return Some(req);
+            }
+            self.stale -= 1;
         }
+        None
     }
 
     pub fn remove(&mut self, req: ReqId) -> bool {
-        if let Some(i) = self.items.iter().position(|(_, r)| *r == req) {
-            self.items.remove(i);
-            true
-        } else {
-            false
+        let Some((arrival, _)) = self.live.remove(req) else {
+            return false;
+        };
+        self.count -= 1;
+        self.stale += 1;
+        self.record(QueueEdit::Remove { arrival, req });
+        // Reclaim in batch once stale entries dominate: amortized O(1) per
+        // removal, and the ring stays within a constant factor of the live
+        // queue.
+        if self.stale > self.count + 16 {
+            let live = &self.live;
+            self.ring.retain(|&(_, r, s)| live.get(r).is_some_and(|&(_, ls)| ls == s));
+            self.stale = 0;
         }
+        true
     }
 
     pub fn iter(&self) -> impl Iterator<Item = ReqId> + '_ {
-        self.items.iter().map(|(_, r)| *r)
+        self.ring
+            .iter()
+            .filter(move |&&(_, r, s)| self.live.get(r).is_some_and(|&(_, ls)| ls == s))
+            .map(|&(_, r, _)| r)
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.count == 0
     }
 
     pub fn contains(&self, req: ReqId) -> bool {
-        self.items.iter().any(|(_, r)| *r == req)
+        self.live.contains(req)
     }
+
+    /// Arrival key of a queued request (None when not queued).
+    pub fn arrival_of(&self, req: ReqId) -> Option<Micros> {
+        self.live.get(req).map(|&(a, _)| a)
+    }
+
+    /// Mutation counter; a mirror synced at version `v` is current iff
+    /// `v == self.version()`.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Copy the live queue, in order, into parallel id/arrival vectors
+    /// (cleared first) — the full-recapture path and the mirror fallback.
+    pub fn copy_into(&self, ids: &mut Vec<ReqId>, arrivals: &mut Vec<Micros>) {
+        ids.clear();
+        arrivals.clear();
+        for &(a, r, s) in &self.ring {
+            if self.live.get(r).is_some_and(|&(_, ls)| ls == s) {
+                ids.push(r);
+                arrivals.push(a);
+            }
+        }
+    }
+
+    /// Bring a `(ids, arrivals)` mirror last synced at version `since` up to
+    /// the current queue state and reset the journal. When `since` matches
+    /// the journal's base and it hasn't overflowed, the mirror is patched in
+    /// place by replaying the journaled edits (O(edits) binary searches +
+    /// shifts); otherwise the whole queue is recopied. Returns the version
+    /// the mirror is now synced to (i.e. [`FcfsQueue::version`]).
+    pub fn sync_mirror(
+        &mut self,
+        since: u64,
+        ids: &mut Vec<ReqId>,
+        arrivals: &mut Vec<Micros>,
+    ) -> u64 {
+        debug_assert_eq!(ids.len(), arrivals.len());
+        if self.journal_overflow || since != self.journal_base {
+            self.copy_into(ids, arrivals);
+        } else {
+            for k in 0..self.journal.len() {
+                match self.journal[k] {
+                    QueueEdit::Push { arrival, req } => {
+                        let pos = mirror_bound(ids, arrivals, arrival, req, true);
+                        ids.insert(pos, req);
+                        arrivals.insert(pos, arrival);
+                    }
+                    QueueEdit::PopFront => {
+                        debug_assert!(!ids.is_empty(), "PopFront replay on empty mirror");
+                        ids.remove(0);
+                        arrivals.remove(0);
+                    }
+                    QueueEdit::Remove { arrival, req } => {
+                        let pos = mirror_bound(ids, arrivals, arrival, req, false);
+                        debug_assert!(
+                            pos < ids.len() && ids[pos] == req && arrivals[pos] == arrival,
+                            "Remove replay lost req {req}"
+                        );
+                        ids.remove(pos);
+                        arrivals.remove(pos);
+                    }
+                }
+            }
+        }
+        self.journal.clear();
+        self.journal_overflow = false;
+        self.journal_base = self.version;
+        debug_assert_eq!(ids, &self.iter().collect::<Vec<_>>(), "mirror diverged from queue");
+        self.version
+    }
+}
+
+/// Binary search over the paired `(arrivals, ids)` mirror: first index whose
+/// key is `> (arrival, req)` (upper bound, for inserts) or `>= ` (lower
+/// bound, for removals).
+fn mirror_bound(
+    ids: &[ReqId],
+    arrivals: &[Micros],
+    arrival: Micros,
+    req: ReqId,
+    upper: bool,
+) -> usize {
+    let (mut lo, mut hi) = (0usize, ids.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let key = (arrivals[mid], ids[mid]);
+        let before = if upper { key <= (arrival, req) } else { key < (arrival, req) };
+        if before {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
 }
 
 /// Context disposition of a paused request.
@@ -350,6 +531,83 @@ mod tests {
     }
 
     #[test]
+    fn fcfs_ring_wraps_and_reuses_ids() {
+        // Drive the ring head far past its initial capacity (pop wraps the
+        // VecDeque) and re-queue previously removed ids: stale entries left
+        // by `remove` must be skipped, and a re-push of the same id at the
+        // same arrival must land *after* nothing (the stale twin is dead).
+        let mut q = FcfsQueue::default();
+        for cycle in 0u64..64 {
+            for id in 1..=8 {
+                q.push(cycle * 10, id);
+            }
+            // Remove half by id (leaves stale ring entries), pop the rest.
+            for id in [2, 4, 6, 8] {
+                assert!(q.remove(id));
+            }
+            for id in [1, 3, 5, 7] {
+                assert_eq!(q.pop_front(), Some(id));
+            }
+            assert!(q.is_empty());
+            assert_eq!(q.pop_front(), None);
+        }
+        // Stale-twin ordering: push, remove, re-push at the same key.
+        q.push(5, 1);
+        q.push(5, 2);
+        assert!(q.remove(1));
+        q.push(5, 1); // same (arrival, req) as the stale entry
+        assert_eq!(q.iter().collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_front(), Some(1));
+        assert_eq!(q.pop_front(), Some(2));
+        assert_eq!(q.pop_front(), None);
+    }
+
+    #[test]
+    fn fcfs_mirror_sync_replays_edits() {
+        let mut q = FcfsQueue::default();
+        let (mut ids, mut arr) = (Vec::new(), Vec::new());
+        let mut ver = q.sync_mirror(0, &mut ids, &mut arr);
+        assert!(ids.is_empty());
+        q.push(100, 1);
+        q.push(50, 2);
+        q.push(100, 3);
+        ver = q.sync_mirror(ver, &mut ids, &mut arr);
+        assert_eq!(ids, vec![2, 1, 3]);
+        assert_eq!(arr, vec![50, 100, 100]);
+        q.remove(1);
+        assert_eq!(q.pop_front(), Some(2));
+        q.push(75, 4);
+        ver = q.sync_mirror(ver, &mut ids, &mut arr);
+        assert_eq!(ids, vec![4, 3]);
+        assert_eq!(arr, vec![75, 100]);
+        // A stale `since` forces the recopy fallback but still converges.
+        q.push(10, 5);
+        let v2 = q.sync_mirror(ver.wrapping_sub(1), &mut ids, &mut arr);
+        assert_eq!(ids, vec![5, 4, 3]);
+        assert_eq!(v2, q.version());
+    }
+
+    #[test]
+    fn fcfs_mirror_survives_journal_overflow() {
+        let mut q = FcfsQueue::default();
+        let (mut ids, mut arr) = (Vec::new(), Vec::new());
+        let mut ver = q.sync_mirror(0, &mut ids, &mut arr);
+        // Blow past the journal cap in one sync window.
+        for id in 1..=(super::JOURNAL_CAP as ReqId + 40) {
+            q.push(id, id); // ReqId and Micros are both u64
+        }
+        ver = q.sync_mirror(ver, &mut ids, &mut arr);
+        assert_eq!(ids.len(), q.len());
+        assert_eq!(ids, q.iter().collect::<Vec<_>>());
+        // After the overflow reset, replay works again.
+        q.pop_front();
+        q.push(0, 9999);
+        q.sync_mirror(ver, &mut ids, &mut arr);
+        assert_eq!(ids, q.iter().collect::<Vec<_>>());
+    }
+
+    #[test]
     fn discard_policy_always_discards() {
         let p = Policy::vllm();
         let views = [view(1, AugmentKind::Math, 500), view(2, AugmentKind::Chatbot, 700)];
@@ -594,12 +852,15 @@ mod tests {
     fn prop_fcfs_order_under_interleaved_push_remove_pop() {
         // Model-based property: against a sorted reference model, the queue
         // preserves (arrival, req) order through arbitrary interleavings of
-        // push / remove / pop_front.
+        // push / remove / pop_front — and a journal-replayed mirror synced
+        // at random points always matches the live queue.
         use crate::util::prop;
         prop::check("fcfs_order", 300, |rng| {
             let mut q = FcfsQueue::default();
             let mut model: Vec<(Micros, ReqId)> = Vec::new();
             let mut next: ReqId = 0;
+            let (mut mir_ids, mut mir_arr) = (Vec::new(), Vec::new());
+            let mut mir_ver = q.sync_mirror(0, &mut mir_ids, &mut mir_arr);
             for _ in 0..50 {
                 match rng.usize(0, 2) {
                     0 => {
@@ -629,8 +890,15 @@ mod tests {
                 let got: Vec<ReqId> = q.iter().collect();
                 let want: Vec<ReqId> = model.iter().map(|&(_, r)| r).collect();
                 assert_eq!(got, want);
-                for &(_, r) in &model {
+                for &(a, r) in &model {
                     assert!(q.contains(r));
+                    assert_eq!(q.arrival_of(r), Some(a));
+                }
+                if rng.usize(0, 3) == 0 {
+                    mir_ver = q.sync_mirror(mir_ver, &mut mir_ids, &mut mir_arr);
+                    assert_eq!(mir_ids, got, "mirror order diverged");
+                    let w: Vec<Micros> = model.iter().map(|&(a, _)| a).collect();
+                    assert_eq!(mir_arr, w, "mirror arrivals diverged");
                 }
             }
         });

@@ -173,10 +173,12 @@ impl Engine {
         }
 
         // ---- Sampled tokens: generation progress --------------------------
+        // Tokens are *buffered* (one coalesced send per run at the next
+        // flush point) rather than sent one-by-one; a same-request lifecycle
+        // event inside handle_sampled flushes the run first, so each
+        // subscriber's per-request order is unchanged.
         for &(req, tok) in outcome.decode_tokens.iter().chain(outcome.prefill_tokens.iter()) {
-            self.events.emit(req, || {
-                crate::serving::EngineEvent::Token { req, token: tok, at: now_end }
-            });
+            self.events.push_token(req, tok, now_end);
             self.handle_sampled(req, tok, now_end);
         }
 

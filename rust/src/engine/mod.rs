@@ -107,6 +107,13 @@ pub struct Engine {
     deadlines_armed: usize,
     /// Scratch for the Eq. 1/4 rebuild set (reused across iterations).
     rebuild_scratch: Vec<ReqId>,
+    /// Drain targets for the `ReqTable` / `CacheManager` mutation journals
+    /// (reused across iterations; see [`Engine::plan_iteration`]).
+    req_dirty_scratch: Vec<ReqId>,
+    cache_dirty_scratch: Vec<ReqId>,
+    /// Iterations planned since the journals' dedup coverage was last
+    /// compacted below the live-id floor.
+    iters_since_compact: u32,
 }
 
 impl Engine {
@@ -140,6 +147,9 @@ impl Engine {
             unfinished: 0,
             deadlines_armed: 0,
             rebuild_scratch: Vec::new(),
+            req_dirty_scratch: Vec::new(),
+            cache_dirty_scratch: Vec::new(),
+            iters_since_compact: 0,
         }
     }
 
@@ -299,6 +309,7 @@ impl Engine {
                 PumpRound::Drained => break,
             }
         }
+        self.flush_events();
         self.metrics.run_ended = self.backend.now();
         Ok(self.metrics.report(self.cfg.policy.name, "run"))
     }
@@ -403,7 +414,19 @@ impl Engine {
     // ------------------------------------------------------------------
     // One scheduler iteration. Returns false if nothing could be done.
     // ------------------------------------------------------------------
+    // Split into three phases so tests (and future pipelined drivers) can
+    // interpose between them — `tests/capture_delta.rs` compares the
+    // incremental snapshot against a from-scratch reference between
+    // `plan_iteration` and `apply_iteration`.
     pub fn step(&mut self) -> Result<bool> {
+        let now = self.prepare_iteration();
+        self.plan_iteration(now);
+        self.apply_iteration()
+    }
+
+    /// Phase 1: admit arrivals, expire deadlines, and apply resolved
+    /// interceptions at the current engine clock. Returns `now`.
+    pub fn prepare_iteration(&mut self) -> Micros {
         let now = self.backend.now();
         self.admit_arrivals(now);
         // Deadlines are a hard bound: an answer landing in the same instant
@@ -418,11 +441,64 @@ impl Engine {
             }
             self.resume(r, now);
         }
+        now
+    }
 
-        // Plan (pure: snapshot in, typed plan out — no cache/backend
-        // mutation). Planner buffers are reused across iterations.
-        self.planner.capture(
+    /// Phase 2: capture + plan (pure: snapshot in, typed plan out — no
+    /// cache/backend mutation). The capture is *incremental*: the mutation
+    /// journals maintained by the request table, the cache manager, and the
+    /// queues patch the planner's persistent snapshot forward in O(batch)
+    /// instead of rebuilding it in O(live sessions) — see the
+    /// `coordinator/planner.rs` module docs for the contract.
+    pub fn plan_iteration(&mut self, now: Micros) {
+        self.req_dirty_scratch.clear();
+        self.requests.drain_dirty_into(&mut self.req_dirty_scratch);
+        self.cache_dirty_scratch.clear();
+        self.cache.drain_dirty_into(&mut self.cache_dirty_scratch);
+        self.planner.capture_delta(
             now,
+            &self.cfg,
+            self.backend.as_ref(),
+            &self.cache,
+            &mut self.waiting,
+            &mut self.swapq,
+            &mut self.running,
+            &self.paused,
+            &self.requests,
+            &self.req_dirty_scratch,
+            &self.cache_dirty_scratch,
+        );
+        self.planner.plan(&mut *self.sched, &self.estimator);
+        self.metrics.capture_dirty_ids += self.planner.last_capture_dirty();
+        self.metrics.frontier_depth += self.planner.last_frontier_depth();
+        // Periodically drop the journals' dedup coverage below the live-id
+        // floor so their gen-stamp slabs track the live window instead of
+        // every id ever served.
+        self.iters_since_compact += 1;
+        if self.iters_since_compact >= 1024 {
+            self.iters_since_compact = 0;
+            let floor = self.planner.live_floor();
+            self.requests.compact_dirty_below(floor);
+            self.cache.compact_dirty_below(floor);
+        }
+    }
+
+    /// Phase 3: apply the captured plan (all mutation lives here).
+    pub fn apply_iteration(&mut self) -> Result<bool> {
+        let plan = self.planner.take_plan();
+        let result = self.apply_and_execute(&plan);
+        self.planner.put_back_plan(plan);
+        result
+    }
+
+    /// Test oracle for the incremental capture: run a full from-scratch
+    /// [`Planner::capture`] of the engine's current state into `p`, at the
+    /// timestamp of the most recently planned iteration. `p`'s snapshot
+    /// must then agree with [`Engine::sched_snapshot`] (and plan
+    /// identically) — pinned by `tests/capture_delta.rs`.
+    pub fn capture_reference(&self, p: &mut Planner) {
+        p.capture(
+            self.planner.snapshot().now,
             &self.cfg,
             self.backend.as_ref(),
             &self.cache,
@@ -432,13 +508,14 @@ impl Engine {
             &self.paused,
             &self.requests,
         );
-        self.planner.plan(&mut *self.sched, &self.estimator);
+    }
 
-        // Apply (all mutation lives here).
-        let plan = self.planner.take_plan();
-        let result = self.apply_and_execute(&plan);
-        self.planner.put_back_plan(plan);
-        result
+    /// Flush coalesced token events to subscribers and fold the amortization
+    /// gauge into the metrics. Called at engine hand-back points (the
+    /// serving pump returning control; the end of a trace replay).
+    pub fn flush_events(&mut self) {
+        self.events.flush_all();
+        self.metrics.events_batched = self.events.batched();
     }
 
     // ------------------------------------------------------------------

@@ -31,9 +31,23 @@
 //! session is torn down instead of anchoring the span forever, so the
 //! capture span tracks **live, non-abandoned sessions** — not run age,
 //! and not the patience of the slowest client.
+//!
+//! # The dirty-set invariant
+//!
+//! [`ReqTable`] journals every id whose `Request` *may* have mutated since
+//! the planner last drained it ([`ReqTable::drain_dirty_into`]): every
+//! mutable-access path — [`ReqTable::insert_next`], [`ReqTable::get_mut`],
+//! `IndexMut` — marks the id in a [`DirtySet`] before handing out the
+//! reference. Shared reads never mark. The set is therefore a conservative
+//! over-approximation (taking `&mut` without writing still marks, which is
+//! harmless: a patch from unchanged state is a no-op); what it must never
+//! be is an under-approximation — any new mutation path that bypasses these
+//! accessors must mark the id itself, or `Planner::capture_delta` will
+//! patch from a stale view and silently diverge from full capture.
 
 use crate::augment::AugmentKind;
 use crate::coordinator::scheduler::Disposition;
+use crate::kvcache::slots::DirtySet;
 use crate::kvcache::ReqId;
 use crate::util::Micros;
 use crate::workload::RequestScript;
@@ -41,15 +55,17 @@ use crate::workload::RequestScript;
 /// Dense request table: the engine's `ReqId → Request` store, a vector
 /// indexed by `id − 1` (ids are dense and sequential, see the module docs).
 /// Requests are never removed — finished requests remain for reporting —
-/// so every id in `1..=len` is always present.
+/// so every id in `1..=len` is always present. Mutable accesses are
+/// journaled in a [`DirtySet`] (see the module docs).
 #[derive(Debug, Default)]
 pub struct ReqTable {
     reqs: Vec<Request>,
+    dirty: DirtySet,
 }
 
 impl ReqTable {
     pub fn new() -> ReqTable {
-        ReqTable { reqs: Vec::new() }
+        ReqTable { reqs: Vec::new(), dirty: DirtySet::default() }
     }
 
     /// Append the next request. Its id must be exactly `len + 1` — the
@@ -60,6 +76,7 @@ impl ReqTable {
             self.reqs.len() as ReqId + 1,
             "request ids must be allocated sequentially"
         );
+        self.dirty.mark(req.id);
         self.reqs.push(req);
     }
 
@@ -70,7 +87,21 @@ impl ReqTable {
 
     #[inline]
     pub fn get_mut(&mut self, id: ReqId) -> Option<&mut Request> {
-        self.reqs.get_mut(id.checked_sub(1)? as usize)
+        let r = self.reqs.get_mut(id.checked_sub(1)? as usize)?;
+        self.dirty.mark(id);
+        Some(r)
+    }
+
+    /// Drain the mutation journal: ids whose requests may have changed since
+    /// the last drain, deduplicated (see the module docs).
+    pub fn drain_dirty_into(&mut self, out: &mut Vec<ReqId>) {
+        self.dirty.drain_into(out);
+    }
+
+    /// Bound the journal's stamp-table memory: every id below `lo` is
+    /// guaranteed dead (outside the planner's live range).
+    pub fn compact_dirty_below(&mut self, lo: ReqId) {
+        self.dirty.compact_below(lo);
     }
 
     pub fn len(&self) -> usize {
@@ -299,5 +330,25 @@ mod tests {
         t[1].output_tokens = 7;
         assert_eq!(t.get_mut(1).unwrap().output_tokens, 7);
         assert_eq!(t.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn req_table_journals_mutable_access() {
+        let mut t = ReqTable::new();
+        let mut dirty = Vec::new();
+        t.insert_next(Request::new(1, 0, script(), vec![1, 2, 3, 4]));
+        t.insert_next(Request::new(2, 5, script(), vec![5, 6, 7, 8]));
+        t.drain_dirty_into(&mut dirty);
+        assert_eq!(dirty, vec![1, 2], "inserts mark");
+        dirty.clear();
+        let _ = t.get(1); // shared reads never mark
+        assert_eq!(t[2].arrival, 5);
+        t.drain_dirty_into(&mut dirty);
+        assert!(dirty.is_empty(), "{dirty:?}");
+        t[2].output_tokens = 1; // IndexMut marks
+        let _ = t.get_mut(1); // &mut without a write still marks (by design)
+        t.get_mut(2).unwrap().output_tokens = 2; // dedup within a window
+        t.drain_dirty_into(&mut dirty);
+        assert_eq!(dirty, vec![2, 1]);
     }
 }

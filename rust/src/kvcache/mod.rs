@@ -21,13 +21,29 @@
 //! every GPU and CPU block went back to the free lists (whatever the
 //! residency mix — fully resident, mid-swap-out, or mid-swap-in), and the
 //! slab compacts its edges so long-lived spans track the live id range.
+//!
+//! # The dirty-set invariant (O(batch) capture)
+//!
+//! The manager journals every request id whose sequence state it mutates
+//! (`grow`/`advance`/`set_len`/`release`/`swap_out`/`swap_in`/
+//! `discard_gpu_tail`) in a [`slots::DirtySet`]. The planner's incremental
+//! capture drains that journal once per iteration and patches only the
+//! dirty entries of its persistent snapshot
+//! ([`CacheManager::patch_snapshot_into`], O(|dirty|)) instead of the full
+//! O(live-id-range) [`CacheManager::snapshot_into`] recopy — the marked set
+//! per iteration is proportional to the *scheduled batch*, not to the total
+//! live sessions. The journal may over-approximate (marking without
+//! changing anything is a harmless no-op patch) but must never miss a
+//! mutation: any new code path that touches a sequence or the free counts
+//! outside these mutators must mark the id, or delta capture silently
+//! diverges from full capture (the `capture_delta` fuzz pins this).
 
 pub mod slots;
 pub mod swap;
 
 use anyhow::{bail, Result};
 
-pub use slots::ReqSlots;
+pub use slots::{DirtySet, Overlay, ReqSlots};
 
 pub type BlockId = u32;
 pub type CpuSlot = u32;
@@ -148,10 +164,13 @@ pub struct BlockMove {
 
 /// The cache manager: allocator + per-request sequence caches (a dense
 /// [`ReqSlots`] slab — see the module docs for the id/tombstone contract).
+/// Sequence mutations are journaled in a [`DirtySet`] for incremental
+/// snapshot capture (see the module docs' dirty-set invariant).
 #[derive(Debug)]
 pub struct CacheManager {
     alloc: BlockAllocator,
     seqs: ReqSlots<SeqCache>,
+    dirty: DirtySet,
     /// Blocks the engine keeps free as headroom for in-flight decodes.
     pub watermark_blocks: usize,
 }
@@ -161,6 +180,7 @@ impl CacheManager {
         CacheManager {
             alloc: BlockAllocator::new(block_size, num_gpu, num_cpu),
             seqs: ReqSlots::new(),
+            dirty: DirtySet::default(),
             watermark_blocks: 0,
         }
     }
@@ -244,6 +264,7 @@ impl CacheManager {
                 self.alloc.gpu_free_count()
             );
         }
+        self.dirty.mark(req);
         let seq = self.seqs.get_or_default(req);
         for _ in 0..need {
             let b = self.alloc.alloc_gpu().expect("checked above");
@@ -255,6 +276,7 @@ impl CacheManager {
     /// Advance the valid-token count after the backend wrote `n` new tokens.
     pub fn advance(&mut self, req: ReqId, n: usize) {
         let bs = self.alloc.block_size();
+        self.dirty.mark(req);
         let seq = self.seqs.get_mut(req).expect("advance on unknown seq");
         seq.len_tokens += n;
         assert!(
@@ -268,6 +290,7 @@ impl CacheManager {
     /// Truncate the valid-token count (recompute restart bookkeeping).
     pub fn set_len(&mut self, req: ReqId, len: usize) {
         let bs = self.alloc.block_size();
+        self.dirty.mark(req);
         let seq = self.seqs.get_mut(req).expect("set_len on unknown seq");
         assert!(len <= seq.blocks.len() * bs);
         seq.len_tokens = len;
@@ -277,6 +300,7 @@ impl CacheManager {
     /// completion. Leaves a tombstone in the slab: the id reads as "no
     /// sequence" from then on.
     pub fn release(&mut self, req: ReqId) {
+        self.dirty.mark(req);
         if let Some(seq) = self.seqs.remove(req) {
             for b in seq.blocks {
                 match b {
@@ -297,6 +321,7 @@ impl CacheManager {
         let Some(seq) = self.seqs.get_mut(req) else {
             return vec![];
         };
+        self.dirty.mark(req);
         let mut moves = Vec::new();
         for i in 0..seq.blocks.len() {
             if moves.len() >= max_blocks {
@@ -324,6 +349,7 @@ impl CacheManager {
         let Some(seq) = self.seqs.get_mut(req) else {
             return 0;
         };
+        self.dirty.mark(req);
         let prefix = seq
             .blocks
             .iter()
@@ -346,6 +372,7 @@ impl CacheManager {
         let Some(seq) = self.seqs.get_mut(req) else {
             return vec![];
         };
+        self.dirty.mark(req);
         let mut moves = Vec::new();
         for i in 0..seq.blocks.len() {
             if moves.len() >= max_blocks {
@@ -430,6 +457,49 @@ impl CacheManager {
         let mut out = CacheSnapshot::default();
         self.snapshot_into(&mut out);
         out
+    }
+
+    /// Patch a snapshot previously produced by
+    /// [`CacheManager::snapshot_into`] instead of recapturing it: the four
+    /// global counters are recopied (O(1)) and only the sequences named in
+    /// `dirty` are re-snapshotted — inserted, overwritten, or tombstoned to
+    /// mirror the manager. Patching an unchanged id is an idempotent no-op,
+    /// so an over-approximate dirty set is safe; a missed mutation is not
+    /// (see the module docs' dirty-set invariant). O(|dirty|).
+    pub fn patch_snapshot_into(&self, out: &mut CacheSnapshot, dirty: &[ReqId]) {
+        out.block_size = self.alloc.block_size();
+        out.watermark_blocks = self.watermark_blocks;
+        out.gpu_free = self.alloc.gpu_free_count();
+        out.cpu_free = self.alloc.cpu_free_count();
+        for &req in dirty {
+            match self.seqs.get(req) {
+                Some(s) => {
+                    out.seqs.insert(
+                        req,
+                        SeqSnapshot {
+                            blocks: s.blocks.len(),
+                            cpu_blocks: s.cpu_resident,
+                            len_tokens: s.len_tokens,
+                        },
+                    );
+                }
+                None => {
+                    out.seqs.remove(req);
+                }
+            }
+        }
+    }
+
+    /// Drain the mutation journal: ids whose sequence state may have changed
+    /// since the last drain (deduplicated). Feed the result to
+    /// [`CacheManager::patch_snapshot_into`].
+    pub fn drain_dirty_into(&mut self, out: &mut Vec<ReqId>) {
+        self.dirty.drain_into(out);
+    }
+
+    /// Bound the journal's stamp-table memory: every id below `lo` is dead.
+    pub fn compact_dirty_below(&mut self, lo: ReqId) {
+        self.dirty.compact_below(lo);
     }
 
     /// Invariant check used by tests: every block id appears exactly once
@@ -674,6 +744,136 @@ impl CacheSnapshot {
         let s = self.seqs.get_mut(req).expect("advance on unknown seq");
         s.len_tokens += n;
         debug_assert!(s.len_tokens <= s.blocks * self.block_size);
+    }
+}
+
+/// A [`CacheSnapshot`] ledger expressed as a generation-stamped *overlay*
+/// over an immutable base snapshot: the planner's per-iteration simulation
+/// state without the per-iteration O(live-id-range) snapshot clone.
+///
+/// Every query and simulated mutation of [`CacheSnapshot`] has a
+/// counterpart here taking the base snapshot explicitly; reads consult the
+/// overlay first and fall back to the base, writes go to the overlay only
+/// (a generation-valid `None` entry means "released in this plan").
+/// [`CacheOverlay::begin`] resets the whole ledger in O(1) by bumping the
+/// overlay generation and recopying the two free counters. The formulas
+/// are kept in this module, next to [`CacheSnapshot`]'s, and pinned
+/// equivalent by `prop_overlay_mirrors_snapshot_ops`.
+#[derive(Debug, Default)]
+pub struct CacheOverlay {
+    gpu_free: usize,
+    cpu_free: usize,
+    seqs: Overlay<Option<SeqSnapshot>>,
+}
+
+impl CacheOverlay {
+    /// Reset to mirror `base` exactly (O(1)).
+    pub fn begin(&mut self, base: &CacheSnapshot) {
+        self.gpu_free = base.gpu_free;
+        self.cpu_free = base.cpu_free;
+        self.seqs.begin();
+    }
+
+    /// The sequence view as of this plan: overlay entry if written,
+    /// otherwise the base snapshot's.
+    #[inline]
+    fn seq_at(&self, base: &CacheSnapshot, req: ReqId) -> Option<SeqSnapshot> {
+        match self.seqs.get(req) {
+            Some(e) => *e,
+            None => base.seq(req).copied(),
+        }
+    }
+
+    pub fn gpu_free(&self) -> usize {
+        self.gpu_free
+    }
+
+    pub fn cpu_free(&self) -> usize {
+        self.cpu_free
+    }
+
+    pub fn cpu_blocks_of(&self, base: &CacheSnapshot, req: ReqId) -> usize {
+        self.seq_at(base, req).map(|s| s.cpu_blocks).unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheSnapshot::gpu_tokens_of`].
+    pub fn gpu_tokens_of(&self, base: &CacheSnapshot, req: ReqId) -> usize {
+        self.seq_at(base, req)
+            .map(|s| s.len_tokens - s.len_tokens.min(s.cpu_blocks * base.block_size))
+            .unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheSnapshot::blocks_needed`].
+    pub fn blocks_needed(&self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) -> usize {
+        let have = self.seq_at(base, req).map(|s| s.blocks).unwrap_or(0);
+        target_tokens.div_ceil(base.block_size).saturating_sub(have)
+    }
+
+    /// Mirror of [`CacheSnapshot::can_grow`], including the watermark.
+    pub fn can_grow(&self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) -> bool {
+        self.blocks_needed(base, req, target_tokens) + base.watermark_blocks <= self.gpu_free
+    }
+
+    /// Mirror of [`CacheSnapshot::reserve_grow`].
+    pub fn reserve_grow(&mut self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) {
+        let need = self.blocks_needed(base, req, target_tokens);
+        assert!(
+            need + base.watermark_blocks <= self.gpu_free,
+            "plan over-commits GPU blocks: req {req} needs {need}, {} free",
+            self.gpu_free
+        );
+        self.gpu_free -= need;
+        let mut s = self.seq_at(base, req).unwrap_or_default();
+        s.blocks += need;
+        self.seqs.set(req, Some(s));
+    }
+
+    /// Mirror of [`CacheSnapshot::release`].
+    pub fn release(&mut self, base: &CacheSnapshot, req: ReqId) {
+        if let Some(s) = self.seq_at(base, req) {
+            self.gpu_free += s.blocks - s.cpu_blocks;
+            self.cpu_free += s.cpu_blocks;
+        }
+        self.seqs.set(req, None);
+    }
+
+    /// Mirror of [`CacheSnapshot::discard_gpu_tail`].
+    pub fn discard_gpu_tail(&mut self, base: &CacheSnapshot, req: ReqId) -> usize {
+        let Some(mut s) = self.seq_at(base, req) else {
+            return 0;
+        };
+        self.gpu_free += s.blocks - s.cpu_blocks;
+        s.blocks = s.cpu_blocks;
+        s.len_tokens = s.len_tokens.min(s.cpu_blocks * base.block_size);
+        let len = s.len_tokens;
+        self.seqs.set(req, Some(s));
+        len
+    }
+
+    /// Mirror of [`CacheSnapshot::swap_out`]: returns blocks moved.
+    pub fn swap_out(&mut self, base: &CacheSnapshot, req: ReqId, max_blocks: usize) -> usize {
+        let Some(mut s) = self.seq_at(base, req) else {
+            return 0;
+        };
+        let n = max_blocks.min(s.blocks - s.cpu_blocks).min(self.cpu_free);
+        s.cpu_blocks += n;
+        self.gpu_free += n;
+        self.cpu_free -= n;
+        self.seqs.set(req, Some(s));
+        n
+    }
+
+    /// Mirror of [`CacheSnapshot::swap_in`]: returns blocks moved.
+    pub fn swap_in(&mut self, base: &CacheSnapshot, req: ReqId, max_blocks: usize) -> usize {
+        let Some(mut s) = self.seq_at(base, req) else {
+            return 0;
+        };
+        let n = max_blocks.min(s.cpu_blocks).min(self.gpu_free);
+        s.cpu_blocks -= n;
+        self.gpu_free -= n;
+        self.cpu_free += n;
+        self.seqs.set(req, Some(s));
+        n
     }
 }
 
@@ -933,6 +1133,145 @@ mod tests {
                 m.check_conservation().unwrap();
                 let a = m.allocator();
                 assert_eq!(a.gpu_used() + a.gpu_free_count(), num_gpu);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_patched_snapshot_tracks_manager() {
+        // Dirty-set capture parity: a snapshot maintained purely by
+        // drain-and-patch equals a fresh full capture after every random
+        // mutation batch.
+        use crate::util::prop;
+        prop::check("patched_snapshot_parity", 150, |rng| {
+            let mut m = CacheManager::new(16, rng.usize(6, 20), rng.usize(2, 8));
+            m.watermark_blocks = rng.usize(0, 2);
+            let mut patched = m.snapshot();
+            let mut dirty: Vec<ReqId> = Vec::new();
+            m.drain_dirty_into(&mut dirty); // start a clean window
+            dirty.clear();
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next_id: ReqId = 0;
+            for _ in 0..60 {
+                // A batch of 1–3 mutations between captures.
+                for _ in 0..rng.usize(1, 3) {
+                    match rng.usize(0, 3) {
+                        0 => {
+                            let req = if live.is_empty() || rng.usize(0, 1) == 0 {
+                                next_id += 1;
+                                live.push(next_id);
+                                next_id
+                            } else {
+                                *rng.choose(&live)
+                            };
+                            let cur = m.len_tokens(req);
+                            let want = cur + rng.usize(1, 40);
+                            if m.can_grow(req, want) {
+                                m.grow(req, want).unwrap();
+                                m.advance(req, want - cur);
+                            }
+                        }
+                        1 => {
+                            if !live.is_empty() {
+                                m.swap_out(*rng.choose(&live), rng.usize(1, 4));
+                            }
+                        }
+                        2 => {
+                            if !live.is_empty() {
+                                let req = *rng.choose(&live);
+                                if rng.usize(0, 1) == 0 {
+                                    m.swap_in(req, rng.usize(1, 4));
+                                } else {
+                                    m.discard_gpu_tail(req);
+                                }
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let i = rng.usize(0, live.len() - 1);
+                                m.release(live.swap_remove(i));
+                            }
+                        }
+                    }
+                }
+                dirty.clear();
+                m.drain_dirty_into(&mut dirty);
+                m.patch_snapshot_into(&mut patched, &dirty);
+                let full = m.snapshot();
+                assert_eq!(patched.gpu_free(), full.gpu_free());
+                assert_eq!(patched.cpu_free(), full.cpu_free());
+                for r in 1..=next_id {
+                    assert_eq!(patched.seq(r), full.seq(r), "req {r} diverged");
+                    assert_eq!(patched.gpu_tokens_of(r), full.gpu_tokens_of(r));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_overlay_mirrors_snapshot_ops() {
+        // The O(1)-reset simulation ledger must agree with the clone-based
+        // one op for op: same return values, same feasibility answers, same
+        // per-request views — across overlay generations (plan restarts).
+        use crate::util::prop;
+        prop::check("cache_overlay_parity", 150, |rng| {
+            let base = {
+                let mut m = CacheManager::new(16, rng.usize(6, 20), rng.usize(2, 8));
+                m.watermark_blocks = rng.usize(0, 2);
+                for req in 1..=rng.usize(0, 6) as ReqId {
+                    let want = rng.usize(1, 50);
+                    if m.can_grow(req, want) {
+                        m.grow(req, want).unwrap();
+                        m.advance(req, want);
+                        m.swap_out(req, rng.usize(0, 2));
+                    }
+                }
+                m.snapshot()
+            };
+            let mut ov = CacheOverlay::default();
+            for _ in 0..rng.usize(1, 3) {
+                // A fresh generation must behave exactly like a fresh clone.
+                let mut sn = base.clone();
+                ov.begin(&base);
+                for _ in 0..40 {
+                    let req = rng.range(1, 8);
+                    match rng.usize(0, 4) {
+                        0 => {
+                            let want = sn.len_tokens(req) + rng.usize(1, 40);
+                            assert_eq!(sn.can_grow(req, want), ov.can_grow(&base, req, want));
+                            assert_eq!(
+                                sn.blocks_needed(req, want),
+                                ov.blocks_needed(&base, req, want)
+                            );
+                            if sn.can_grow(req, want) {
+                                sn.reserve_grow(req, want);
+                                ov.reserve_grow(&base, req, want);
+                            }
+                        }
+                        1 => {
+                            let k = rng.usize(1, 5);
+                            assert_eq!(sn.swap_out(req, k), ov.swap_out(&base, req, k));
+                        }
+                        2 => {
+                            let k = rng.usize(1, 5);
+                            assert_eq!(sn.swap_in(req, k), ov.swap_in(&base, req, k));
+                        }
+                        3 => {
+                            assert_eq!(
+                                sn.discard_gpu_tail(req),
+                                ov.discard_gpu_tail(&base, req)
+                            );
+                        }
+                        _ => {
+                            sn.release(req);
+                            ov.release(&base, req);
+                        }
+                    }
+                    assert_eq!(sn.gpu_free(), ov.gpu_free());
+                    assert_eq!(sn.cpu_free(), ov.cpu_free());
+                    assert_eq!(sn.cpu_blocks_of(req), ov.cpu_blocks_of(&base, req));
+                    assert_eq!(sn.gpu_tokens_of(req), ov.gpu_tokens_of(&base, req));
+                }
             }
         });
     }

@@ -209,6 +209,139 @@ impl<T> ReqSlots<T> {
     pub fn span(&self) -> usize {
         self.slots.len()
     }
+
+    /// First id of the covered range (0 when empty). Every id below this is
+    /// guaranteed absent — the edge compaction in [`ReqSlots::remove`] only
+    /// advances `base` past tombstones — so it is a safe lower bound for
+    /// journal compaction ([`DirtySet::compact_below`]).
+    pub fn coverage_lo(&self) -> ReqId {
+        self.base
+    }
+
+    /// Drop coverage below `lo` — entries *and* tombstones — shrinking the
+    /// span in one splice. For owners whose callers guarantee every id below
+    /// `lo` is dead (e.g. a [`DirtySet`]'s stamp table bounded by the
+    /// engine's live id range), this keeps long-lived tables O(live range)
+    /// without waiting for the amortized edge compaction.
+    pub fn compact_to(&mut self, lo: ReqId) {
+        if lo <= self.base {
+            return;
+        }
+        let cut = ((lo - self.base) as usize).min(self.slots.len());
+        self.slots.drain(..cut);
+        self.lead = self.lead.saturating_sub(cut);
+        if self.slots.is_empty() {
+            self.base = 0;
+            self.lead = 0;
+        } else {
+            self.base += cut as ReqId;
+        }
+    }
+}
+
+/// A deduplicating mutation journal of request ids — the **dirty set**
+/// backing incremental snapshot capture (`Planner::capture_delta`).
+///
+/// Owners of mutable per-request state (the engine's `ReqTable`, the
+/// [`crate::kvcache::CacheManager`]) mark every id they touch; the planner
+/// drains the set once per iteration and patches only those entries of its
+/// persistent snapshot. Marking is O(1) and idempotent within a drain
+/// window: a generation stamp per id suppresses duplicates without any
+/// per-drain clearing — [`DirtySet::drain_into`] just bumps the generation,
+/// so stale stamps expire in place instead of being rescanned.
+#[derive(Debug, Default)]
+pub struct DirtySet {
+    gen: u64,
+    /// id → generation it was last marked in; a stamp is live iff it equals
+    /// `gen`.
+    seen: ReqSlots<u64>,
+    ids: Vec<ReqId>,
+}
+
+impl DirtySet {
+    /// Record that `req`'s state changed since the last drain. O(1);
+    /// duplicate marks within one window are dropped.
+    pub fn mark(&mut self, req: ReqId) {
+        if self.seen.get(req) != Some(&self.gen) {
+            self.seen.insert(req, self.gen);
+            self.ids.push(req);
+        }
+    }
+
+    /// Append all ids marked since the last drain (deduplicated, in
+    /// first-marked order) to `out` and start a new window.
+    pub fn drain_into(&mut self, out: &mut Vec<ReqId>) {
+        out.append(&mut self.ids);
+        self.gen += 1;
+    }
+
+    /// Marked-and-undrained id count.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Drop stamp coverage below `lo` (every id below it is dead — the
+    /// planner's live-range lower bound), bounding the stamp table's memory
+    /// over long runs. See [`ReqSlots::compact_to`].
+    pub fn compact_below(&mut self, lo: ReqId) {
+        self.seen.compact_to(lo);
+    }
+}
+
+/// A generation-stamped per-request overlay: O(1) whole-table invalidation
+/// for state that is rebuilt every iteration on top of a persistent base.
+///
+/// The planner's simulation (stages 3–5) used to *clone* the whole snapshot
+/// per plan — O(live id range) even when the plan touches a handful of
+/// requests. An `Overlay` instead records only the entries written this
+/// generation: [`Overlay::begin`] bumps the generation (invalidating every
+/// prior write in place, nothing is scanned or cleared), [`Overlay::get`]
+/// returns a value only if it was written in the current generation, and
+/// readers fall back to the base table on a miss. Per-plan cost is
+/// O(entries actually written).
+#[derive(Debug)]
+pub struct Overlay<T> {
+    gen: u64,
+    /// id → (generation written, value); live iff the stamp equals `gen`.
+    slots: ReqSlots<(u64, T)>,
+}
+
+impl<T> Default for Overlay<T> {
+    fn default() -> Self {
+        // Start at generation 1 so a default-constructed overlay never
+        // treats the zeroed stamps of recycled storage as live.
+        Overlay { gen: 1, slots: ReqSlots::new() }
+    }
+}
+
+impl<T> Overlay<T> {
+    /// Invalidate every entry (O(1) — stale stamps expire in place).
+    pub fn begin(&mut self) {
+        self.gen += 1;
+    }
+
+    /// The value written for `req` *this generation*, if any.
+    #[inline]
+    pub fn get(&self, req: ReqId) -> Option<&T> {
+        match self.slots.get(req) {
+            Some((g, v)) if *g == self.gen => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Write `req`'s entry for the current generation.
+    pub fn set(&mut self, req: ReqId, value: T) {
+        self.slots.insert(req, (self.gen, value));
+    }
+
+    /// Drop storage below `lo` (see [`ReqSlots::compact_to`]).
+    pub fn compact_to(&mut self, lo: ReqId) {
+        self.slots.compact_to(lo);
+    }
 }
 
 impl<T: Clone> Clone for ReqSlots<T> {
@@ -377,5 +510,89 @@ mod tests {
         s.get_or_default(4).push(1);
         s.get_or_default(4).push(2);
         assert_eq!(s[4], vec![1, 2]);
+    }
+
+    #[test]
+    fn compact_to_drops_low_coverage() {
+        let mut s: ReqSlots<u32> = ReqSlots::new();
+        for id in 10..20 {
+            s.insert(id, id as u32);
+        }
+        s.compact_to(5); // below base: no-op
+        assert_eq!(s.span(), 10);
+        s.compact_to(15);
+        assert_eq!(s.span(), 5);
+        assert_eq!(s.get(14), None);
+        assert_eq!(s.get(15), Some(&15));
+        assert_eq!(s.iter().map(|(r, _)| r).collect::<Vec<_>>(), vec![15, 16, 17, 18, 19]);
+        s.insert(20, 20);
+        assert_eq!(s.span(), 6);
+        s.compact_to(100); // past the range: fully drains
+        assert!(s.is_empty());
+        assert_eq!(s.span(), 0);
+        s.insert(3, 3); // and the table still accepts low ids afterwards
+        assert_eq!(s.get(3), Some(&3));
+    }
+
+    #[test]
+    fn overlay_generations_invalidate_in_place() {
+        let mut o: Overlay<u32> = Overlay::default();
+        assert_eq!(o.get(5), None);
+        o.set(5, 50);
+        o.set(9, 90);
+        assert_eq!(o.get(5), Some(&50));
+        o.set(5, 55); // overwrite within a generation
+        assert_eq!(o.get(5), Some(&55));
+        o.begin();
+        assert_eq!(o.get(5), None, "previous generation expired");
+        assert_eq!(o.get(9), None);
+        o.set(9, 91);
+        assert_eq!(o.get(9), Some(&91));
+        o.compact_to(9);
+        assert_eq!(o.get(9), Some(&91));
+    }
+
+    #[test]
+    fn dirty_set_dedups_within_a_window() {
+        let mut d = DirtySet::default();
+        assert!(d.is_empty());
+        d.mark(5);
+        d.mark(7);
+        d.mark(5);
+        assert_eq!(d.len(), 2);
+        let mut out = Vec::new();
+        d.drain_into(&mut out);
+        assert_eq!(out, vec![5, 7]);
+        assert!(d.is_empty());
+        // New window: previously drained ids mark again; stamps expired in
+        // place (no clearing) so the old generation is invisible.
+        d.mark(5);
+        d.mark(6);
+        out.clear();
+        d.drain_into(&mut out);
+        assert_eq!(out, vec![5, 6]);
+        // Empty drains keep working and stay empty.
+        out.clear();
+        d.drain_into(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn dirty_set_compacts_stamp_table() {
+        let mut d = DirtySet::default();
+        let mut out = Vec::new();
+        for id in 1..=100 {
+            d.mark(id);
+        }
+        d.drain_into(&mut out);
+        assert_eq!(out.len(), 100);
+        d.compact_below(90);
+        assert!(d.seen.span() <= 11, "span {}", d.seen.span());
+        // Compaction must not resurrect or lose marks.
+        d.mark(95);
+        d.mark(3); // below the compaction point: still markable
+        out.clear();
+        d.drain_into(&mut out);
+        assert_eq!(out, vec![95, 3]);
     }
 }

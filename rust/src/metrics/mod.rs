@@ -97,6 +97,13 @@ pub struct Recorder {
     pub sessions_cancelled: u64,
     pub interceptions_timed_out: u64,
     pub submits_rejected: u64,
+    /// O(batch) iteration gauges: dirty ids consumed by the incremental
+    /// snapshot captures (Σ over iterations), waiting-queue entries
+    /// materialized by the admission frontier (Σ over iterations), and
+    /// channel sends saved by token-event coalescing.
+    pub capture_dirty_ids: u64,
+    pub frontier_depth: u64,
+    pub events_batched: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -176,6 +183,9 @@ impl Recorder {
             sessions_cancelled: self.sessions_cancelled,
             interceptions_timed_out: self.interceptions_timed_out,
             submits_rejected: self.submits_rejected,
+            capture_dirty_ids: self.capture_dirty_ids,
+            frontier_depth: self.frontier_depth,
+            events_batched: self.events_batched,
         }
     }
 }
@@ -211,6 +221,10 @@ pub struct RunReport {
     pub sessions_cancelled: u64,
     pub interceptions_timed_out: u64,
     pub submits_rejected: u64,
+    /// O(batch) iteration gauges (see [`Recorder`]).
+    pub capture_dirty_ids: u64,
+    pub frontier_depth: u64,
+    pub events_batched: u64,
 }
 
 impl RunReport {

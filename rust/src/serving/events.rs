@@ -44,6 +44,12 @@ pub enum EngineEvent {
     Admitted { req: ReqId, at: Micros },
     /// One generated token (decode, or the sample closing a prefill).
     Token { req: ReqId, token: u32, at: Micros },
+    /// Several generated tokens coalesced into one channel send (transport-
+    /// level amortization — see [`EventBus::push_token`]). Emitted only for
+    /// runs of two or more; [`crate::serving::SessionHandle`] transparently
+    /// re-expands batches into individual [`EngineEvent::Token`]s, so
+    /// handle-level consumers never observe this variant.
+    TokenBatch { req: ReqId, tokens: Vec<(u32, Micros)> },
     /// Generation paused on an interception. `payload` carries the output
     /// of an engine-side tool run (empty for externally-resolved calls —
     /// the client executes those and answers with
@@ -65,6 +71,7 @@ impl EngineEvent {
         match self {
             EngineEvent::Admitted { req, .. }
             | EngineEvent::Token { req, .. }
+            | EngineEvent::TokenBatch { req, .. }
             | EngineEvent::Intercepted { req, .. }
             | EngineEvent::Resumed { req, .. }
             | EngineEvent::Finished { req, .. }
@@ -77,6 +84,7 @@ impl EngineEvent {
         match self {
             EngineEvent::Admitted { .. } => "admitted",
             EngineEvent::Token { .. } => "token",
+            EngineEvent::TokenBatch { .. } => "token_batch",
             EngineEvent::Intercepted { .. } => "intercepted",
             EngineEvent::Resumed { .. } => "resumed",
             EngineEvent::Finished { .. } => "finished",
@@ -88,9 +96,23 @@ impl EngineEvent {
 /// Per-request event fan-out. Events are built lazily (the closure only
 /// runs when a live subscriber exists), so unsubscribed requests — the
 /// whole trace-replay path — cost one hash lookup per emission point.
+///
+/// Per-token events are *coalesced*: [`EventBus::push_token`] buffers
+/// instead of sending, and a buffered run flushes as one
+/// [`EngineEvent::TokenBatch`] send at the next flush point — a non-token
+/// event for the same request (ordering is preserved per request) or an
+/// explicit [`EventBus::flush_all`] when the engine hands control back to
+/// clients. Coalescing is transport-only and strictly observational, like
+/// the rest of the bus.
 #[derive(Debug, Default)]
 pub struct EventBus {
     subs: HashMap<ReqId, Sender<EngineEvent>>,
+    /// Buffered per-token events awaiting a flush, in emission order.
+    pending: Vec<(ReqId, u32, Micros)>,
+    /// Channel sends saved by coalescing: Σ (run length − 1) over batches.
+    batched: u64,
+    /// Scratch for a single request's run (reused across flushes).
+    run_scratch: Vec<(u32, Micros)>,
 }
 
 impl EventBus {
@@ -104,9 +126,93 @@ impl EventBus {
         self.subs.contains_key(&req)
     }
 
+    /// Record one generated token for `req`. Buffered (not sent) when a
+    /// subscriber exists; dropped otherwise, like every unobserved event.
+    pub fn push_token(&mut self, req: ReqId, token: u32, at: Micros) {
+        if self.subs.contains_key(&req) {
+            self.pending.push((req, token, at));
+        }
+    }
+
+    /// Send one request's buffered token run: a plain [`EngineEvent::Token`]
+    /// for a single token, a [`EngineEvent::TokenBatch`] for longer runs.
+    fn send_run(&mut self, req: ReqId, run: Vec<(u32, Micros)>) {
+        let ev = match run.len() {
+            0 => {
+                self.run_scratch = run;
+                return;
+            }
+            1 => {
+                let (token, at) = run[0];
+                self.run_scratch = run;
+                EngineEvent::Token { req, token, at }
+            }
+            n => {
+                self.batched += (n - 1) as u64;
+                EngineEvent::TokenBatch { req, tokens: run }
+            }
+        };
+        if let Some(tx) = self.subs.get(&req) {
+            if tx.send(ev).is_err() {
+                self.subs.remove(&req);
+            }
+        }
+    }
+
+    /// Flush `req`'s buffered tokens (called before any non-token event for
+    /// the same request, so the per-request event order is preserved).
+    fn flush_for(&mut self, req: ReqId) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut run = std::mem::take(&mut self.run_scratch);
+        run.clear();
+        self.pending.retain(|&(r, token, at)| {
+            if r == req {
+                run.push((token, at));
+                false
+            } else {
+                true
+            }
+        });
+        self.send_run(req, run);
+    }
+
+    /// Flush every buffered token run (engine hand-back points: the serving
+    /// pump returning control, or the end of a trace replay). Runs are sent
+    /// grouped by request, preserving each request's token order.
+    pub fn flush_all(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut pending = std::mem::take(&mut self.pending);
+        // Stable: equal-req entries keep their emission order.
+        pending.sort_by_key(|&(r, _, _)| r);
+        let mut i = 0;
+        while i < pending.len() {
+            let req = pending[i].0;
+            let mut j = i + 1;
+            while j < pending.len() && pending[j].0 == req {
+                j += 1;
+            }
+            let run: Vec<(u32, Micros)> =
+                pending[i..j].iter().map(|&(_, token, at)| (token, at)).collect();
+            self.send_run(req, run);
+            i = j;
+        }
+        pending.clear();
+        self.pending = pending; // keep the capacity
+    }
+
+    /// Channel sends saved so far by token coalescing.
+    pub fn batched(&self) -> u64 {
+        self.batched
+    }
+
     /// Emit an event for `req` if anyone is listening. A dropped receiver
     /// unsubscribes the request.
     pub fn emit<F: FnOnce() -> EngineEvent>(&mut self, req: ReqId, make: F) {
+        self.flush_for(req);
         if let Some(tx) = self.subs.get(&req) {
             if tx.send(make()).is_err() {
                 self.subs.remove(&req);
@@ -116,6 +222,7 @@ impl EventBus {
 
     /// Emit a terminal event and drop the subscription.
     pub fn emit_final<F: FnOnce() -> EngineEvent>(&mut self, req: ReqId, make: F) {
+        self.flush_for(req);
         if let Some(tx) = self.subs.remove(&req) {
             let _ = tx.send(make());
         }
@@ -162,5 +269,64 @@ mod tests {
         let e = EngineEvent::Token { req: 9, token: 4, at: 5 };
         assert_eq!(e.req(), 9);
         assert_eq!(e.tag(), "token");
+    }
+
+    #[test]
+    fn tokens_coalesce_into_batches() {
+        let mut bus = EventBus::default();
+        let (tx, rx) = channel();
+        bus.subscribe(1, tx);
+        bus.push_token(1, 10, 1);
+        bus.push_token(1, 11, 2);
+        bus.push_token(1, 12, 3);
+        bus.push_token(99, 0, 3); // unsubscribed: dropped, not buffered
+        bus.flush_all();
+        let evs: Vec<_> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        match &evs[0] {
+            EngineEvent::TokenBatch { req: 1, tokens } => {
+                assert_eq!(tokens, &vec![(10, 1), (11, 2), (12, 3)]);
+            }
+            e => panic!("expected a batch, got {e:?}"),
+        }
+        assert_eq!(bus.batched(), 2);
+    }
+
+    #[test]
+    fn single_tokens_stay_plain_and_emit_flushes_first() {
+        let mut bus = EventBus::default();
+        let (tx, rx) = channel();
+        bus.subscribe(2, tx);
+        bus.push_token(2, 7, 1);
+        bus.emit(2, || EngineEvent::Resumed { req: 2, tokens: 0, at: 2 });
+        let tags: Vec<_> = rx.try_iter().map(|e| e.tag()).collect();
+        assert_eq!(tags, vec!["token", "resumed"], "buffered token lands before the event");
+        assert_eq!(bus.batched(), 0, "runs of one are not batches");
+    }
+
+    #[test]
+    fn flush_all_groups_interleaved_requests() {
+        let mut bus = EventBus::default();
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        bus.subscribe(1, tx1);
+        bus.subscribe(2, tx2);
+        for i in 0..3u32 {
+            bus.push_token(1, i, i as Micros);
+            bus.push_token(2, 100 + i, i as Micros);
+        }
+        bus.flush_all();
+        for (rx, base) in [(rx1, 0u32), (rx2, 100u32)] {
+            let evs: Vec<_> = rx.try_iter().collect();
+            assert_eq!(evs.len(), 1);
+            match &evs[0] {
+                EngineEvent::TokenBatch { tokens, .. } => {
+                    let toks: Vec<u32> = tokens.iter().map(|&(t, _)| t).collect();
+                    assert_eq!(toks, vec![base, base + 1, base + 2], "per-req order kept");
+                }
+                e => panic!("expected a batch, got {e:?}"),
+            }
+        }
+        assert_eq!(bus.batched(), 4);
     }
 }

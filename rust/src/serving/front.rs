@@ -210,11 +210,31 @@ struct FrontShared {
 
 /// A client's handle to one submitted session: an event stream plus the
 /// resumption path for externally-resolved interceptions.
+///
+/// The engine coalesces per-token sends into [`EngineEvent::TokenBatch`]
+/// transport frames; the handle re-expands them, so consumers observe the
+/// documented `Admitted → Token* → …` stream unchanged.
 #[derive(Debug)]
 pub struct SessionHandle {
     req: ReqId,
     events: Receiver<EngineEvent>,
+    /// Token events re-expanded from a transport batch, not yet consumed
+    /// (a `Mutex` so the handle stays usable through `&self` across
+    /// threads, like the receiver).
+    expanded: Mutex<VecDeque<EngineEvent>>,
     shared: Arc<FrontShared>,
+}
+
+/// Re-expand a transport frame into client-visible events.
+fn expand_into(ev: EngineEvent, out: &mut VecDeque<EngineEvent>) {
+    match ev {
+        EngineEvent::TokenBatch { req, tokens } => {
+            out.extend(
+                tokens.into_iter().map(|(token, at)| EngineEvent::Token { req, token, at }),
+            );
+        }
+        ev => out.push_back(ev),
+    }
 }
 
 impl SessionHandle {
@@ -224,12 +244,24 @@ impl SessionHandle {
 
     /// Next pending event, if any (non-blocking).
     pub fn try_event(&self) -> Option<EngineEvent> {
-        self.events.try_recv().ok()
+        let mut buf = self.expanded.lock().unwrap();
+        loop {
+            if let Some(ev) = buf.pop_front() {
+                return Some(ev);
+            }
+            expand_into(self.events.try_recv().ok()?, &mut buf);
+        }
     }
 
     /// Every event delivered since the last drain (non-blocking).
     pub fn drain_events(&self) -> Vec<EngineEvent> {
-        self.events.try_iter().collect()
+        let mut buf = self.expanded.lock().unwrap();
+        let mut out = VecDeque::new();
+        std::mem::swap(&mut *buf, &mut out);
+        for ev in self.events.try_iter() {
+            expand_into(ev, &mut out);
+        }
+        out.into()
     }
 
     /// Answer the pending externally-resolved interception with the API's
@@ -473,7 +505,12 @@ impl EngineFront {
         let id = self.submit_inner(spec)?;
         let (tx, rx) = channel();
         self.engine.subscribe_events(id, tx);
-        Ok(SessionHandle { req: id, events: rx, shared: self.shared.clone() })
+        Ok(SessionHandle {
+            req: id,
+            events: rx,
+            expanded: Mutex::new(VecDeque::new()),
+            shared: self.shared.clone(),
+        })
     }
 
     /// Submit without an event stream (bulk replay). Only scripted sessions
@@ -579,11 +616,14 @@ impl EngineFront {
         }
         loop {
             self.drain_cancels();
+            // Hand-back points flush the coalesced token runs first, so a
+            // client regaining control always sees its complete stream.
             match self.engine.pump_round(&mut self.iters)? {
                 PumpRound::Progressed => self.awaiting_reported = false,
                 PumpRound::AwaitingExternal => {
                     if !self.awaiting_reported {
                         self.awaiting_reported = true;
+                        self.engine.flush_events();
                         return Ok(FrontStatus::AwaitingClient);
                     }
                     // The client had its chance and declined: consume the
@@ -593,9 +633,11 @@ impl EngineFront {
                         self.awaiting_reported = false;
                         continue;
                     }
+                    self.engine.flush_events();
                     return Ok(FrontStatus::AwaitingClient);
                 }
                 PumpRound::Drained => {
+                    self.engine.flush_events();
                     self.engine.metrics.run_ended = self.engine.now();
                     return Ok(FrontStatus::Drained);
                 }

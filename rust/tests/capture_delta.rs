@@ -1,0 +1,269 @@
+//! Delta-capture oracle: the incremental snapshot the engine maintains via
+//! mutation journals ([`Planner::capture_delta`]) must be *logically
+//! identical* to a from-scratch [`Planner::capture`] of the same engine
+//! state — and must plan identically — after any mutation sequence.
+//!
+//! The driver replays generated traces through the engine's three-phase
+//! iteration (`prepare_iteration` / `plan_iteration` / `apply_iteration`),
+//! interposing between phases 2 and 3 to rebuild a reference snapshot and
+//! compare. Mutation coverage: submissions (trace arrivals), finishes,
+//! client cancels (random sprinkles), interception pause/resume under every
+//! Fig. 2 disposition policy (preserve / discard / swap) plus the adaptive
+//! scheduler, swap-queue traffic, and external-interception deadline expiry
+//! under both timeout actions (a flaky source marks every Nth interception
+//! external and never answers, so the deadline always fires).
+//!
+//! "Logically identical" deliberately does not mean byte-identical slabs:
+//! the dense `ReqSlots` windows may cover different id spans (the delta
+//! path only re-bases on a full rebuild), so the comparison is per-id over
+//! every id ever issued, plus the queue vectors and free-block ledgers.
+
+use std::collections::HashSet;
+
+use infercept::augment::AugmentKind;
+use infercept::config::{EngineConfig, TimeoutAction};
+use infercept::coordinator::estimator::DurationEstimator;
+use infercept::coordinator::planner::Planner;
+use infercept::coordinator::policy::Policy;
+use infercept::coordinator::sched_policy;
+use infercept::engine::Engine;
+use infercept::kvcache::ReqId;
+use infercept::serving::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::prop;
+use infercept::util::rng::Pcg;
+use infercept::util::Micros;
+use infercept::workload::{WorkloadGen, WorkloadKind};
+
+// ---------------------------------------------------------------------------
+// A flaky interception source: every `every`-th dispatch is marked external
+// and never answered, so the engine's deadline machinery must clean it up.
+// ---------------------------------------------------------------------------
+
+struct FlakyExternal {
+    inner: ScriptedTimers,
+    awaiting: HashSet<ReqId>,
+    dispatches: u64,
+    /// Mark every Nth dispatch external; 0 = never (pure scripted timers).
+    every: u64,
+}
+
+impl FlakyExternal {
+    fn new(every: u64) -> FlakyExternal {
+        FlakyExternal {
+            inner: ScriptedTimers::new(1.0),
+            awaiting: HashSet::new(),
+            dispatches: 0,
+            every,
+        }
+    }
+}
+
+impl InterceptSource for FlakyExternal {
+    fn dispatch(
+        &mut self,
+        req: ReqId,
+        kind: AugmentKind,
+        duration_us: Micros,
+        now: Micros,
+    ) -> InterceptResolution {
+        self.dispatches += 1;
+        if self.every > 0 && self.dispatches % self.every == 0 {
+            self.awaiting.insert(req);
+            InterceptResolution::External { payload: String::new() }
+        } else {
+            self.inner.dispatch(req, kind, duration_us, now)
+        }
+    }
+
+    fn poll(&mut self, now: Micros) -> Vec<Resumption> {
+        self.inner.poll(now)
+    }
+
+    fn next_completion(&self) -> Option<Micros> {
+        self.inner.next_completion()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight() + self.awaiting.len()
+    }
+
+    fn awaiting_external(&self) -> usize {
+        self.awaiting.len()
+    }
+
+    fn on_finished(&mut self, req: ReqId) {
+        self.awaiting.remove(&req);
+    }
+
+    fn abandon(&mut self, req: ReqId) {
+        self.awaiting.remove(&req);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracles
+// ---------------------------------------------------------------------------
+
+/// Logical snapshot equality: clock, queue orders, per-id request rows, and
+/// per-id cache rows + free-block ledgers. Slab *spans* may legitimately
+/// differ (see module docs), so ids are compared individually.
+fn assert_snapshots_match(
+    got: &infercept::coordinator::planner::SchedSnapshot,
+    want: &infercept::coordinator::planner::SchedSnapshot,
+    max_id: ReqId,
+    ctx: &str,
+) {
+    assert_eq!(got.now, want.now, "{ctx}: clock");
+    assert_eq!(got.waiting, want.waiting, "{ctx}: waiting queue");
+    assert_eq!(got.swapq, want.swapq, "{ctx}: swap queue");
+    assert_eq!(got.running, want.running, "{ctx}: running set");
+    assert_eq!(got.paused, want.paused, "{ctx}: paused set");
+    assert_eq!(got.cache.gpu_free(), want.cache.gpu_free(), "{ctx}: gpu_free");
+    assert_eq!(got.cache.cpu_free(), want.cache.cpu_free(), "{ctx}: cpu_free");
+    for id in 1..=max_id {
+        assert_eq!(
+            format!("{:?}", got.reqs.get(id)),
+            format!("{:?}", want.reqs.get(id)),
+            "{ctx}: request row {id}"
+        );
+        assert_eq!(got.cache.seq(id), want.cache.seq(id), "{ctx}: cache row {id}");
+    }
+}
+
+/// Plan identity: both snapshots, planned by *fresh* planner + policy
+/// objects (the engine's own policy may be stateful), produce the same
+/// typed plan.
+fn assert_plans_match(
+    cfg: &EngineConfig,
+    got: &infercept::coordinator::planner::SchedSnapshot,
+    want: &infercept::coordinator::planner::SchedSnapshot,
+    ctx: &str,
+) {
+    let est = DurationEstimator::new(cfg.policy.estimator, cfg.time_scale);
+    let mut pa = Planner::new();
+    let mut pb = Planner::new();
+    let a = format!("{:?}", pa.plan_with(got.clone(), &mut *sched_policy::build(cfg), &est));
+    let b = format!("{:?}", pb.plan_with(want.clone(), &mut *sched_policy::build(cfg), &est));
+    assert_eq!(a, b, "{ctx}: plan divergence");
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Replay one generated trace under `policy`, comparing the incremental
+/// snapshot against the from-scratch reference between the plan and apply
+/// phases of every iteration.
+fn fuzz_one(policy: Policy, rng: &mut Pcg) {
+    let seed = rng.next_u64();
+    let spec = SimModelSpec::gptj_6b();
+    let mut cfg = EngineConfig::for_sim(&spec, policy).with_seed(seed);
+    // Arm external deadlines so abandoned interceptions resolve; exercise
+    // both expiry actions.
+    cfg.external_timeout_us = 150_000 + rng.range(0, 250_000);
+    cfg.external_timeout_action =
+        if rng.f64() < 0.5 { TimeoutAction::Cancel } else { TimeoutAction::ResumeEmpty };
+
+    let n = rng.usize(16, 28);
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0);
+    let mut eng = Engine::new(Box::new(SimBackend::new(spec)), cfg.clone());
+    // every ∈ {0 (never external), 2, 3, 4}
+    let every = [0u64, 2, 3, 4][rng.usize(0, 3)];
+    eng.set_intercept_source(Box::new(FlakyExternal::new(every)));
+    eng.load_trace(&trace);
+
+    let max_id = n as ReqId;
+    let mut reference = Planner::new();
+    let mut iters: u64 = 0;
+    while eng.unfinished() > 0 {
+        iters += 1;
+        assert!(iters < 50_000, "fuzz engine does not drain (seed {seed})");
+
+        let now = eng.prepare_iteration();
+        eng.plan_iteration(now);
+
+        // Oracle: rebuild from scratch and compare before applying.
+        eng.capture_reference(&mut reference);
+        let ctx = format!("iter {iters} seed {seed}");
+        assert_snapshots_match(eng.sched_snapshot(), reference.snapshot(), max_id, &ctx);
+        if iters % 5 == 0 {
+            assert_plans_match(&cfg, eng.sched_snapshot(), reference.snapshot(), &ctx);
+        }
+
+        let worked = eng.apply_iteration().unwrap();
+
+        // Random client aborts — any live id, any state (ignored if dead).
+        if rng.f64() < 0.04 {
+            let victim = rng.range(1, max_id);
+            eng.cancel(victim);
+        }
+
+        if !worked && !eng.advance_idle() {
+            // Only externally-abandoned interceptions remain: consume the
+            // deadline, as the serving front does once the client has had
+            // (and declined) its chance to answer.
+            assert!(
+                eng.awaiting_external() > 0 && eng.jump_to_next_external_deadline(),
+                "engine stuck with {} unfinished (seed {seed})",
+                eng.unfinished()
+            );
+        }
+    }
+    eng.flush_events();
+    eng.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_delta_capture_matches_full_fig2_policies() {
+    for policy in Policy::fig2_set() {
+        let name = policy.name;
+        prop::check(&format!("delta_capture_{name}"), 5, |rng| {
+            fuzz_one(policy.clone(), rng);
+        });
+    }
+}
+
+#[test]
+fn prop_delta_capture_matches_full_adaptive() {
+    prop::check("delta_capture_adaptive", 8, |rng| {
+        fuzz_one(Policy::adaptive(), rng);
+    });
+}
+
+/// Pure scripted-timer replay (no externals, no cancels) under the default
+/// policy — the cheapest deterministic regression for the delta path, kept
+/// separate so a failure here isolates the journals from the lifecycle
+/// machinery.
+#[test]
+fn delta_capture_matches_full_on_plain_trace() {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept()).with_seed(20260808);
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 20260808).generate(30, 3.0);
+    let mut eng = Engine::new(Box::new(SimBackend::new(spec)), cfg.clone());
+    eng.load_trace(&trace);
+
+    let mut reference = Planner::new();
+    let mut iters: u64 = 0;
+    while eng.unfinished() > 0 {
+        iters += 1;
+        assert!(iters < 100_000, "plain trace does not drain");
+        let now = eng.prepare_iteration();
+        eng.plan_iteration(now);
+        eng.capture_reference(&mut reference);
+        let ctx = format!("iter {iters}");
+        assert_snapshots_match(eng.sched_snapshot(), reference.snapshot(), 30, &ctx);
+        if iters % 3 == 0 {
+            assert_plans_match(&cfg, eng.sched_snapshot(), reference.snapshot(), &ctx);
+        }
+        if !eng.apply_iteration().unwrap() && !eng.advance_idle() {
+            break;
+        }
+    }
+    assert_eq!(eng.unfinished(), 0, "trace must drain without external help");
+    eng.check_invariants().unwrap();
+}

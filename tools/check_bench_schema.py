@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_sched.json produced by `cargo bench --bench
+bench_planner_e2e` (see rust/src/util/bench.rs for the writer).
+
+Usage:
+    check_bench_schema.py [--allow-placeholder] [PATH]
+
+PATH defaults to BENCH_sched.json at the repo root. By default the file
+must contain real measurements: every expected result row and derived key
+present, with positive timings. `--allow-placeholder` additionally accepts
+the committed pending-first-measurement stub (empty results) — that mode is
+for validating the *tracked* file; CI validates the freshly *generated*
+file strictly, right after running the bench.
+
+Exit status 0 on success, 1 with per-problem messages otherwise.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+PLACEHOLDER_PROFILE = "pending-first-measurement"
+
+# One row per bench.run() call in rust/benches/bench_planner_e2e.rs.
+EXPECTED_RESULTS = [
+    "planner_e2e/capture+plan 256r/128p/512w/32s",
+    "planner_e2e/capture 256r/128p/512w/32s",
+    "planner_e2e/capture aged-10k 256r/128p/512w/32s",
+    "planner_e2e/plan 256r/128p/512w/32s",
+    "planner_e2e/capture_hashmap_baseline 256r/128p/512w/32s",
+    "planner_e2e/delta_capture+plan 256r/128p/512w/32s",
+    "planner_e2e/delta_capture+plan 256r/128p/10000w/32s",
+    "planner_e2e/capture 256r/128p/10000w/32s",
+    "planner_e2e/sim_replay mixed120@3rps infercept",
+]
+
+EXPECTED_DERIVED = [
+    "capture_speedup_vs_hashmap",
+    "capture_aged_over_fresh",
+    "capture_plan_cycle_us",
+    "delta_cycle_us",
+    "stress_10k_delta_cycle_us",
+    "stress_10k_over_512_delta_cycle",
+    "delta_over_full_cycle",
+    "stress_10k_full_capture_over_delta_cycle",
+    "sim_replay_iters_per_sec",
+    "sim_replay_iterations",
+]
+
+RESULT_FIELDS = ["name", "iters", "mean_ns", "p50_ns", "p95_ns"]
+
+
+def check(path: Path, allow_placeholder: bool) -> list[str]:
+    errors: list[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+
+    for key in ("suite", "profile", "results", "derived"):
+        if key not in data:
+            errors.append(f"missing top-level key: {key!r}")
+    if errors:
+        return errors
+
+    if data["suite"] != "bench_planner_e2e":
+        errors.append(f"suite is {data['suite']!r}, expected 'bench_planner_e2e'")
+    if not isinstance(data["results"], list):
+        return errors + ["'results' is not a list"]
+    if not isinstance(data["derived"], dict):
+        return errors + ["'derived' is not an object"]
+
+    placeholder = data["profile"] == PLACEHOLDER_PROFILE or not data["results"]
+    if placeholder:
+        if allow_placeholder:
+            return errors
+        errors.append(
+            "placeholder report (no measurements); run "
+            "`cd rust && cargo bench --bench bench_planner_e2e` first"
+        )
+        return errors
+
+    names = []
+    for i, row in enumerate(data["results"]):
+        if not isinstance(row, dict):
+            errors.append(f"results[{i}] is not an object")
+            continue
+        for field in RESULT_FIELDS:
+            if field not in row:
+                errors.append(f"results[{i}] missing field {field!r}")
+        name = row.get("name")
+        if isinstance(name, str):
+            names.append(name)
+        for field in ("mean_ns", "p50_ns", "p95_ns"):
+            v = row.get(field)
+            if isinstance(v, (int, float)) and v <= 0:
+                errors.append(f"results[{i}] ({name}): {field} must be positive, got {v}")
+
+    for expected in EXPECTED_RESULTS:
+        if expected not in names:
+            errors.append(f"missing expected result row: {expected!r}")
+    for key in EXPECTED_DERIVED:
+        if key not in data["derived"]:
+            errors.append(f"missing expected derived key: {key!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    args = [a for a in argv if a != "--allow-placeholder"]
+    allow_placeholder = len(args) != len(argv)
+    root = Path(__file__).resolve().parent.parent
+    path = Path(args[0]) if args else root / "BENCH_sched.json"
+    errors = check(path, allow_placeholder)
+    if errors:
+        for e in errors:
+            print(f"check_bench_schema: {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench_schema: {path} OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
