@@ -1,0 +1,77 @@
+//! Cross-session prefix sharing: N sessions with a common prompt admit
+//! with ~1 physical copy of the prefix instead of N.
+//!
+//! Sessions submitted with the same [`SessionSpec::with_shared_prefix`] key
+//! fork from the key's most recent session at admission: the block-aligned
+//! GPU-resident prompt prefix is aliased (refcounted, copy-on-write), so
+//! the later sessions neither re-prefill nor hold their own copy. Each
+//! successful fork surfaces as an [`EngineEvent::PrefixHit`] right after
+//! `Admitted`.
+//!
+//! ```sh
+//! cargo run --release --example shared_prefix
+//! ```
+
+use infercept::prelude::*;
+use infercept::workload::Segment;
+
+fn main() -> anyhow::Result<()> {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    let bs = cfg.block_size as u64;
+    let mut front = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+
+    // One shared 512-token system prompt (an FAQ preamble, say), eight
+    // sessions arriving 50 ms apart — close enough that the prefix is
+    // still GPU-resident when each successor lands.
+    let prompt: Vec<u32> = (0..512u32).map(|i| (i * 31) % 30_000).collect();
+    let script = RequestScript {
+        kind: AugmentKind::Qa,
+        prompt_tokens: prompt.len() as u32,
+        segments: vec![Segment { gen_tokens: 48, interception: None }],
+    };
+
+    let n = 8;
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let spec = SessionSpec::scripted(script.clone(), i as u64 * 50_000)
+            .with_prompt(prompt.clone())
+            .with_shared_prefix("faq-preamble");
+        match front.submit(spec) {
+            Ok(h) => handles.push(h),
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    match front.run_until_blocked()? {
+        FrontStatus::Drained => {}
+        FrontStatus::AwaitingClient => anyhow::bail!("scripted sessions cannot block"),
+    }
+
+    for h in &handles {
+        for ev in h.drain_events() {
+            if let EngineEvent::PrefixHit { req, shared_tokens, at } = ev {
+                println!(
+                    "session {req}: prefix hit — {shared_tokens} of {} prompt tokens \
+                     aliased at t={:.1} ms",
+                    prompt.len(),
+                    at as f64 / 1e3,
+                );
+            }
+        }
+    }
+
+    let report = front.report();
+    println!(
+        "\n{n} sessions, {} prefix hits: peak {} physical GPU blocks shared, \
+         {} copy-on-write copies",
+        report.prefix_hits, report.blocks_shared, report.cow_copies,
+    );
+    println!(
+        "without sharing, the same admissions would have prefilled and held \
+         ~{} extra blocks of duplicate prefix KV",
+        report.prefix_hits * (prompt.len() as u64 / bs),
+    );
+    println!("{}", report.summary_line());
+    Ok(())
+}

@@ -33,7 +33,7 @@ use infercept::coordinator::sched_policy::InferceptPolicy;
 use infercept::coordinator::scheduler::{Disposition, FcfsQueue};
 use infercept::coordinator::waste::FwdProfile;
 use infercept::engine::request::{ReqState, ReqTable, Request};
-use infercept::engine::{Engine, ExecBackend};
+use infercept::engine::{Engine, ExecBackend, PumpRound};
 use infercept::kvcache::swap::SwapModel;
 use infercept::kvcache::{BlockLoc, CacheManager, ReqId};
 use infercept::sim::{SimBackend, SimModelSpec};
@@ -417,6 +417,57 @@ fn main() {
         std::hint::black_box(run_once());
     });
 
+    // ---- shared-prefix admission: N sessions alias one physical prefix ---
+    // Refcounted copy-on-write forking: every session after the first forks
+    // the common 512-token prompt from its predecessor at admission instead
+    // of prefilling (and holding) its own copy. The derived ratio is
+    // physical shared blocks ÷ Σ per-session shared blocks at the aliasing
+    // peak — ~1/N with sharing working, 1.0 if every session held its own
+    // prefix copy.
+    const SHARED_N: usize = 32;
+    let shared_run = || -> (f64, u64, u64) {
+        let spec = SimModelSpec::gptj_6b();
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+        let prompt: Vec<u32> = (0..512u32).map(|i| (i * 7) % 31_000).collect();
+        let script = RequestScript {
+            kind: AugmentKind::Math,
+            prompt_tokens: 512,
+            segments: vec![Segment { gen_tokens: 64, interception: None }],
+        };
+        let mut prev: Option<ReqId> = None;
+        for i in 0..SHARED_N {
+            let id = engine
+                .submit_script((i as Micros) * 20_000, script.clone(), Some(prompt.clone()))
+                .unwrap();
+            if let Some(p) = prev {
+                engine.adopt_prefix(id, p);
+            }
+            prev = Some(id);
+        }
+        let mut iters = 0u64;
+        let (mut peak_physical, mut peak_logical) = (0usize, 0usize);
+        while !matches!(engine.pump_round(&mut iters).unwrap(), PumpRound::Drained) {
+            let logical: usize =
+                (1..=SHARED_N as ReqId).map(|r| engine.cache().shared_blocks_of(r)).sum();
+            if logical > peak_logical {
+                peak_logical = logical;
+                peak_physical = engine.cache().shared_gpu_blocks();
+            }
+        }
+        engine.cache().check_conservation().unwrap();
+        let ratio = if peak_logical == 0 {
+            1.0
+        } else {
+            peak_physical as f64 / peak_logical as f64
+        };
+        (ratio, engine.metrics.prefix_hits, engine.metrics.cow_copies)
+    };
+    let (shared_ratio, shared_hits, shared_cow) = shared_run();
+    let r_shared = bench.run("planner_e2e/shared_prefix 32x512t infercept", || {
+        std::hint::black_box(shared_run());
+    });
+
     // ---- machine-readable trajectory -------------------------------------
     for r in [
         &r_cycle,
@@ -428,6 +479,7 @@ fn main() {
         &r_delta_10k,
         &r_capture_10k,
         &r_replay,
+        &r_shared,
     ] {
         report.push(r);
     }
@@ -468,6 +520,12 @@ fn main() {
         Json::num((iters_per_run as f64 * 1e9 / r_replay.mean_ns).round()),
     );
     report.derived("sim_replay_iterations", Json::num(iters_per_run as f64));
+    report.derived(
+        "shared_prefix_block_ratio",
+        Json::num((shared_ratio * 1000.0).round() / 1000.0),
+    );
+    report.derived("shared_prefix_hits", Json::num(shared_hits as f64));
+    report.derived("shared_prefix_cow_copies", Json::num(shared_cow as f64));
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sched.json").to_string()

@@ -71,6 +71,7 @@ mod real {
             external_timeout_action: crate::config::TimeoutAction::Cancel,
             max_live_sessions: 0,
             max_waiting: 0,
+            compact_interval_iters: crate::config::DEFAULT_COMPACT_INTERVAL_ITERS,
         };
         apply_adaptive_args(&mut cfg, args)?;
         apply_lifecycle_args(&mut cfg, args)?;

@@ -46,6 +46,9 @@ pub const DEFAULT_ADAPTIVE_ALPHA: f64 = 0.2;
 /// Default clamp range for the adaptive admission multiplier.
 pub const DEFAULT_ADAPTIVE_MIN_GAIN: f64 = 0.5;
 pub const DEFAULT_ADAPTIVE_MAX_GAIN: f64 = 4.0;
+/// Default [`EngineConfig::compact_interval_iters`]: how many iterations
+/// between journal/slab compaction sweeps in the engine loop.
+pub const DEFAULT_COMPACT_INTERVAL_ITERS: u32 = 1024;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -98,6 +101,11 @@ pub struct EngineConfig {
     /// Submit backpressure: reject new sessions while the waiting queue is
     /// at least this deep; 0 = unlimited.
     pub max_waiting: usize,
+    /// Iterations between journal/slab compaction sweeps (dirty-set stamp
+    /// tables, queue mirrors). Lower = tighter memory bounds, more frequent
+    /// O(live) sweeps; 0 = never compact (unbounded stamp tables — tests
+    /// only).
+    pub compact_interval_iters: u32,
 }
 
 impl EngineConfig {
@@ -126,6 +134,7 @@ impl EngineConfig {
             external_timeout_action: TimeoutAction::Cancel,
             max_live_sessions: 0,
             max_waiting: 0,
+            compact_interval_iters: DEFAULT_COMPACT_INTERVAL_ITERS,
         }
     }
 

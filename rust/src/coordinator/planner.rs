@@ -66,6 +66,22 @@
 //!   `prop_lazy_frontier_matches_unbounded`); snapshots whose waiting list
 //!   is *not* sorted (hand-built tests) transparently fall back to full
 //!   materialization.
+//!
+//! # Shared prefixes and what "freeing" a holder frees
+//!
+//! With refcounted blocks (see the `kvcache` sharing invariants), a
+//! sequence may hold a *shared* leading run of GPU blocks aliased with
+//! other sequences. The ledger tracks that run per sequence
+//! ([`crate::kvcache::SeqSnapshot::shared`]), and every stage that "frees"
+//! a holder — eviction in `ensure_blocks`, Discard in stage 3 — credits
+//! only its **exclusive** blocks back to the free pool: the shared prefix
+//! stays resident with its other holders. Consequently min-waste preserve
+//! charges only `ctx − shared` tokens ([`PausedView::shared_tokens`]),
+//! Discard of a shared-prefix holder keeps the prefix (it becomes a
+//! partial-discard via `discard_gpu_tail`, like a CPU-prefix holder), and
+//! admission feasibility counts copy-on-write privatization in `can_grow`.
+//! With no forked sequences every `shared` count is zero and all formulas
+//! reduce bit-for-bit to the exclusive-ownership behavior.
 
 use crate::augment::AugmentKind;
 use crate::config::EngineConfig;
@@ -540,6 +556,7 @@ fn stage_dispositions(
             disposition: q.disposition,
             ctx_tokens: q.processed,
             gpu_tokens: snap.cache.gpu_tokens_of(r),
+            shared_tokens: snap.cache.shared_tokens_of(r),
             elapsed_us: snap.now.saturating_sub(q.paused_at),
             actual_total_us: q.pause_duration_us,
         });
@@ -566,7 +583,13 @@ fn stage_dispositions(
             InterceptAction::Discard => {
                 r.recompute_hwm = r.recompute_hwm.max(r.processed);
                 r.disposition = Disposition::Discarded;
-                if sim.cache.cpu_blocks_of(&snap.cache, req) > 0 {
+                // A holder with a CPU run or a shared prefix keeps that
+                // part (partial discard): freeing it would return no
+                // GPU memory for the shared blocks anyway. Only a fully
+                // exclusive, fully GPU-resident holder releases outright.
+                if sim.cache.cpu_blocks_of(&snap.cache, req) > 0
+                    || sim.cache.shared_blocks_of(&snap.cache, req) > 0
+                {
                     r.processed = sim.cache.discard_gpu_tail(&snap.cache, req);
                 } else {
                     sim.cache.release(&snap.cache, req);
@@ -1526,7 +1549,7 @@ mod tests {
             match action {
                 InterceptAction::Preserve => {}
                 InterceptAction::Discard => {
-                    if cache.cpu_blocks_of(req) > 0 {
+                    if cache.cpu_blocks_of(req) > 0 || cache.shared_blocks_of(req) > 0 {
                         cache.discard_gpu_tail(req);
                     } else {
                         cache.release(req);

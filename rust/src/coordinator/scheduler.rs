@@ -279,6 +279,11 @@ pub struct PausedView {
     pub ctx_tokens: usize,
     /// Tokens currently in GPU blocks (what preserve would keep holding).
     pub gpu_tokens: usize,
+    /// Tokens in shared (refcounted) prefix blocks — memory other holders
+    /// keep resident regardless of this request's disposition, so preserve
+    /// charges only `ctx_tokens − shared_tokens` (see
+    /// [`crate::coordinator::waste::WasteInputs::shared_tokens`]).
+    pub shared_tokens: usize,
     /// Time since the interception fired (engine clock).
     pub elapsed_us: Micros,
     /// True scaled duration from the script (oracle estimator only).
@@ -411,6 +416,7 @@ pub fn decide_interceptions(
                 chunk_tokens: batch.chunk_tokens,
                 running_query: batch.running_query,
                 running_ctx: batch.other_tokens,
+                shared_tokens: v.shared_tokens,
             };
             let mw = waste::min_waste(profile, &w);
             (mw.waste_gbs, mw.prefer_preserve, v)
@@ -500,6 +506,7 @@ mod tests {
             disposition: Disposition::Fresh,
             ctx_tokens: ctx,
             gpu_tokens: ctx,
+            shared_tokens: 0,
             elapsed_us: 0,
             actual_total_us: 1_000_000,
         }

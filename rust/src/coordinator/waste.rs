@@ -68,6 +68,11 @@ pub struct WasteInputs {
     /// Query tokens + context of the running batch (for marginal T_fwd).
     pub running_query: usize,
     pub running_ctx: usize,
+    /// Tokens of `ctx_tokens` living in shared (refcounted) prefix blocks:
+    /// memory not attributable to this request alone — other holders keep
+    /// those blocks resident whatever this request's disposition, so
+    /// preserving them costs nothing extra. Zero when sharing is unused.
+    pub shared_tokens: usize,
 }
 
 const US_PER_SEC: f64 = 1e6;
@@ -85,10 +90,14 @@ pub fn waste_discard(p: &FwdProfile, w: &WasteInputs) -> f64 {
     gbs(w.ctx_tokens as f64 * m, t_fwd) + gbs(w.other_tokens as f64 * m, t_fwd)
 }
 
-/// Eq. 2 — Preserve: `T̂_INT · C · M`.
+/// Eq. 2 — Preserve: `T̂_INT · C · M`, charging only the memory this
+/// request holds *exclusively* (`C − C_shared`): blocks aliased with other
+/// sequences stay resident regardless of this request's disposition, so
+/// holding them through the interception wastes nothing extra. Reduces to
+/// the paper's formula when sharing is unused (`shared_tokens = 0`).
 pub fn waste_preserve(w: &WasteInputs) -> f64 {
     gbs(
-        w.ctx_tokens as f64 * w.kv_bytes_per_token as f64,
+        w.ctx_tokens.saturating_sub(w.shared_tokens) as f64 * w.kv_bytes_per_token as f64,
         w.est_interception_us,
     )
 }
@@ -151,6 +160,7 @@ mod tests {
             chunk_tokens: 256,
             running_query: 32,
             running_ctx: 10_000,
+            shared_tokens: 0,
         }
     }
 
@@ -203,6 +213,16 @@ mod tests {
         let w3 = inputs(1000, 2e6);
         assert!((waste_preserve(&w2) - 2.0 * waste_preserve(&w1)).abs() < 1e-9);
         assert!((waste_preserve(&w3) - 2.0 * waste_preserve(&w1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_prefix_tokens_are_free_to_preserve() {
+        let mut w = inputs(1000, 1e6);
+        let base = waste_preserve(&w);
+        w.shared_tokens = 400; // other holders keep these blocks anyway
+        assert!((waste_preserve(&w) - base * 0.6).abs() < 1e-9);
+        w.shared_tokens = 2000; // clamped: fully shared context is free
+        assert_eq!(waste_preserve(&w), 0.0);
     }
 
     #[test]

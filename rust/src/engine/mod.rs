@@ -225,6 +225,24 @@ impl Engine {
         self.events.subscribe(req, tx);
     }
 
+    /// Record prefix-fork intent for a pending request: at admission,
+    /// `child` aliases the block-aligned, GPU-resident prefix of `parent`'s
+    /// cached context via [`CacheManager::fork`] instead of prefilling those
+    /// tokens from scratch. Intent, not guarantee — if the parent has
+    /// finished, been evicted, or holds no aligned GPU prefix when `child`
+    /// is admitted, the child simply prefills from zero (no `PrefixHit`
+    /// event). No-op unless `child` is still `Pending`.
+    pub fn adopt_prefix(&mut self, child: ReqId, parent: ReqId) {
+        if child == parent {
+            return;
+        }
+        if let Some(rq) = self.requests.get_mut(child) {
+            if rq.state == ReqState::Pending {
+                rq.shared_prefix_parent = Some(parent);
+            }
+        }
+    }
+
     /// Per-session override of the external-interception deadline (see
     /// [`crate::engine::request::Request::external_timeout_us`]): `None`
     /// falls back to `cfg.external_timeout_us`, `Some(0)` disables.
@@ -473,9 +491,10 @@ impl Engine {
         self.metrics.frontier_depth += self.planner.last_frontier_depth();
         // Periodically drop the journals' dedup coverage below the live-id
         // floor so their gen-stamp slabs track the live window instead of
-        // every id ever served.
+        // every id ever served (`cfg.compact_interval_iters`; 0 disables).
         self.iters_since_compact += 1;
-        if self.iters_since_compact >= 1024 {
+        let interval = self.cfg.compact_interval_iters;
+        if interval > 0 && self.iters_since_compact >= interval {
             self.iters_since_compact = 0;
             let floor = self.planner.live_floor();
             self.requests.compact_dirty_below(floor);
@@ -488,6 +507,12 @@ impl Engine {
         let plan = self.planner.take_plan();
         let result = self.apply_and_execute(&plan);
         self.planner.put_back_plan(plan);
+        // Prefix-sharing gauges: CoW copies are cumulative in the manager;
+        // shared residency is sampled as a peak (it is zero once a run
+        // drains, so an end-of-run assignment would always read 0).
+        self.metrics.cow_copies = self.cache.cow_copies();
+        self.metrics.blocks_shared =
+            self.metrics.blocks_shared.max(self.cache.shared_gpu_blocks() as u64);
         result
     }
 
@@ -528,11 +553,48 @@ impl Engine {
                 break;
             }
             self.pending.pop();
+            // Fork intent recorded at submit time (`Engine::adopt_prefix`):
+            // alias the parent's cached prefix instead of prefilling it.
+            // Applied at admission, not submit, so a pending-cancelled
+            // session never holds cache, and the parent has had time to
+            // prefill the prompt the children share.
+            let parent = self.requests[id].shared_prefix_parent.take();
+            let shared = match parent {
+                Some(p) => self.try_fork_prefix(p, id),
+                None => 0,
+            };
             let rq = &mut self.requests[id];
             rq.state = ReqState::Waiting;
+            rq.processed = shared;
             self.waiting.push(rq.queue_arrival, id);
             self.events.emit(id, || EngineEvent::Admitted { req: id, at: now });
+            if shared > 0 {
+                self.metrics.prefix_hits += 1;
+                self.events.emit(id, move || EngineEvent::PrefixHit {
+                    req: id,
+                    shared_tokens: shared,
+                    at: now,
+                });
+            }
         }
+    }
+
+    /// Attempt the admission-time prefix fork: alias `parent`'s aligned,
+    /// GPU-resident cached prefix into `child` (see
+    /// [`CacheManager::fork`]). Capped at one token short of the child's
+    /// current context so prefill always has at least one token left to
+    /// feed, and at the longest common token prefix — only textually
+    /// identical context is reusable KV. Returns the tokens shared (0 when
+    /// the parent no longer holds a usable prefix).
+    fn try_fork_prefix(&mut self, parent: ReqId, child: ReqId) -> usize {
+        if !self.cache.has_seq(parent) || self.cache.has_seq(child) {
+            return 0;
+        }
+        let pt = &self.requests[parent].tokens;
+        let ct = &self.requests[child].tokens;
+        let common = pt.iter().zip(ct.iter()).take_while(|(a, b)| a == b).count();
+        let upto = common.min(ct.len().saturating_sub(1));
+        self.cache.fork(parent, child, upto)
     }
 
     /// An interception resolved: append the returned tokens (client-supplied
@@ -598,12 +660,15 @@ impl Engine {
             .emit(req, || EngineEvent::Resumed { req, tokens: ret_len, at: now });
     }
 
-    /// Free a paused request's GPU context (keeping any CPU prefix).
+    /// Free a paused request's exclusive GPU context (keeping any CPU
+    /// prefix and any shared-prefix blocks — blocks other sequences alias
+    /// stay resident regardless, so "discarding" them would free nothing).
+    /// Mirrors the planner's Discard disposition arm exactly.
     fn discard_context(&mut self, req: ReqId) {
         let rq = &mut self.requests[req];
         rq.recompute_hwm = rq.recompute_hwm.max(rq.processed);
         rq.disposition = Disposition::Discarded;
-        if self.cache.cpu_blocks_of(req) > 0 {
+        if self.cache.cpu_blocks_of(req) > 0 || self.cache.shared_blocks_of(req) > 0 {
             let new_len = self.cache.discard_gpu_tail(req);
             self.requests[req].processed = new_len;
         } else {

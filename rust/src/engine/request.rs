@@ -199,6 +199,11 @@ pub struct Request {
     /// Armed while externally paused with a timeout in force: the
     /// engine-clock instant at which the interception expires.
     pub external_deadline: Option<Micros>,
+    /// Prefix-fork intent ([`crate::engine::Engine::adopt_prefix`]): at
+    /// admission this request aliases the named parent's cached prefix
+    /// instead of prefilling it. Consumed (taken) when the fork is
+    /// attempted; `None` for the default no-sharing path.
+    pub shared_prefix_parent: Option<ReqId>,
 
     /// Metrics.
     pub first_token_at: Option<Micros>,
@@ -232,6 +237,7 @@ impl Request {
             external_pause: false,
             external_timeout_us: None,
             external_deadline: None,
+            shared_prefix_parent: None,
             first_token_at: None,
             finished_at: None,
             intercepted_us: 0,

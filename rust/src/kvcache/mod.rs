@@ -37,9 +37,43 @@
 //! mutation: any new code path that touches a sequence or the free counts
 //! outside these mutators must mark the id, or delta capture silently
 //! diverges from full capture (the `capture_delta` fuzz pins this).
+//!
+//! # Refcounted blocks and copy-on-write sharing
+//!
+//! Physical blocks are *reference counted*: [`CacheManager::fork`] lets a
+//! child sequence alias the parent's aligned GPU-resident prefix instead of
+//! allocating its own copy (cross-session prefix sharing today, speculative
+//! branch-and-drop later). The invariants, all audited by
+//! [`CacheManager::check_conservation`]:
+//!
+//! * A sequence's aliased blocks are always a **leading GPU-resident
+//!   prefix** (`SeqCache::shared_blocks`), every one with refcount ≥ 2 and
+//!   held at the *same logical index* by every holder; blocks past the
+//!   shared prefix have refcount exactly 1. The residency layout is
+//!   `[shared GPU prefix][CPU run][exclusive GPU tail]`.
+//! * **Writes copy first**: the first [`CacheManager::grow`] whose target
+//!   extends past `len_tokens` while `len_tokens` still falls inside the
+//!   shared prefix copies the aliased range `[len/bs, shared)` into private
+//!   blocks (the CoW cost is part of the grow's OOM check);
+//!   [`CacheManager::advance`] asserts no write ever lands in a shared
+//!   block. `swap_out` and `discard_gpu_tail` never touch the shared
+//!   prefix — "freeing" a shared holder returns only its exclusive blocks.
+//! * **Physical frees happen at refcount zero**: `release` and CoW
+//!   decrement; the free lists hold exactly the refcount-0 blocks.
+//! * When a block's refcount drops 2 → 1 the surviving holder's shared
+//!   prefix shrinks, and the survivor is **marked dirty** so incremental
+//!   snapshot capture observes the promotion (the dirty-set invariant above
+//!   extends to aliasing transitions).
+//!
+//! Sharing is strictly opt-in: with no `fork` calls every refcount is 1 and
+//! every code path below reduces bit-for-bit to the exclusive-ownership
+//! behavior (pinned by the no-fork parity properties in this module and the
+//! scheduler-level bit-identity suites).
 
 pub mod slots;
 pub mod swap;
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -56,7 +90,11 @@ pub enum BlockLoc {
     Cpu(CpuSlot),
 }
 
-/// Free-list allocator over the two pools.
+/// Free-list allocator over the two pools, with per-block reference counts:
+/// a block may be aliased by several logical sequences (prefix sharing /
+/// copy-on-write forking) and returns to its free list only when the last
+/// reference drops. `alloc_*` hands blocks out at refcount 1, so code that
+/// never calls [`BlockAllocator::ref_gpu`] sees exact free-list semantics.
 #[derive(Debug, Clone)]
 pub struct BlockAllocator {
     block_size: usize,
@@ -64,6 +102,12 @@ pub struct BlockAllocator {
     num_cpu: usize,
     gpu_free: Vec<BlockId>,
     cpu_free: Vec<CpuSlot>,
+    /// Per-block reference counts (0 = on the free list).
+    gpu_ref: Vec<u32>,
+    cpu_ref: Vec<u32>,
+    /// GPU blocks currently aliased (refcount ≥ 2) — the physical-sharing
+    /// gauge behind [`CacheManager::shared_gpu_blocks`].
+    shared_gpu: usize,
 }
 
 impl BlockAllocator {
@@ -75,6 +119,9 @@ impl BlockAllocator {
             num_cpu,
             gpu_free: (0..num_gpu as BlockId).rev().collect(),
             cpu_free: (0..num_cpu as CpuSlot).rev().collect(),
+            gpu_ref: vec![0; num_gpu],
+            cpu_ref: vec![0; num_cpu],
+            shared_gpu: 0,
         }
     }
 
@@ -103,23 +150,76 @@ impl BlockAllocator {
     }
 
     pub fn alloc_gpu(&mut self) -> Option<BlockId> {
-        self.gpu_free.pop()
+        let id = self.gpu_free.pop()?;
+        debug_assert_eq!(self.gpu_ref[id as usize], 0, "free gpu block {id} had references");
+        self.gpu_ref[id as usize] = 1;
+        Some(id)
     }
 
     pub fn alloc_cpu(&mut self) -> Option<CpuSlot> {
-        self.cpu_free.pop()
+        let id = self.cpu_free.pop()?;
+        debug_assert_eq!(self.cpu_ref[id as usize], 0, "free cpu slot {id} had references");
+        self.cpu_ref[id as usize] = 1;
+        Some(id)
     }
 
-    pub fn free_gpu(&mut self, id: BlockId) {
-        debug_assert!(!self.gpu_free.contains(&id), "double free of gpu block {id}");
+    /// Take one more reference to an allocated GPU block (prefix sharing).
+    pub fn ref_gpu(&mut self, id: BlockId) {
         debug_assert!((id as usize) < self.num_gpu);
-        self.gpu_free.push(id);
+        debug_assert!(self.gpu_ref[id as usize] > 0, "ref of free gpu block {id}");
+        self.gpu_ref[id as usize] += 1;
+        if self.gpu_ref[id as usize] == 2 {
+            self.shared_gpu += 1;
+        }
     }
 
-    pub fn free_cpu(&mut self, id: CpuSlot) {
-        debug_assert!(!self.cpu_free.contains(&id), "double free of cpu slot {id}");
+    /// Take one more reference to an allocated CPU slot. Unused by the
+    /// prefix-sharing paths today (shared blocks stay GPU-resident) but part
+    /// of the refcount contract both pools honor.
+    pub fn ref_cpu(&mut self, id: CpuSlot) {
         debug_assert!((id as usize) < self.num_cpu);
-        self.cpu_free.push(id);
+        debug_assert!(self.cpu_ref[id as usize] > 0, "ref of free cpu slot {id}");
+        self.cpu_ref[id as usize] += 1;
+    }
+
+    /// Drop one reference to a GPU block; the block returns to the free list
+    /// only when the last reference drops. Returns the remaining refcount.
+    pub fn free_gpu(&mut self, id: BlockId) -> u32 {
+        debug_assert!((id as usize) < self.num_gpu);
+        debug_assert!(self.gpu_ref[id as usize] > 0, "free of unreferenced gpu block {id}");
+        self.gpu_ref[id as usize] -= 1;
+        let remaining = self.gpu_ref[id as usize];
+        match remaining {
+            0 => self.gpu_free.push(id),
+            1 => self.shared_gpu -= 1,
+            _ => {}
+        }
+        remaining
+    }
+
+    /// Drop one reference to a CPU slot (see [`BlockAllocator::free_gpu`]).
+    pub fn free_cpu(&mut self, id: CpuSlot) -> u32 {
+        debug_assert!((id as usize) < self.num_cpu);
+        debug_assert!(self.cpu_ref[id as usize] > 0, "free of unreferenced cpu slot {id}");
+        self.cpu_ref[id as usize] -= 1;
+        let remaining = self.cpu_ref[id as usize];
+        if remaining == 0 {
+            self.cpu_free.push(id);
+        }
+        remaining
+    }
+
+    pub fn gpu_refcount(&self, id: BlockId) -> u32 {
+        self.gpu_ref[id as usize]
+    }
+
+    pub fn cpu_refcount(&self, id: CpuSlot) -> u32 {
+        self.cpu_ref[id as usize]
+    }
+
+    /// GPU blocks with refcount ≥ 2 (aliased by more than one sequence).
+    pub fn shared_gpu_blocks(&self) -> usize {
+        self.shared_gpu
     }
 }
 
@@ -137,6 +237,10 @@ pub struct SeqCache {
     pub len_tokens: usize,
     /// How many of `blocks` are currently [`BlockLoc::Cpu`].
     cpu_resident: usize,
+    /// Leading blocks aliased with other sequences (refcount ≥ 2): always a
+    /// GPU-resident logical prefix. Writes into this range copy first (CoW
+    /// in [`CacheManager::grow`]); swap-out and tail-discard never touch it.
+    shared: usize,
 }
 
 impl SeqCache {
@@ -146,6 +250,11 @@ impl SeqCache {
 
     pub fn cpu_blocks(&self) -> usize {
         self.cpu_resident
+    }
+
+    /// Aliased leading blocks — see the module docs' sharing invariants.
+    pub fn shared_blocks(&self) -> usize {
+        self.shared
     }
 
     pub fn fully_on_gpu(&self) -> bool {
@@ -171,6 +280,14 @@ pub struct CacheManager {
     alloc: BlockAllocator,
     seqs: ReqSlots<SeqCache>,
     dirty: DirtySet,
+    /// Sequences aliasing each shared (refcount ≥ 2) GPU block. Maintained
+    /// only on the cold fork/unshare paths; empty when sharing is unused.
+    holders: HashMap<BlockId, Vec<ReqId>>,
+    /// Scratch: survivors of a 2 → 1 refcount transition awaiting a
+    /// shared-prefix recount (drained by `promote_survivors`).
+    promoted: Vec<ReqId>,
+    /// Cumulative copy-on-write block copies.
+    cow_copies: u64,
     /// Blocks the engine keeps free as headroom for in-flight decodes.
     pub watermark_blocks: usize,
 }
@@ -181,6 +298,9 @@ impl CacheManager {
             alloc: BlockAllocator::new(block_size, num_gpu, num_cpu),
             seqs: ReqSlots::new(),
             dirty: DirtySet::default(),
+            holders: HashMap::new(),
+            promoted: Vec::new(),
+            cow_copies: 0,
             watermark_blocks: 0,
         }
     }
@@ -246,25 +366,75 @@ impl CacheManager {
         need.saturating_sub(have)
     }
 
+    /// Copy-on-write blocks a grow to `target_tokens` must privatize first:
+    /// the aliased range `[len/bs, shared)` whenever the grow will write
+    /// tokens that land inside the shared prefix. Zero when sharing is
+    /// unused or the valid length already covers the whole shared prefix.
+    fn cow_blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
+        let bs = self.alloc.block_size();
+        self.seqs
+            .get(req)
+            .map(|s| {
+                if target_tokens > s.len_tokens {
+                    s.shared.saturating_sub(s.len_tokens / bs)
+                } else {
+                    0
+                }
+            })
+            .unwrap_or(0)
+    }
+
     /// Can we grow `req` to `target_tokens` while keeping the watermark?
+    /// Includes any copy-on-write blocks the grow would have to privatize.
     pub fn can_grow(&self, req: ReqId, target_tokens: usize) -> bool {
-        self.blocks_needed(req, target_tokens) + self.watermark_blocks
+        self.blocks_needed(req, target_tokens)
+            + self.cow_blocks_needed(req, target_tokens)
+            + self.watermark_blocks
             <= self.alloc.gpu_free_count()
     }
 
     /// Grow `req`'s cache so blocks cover `target_tokens` tokens (valid token
     /// count is NOT advanced; call [`CacheManager::advance`] after the
     /// forward pass writes the KV).
+    ///
+    /// When the grow's write range overlaps the shared prefix, the aliased
+    /// blocks `[len/bs, shared)` are first copied into private ones (CoW):
+    /// the copies count against the same OOM check, the old blocks lose one
+    /// reference (never a physical free — another holder exists), and this
+    /// sequence's shared prefix shrinks to the untouched part. The backend's
+    /// data copy for CoW blocks is implicit in the block-table change, like
+    /// every other mapping update here.
     pub fn grow(&mut self, req: ReqId, target_tokens: usize) -> Result<()> {
+        let bs = self.alloc.block_size();
         let need = self.blocks_needed(req, target_tokens);
-        if need + self.watermark_blocks > self.alloc.gpu_free_count() {
+        let cow = self.cow_blocks_needed(req, target_tokens);
+        if need + cow + self.watermark_blocks > self.alloc.gpu_free_count() {
             bail!(
-                "OOM: need {need} blocks (+{} watermark), {} free",
+                "OOM: need {} blocks (+{} watermark), {} free",
+                need + cow,
                 self.watermark_blocks,
                 self.alloc.gpu_free_count()
             );
         }
         self.dirty.mark(req);
+        if cow > 0 {
+            let seq = self.seqs.get_mut(req).expect("CoW on unknown seq");
+            let first_write = seq.len_tokens / bs;
+            debug_assert_eq!(seq.shared - first_write, cow);
+            for i in first_write..seq.shared {
+                let BlockLoc::Gpu(old) = seq.blocks[i] else {
+                    panic!("shared prefix off GPU in req {req}");
+                };
+                let fresh = self.alloc.alloc_gpu().expect("checked above");
+                seq.blocks[i] = BlockLoc::Gpu(fresh);
+                let remaining = self.alloc.free_gpu(old);
+                debug_assert!(remaining >= 1, "CoW of an exclusive block");
+                drop_holder(&mut self.holders, &mut self.promoted, req, old, remaining);
+            }
+            seq.shared = first_write;
+            self.cow_copies += cow as u64;
+            self.promote_survivors();
+        }
         let seq = self.seqs.get_or_default(req);
         for _ in 0..need {
             let b = self.alloc.alloc_gpu().expect("checked above");
@@ -278,6 +448,10 @@ impl CacheManager {
         let bs = self.alloc.block_size();
         self.dirty.mark(req);
         let seq = self.seqs.get_mut(req).expect("advance on unknown seq");
+        debug_assert!(
+            n == 0 || seq.len_tokens >= seq.shared * bs,
+            "write into shared prefix without CoW (req {req})"
+        );
         seq.len_tokens += n;
         assert!(
             seq.len_tokens <= seq.blocks.len() * bs,
@@ -296,34 +470,120 @@ impl CacheManager {
         seq.len_tokens = len;
     }
 
-    /// Free everything the request holds (GPU and CPU) — Discard, or request
-    /// completion. Leaves a tombstone in the slab: the id reads as "no
-    /// sequence" from then on.
-    pub fn release(&mut self, req: ReqId) {
-        self.dirty.mark(req);
-        if let Some(seq) = self.seqs.remove(req) {
-            for b in seq.blocks {
-                match b {
-                    BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
-                    BlockLoc::Cpu(id) => self.alloc.free_cpu(id),
+    /// Fork `child` from `parent`, sharing the longest aligned GPU-resident
+    /// leading run of `parent`'s valid blocks that covers at most
+    /// `upto_tokens` tokens. The shared blocks gain a reference each (no
+    /// allocation, no copy); the child starts with `len_tokens` equal to the
+    /// shared token count and a fully shared block table. Returns the shared
+    /// token count — 0 means nothing was shareable (unaligned, swapped, or
+    /// empty prefix) and **no child sequence was created**.
+    ///
+    /// This is the branch primitive: cross-session prefix sharing forks a
+    /// new session from a cached prompt holder; speculative continuation
+    /// will fork a branch and drop it O(1) via [`CacheManager::release`].
+    pub fn fork(&mut self, parent: ReqId, child: ReqId, upto_tokens: usize) -> usize {
+        assert_ne!(parent, child, "fork onto self");
+        assert!(!self.seqs.contains(child), "fork onto existing seq {child}");
+        let bs = self.alloc.block_size();
+        let Some(pseq) = self.seqs.get(parent) else {
+            return 0;
+        };
+        let gpu_run =
+            pseq.blocks.iter().take_while(|b| matches!(b, BlockLoc::Gpu(_))).count();
+        let n = (upto_tokens / bs).min(pseq.len_tokens / bs).min(gpu_run);
+        if n == 0 {
+            return 0;
+        }
+        let blocks: Vec<BlockLoc> = pseq.blocks[..n].to_vec();
+        for b in &blocks {
+            let BlockLoc::Gpu(g) = *b else { unreachable!("leading run is GPU") };
+            let first_alias = self.alloc.gpu_refcount(g) == 1;
+            self.alloc.ref_gpu(g);
+            let hs = self.holders.entry(g).or_default();
+            if first_alias {
+                hs.push(parent);
+            }
+            debug_assert!(hs.contains(&parent), "holder list missing owner of block {g}");
+            hs.push(child);
+        }
+        let p = self.seqs.get_mut(parent).expect("parent checked above");
+        p.shared = p.shared.max(n);
+        self.dirty.mark(parent);
+        self.seqs.insert(
+            child,
+            SeqCache { blocks, len_tokens: n * bs, cpu_resident: 0, shared: n },
+        );
+        self.dirty.mark(child);
+        n * bs
+    }
+
+    /// Recount the shared prefix of every sequence whose aliased block just
+    /// dropped to refcount 1 (queued in `promoted` by `drop_holder`), and
+    /// mark it dirty on change — the aliasing-transition half of the
+    /// dirty-set invariant.
+    fn promote_survivors(&mut self) {
+        while let Some(r) = self.promoted.pop() {
+            let Some(seq) = self.seqs.get(r) else {
+                continue;
+            };
+            let old = seq.shared;
+            let mut shared = 0;
+            while shared < old {
+                match seq.blocks[shared] {
+                    BlockLoc::Gpu(b) if self.alloc.gpu_refcount(b) >= 2 => shared += 1,
+                    _ => break,
                 }
+            }
+            if shared != old {
+                self.seqs.get_mut(r).expect("checked above").shared = shared;
+                self.dirty.mark(r);
             }
         }
     }
 
+    /// Free everything the request holds (GPU and CPU) — Discard, request
+    /// completion, or dropping a speculative branch. Shared blocks lose one
+    /// reference (physical free only at refcount zero); exclusive blocks
+    /// return to the free lists. Leaves a tombstone in the slab: the id
+    /// reads as "no sequence" from then on.
+    pub fn release(&mut self, req: ReqId) {
+        self.dirty.mark(req);
+        if let Some(seq) = self.seqs.remove(req) {
+            let shared = seq.shared;
+            for (i, b) in seq.blocks.into_iter().enumerate() {
+                match b {
+                    BlockLoc::Gpu(id) => {
+                        let remaining = self.alloc.free_gpu(id);
+                        if i < shared {
+                            drop_holder(&mut self.holders, &mut self.promoted, req, id, remaining);
+                        } else {
+                            debug_assert_eq!(remaining, 0, "exclusive block {id} still referenced");
+                        }
+                    }
+                    BlockLoc::Cpu(id) => {
+                        self.alloc.free_cpu(id);
+                    }
+                }
+            }
+            self.promote_survivors();
+        }
+    }
+
     /// Plan swapping OUT up to `max_blocks` GPU-resident blocks of `req`,
-    /// **front-first**: the CPU-resident part is always a logical *prefix*,
-    /// so if the swap budget runs dry mid-request the GPU tail can be
-    /// discarded and later recomputed on top of the swapped-in prefix
-    /// (InferCept's hybrid restore). Returns the moves; the mapping is
-    /// updated immediately, the backend copies data this iteration.
+    /// **front-first**: the CPU-resident part is always a logical *prefix*
+    /// (of the exclusive range — the shared prefix never moves, it costs
+    /// this holder no memory), so if the swap budget runs dry mid-request
+    /// the GPU tail can be discarded and later recomputed on top of the
+    /// swapped-in prefix (InferCept's hybrid restore). Returns the moves;
+    /// the mapping is updated immediately, the backend copies data this
+    /// iteration.
     pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> Vec<BlockMove> {
         let Some(seq) = self.seqs.get_mut(req) else {
             return vec![];
         };
         self.dirty.mark(req);
         let mut moves = Vec::new();
-        for i in 0..seq.blocks.len() {
+        for i in seq.shared..seq.blocks.len() {
             if moves.len() >= max_blocks {
                 break;
             }
@@ -340,29 +600,35 @@ impl CacheManager {
         moves
     }
 
-    /// Discard the GPU-resident tail of a partially swapped request: free
-    /// the GPU blocks after the CPU prefix and truncate the valid length to
-    /// the prefix. Returns the new valid token count. Panics if a GPU block
-    /// precedes a CPU block (swap_out is front-first, so this cannot occur).
+    /// Discard the exclusive GPU-resident tail of a request: free the GPU
+    /// blocks after the `[shared GPU prefix][CPU run]` and truncate the
+    /// valid length to what survives. The shared prefix is kept — it costs
+    /// this holder no memory ("freeing" a shared holder only returns its
+    /// exclusive blocks) and spares recompute on restore. Returns the new
+    /// valid token count. Panics if a CPU block follows a GPU block past
+    /// the shared prefix (swap_out is front-first, so this cannot occur).
     pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
         let bs = self.alloc.block_size();
         let Some(seq) = self.seqs.get_mut(req) else {
             return 0;
         };
         self.dirty.mark(req);
-        let prefix = seq
-            .blocks
-            .iter()
-            .position(|b| matches!(b, BlockLoc::Gpu(_)))
-            .unwrap_or(seq.blocks.len());
-        debug_assert_eq!(prefix, seq.cpu_resident, "CPU prefix / counter divergence");
-        for b in seq.blocks.drain(prefix..) {
+        let keep = seq.shared + seq.cpu_resident;
+        debug_assert!(
+            seq.blocks[..seq.shared].iter().all(|b| matches!(b, BlockLoc::Gpu(_)))
+                && seq.blocks[seq.shared..keep].iter().all(|b| matches!(b, BlockLoc::Cpu(_))),
+            "residency layout violated in req {req}"
+        );
+        for b in seq.blocks.drain(keep..) {
             match b {
-                BlockLoc::Gpu(id) => self.alloc.free_gpu(id),
+                BlockLoc::Gpu(id) => {
+                    let remaining = self.alloc.free_gpu(id);
+                    debug_assert_eq!(remaining, 0, "exclusive tail block {id} still referenced");
+                }
                 BlockLoc::Cpu(_) => panic!("CPU block after GPU block in req {req}"),
             }
         }
-        seq.len_tokens = seq.len_tokens.min(prefix * bs);
+        seq.len_tokens = seq.len_tokens.min(keep * bs);
         seq.len_tokens
     }
 
@@ -431,6 +697,28 @@ impl CacheManager {
         self.seqs.get(req).map(|s| s.len_tokens).unwrap_or(0)
     }
 
+    /// Leading blocks of `req` aliased with other sequences. O(1).
+    pub fn shared_blocks_of(&self, req: ReqId) -> usize {
+        self.seqs.get(req).map(|s| s.shared).unwrap_or(0)
+    }
+
+    /// Valid tokens of `req` living in shared (aliased) blocks.
+    pub fn shared_tokens_of(&self, req: ReqId) -> usize {
+        let bs = self.alloc.block_size();
+        self.seqs.get(req).map(|s| s.len_tokens.min(s.shared * bs)).unwrap_or(0)
+    }
+
+    /// Cumulative copy-on-write block copies since construction.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// GPU blocks currently aliased by ≥ 2 sequences (physical sharing
+    /// gauge).
+    pub fn shared_gpu_blocks(&self) -> usize {
+        self.alloc.shared_gpu_blocks()
+    }
+
     /// Capture a side-effect-free [`CacheSnapshot`] into `out` (buffers are
     /// reused across calls — no steady-state allocation). The snapshot is
     /// what the scheduling planner plans against: it answers the same
@@ -449,6 +737,7 @@ impl CacheManager {
             blocks: s.blocks.len(),
             cpu_blocks: s.cpu_resident,
             len_tokens: s.len_tokens,
+            shared: s.shared,
         });
     }
 
@@ -480,6 +769,7 @@ impl CacheManager {
                             blocks: s.blocks.len(),
                             cpu_blocks: s.cpu_resident,
                             len_tokens: s.len_tokens,
+                            shared: s.shared,
                         },
                     );
                 }
@@ -502,26 +792,40 @@ impl CacheManager {
         self.dirty.compact_below(lo);
     }
 
-    /// Invariant check used by tests: every block id appears exactly once
-    /// across free lists and sequence tables, and every sequence's
-    /// incrementally maintained residency counter matches its block list.
+    /// Invariant check used by tests: physical-vs-logical block accounting
+    /// under sharing. For every block, the number of logical occurrences
+    /// across all sequence tables equals the allocator refcount, and the
+    /// free lists hold exactly the refcount-0 blocks (each once). Per
+    /// sequence: the residency counter matches the block list, the shared
+    /// prefix is a GPU-resident leading run of refcount-≥2 blocks, and
+    /// everything past it is exclusive (refcount 1). The holders map and
+    /// the `shared_gpu` gauge are audited against a full rescan.
     pub fn check_conservation(&self) -> Result<()> {
-        let mut gpu_seen = vec![0u32; self.alloc.num_gpu()];
-        let mut cpu_seen = vec![0u32; self.alloc.num_cpu()];
-        for id in &self.alloc.gpu_free {
-            gpu_seen[*id as usize] += 1;
-        }
-        for id in &self.alloc.cpu_free {
-            cpu_seen[*id as usize] += 1;
-        }
+        let mut gpu_refs = vec![0u32; self.alloc.num_gpu()];
+        let mut cpu_refs = vec![0u32; self.alloc.num_cpu()];
+        let mut gpu_holders: HashMap<BlockId, Vec<ReqId>> = HashMap::new();
         for (req, seq) in self.seqs.iter() {
             let mut cpu = 0usize;
-            for b in &seq.blocks {
+            for (i, b) in seq.blocks.iter().enumerate() {
                 match b {
-                    BlockLoc::Gpu(id) => gpu_seen[*id as usize] += 1,
+                    BlockLoc::Gpu(id) => {
+                        gpu_refs[*id as usize] += 1;
+                        let rc = self.alloc.gpu_refcount(*id);
+                        if i < seq.shared {
+                            if rc < 2 {
+                                bail!("req {req}: shared block {id} at {i} has refcount {rc}");
+                            }
+                            gpu_holders.entry(*id).or_default().push(req);
+                        } else if rc != 1 {
+                            bail!("req {req}: exclusive block {id} at {i} has refcount {rc}");
+                        }
+                    }
                     BlockLoc::Cpu(id) => {
+                        if i < seq.shared {
+                            bail!("req {req}: shared prefix block {i} is CPU-resident");
+                        }
                         cpu += 1;
-                        cpu_seen[*id as usize] += 1;
+                        cpu_refs[*id as usize] += 1;
                     }
                 }
             }
@@ -529,13 +833,86 @@ impl CacheManager {
                 bail!("req {req}: cpu_resident counter {} != {cpu} actual", seq.cpu_resident);
             }
         }
-        if let Some(i) = gpu_seen.iter().position(|&c| c != 1) {
-            bail!("gpu block {i} appears {} times", gpu_seen[i]);
+        let mut gpu_free_seen = vec![false; self.alloc.num_gpu()];
+        for id in &self.alloc.gpu_free {
+            if std::mem::replace(&mut gpu_free_seen[*id as usize], true) {
+                bail!("gpu block {id} on the free list twice");
+            }
         }
-        if let Some(i) = cpu_seen.iter().position(|&c| c != 1) {
-            bail!("cpu slot {i} appears {} times", cpu_seen[i]);
+        let mut cpu_free_seen = vec![false; self.alloc.num_cpu()];
+        for id in &self.alloc.cpu_free {
+            if std::mem::replace(&mut cpu_free_seen[*id as usize], true) {
+                bail!("cpu slot {id} on the free list twice");
+            }
+        }
+        let mut shared = 0usize;
+        for i in 0..self.alloc.num_gpu() {
+            let rc = self.alloc.gpu_ref[i];
+            if gpu_refs[i] != rc {
+                bail!("gpu block {i}: {} logical holders, refcount {rc}", gpu_refs[i]);
+            }
+            if (rc == 0) != gpu_free_seen[i] {
+                bail!("gpu block {i}: refcount {rc} vs free-list membership {}", gpu_free_seen[i]);
+            }
+            if rc >= 2 {
+                shared += 1;
+                let Some(hs) = self.holders.get(&(i as BlockId)) else {
+                    bail!("shared gpu block {i} missing from the holders map");
+                };
+                let mut expect = gpu_holders.remove(&(i as BlockId)).unwrap_or_default();
+                let mut got = hs.clone();
+                expect.sort_unstable();
+                got.sort_unstable();
+                if got != expect {
+                    bail!("gpu block {i}: holders map {got:?} != sequence scan {expect:?}");
+                }
+            }
+        }
+        for id in self.holders.keys() {
+            if self.alloc.gpu_ref[*id as usize] < 2 {
+                bail!("holders map entry for unshared gpu block {id}");
+            }
+        }
+        if shared != self.alloc.shared_gpu {
+            bail!("shared_gpu gauge {} != {shared} actual", self.alloc.shared_gpu);
+        }
+        for i in 0..self.alloc.num_cpu() {
+            let rc = self.alloc.cpu_ref[i];
+            if cpu_refs[i] != rc {
+                bail!("cpu slot {i}: {} logical holders, refcount {rc}", cpu_refs[i]);
+            }
+            if (rc == 0) != cpu_free_seen[i] {
+                bail!("cpu slot {i}: refcount {rc} vs free-list membership {}", cpu_free_seen[i]);
+            }
         }
         Ok(())
+    }
+}
+
+/// Remove `req` from the holder list of `block` after its refcount dropped
+/// (free function so `CacheManager::grow`'s CoW loop can hold disjoint
+/// borrows of `seqs`, `alloc`, and the holder state simultaneously). When
+/// the drop was a 2 → 1 transition, queue the surviving holder for a
+/// shared-prefix recount and retire the map entry.
+fn drop_holder(
+    holders: &mut HashMap<BlockId, Vec<ReqId>>,
+    promoted: &mut Vec<ReqId>,
+    req: ReqId,
+    block: BlockId,
+    remaining: u32,
+) {
+    let Some(hs) = holders.get_mut(&block) else {
+        debug_assert_eq!(remaining, 0, "untracked block {block} still referenced");
+        return;
+    };
+    hs.retain(|&r| r != req);
+    debug_assert_eq!(hs.len(), remaining as usize, "holder list / refcount divergence");
+    if remaining == 1 {
+        let survivor = hs[0];
+        promoted.push(survivor);
+        holders.remove(&block);
+    } else if remaining == 0 {
+        holders.remove(&block);
     }
 }
 
@@ -553,6 +930,10 @@ pub struct SeqSnapshot {
     pub cpu_blocks: usize,
     /// Valid tokens.
     pub len_tokens: usize,
+    /// Leading blocks aliased with other sequences (GPU-resident, refcount
+    /// ≥ 2). Releasing or discarding this holder frees only
+    /// `blocks − cpu_blocks − shared` physical GPU blocks.
+    pub shared: usize,
 }
 
 /// A pure ledger over the allocator + sequence tables: every feasibility
@@ -618,7 +999,22 @@ impl CacheSnapshot {
     /// Install or overwrite a sequence entry (test construction).
     pub fn set_seq(&mut self, req: ReqId, blocks: usize, cpu_blocks: usize, len_tokens: usize) {
         debug_assert!(cpu_blocks <= blocks && len_tokens <= blocks * self.block_size);
-        self.seqs.insert(req, SeqSnapshot { blocks, cpu_blocks, len_tokens });
+        self.seqs.insert(req, SeqSnapshot { blocks, cpu_blocks, len_tokens, shared: 0 });
+    }
+
+    /// [`CacheSnapshot::set_seq`] with an explicit shared-prefix block
+    /// count (test construction of aliased layouts).
+    pub fn set_seq_shared(
+        &mut self,
+        req: ReqId,
+        blocks: usize,
+        cpu_blocks: usize,
+        len_tokens: usize,
+        shared: usize,
+    ) {
+        debug_assert!(cpu_blocks <= blocks && len_tokens <= blocks * self.block_size);
+        debug_assert!(shared + cpu_blocks <= blocks, "shared prefix overlaps CPU run");
+        self.seqs.insert(req, SeqSnapshot { blocks, cpu_blocks, len_tokens, shared });
     }
 
     pub fn block_size(&self) -> usize {
@@ -657,14 +1053,35 @@ impl CacheSnapshot {
     }
 
     /// Valid tokens held in GPU blocks. Exact for the layouts the planner
-    /// consults (paused requests have a CPU-*prefix* layout because swap-out
-    /// is front-first; running/waiting requests hold no CPU blocks), where
-    /// it equals `len − min(len, cpu_blocks·bs)`.
+    /// consults (`[shared GPU prefix][CPU run][exclusive GPU tail]` — the
+    /// CPU run sits right after the shared prefix because swap-out is
+    /// front-first over the exclusive range; running/waiting requests hold
+    /// no CPU blocks), where it equals `len` minus the tokens covered by
+    /// the CPU run. Reduces to `len − min(len, cpu_blocks·bs)` at
+    /// `shared = 0`.
     pub fn gpu_tokens_of(&self, req: ReqId) -> usize {
         self.seqs
             .get(req)
-            .map(|s| s.len_tokens - s.len_tokens.min(s.cpu_blocks * self.block_size))
+            .map(|s| {
+                let cpu_run = s.len_tokens.min((s.shared + s.cpu_blocks) * self.block_size)
+                    - s.len_tokens.min(s.shared * self.block_size);
+                s.len_tokens - cpu_run
+            })
             .unwrap_or(0)
+    }
+
+    /// Valid tokens living in shared (aliased) blocks — the part of a
+    /// holder's context whose memory is not attributable to it alone.
+    pub fn shared_tokens_of(&self, req: ReqId) -> usize {
+        self.seqs
+            .get(req)
+            .map(|s| s.len_tokens.min(s.shared * self.block_size))
+            .unwrap_or(0)
+    }
+
+    /// Shared-prefix block count of `req` (0 when absent).
+    pub fn shared_blocks_of(&self, req: ReqId) -> usize {
+        self.seqs.get(req).map(|s| s.shared).unwrap_or(0)
     }
 
     /// New GPU blocks needed to cover `target_tokens` (mirror of
@@ -674,55 +1091,116 @@ impl CacheSnapshot {
         target_tokens.div_ceil(self.block_size).saturating_sub(have)
     }
 
-    /// Mirror of [`CacheManager::can_grow`], including the watermark.
-    pub fn can_grow(&self, req: ReqId, target_tokens: usize) -> bool {
-        self.blocks_needed(req, target_tokens) + self.watermark_blocks <= self.gpu_free
+    /// Copy-on-write blocks a grow to `target_tokens` must privatize
+    /// (mirror of the manager's `cow_blocks_needed`).
+    fn cow_blocks_needed(&self, req: ReqId, target_tokens: usize) -> usize {
+        self.seqs
+            .get(req)
+            .map(|s| {
+                if target_tokens > s.len_tokens {
+                    s.shared.saturating_sub(s.len_tokens / self.block_size)
+                } else {
+                    0
+                }
+            })
+            .unwrap_or(0)
     }
 
-    /// Reserve the growth in the ledger. Callers must check `can_grow`
-    /// first; over-committing is a planner bug and panics.
+    /// Mirror of [`CacheManager::can_grow`], including the watermark and
+    /// any copy-on-write blocks the grow would privatize.
+    pub fn can_grow(&self, req: ReqId, target_tokens: usize) -> bool {
+        self.blocks_needed(req, target_tokens)
+            + self.cow_blocks_needed(req, target_tokens)
+            + self.watermark_blocks
+            <= self.gpu_free
+    }
+
+    /// Reserve the growth in the ledger, including copy-on-write
+    /// privatization of a still-shared write range (the CoW copies consume
+    /// free blocks without changing the holder's block count — the aliased
+    /// originals stay with the other holders). Callers must check
+    /// `can_grow` first; over-committing is a planner bug and panics.
     pub fn reserve_grow(&mut self, req: ReqId, target_tokens: usize) {
         let need = self.blocks_needed(req, target_tokens);
+        let cow = self.cow_blocks_needed(req, target_tokens);
         assert!(
-            need + self.watermark_blocks <= self.gpu_free,
-            "plan over-commits GPU blocks: req {req} needs {need}, {} free",
+            need + cow + self.watermark_blocks <= self.gpu_free,
+            "plan over-commits GPU blocks: req {req} needs {}, {} free",
+            need + cow,
             self.gpu_free
         );
-        self.gpu_free -= need;
-        self.seqs.get_or_default(req).blocks += need;
+        self.gpu_free -= need + cow;
+        let bs = self.block_size;
+        let s = self.seqs.get_or_default(req);
+        s.blocks += need;
+        if cow > 0 {
+            s.shared = s.len_tokens / bs;
+        }
     }
 
-    /// Mirror of [`CacheManager::release`].
+    /// Mirror of [`CacheManager::release`]: only the exclusive blocks come
+    /// back (shared-prefix blocks survive with their other holders).
     pub fn release(&mut self, req: ReqId) {
         if let Some(s) = self.seqs.remove(req) {
-            self.gpu_free += s.blocks - s.cpu_blocks;
+            self.gpu_free += s.blocks - s.cpu_blocks - s.shared;
             self.cpu_free += s.cpu_blocks;
         }
     }
 
-    /// Mirror of [`CacheManager::discard_gpu_tail`]: free the GPU blocks,
-    /// keep the CPU prefix, return the new valid length.
+    /// Mirror of [`CacheManager::discard_gpu_tail`]: free the exclusive
+    /// GPU tail, keep the shared prefix and the CPU run, return the new
+    /// valid length.
     pub fn discard_gpu_tail(&mut self, req: ReqId) -> usize {
         let Some(s) = self.seqs.get_mut(req) else {
             return 0;
         };
-        self.gpu_free += s.blocks - s.cpu_blocks;
-        s.blocks = s.cpu_blocks;
-        s.len_tokens = s.len_tokens.min(s.cpu_blocks * self.block_size);
+        self.gpu_free += s.blocks - s.cpu_blocks - s.shared;
+        s.blocks = s.shared + s.cpu_blocks;
+        s.len_tokens = s.len_tokens.min(s.blocks * self.block_size);
         s.len_tokens
     }
 
     /// Mirror of [`CacheManager::swap_out`] at count level: moves
-    /// `min(max_blocks, gpu_blocks, cpu_free)` blocks; returns the count.
+    /// `min(max_blocks, exclusive gpu_blocks, cpu_free)` blocks (the
+    /// shared prefix never moves); returns the count.
     pub fn swap_out(&mut self, req: ReqId, max_blocks: usize) -> usize {
         let Some(s) = self.seqs.get_mut(req) else {
             return 0;
         };
-        let n = max_blocks.min(s.blocks - s.cpu_blocks).min(self.cpu_free);
+        let n = max_blocks.min(s.blocks - s.cpu_blocks - s.shared).min(self.cpu_free);
         s.cpu_blocks += n;
         self.gpu_free += n;
         self.cpu_free -= n;
         n
+    }
+
+    /// Count-level mirror of [`CacheManager::fork`]: the child appears with
+    /// a fully shared table of `n` blocks, the parent's shared prefix
+    /// extends to cover them, and **no free blocks are consumed**. The
+    /// shareable run is `min(upto/bs, len/bs, GPU-resident leading run)`;
+    /// like [`CacheSnapshot::gpu_tokens_of`], the leading-run term is exact
+    /// for the layouts the planner consults (a holder with CPU blocks has
+    /// them right after its shared prefix, so the run is `shared` when any
+    /// CPU blocks exist, else all `blocks`). Returns the shared token
+    /// count; 0 means no child entry was created.
+    pub fn fork(&mut self, parent: ReqId, child: ReqId, upto_tokens: usize) -> usize {
+        debug_assert_ne!(parent, child, "fork onto self");
+        debug_assert!(self.seqs.get(child).is_none(), "fork onto existing seq {child}");
+        let Some(p) = self.seqs.get(parent).copied() else {
+            return 0;
+        };
+        let gpu_run = if p.cpu_blocks == 0 { p.blocks } else { p.shared };
+        let n = (upto_tokens / self.block_size).min(p.len_tokens / self.block_size).min(gpu_run);
+        if n == 0 {
+            return 0;
+        }
+        let bs = self.block_size;
+        self.seqs.get_mut(parent).expect("parent checked above").shared = p.shared.max(n);
+        self.seqs.insert(
+            child,
+            SeqSnapshot { blocks: n, cpu_blocks: 0, len_tokens: n * bs, shared: n },
+        );
+        n * bs
     }
 
     /// Mirror of [`CacheManager::swap_in`] at count level (note: like the
@@ -799,8 +1277,24 @@ impl CacheOverlay {
     /// Mirror of [`CacheSnapshot::gpu_tokens_of`].
     pub fn gpu_tokens_of(&self, base: &CacheSnapshot, req: ReqId) -> usize {
         self.seq_at(base, req)
-            .map(|s| s.len_tokens - s.len_tokens.min(s.cpu_blocks * base.block_size))
+            .map(|s| {
+                let cpu_run = s.len_tokens.min((s.shared + s.cpu_blocks) * base.block_size)
+                    - s.len_tokens.min(s.shared * base.block_size);
+                s.len_tokens - cpu_run
+            })
             .unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheSnapshot::shared_tokens_of`].
+    pub fn shared_tokens_of(&self, base: &CacheSnapshot, req: ReqId) -> usize {
+        self.seq_at(base, req)
+            .map(|s| s.len_tokens.min(s.shared * base.block_size))
+            .unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheSnapshot::shared_blocks_of`].
+    pub fn shared_blocks_of(&self, base: &CacheSnapshot, req: ReqId) -> usize {
+        self.seq_at(base, req).map(|s| s.shared).unwrap_or(0)
     }
 
     /// Mirror of [`CacheSnapshot::blocks_needed`].
@@ -809,29 +1303,51 @@ impl CacheOverlay {
         target_tokens.div_ceil(base.block_size).saturating_sub(have)
     }
 
-    /// Mirror of [`CacheSnapshot::can_grow`], including the watermark.
+    /// Mirror of the snapshot's `cow_blocks_needed`.
+    fn cow_blocks_needed(&self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) -> usize {
+        self.seq_at(base, req)
+            .map(|s| {
+                if target_tokens > s.len_tokens {
+                    s.shared.saturating_sub(s.len_tokens / base.block_size)
+                } else {
+                    0
+                }
+            })
+            .unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheSnapshot::can_grow`], including the watermark and
+    /// copy-on-write blocks.
     pub fn can_grow(&self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) -> bool {
-        self.blocks_needed(base, req, target_tokens) + base.watermark_blocks <= self.gpu_free
+        self.blocks_needed(base, req, target_tokens)
+            + self.cow_blocks_needed(base, req, target_tokens)
+            + base.watermark_blocks
+            <= self.gpu_free
     }
 
     /// Mirror of [`CacheSnapshot::reserve_grow`].
     pub fn reserve_grow(&mut self, base: &CacheSnapshot, req: ReqId, target_tokens: usize) {
         let need = self.blocks_needed(base, req, target_tokens);
+        let cow = self.cow_blocks_needed(base, req, target_tokens);
         assert!(
-            need + base.watermark_blocks <= self.gpu_free,
-            "plan over-commits GPU blocks: req {req} needs {need}, {} free",
+            need + cow + base.watermark_blocks <= self.gpu_free,
+            "plan over-commits GPU blocks: req {req} needs {}, {} free",
+            need + cow,
             self.gpu_free
         );
-        self.gpu_free -= need;
+        self.gpu_free -= need + cow;
         let mut s = self.seq_at(base, req).unwrap_or_default();
         s.blocks += need;
+        if cow > 0 {
+            s.shared = s.len_tokens / base.block_size;
+        }
         self.seqs.set(req, Some(s));
     }
 
-    /// Mirror of [`CacheSnapshot::release`].
+    /// Mirror of [`CacheSnapshot::release`]: only exclusive blocks return.
     pub fn release(&mut self, base: &CacheSnapshot, req: ReqId) {
         if let Some(s) = self.seq_at(base, req) {
-            self.gpu_free += s.blocks - s.cpu_blocks;
+            self.gpu_free += s.blocks - s.cpu_blocks - s.shared;
             self.cpu_free += s.cpu_blocks;
         }
         self.seqs.set(req, None);
@@ -842,9 +1358,9 @@ impl CacheOverlay {
         let Some(mut s) = self.seq_at(base, req) else {
             return 0;
         };
-        self.gpu_free += s.blocks - s.cpu_blocks;
-        s.blocks = s.cpu_blocks;
-        s.len_tokens = s.len_tokens.min(s.cpu_blocks * base.block_size);
+        self.gpu_free += s.blocks - s.cpu_blocks - s.shared;
+        s.blocks = s.shared + s.cpu_blocks;
+        s.len_tokens = s.len_tokens.min(s.blocks * base.block_size);
         let len = s.len_tokens;
         self.seqs.set(req, Some(s));
         len
@@ -855,7 +1371,7 @@ impl CacheOverlay {
         let Some(mut s) = self.seq_at(base, req) else {
             return 0;
         };
-        let n = max_blocks.min(s.blocks - s.cpu_blocks).min(self.cpu_free);
+        let n = max_blocks.min(s.blocks - s.cpu_blocks - s.shared).min(self.cpu_free);
         s.cpu_blocks += n;
         self.gpu_free += n;
         self.cpu_free -= n;
@@ -1061,6 +1577,231 @@ mod tests {
     }
 
     #[test]
+    fn fork_shares_aligned_gpu_prefix() {
+        let mut m = mgr();
+        m.grow(1, 48).unwrap(); // 3 blocks
+        m.advance(1, 48);
+        let free_before = m.gpu_free();
+        let shared = m.fork(1, 2, 100);
+        assert_eq!(shared, 48); // whole aligned prefix
+        assert_eq!(m.gpu_free(), free_before); // no allocation
+        assert_eq!(m.seq(2).unwrap().blocks, m.seq(1).unwrap().blocks);
+        assert_eq!(m.len_tokens(2), 48);
+        assert_eq!(m.shared_blocks_of(1), 3);
+        assert_eq!(m.shared_blocks_of(2), 3);
+        assert_eq!(m.shared_gpu_blocks(), 3);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn fork_truncates_to_block_alignment_and_needs_gpu_residency() {
+        let mut m = mgr();
+        m.grow(1, 40).unwrap(); // 3 blocks, 2 full
+        m.advance(1, 40);
+        assert_eq!(m.fork(1, 2, 100), 32); // only the full blocks share
+        assert_eq!(m.shared_blocks_of(2), 2);
+        m.check_conservation().unwrap();
+        // a swapped-out parent has no GPU-resident leading run to share
+        m.grow(3, 32).unwrap();
+        m.advance(3, 32);
+        m.swap_out(3, 1);
+        assert_eq!(m.fork(3, 4, 32), 0);
+        assert!(!m.has_seq(4)); // no child created
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn cow_on_grow_unshares_the_written_range() {
+        let mut m = mgr();
+        m.grow(1, 48).unwrap();
+        m.advance(1, 48);
+        m.fork(1, 2, 48);
+        // recompute restart truncates the child into the shared range …
+        m.set_len(2, 20);
+        let free_before = m.gpu_free();
+        // … and the next grow privatizes the still-shared write range [1,3)
+        m.grow(2, 40).unwrap();
+        assert_eq!(m.gpu_free(), free_before - 2); // two CoW copies
+        assert_eq!(m.cow_copies(), 2);
+        assert_eq!(m.shared_blocks_of(2), 1);
+        assert_eq!(m.shared_blocks_of(1), 1); // survivor promoted
+        assert_eq!(m.seq(1).unwrap().blocks[0], m.seq(2).unwrap().blocks[0]);
+        assert_ne!(m.seq(1).unwrap().blocks[1], m.seq(2).unwrap().blocks[1]);
+        m.advance(2, 20);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_of_shared_holder_frees_only_exclusive_tail() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap(); // 4 blocks
+        m.advance(1, 64);
+        m.fork(1, 2, 32); // 2 blocks shared
+        m.grow(2, 48).unwrap(); // +1 exclusive block
+        assert_eq!(m.gpu_free(), 3);
+        m.release(2);
+        assert_eq!(m.gpu_free(), 4); // only the exclusive block came back
+        assert_eq!(m.shared_blocks_of(1), 0); // survivor promoted
+        assert_eq!(m.shared_gpu_blocks(), 0);
+        m.check_conservation().unwrap();
+        m.release(1);
+        assert_eq!(m.gpu_free(), 8);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn swap_out_and_discard_skip_the_shared_prefix() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap(); // 4 blocks
+        m.advance(1, 64);
+        m.fork(1, 2, 64);
+        m.grow(2, 96).unwrap(); // +2 exclusive blocks
+        m.advance(2, 32);
+        // only the exclusive tail is swappable, front-first past the prefix
+        let moves = m.swap_out(2, 1);
+        assert_eq!(moves.len(), 1);
+        assert_eq!(m.shared_blocks_of(2), 4);
+        assert!(m.seq(2).unwrap().blocks[..4].iter().all(|b| matches!(b, BlockLoc::Gpu(_))));
+        assert!(matches!(m.seq(2).unwrap().blocks[4], BlockLoc::Cpu(_)));
+        m.check_conservation().unwrap();
+        // discard keeps [shared GPU prefix][CPU run], drops the GPU tail
+        let len = m.discard_gpu_tail(2);
+        assert_eq!(len, 80); // shared 4 + cpu 1 blocks survive
+        assert_eq!(m.seq(2).unwrap().blocks.len(), 5);
+        assert_eq!(m.shared_blocks_of(2), 4);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn no_fork_keeps_every_refcount_at_one() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap();
+        m.advance(1, 64);
+        m.swap_out(1, 2);
+        m.grow(2, 32).unwrap();
+        m.release(2);
+        assert_eq!(m.shared_gpu_blocks(), 0);
+        assert_eq!(m.cow_copies(), 0);
+        assert_eq!(m.shared_blocks_of(1), 0);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn snapshot_fork_mirrors_manager_fork() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap();
+        m.advance(1, 64);
+        let mut s = m.snapshot();
+        assert_eq!(s.fork(1, 2, 40), m.fork(1, 2, 40));
+        let full = m.snapshot();
+        assert_eq!(s.gpu_free(), full.gpu_free());
+        assert_eq!(s.seq(1), full.seq(1));
+        assert_eq!(s.seq(2), full.seq(2));
+        assert_eq!(s.shared_tokens_of(2), m.shared_tokens_of(2));
+    }
+
+    #[test]
+    fn prop_fork_cow_conservation_under_random_ops() {
+        // The tentpole's safety net: random interleavings of
+        // fork/grow/swap_out/swap_in/discard/set_len/release across aliased
+        // sequences never underflow a refcount, only free at refcount zero,
+        // and keep the full physical-vs-logical audit green at every step.
+        use crate::util::prop;
+        prop::check("fork_cow_conservation", 150, |rng| {
+            let num_gpu = rng.usize(6, 32);
+            let num_cpu = rng.usize(2, 16);
+            let bs = 16;
+            let mut m = CacheManager::new(bs, num_gpu, num_cpu);
+            let mut live: Vec<ReqId> = Vec::new();
+            let mut next_id: ReqId = 0;
+            for _ in 0..80 {
+                match rng.usize(0, 6) {
+                    0 => {
+                        let req = if live.is_empty() || rng.usize(0, 1) == 0 {
+                            next_id += 1;
+                            live.push(next_id);
+                            next_id
+                        } else {
+                            *rng.choose(&live)
+                        };
+                        let cur = m.len_tokens(req);
+                        let want = cur + rng.usize(1, 3 * bs);
+                        if m.can_grow(req, want) {
+                            m.grow(req, want).unwrap();
+                            m.advance(req, want - cur);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let parent = *rng.choose(&live);
+                            next_id += 1;
+                            let child = next_id;
+                            if m.fork(parent, child, rng.usize(1, 6 * bs)) > 0 {
+                                live.push(child);
+                            }
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            m.swap_out(*rng.choose(&live), rng.usize(1, 4));
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            m.swap_in(*rng.choose(&live), rng.usize(1, 4));
+                        }
+                    }
+                    4 => {
+                        if !live.is_empty() {
+                            let req = *rng.choose(&live);
+                            // discard requires the canonical
+                            // [shared][CPU run][GPU tail] layout (no
+                            // mid-swap-in holes), like the engine's caller
+                            let canonical = m
+                                .seq(req)
+                                .map(|s| {
+                                    let keep = s.shared_blocks() + s.cpu_blocks();
+                                    s.blocks[s.shared_blocks()..keep]
+                                        .iter()
+                                        .all(|b| matches!(b, BlockLoc::Cpu(_)))
+                                })
+                                .unwrap_or(false);
+                            if canonical {
+                                m.discard_gpu_tail(req);
+                            }
+                        }
+                    }
+                    5 => {
+                        if !live.is_empty() {
+                            let req = *rng.choose(&live);
+                            if m.has_seq(req) {
+                                let len = m.len_tokens(req);
+                                m.set_len(req, rng.usize(0, len));
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.usize(0, live.len() - 1);
+                            m.release(live.swap_remove(i));
+                        }
+                    }
+                }
+                m.check_conservation().unwrap();
+            }
+            // Draining every holder must return both pools in full: the
+            // last reference of every shared block physically frees it.
+            for req in live {
+                m.release(req);
+                m.check_conservation().unwrap();
+            }
+            assert_eq!(m.gpu_free(), num_gpu);
+            assert_eq!(m.cpu_free(), num_cpu);
+            assert_eq!(m.shared_gpu_blocks(), 0);
+        });
+    }
+
+    #[test]
     fn prop_allocator_conserves_blocks_and_never_double_allocates() {
         use crate::util::prop;
         prop::check("allocator_conservation", 300, |rng| {
@@ -1155,7 +1896,7 @@ mod tests {
             for _ in 0..60 {
                 // A batch of 1–3 mutations between captures.
                 for _ in 0..rng.usize(1, 3) {
-                    match rng.usize(0, 3) {
+                    match rng.usize(0, 4) {
                         0 => {
                             let req = if live.is_empty() || rng.usize(0, 1) == 0 {
                                 next_id += 1;
@@ -1182,7 +1923,32 @@ mod tests {
                                 if rng.usize(0, 1) == 0 {
                                     m.swap_in(req, rng.usize(1, 4));
                                 } else {
-                                    m.discard_gpu_tail(req);
+                                    // discard requires the engine-side
+                                    // canonical layout (no mid-swap-in
+                                    // holes in the CPU run)
+                                    let canonical = m
+                                        .seq(req)
+                                        .map(|s| {
+                                            let keep = s.shared_blocks() + s.cpu_blocks();
+                                            s.blocks[s.shared_blocks()..keep]
+                                                .iter()
+                                                .all(|b| matches!(b, BlockLoc::Cpu(_)))
+                                        })
+                                        .unwrap_or(false);
+                                    if canonical {
+                                        m.discard_gpu_tail(req);
+                                    }
+                                }
+                            }
+                        }
+                        3 => {
+                            // fork + the aliasing transitions it later
+                            // causes must all flow through the dirty set
+                            if !live.is_empty() {
+                                let parent = *rng.choose(&live);
+                                next_id += 1;
+                                if m.fork(parent, next_id, rng.usize(1, 80)) > 0 {
+                                    live.push(next_id);
                                 }
                             }
                         }

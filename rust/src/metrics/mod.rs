@@ -104,6 +104,14 @@ pub struct Recorder {
     pub capture_dirty_ids: u64,
     pub frontier_depth: u64,
     pub events_batched: u64,
+    /// Prefix-sharing gauges: sessions admitted by forking a cached prefix
+    /// (`prefix_hits`), copy-on-write block copies triggered by writes into
+    /// shared blocks (`cow_copies`, cumulative), and the peak number of
+    /// physical GPU blocks simultaneously aliased by ≥ 2 sequences
+    /// (`blocks_shared`). All zero when sharing is unused.
+    pub prefix_hits: u64,
+    pub cow_copies: u64,
+    pub blocks_shared: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -186,6 +194,9 @@ impl Recorder {
             capture_dirty_ids: self.capture_dirty_ids,
             frontier_depth: self.frontier_depth,
             events_batched: self.events_batched,
+            prefix_hits: self.prefix_hits,
+            cow_copies: self.cow_copies,
+            blocks_shared: self.blocks_shared,
         }
     }
 }
@@ -225,6 +236,10 @@ pub struct RunReport {
     pub capture_dirty_ids: u64,
     pub frontier_depth: u64,
     pub events_batched: u64,
+    /// Prefix-sharing gauges (see [`Recorder`]).
+    pub prefix_hits: u64,
+    pub cow_copies: u64,
+    pub blocks_shared: u64,
 }
 
 impl RunReport {

@@ -5,7 +5,7 @@
 //! `mpsc` channel. Events arrive in the documented order:
 //!
 //! ```text
-//! Admitted → Token* → (Intercepted → Resumed → Token*)* → Finished
+//! Admitted → PrefixHit? → Token* → (Intercepted → Resumed → Token*)* → Finished
 //! ```
 //!
 //! A cancelled session (client abort, or an interception deadline firing)
@@ -42,6 +42,12 @@ pub enum CancelReason {
 pub enum EngineEvent {
     /// The request entered the serving queues.
     Admitted { req: ReqId, at: Micros },
+    /// Admission-time prefix sharing: the request's first `shared_tokens`
+    /// context tokens alias another session's GPU-resident KV blocks
+    /// (refcounted, copy-on-write) instead of being prefilled from scratch.
+    /// Emitted immediately after `Admitted`, and only when a
+    /// [`crate::serving::SessionSpec::with_shared_prefix`] fork succeeded.
+    PrefixHit { req: ReqId, shared_tokens: usize, at: Micros },
     /// One generated token (decode, or the sample closing a prefill).
     Token { req: ReqId, token: u32, at: Micros },
     /// Several generated tokens coalesced into one channel send (transport-
@@ -70,6 +76,7 @@ impl EngineEvent {
     pub fn req(&self) -> ReqId {
         match self {
             EngineEvent::Admitted { req, .. }
+            | EngineEvent::PrefixHit { req, .. }
             | EngineEvent::Token { req, .. }
             | EngineEvent::TokenBatch { req, .. }
             | EngineEvent::Intercepted { req, .. }
@@ -83,6 +90,7 @@ impl EngineEvent {
     pub fn tag(&self) -> &'static str {
         match self {
             EngineEvent::Admitted { .. } => "admitted",
+            EngineEvent::PrefixHit { .. } => "prefix_hit",
             EngineEvent::Token { .. } => "token",
             EngineEvent::TokenBatch { .. } => "token_batch",
             EngineEvent::Intercepted { .. } => "intercepted",

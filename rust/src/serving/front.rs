@@ -99,6 +99,12 @@ pub struct SessionSpec {
     /// Per-session external-interception deadline (engine-clock µs):
     /// `None` = engine default, `Some(0)` = never time out.
     pub external_timeout_us: Option<Micros>,
+    /// Opt-in cross-session prefix sharing: sessions submitted with the
+    /// same key alias one refcounted copy-on-write copy of their common
+    /// prompt prefix instead of each prefilling (and holding) its own.
+    /// `None` (the default) never shares — scheduling is bit-identical to
+    /// a front without the registry.
+    pub shared_prefix: Option<String>,
 }
 
 impl SessionSpec {
@@ -110,6 +116,7 @@ impl SessionSpec {
             prompt: None,
             mode: ResolutionMode::Scripted,
             external_timeout_us: None,
+            shared_prefix: None,
         }
     }
 
@@ -122,6 +129,7 @@ impl SessionSpec {
             prompt: None,
             mode: ResolutionMode::External,
             external_timeout_us: None,
+            shared_prefix: None,
         }
     }
 
@@ -143,6 +151,19 @@ impl SessionSpec {
     /// Pin the arrival time (engine clock).
     pub fn at(mut self, arrival_us: Micros) -> SessionSpec {
         self.arrival_us = Some(arrival_us);
+        self
+    }
+
+    /// Share this session's prompt prefix with every other session
+    /// submitted under the same `key`: at admission it forks from the
+    /// key's most recent session, aliasing the block-aligned GPU-resident
+    /// prefix both prompts have in common (refcounted, copy-on-write)
+    /// instead of prefilling — and holding — its own copy. A successful
+    /// fork surfaces as an [`EngineEvent::PrefixHit`] right after
+    /// `Admitted`; when nothing is reusable (first session for the key,
+    /// prefix evicted or swapped out) the session just prefills normally.
+    pub fn with_shared_prefix(mut self, key: impl Into<String>) -> SessionSpec {
+        self.shared_prefix = Some(key.into());
         self
     }
 }
@@ -471,6 +492,12 @@ pub struct EngineFront {
     /// this set means the client declined to act — consume the earliest
     /// external-interception deadline instead of handing back again.
     awaiting_reported: bool,
+    /// Prefix-sharing registry: for each [`SessionSpec::with_shared_prefix`]
+    /// key, the most recently submitted session holding that prefix. New
+    /// submissions under the key fork from it at admission; the newest
+    /// session then becomes the holder (its copy of the prefix is the one
+    /// most likely to still be GPU-resident for the next arrival).
+    prefix_registry: HashMap<String, ReqId>,
 }
 
 impl EngineFront {
@@ -485,7 +512,14 @@ impl EngineFront {
         let shared = Arc::new(FrontShared::default());
         let time_scale = engine.cfg.time_scale;
         engine.set_intercept_source(Box::new(FrontSource::new(shared.clone(), time_scale)));
-        EngineFront { engine, shared, iters: 0, started: false, awaiting_reported: false }
+        EngineFront {
+            engine,
+            shared,
+            iters: 0,
+            started: false,
+            awaiting_reported: false,
+            prefix_registry: HashMap::new(),
+        }
     }
 
     pub fn engine(&self) -> &Engine {
@@ -556,6 +590,12 @@ impl EngineFront {
             self.shared.external.lock().unwrap().insert(id);
         }
         self.engine.set_external_timeout(id, spec.external_timeout_us);
+        if let Some(key) = spec.shared_prefix {
+            if let Some(&parent) = self.prefix_registry.get(&key) {
+                self.engine.adopt_prefix(id, parent);
+            }
+            self.prefix_registry.insert(key, id);
+        }
         // Stamp the run start at the first accepted submission, not the
         // first pump: a mid-flight `report` between the two must not span
         // the whole pre-front engine-clock epoch.

@@ -1,0 +1,224 @@
+//! Cross-session prefix sharing integration tests.
+//!
+//! Two contracts from the refcounted copy-on-write block refactor:
+//!
+//! * **No-fork bit-identity** — the refcount/registry plumbing is strictly
+//!   opt-in: runs that never share (no `with_shared_prefix`, or keys that
+//!   never collide) schedule bit-identically to each other and keep every
+//!   sharing gauge at zero. (The determinism golden and policy-parity
+//!   suites pin the same property against history.)
+//! * **Sharing-active correctness** — N sessions forking one common prompt
+//!   admit with ~1× physical prefix blocks, emit `PrefixHit` right after
+//!   `Admitted`, and keep the engine invariants (including block
+//!   conservation and refcount audits) green on every iteration.
+
+use infercept::augment::AugmentKind;
+use infercept::config::EngineConfig;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::{Engine, PumpRound};
+use infercept::kvcache::ReqId;
+use infercept::serving::{EngineEvent, EngineFront, FrontStatus, SessionSpec};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::util::Micros;
+use infercept::workload::{RequestScript, Segment, WorkloadGen, WorkloadKind};
+
+fn engine(policy: Policy) -> Engine {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    Engine::new(Box::new(SimBackend::new(spec)), cfg)
+}
+
+fn front(policy: Policy) -> EngineFront {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, policy);
+    EngineFront::new(Box::new(SimBackend::new(spec)), cfg)
+}
+
+fn prompt(len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| (i * 13) % 30_000).collect()
+}
+
+fn plain_script(prompt_tokens: usize, gen: u32) -> RequestScript {
+    RequestScript {
+        kind: AugmentKind::Qa,
+        prompt_tokens: prompt_tokens as u32,
+        segments: vec![Segment { gen_tokens: gen, interception: None }],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// No-fork bit-identity
+// ---------------------------------------------------------------------------
+
+/// Refcount plumbing with sharing unused is invisible: identical traces
+/// produce Debug-identical reports across repeat runs, and every sharing
+/// gauge stays zero.
+#[test]
+fn no_fork_runs_are_bit_identical_and_gauges_stay_zero() {
+    for seed in [7u64, 20260808, 99] {
+        let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(40, 3.0);
+        let mut a = engine(Policy::infercept());
+        let ra = a.run_trace(&trace).unwrap();
+        a.check_invariants().unwrap();
+        let mut b = engine(Policy::infercept());
+        let rb = b.run_trace(&trace).unwrap();
+        assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "seed {seed}");
+        assert_eq!(ra.prefix_hits, 0);
+        assert_eq!(ra.cow_copies, 0);
+        assert_eq!(ra.blocks_shared, 0);
+        assert_eq!(a.cache().shared_gpu_blocks(), 0);
+        assert_eq!(a.cache().cow_copies(), 0);
+    }
+}
+
+/// Registering every session under a *unique* prefix key exercises the
+/// whole registry path without a single collision — scheduling must be
+/// bit-identical to a front with no keys at all.
+#[test]
+fn unique_prefix_keys_never_share_and_match_keyless_runs() {
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 20260808).generate(40, 3.0);
+    let run = |keyed: bool| {
+        let mut f = front(Policy::infercept());
+        for (i, tr) in trace.iter().enumerate() {
+            let mut spec = SessionSpec::scripted(tr.script.clone(), tr.arrival_us);
+            if keyed {
+                spec = spec.with_shared_prefix(format!("unique-{i}"));
+            }
+            f.submit_detached(spec).unwrap();
+        }
+        assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+        f.engine().check_invariants().unwrap();
+        f.report()
+    };
+    let keyless = run(false);
+    let keyed = run(true);
+    assert_eq!(format!("{keyless:?}"), format!("{keyed:?}"));
+    assert_eq!(keyed.prefix_hits, 0, "unique keys must never fork");
+}
+
+// ---------------------------------------------------------------------------
+// Sharing active
+// ---------------------------------------------------------------------------
+
+/// Engine-level fork-at-admission: a chain of sessions adopting their
+/// predecessor's prefix aliases one physical copy of the prompt, keeps
+/// conservation + refcount audits green on every iteration, and still
+/// drains with every session finished.
+#[test]
+fn fork_at_admission_shares_physical_blocks_and_conserves() {
+    const N: usize = 6;
+    const PROMPT: usize = 256;
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    let bs = cfg.block_size;
+    let mut eng = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    let p = prompt(PROMPT);
+    let mut prev: Option<ReqId> = None;
+    for i in 0..N {
+        let id = eng
+            .submit_script((i as Micros) * 40_000, plain_script(PROMPT, 48), Some(p.clone()))
+            .unwrap();
+        if let Some(parent) = prev {
+            eng.adopt_prefix(id, parent);
+        }
+        prev = Some(id);
+    }
+    let mut iters = 0u64;
+    let (mut peak_physical, mut peak_logical) = (0usize, 0usize);
+    while !matches!(eng.pump_round(&mut iters).unwrap(), PumpRound::Drained) {
+        eng.check_invariants().unwrap();
+        let logical: usize = (1..=N as ReqId).map(|r| eng.cache().shared_blocks_of(r)).sum();
+        if logical > peak_logical {
+            peak_logical = logical;
+            peak_physical = eng.cache().shared_gpu_blocks();
+        }
+    }
+    eng.check_invariants().unwrap();
+    assert_eq!(eng.metrics.prefix_hits as usize, N - 1, "every successor forks");
+    assert!(peak_logical > 0, "sharing never became active");
+    assert!(
+        peak_physical * 2 <= peak_logical,
+        "physical {peak_physical} should be well below logical {peak_logical}"
+    );
+    // Run drained: every alias released, every block back in the pool.
+    assert_eq!(eng.cache().shared_gpu_blocks(), 0);
+    assert_eq!(eng.unfinished(), 0);
+    // Forked sessions skip the aliased prefill: the block-aligned prefix
+    // (capped one token short of the prompt) never re-enters the prefill
+    // counters.
+    let shared_each = (PROMPT - 1) / bs * bs;
+    let expected_prefill = PROMPT + (N - 1) * (PROMPT - shared_each);
+    assert_eq!(eng.metrics.prefill_tokens as usize, expected_prefill);
+}
+
+/// Front-level registry: same key → fork from the key's newest session,
+/// with `PrefixHit` streamed right after `Admitted` and the report gauges
+/// populated.
+#[test]
+fn shared_prefix_sessions_emit_prefix_hits_in_order() {
+    const N: usize = 5;
+    const PROMPT: usize = 192;
+    let mut f = front(Policy::infercept());
+    let p = prompt(PROMPT);
+    let mut handles = Vec::new();
+    for i in 0..N {
+        let spec = SessionSpec::scripted(plain_script(PROMPT, 48), (i as Micros) * 40_000)
+            .with_prompt(p.clone())
+            .with_shared_prefix("common-preamble");
+        handles.push(f.submit(spec).unwrap());
+    }
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+
+    let mut hits = 0usize;
+    for (i, h) in handles.iter().enumerate() {
+        let tags: Vec<&str> = h.drain_events().iter().map(|e| e.tag()).collect();
+        assert_eq!(tags.first(), Some(&"admitted"), "session {i}: {tags:?}");
+        assert_eq!(tags.last(), Some(&"finished"), "session {i}: {tags:?}");
+        if tags.get(1) == Some(&"prefix_hit") {
+            hits += 1;
+        } else {
+            assert!(
+                !tags.contains(&"prefix_hit"),
+                "prefix_hit must come right after admitted: {tags:?}"
+            );
+        }
+    }
+    assert_eq!(hits, N - 1, "every session after the first hits the registry");
+    let rep = f.report();
+    assert_eq!(rep.prefix_hits as usize, N - 1);
+    assert!(rep.blocks_shared > 0, "peak shared-block gauge never moved");
+    assert_eq!(rep.completed, N);
+}
+
+/// A prefix hit reports exactly the block-aligned prefix both prompts have
+/// in common (capped one token short of the child's context so prefill
+/// always has a token left to feed).
+#[test]
+fn prefix_hit_reports_block_aligned_common_prefix() {
+    const PROMPT: usize = 200; // not block-aligned: 12 full blocks + 8 tokens at bs=16
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    let bs = cfg.block_size;
+    let mut f = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+    let p = prompt(PROMPT);
+    let mk = |at: Micros| {
+        SessionSpec::scripted(plain_script(PROMPT, 32), at)
+            .with_prompt(p.clone())
+            .with_shared_prefix("aligned")
+    };
+    let a = f.submit(mk(0)).unwrap();
+    let b = f.submit(mk(60_000)).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    assert!(!a.drain_events().iter().any(|e| e.tag() == "prefix_hit"));
+    let shared: Vec<usize> = b
+        .drain_events()
+        .into_iter()
+        .filter_map(|e| match e {
+            EngineEvent::PrefixHit { shared_tokens, .. } => Some(shared_tokens),
+            _ => None,
+        })
+        .collect();
+    // 199 usable tokens round down to 12 full blocks → 192 shared at bs=16.
+    assert_eq!(shared, vec![(PROMPT - 1) / bs * bs]);
+}

@@ -32,6 +32,7 @@ EXPECTED_RESULTS = [
     "planner_e2e/delta_capture+plan 256r/128p/10000w/32s",
     "planner_e2e/capture 256r/128p/10000w/32s",
     "planner_e2e/sim_replay mixed120@3rps infercept",
+    "planner_e2e/shared_prefix 32x512t infercept",
 ]
 
 EXPECTED_DERIVED = [
@@ -45,6 +46,9 @@ EXPECTED_DERIVED = [
     "stress_10k_full_capture_over_delta_cycle",
     "sim_replay_iters_per_sec",
     "sim_replay_iterations",
+    "shared_prefix_block_ratio",
+    "shared_prefix_hits",
+    "shared_prefix_cow_copies",
 ]
 
 RESULT_FIELDS = ["name", "iters", "mean_ns", "p50_ns", "p95_ns"]
