@@ -1,0 +1,117 @@
+//! Speculative continuation through tool calls: predict the answer, decode
+//! ahead on a copy-on-write branch, verify-or-drop when the real call
+//! resolves.
+//!
+//! Each scripted session generates, fires a 300 ms "math tool" interception
+//! that returns 8 tokens, then keeps generating. With speculation enabled
+//! ([`SessionSpec::with_speculate`] or `EngineConfig::speculate`) the engine
+//! forks the paused context, injects the predicted answer, and lets the
+//! branch decode through the pause in the normal batch. The run is repeated
+//! without speculation to show what the salvage buys: the speculating run
+//! resumes with already-decoded continuation tokens instead of an idle
+//! pause.
+//!
+//! ```sh
+//! cargo run --release --example speculative_tools
+//! ```
+
+use infercept::prelude::*;
+use infercept::util::Micros;
+use infercept::workload::{Interception, Segment};
+
+fn script() -> RequestScript {
+    RequestScript {
+        kind: AugmentKind::Math,
+        prompt_tokens: 96,
+        segments: vec![
+            Segment {
+                gen_tokens: 24,
+                interception: Some(Interception {
+                    kind: AugmentKind::Math,
+                    duration_us: 300_000,
+                    ret_tokens: 8,
+                }),
+            },
+            Segment { gen_tokens: 160, interception: None },
+        ],
+    }
+}
+
+fn run(speculate: bool) -> anyhow::Result<(RunReport, Vec<String>)> {
+    let spec = SimModelSpec::gptj_6b();
+    let cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    let vocab = cfg.vocab;
+    let mut front = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+    // The oracle predictor replays the scripted tool answers exactly; swap
+    // in `CachedAnswerPredictor` (the default) for the memoize-and-replay
+    // strategy, or implement `AnswerPredictor` for a learned one.
+    front.engine_mut().set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let s = SessionSpec::scripted(script(), i * 40_000).with_speculate(speculate);
+        handles.push(front.submit(s)?);
+    }
+    match front.run_until_blocked()? {
+        FrontStatus::Drained => {}
+        FrontStatus::AwaitingClient => anyhow::bail!("scripted sessions cannot block"),
+    }
+    front.engine().check_invariants()?;
+
+    let mut lines = Vec::new();
+    for h in &handles {
+        for ev in h.drain_events() {
+            let ms = |at: Micros| at as f64 / 1e3;
+            match ev {
+                EngineEvent::SpeculationStarted { req, branch, predicted_tokens, at } => {
+                    lines.push(format!(
+                        "t={:7.1} ms  session {req}: forked branch {branch}, \
+                         injected {predicted_tokens} predicted answer tokens",
+                        ms(at),
+                    ));
+                }
+                EngineEvent::SpeculationAccepted { req, branch, salvaged_tokens, at } => {
+                    lines.push(format!(
+                        "t={:7.1} ms  session {req}: branch {branch} verified — \
+                         {salvaged_tokens} tokens salvaged into the session",
+                        ms(at),
+                    ));
+                }
+                EngineEvent::SpeculationRejected { req, branch, accepted, at } => {
+                    lines.push(format!(
+                        "t={:7.1} ms  session {req}: branch {branch} dropped \
+                         (prefix match {accepted})",
+                        ms(at),
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+    Ok((front.report(), lines))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (base, _) = run(false)?;
+    let (spec, lines) = run(true)?;
+
+    println!("speculation lifecycle:");
+    for l in &lines {
+        println!("  {l}");
+    }
+    println!(
+        "\nspeculations: {} started, {} accepted, {} rejected",
+        spec.speculations_started, spec.speculations_accepted, spec.speculations_rejected,
+    );
+    println!(
+        "branch tokens: {} decoded ahead, {} salvaged, {} wasted \
+         (salvage ratio {:.0}%)",
+        spec.speculative_tokens_decoded,
+        spec.speculative_tokens_salvaged,
+        spec.speculative_tokens_wasted,
+        spec.speculation_salvage_ratio() * 100.0,
+    );
+    println!("\nwithout speculation: {}", base.summary_line());
+    println!("with speculation:    {}", spec.summary_line());
+    Ok(())
+}

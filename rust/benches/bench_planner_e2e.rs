@@ -37,10 +37,11 @@ use infercept::engine::{Engine, ExecBackend, PumpRound};
 use infercept::kvcache::swap::SwapModel;
 use infercept::kvcache::{BlockLoc, CacheManager, ReqId};
 use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::speculation::OraclePredictor;
 use infercept::util::bench::{Bench, BenchReport, BenchResult};
 use infercept::util::json::Json;
 use infercept::util::Micros;
-use infercept::workload::{RequestScript, Segment, WorkloadGen, WorkloadKind};
+use infercept::workload::{Interception, RequestScript, Segment, WorkloadGen, WorkloadKind};
 
 const RUNNING: usize = 256;
 const PAUSED: usize = 128;
@@ -468,6 +469,56 @@ fn main() {
         std::hint::black_box(shared_run());
     });
 
+    // ---- speculative continuation: decode through the pause --------------
+    // Sixteen sessions each fire a 300 ms tool call mid-generation; the
+    // oracle predictor replays the scripted answer, so every fork should
+    // verify and its decode-ahead tokens count as salvage. The derived
+    // ratio is salvaged ÷ speculatively-decoded tokens — 1.0 means every
+    // branch token the GPU produced during a pause became session output.
+    const SPEC_N: usize = 16;
+    let spec_run = || -> (f64, u64, u64) {
+        let spec = SimModelSpec::gptj_6b();
+        let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+        cfg.speculate = true;
+        let vocab = cfg.vocab;
+        let mut engine = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+        engine.set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+        let script = RequestScript {
+            kind: AugmentKind::Math,
+            prompt_tokens: 128,
+            segments: vec![
+                Segment {
+                    gen_tokens: 24,
+                    interception: Some(Interception {
+                        kind: AugmentKind::Math,
+                        duration_us: 300_000,
+                        ret_tokens: 8,
+                    }),
+                },
+                Segment { gen_tokens: 128, interception: None },
+            ],
+        };
+        for i in 0..SPEC_N {
+            engine
+                .submit_script((i as Micros) * 30_000, script.clone(), None)
+                .unwrap();
+        }
+        let mut iters = 0u64;
+        while !matches!(engine.pump_round(&mut iters).unwrap(), PumpRound::Drained) {}
+        engine.check_invariants().unwrap();
+        let m = &engine.metrics;
+        let ratio = if m.speculative_tokens_decoded == 0 {
+            0.0
+        } else {
+            m.speculative_tokens_salvaged as f64 / m.speculative_tokens_decoded as f64
+        };
+        (ratio, m.speculations_started, m.speculative_tokens_salvaged)
+    };
+    let (spec_ratio, spec_started, spec_salvaged) = spec_run();
+    let r_speculation = bench.run("planner_e2e/speculation 16x300ms infercept", || {
+        std::hint::black_box(spec_run());
+    });
+
     // ---- machine-readable trajectory -------------------------------------
     for r in [
         &r_cycle,
@@ -480,6 +531,7 @@ fn main() {
         &r_capture_10k,
         &r_replay,
         &r_shared,
+        &r_speculation,
     ] {
         report.push(r);
     }
@@ -526,6 +578,12 @@ fn main() {
     );
     report.derived("shared_prefix_hits", Json::num(shared_hits as f64));
     report.derived("shared_prefix_cow_copies", Json::num(shared_cow as f64));
+    report.derived(
+        "speculation_salvage_ratio",
+        Json::num((spec_ratio * 1000.0).round() / 1000.0),
+    );
+    report.derived("speculations_started", Json::num(spec_started as f64));
+    report.derived("speculation_salvaged_tokens", Json::num(spec_salvaged as f64));
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sched.json").to_string()

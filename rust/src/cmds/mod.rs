@@ -12,6 +12,7 @@ pub mod table1;
 
 use anyhow::{anyhow, Result};
 
+use crate::augment::AugmentKind;
 use crate::config::{EngineConfig, TimeoutAction};
 use crate::coordinator::policy::Policy;
 use crate::engine::ExecBackend;
@@ -85,6 +86,30 @@ pub fn apply_lifecycle_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
     }
     cfg.max_live_sessions = args.usize_or("max-live-sessions", cfg.max_live_sessions)?;
     cfg.max_waiting = args.usize_or("max-waiting", cfg.max_waiting)?;
+    Ok(())
+}
+
+/// Apply the speculative-continuation CLI knobs (`serve` / `sim`):
+/// `--speculate` enables predicting tool answers and decoding ahead on a
+/// copy-on-write branch during interceptions (off by default — disabled
+/// runs are bit-identical to a build without the subsystem), and
+/// `--speculate-kinds math,qa,...` restricts speculation to a
+/// comma-separated list of interception kinds (absent = all kinds).
+pub fn apply_speculation_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
+    if args.flag("speculate") {
+        cfg.speculate = true;
+    }
+    if let Some(list) = args.get("speculate-kinds") {
+        cfg.speculate_kinds = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                AugmentKind::parse(s)
+                    .ok_or_else(|| anyhow!("--speculate-kinds: unknown kind '{s}'"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
     Ok(())
 }
 

@@ -12,7 +12,7 @@ use crate::util::cli::Args;
 mod real {
     use anyhow::{anyhow, Result};
 
-    use crate::cmds::{apply_adaptive_args, apply_lifecycle_args};
+    use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, apply_speculation_args};
     use crate::config::EngineConfig;
     use crate::coordinator::policy::Policy;
     use crate::profiler;
@@ -72,9 +72,12 @@ mod real {
             max_live_sessions: 0,
             max_waiting: 0,
             compact_interval_iters: crate::config::DEFAULT_COMPACT_INTERVAL_ITERS,
+            speculate: false,
+            speculate_kinds: Vec::new(),
         };
         apply_adaptive_args(&mut cfg, args)?;
         apply_lifecycle_args(&mut cfg, args)?;
+        apply_speculation_args(&mut cfg, args)?;
 
         // Mini models cap sequences at max_seq_tokens; scale contexts down and
         // leave one max-chunk headroom for padded prefill.

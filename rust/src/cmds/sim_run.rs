@@ -3,7 +3,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, run_once_with};
+use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, apply_speculation_args, run_once_with};
 use crate::config::EngineConfig;
 use crate::coordinator::policy::Policy;
 use crate::sim::{SimBackend, SimModelSpec};
@@ -27,6 +27,7 @@ pub fn run(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::for_sim(&spec, policy).with_seed(seed);
     apply_adaptive_args(&mut cfg, args)?;
     apply_lifecycle_args(&mut cfg, args)?;
+    apply_speculation_args(&mut cfg, args)?;
     let rep = run_once_with(cfg, Box::new(SimBackend::new(spec.clone())), &trace)?;
     println!("model={} workload={} rate={rate} n={n}", spec.name, kind.name());
     println!("{}", rep.summary_line());
@@ -45,6 +46,19 @@ pub fn run(args: &Args) -> Result<()> {
         println!(
             "  lifecycle: {} cancelled  {} timed-out interceptions  {} rejected submits",
             rep.sessions_cancelled, rep.interceptions_timed_out, rep.submits_rejected,
+        );
+    }
+    if rep.speculations_started > 0 {
+        println!(
+            "  speculation: {} started  {} accepted / {} rejected  \
+             tokens {} decoded / {} salvaged / {} wasted  salvage {:.1}%",
+            rep.speculations_started,
+            rep.speculations_accepted,
+            rep.speculations_rejected,
+            rep.speculative_tokens_decoded,
+            rep.speculative_tokens_salvaged,
+            rep.speculative_tokens_wasted,
+            rep.speculation_salvage_ratio() * 100.0,
         );
     }
     let iters = rep.iterations.max(1);

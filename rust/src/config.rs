@@ -3,6 +3,7 @@
 //! Built either from a [`crate::sim::SimModelSpec`] (paper-scale simulation)
 //! or from the AOT manifest + offline profile (real PJRT serving).
 
+use crate::augment::AugmentKind;
 use crate::coordinator::policy::Policy;
 use crate::sim::SimModelSpec;
 
@@ -106,6 +107,18 @@ pub struct EngineConfig {
     /// O(live) sweeps; 0 = never compact (unbounded stamp tables — tests
     /// only).
     pub compact_interval_iters: u32,
+    /// Speculative continuation through interceptions (`--speculate`, see
+    /// [`crate::speculation`]): predict the tool answer at dispatch, fork a
+    /// copy-on-write branch, decode ahead, verify-or-drop on resume.
+    /// **Off by default** — with this false the engine never touches the
+    /// predictor or forks a branch, and every run is bit-identical to a
+    /// build without the subsystem. Overridable per session via
+    /// `SessionSpec::with_speculate`.
+    pub speculate: bool,
+    /// Restrict speculation to these interception kinds; empty = all kinds.
+    /// Useful because acceptance rates differ wildly (deterministic tools
+    /// like `Math` memoize well; open-ended `Chatbot` rarely repeats).
+    pub speculate_kinds: Vec<AugmentKind>,
 }
 
 impl EngineConfig {
@@ -135,6 +148,8 @@ impl EngineConfig {
             max_live_sessions: 0,
             max_waiting: 0,
             compact_interval_iters: DEFAULT_COMPACT_INTERVAL_ITERS,
+            speculate: false,
+            speculate_kinds: Vec::new(),
         }
     }
 

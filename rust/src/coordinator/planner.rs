@@ -82,6 +82,30 @@
 //! admission feasibility counts copy-on-write privatization in `can_grow`.
 //! With no forked sequences every `shared` count is zero and all formulas
 //! reduce bit-for-bit to the exclusive-ownership behavior.
+//!
+//! # Speculative branches in the plan
+//!
+//! Speculative continuation (`crate::speculation`) puts copy-on-write
+//! branches into the normal batch as first-class requests: they prefill
+//! their injected answer, decode in the running queue, and occupy blocks
+//! and decode slots like any session. The planner treats them specially in
+//! exactly three places, all keyed on [`ReqSnapshot::speculative`]:
+//!
+//!  * **Eviction order** — branches are the *first* victims under memory
+//!    pressure (`ensure_blocks` orders candidates speculative-first), and a
+//!    branch victim is evictable regardless of arrival priority.
+//!  * **Eviction semantics** — a branch is never requeued-for-recompute:
+//!    `SimState::evict` kills it (terminal + full release), mirroring the
+//!    engine's `reject_branch`.
+//!  * **Dispositions** — a frozen branch (decode budget exhausted, parent
+//!    still intercepted) competes in the stage-3 argmin like any paused
+//!    context, but any non-Preserve decision is coerced to a killing
+//!    Discard: swap-out or partial discard would spend budget on a context
+//!    verification may drop anyway.
+//!
+//! With speculation disabled no snapshot ever contains a speculative
+//! request and every coercion above is dead code — plans are bit-identical
+//! to the pre-speculation planner (pinned by `tests/speculation.rs`).
 
 use crate::augment::AugmentKind;
 use crate::config::EngineConfig;
@@ -119,6 +143,9 @@ pub struct ReqSnapshot {
     pub paused_at: Micros,
     /// Scaled duration of the in-flight interception (oracle estimator).
     pub pause_duration_us: Micros,
+    /// A speculative branch (see `crate::speculation`): first eviction
+    /// victim, killed (fully released) instead of requeued or swapped.
+    pub speculative: bool,
 }
 
 impl ReqSnapshot {
@@ -133,6 +160,7 @@ impl ReqSnapshot {
             pause_kind: rq.pause_kind,
             paused_at: rq.paused_at,
             pause_duration_us: rq.pause_duration_us,
+            speculative: rq.speculative,
         }
     }
 
@@ -153,6 +181,7 @@ impl ReqSnapshot {
             pause_kind: AugmentKind::Math,
             paused_at: 0,
             pause_duration_us: 0,
+            speculative: false,
         }
     }
 
@@ -466,9 +495,18 @@ impl SimState {
         self.buffer.insert(pos, (arr, req));
     }
 
-    /// Mirror of the engine's preemption-by-recompute.
+    /// Mirror of the engine's preemption-by-recompute. Speculative branches
+    /// mirror the engine's branch kill instead: terminal, fully released,
+    /// never requeued.
     fn evict(&mut self, snap: &SchedSnapshot, req: ReqId) {
         let mut r = self.req(snap, req);
+        if r.speculative {
+            r.state = ReqState::Cancelled;
+            r.processed = 0;
+            self.reqs.set(req, r);
+            self.cache.release(&snap.cache, req);
+            return;
+        }
         r.recompute_hwm = r.recompute_hwm.max(r.processed);
         r.processed = 0;
         let was_running = r.state == ReqState::Running;
@@ -519,11 +557,19 @@ impl SimState {
                         && self.planned.get(r).is_none()
                         && self.cache.gpu_tokens_of(&snap.cache, r) > 0
                 })
-                .max_by_key(|&r| (self.req(snap, r).queue_arrival, r));
+                // Speculative branches are the first victims under memory
+                // pressure; real sessions evict youngest-first after every
+                // branch is gone. With no branches the key reduces to the
+                // original `(queue_arrival, r)` ordering bit-for-bit.
+                .max_by_key(|&r| {
+                    let q = self.req(snap, r);
+                    (q.speculative, q.queue_arrival, r)
+                });
             let Some(v) = victim else {
                 return false;
             };
-            if self.req(snap, v).queue_arrival < req_arrival {
+            let vq = self.req(snap, v);
+            if !vq.speculative && vq.queue_arrival < req_arrival {
                 return false; // only strictly lower-priority victims
             }
             self.evict(snap, v);
@@ -576,9 +622,24 @@ fn stage_dispositions(
         policy.decide_interceptions(snap, estimator, views.as_slice(), &stats, out_budget);
     for (req, action) in actions {
         let mut r = sim.req(snap, req);
+        // A frozen speculative branch is either worth holding (Preserve) or
+        // worth nothing: swap-out and partial discard would spend budget
+        // rebuilding a context that verification may drop anyway, so any
+        // non-Preserve decision kills the branch outright (the engine
+        // mirrors this with a full release — see `Engine::reject_branch`).
+        let action = if r.speculative && !matches!(action, InterceptAction::Preserve) {
+            InterceptAction::Discard
+        } else {
+            action
+        };
         match action {
             InterceptAction::Preserve => {
                 r.disposition = Disposition::Preserved;
+            }
+            InterceptAction::Discard if r.speculative => {
+                r.state = ReqState::Cancelled;
+                r.processed = 0;
+                sim.cache.release(&snap.cache, req);
             }
             InterceptAction::Discard => {
                 r.recompute_hwm = r.recompute_hwm.max(r.processed);

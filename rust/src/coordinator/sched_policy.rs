@@ -31,6 +31,14 @@
 //!     token budget (§4.2), queried after decode admission so chunk sizing
 //!     can depend on the admitted decode count.
 //!
+//! One decision lives *outside* the per-iteration pass:
+//! [`SchedPolicy::decide_speculation`], consulted by the engine exactly once
+//! per fired interception (when speculation is enabled) to decide whether a
+//! copy-on-write branch should decode ahead against a predicted tool answer
+//! (see [`crate::speculation`]). It shares the waste currency (GB·s) with
+//! stage 4, so a policy that reshapes dispositions can reshape the
+//! speculate/don't-speculate tradeoff with the same units.
+//!
 //! Methods must be deterministic functions of the snapshot and the policy's
 //! own state: planning is replayed in tests and pinned by the golden
 //! determinism counters. Feasibility (never over-committing blocks) is the
@@ -125,6 +133,28 @@ pub trait SchedPolicy {
         out_budget: usize,
     ) -> Vec<(ReqId, InterceptAction)> {
         decide_interceptions(&snap.policy, estimator, &snap.profile, views, stats, out_budget)
+    }
+
+    /// Stage 3b — whether to speculate *through* a newly fired interception
+    /// (see [`crate::speculation`]): fork a copy-on-write branch of the
+    /// paused request, inject the predicted answer, and keep it decoding
+    /// while the real call is in flight. Unlike stages 1–6 this is not a
+    /// per-iteration planner stage: the engine asks exactly once, at
+    /// interception dispatch, because the fork happens (or doesn't) at that
+    /// instant. `w` describes the would-be branch (its context, the batch
+    /// around it, the estimator's predicted interception duration) and
+    /// `accept_rate` is the predictor's per-kind acceptance EWMA. The
+    /// default speculates iff the expected GB·s recovered exceeds the
+    /// expected GB·s burned —
+    /// [`crate::coordinator::waste::speculation_gain`] — putting the
+    /// decision in the same min-waste currency as the disposition argmin.
+    fn decide_speculation(
+        &mut self,
+        profile: &crate::coordinator::waste::FwdProfile,
+        w: &crate::coordinator::waste::WasteInputs,
+        accept_rate: f64,
+    ) -> bool {
+        crate::coordinator::waste::speculation_gain(profile, w, accept_rate) > 0.0
     }
 
     /// Stage 5a — decode admissions this iteration (the planner clamps the
@@ -337,6 +367,7 @@ mod tests {
                     disposition: Disposition::Fresh,
                     ctx_tokens: q.processed,
                     gpu_tokens: s.cache.gpu_tokens_of(r),
+                    shared_tokens: 0,
                     elapsed_us: s.now.saturating_sub(q.paused_at),
                     actual_total_us: q.pause_duration_us,
                 }
@@ -400,6 +431,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn default_decide_speculation_matches_speculation_gain() {
+        use crate::coordinator::waste::{speculation_gain, WasteInputs};
+        let p = profile();
+        let w = WasteInputs {
+            ctx_tokens: 1500,
+            other_tokens: 4000,
+            kv_bytes_per_token: 458_752,
+            est_interception_us: 1e6,
+            chunk_tokens: 512,
+            running_query: 8,
+            running_ctx: 4000,
+            shared_tokens: 0,
+        };
+        let mut pol = InferceptPolicy;
+        for rate in [0.0, 0.3, 0.5, 0.9, 1.0] {
+            assert_eq!(
+                pol.decide_speculation(&p, &w, rate),
+                speculation_gain(&p, &w, rate) > 0.0,
+                "rate {rate}"
+            );
+        }
+        // A perfect predictor always speculates; a hopeless one never does.
+        assert!(pol.decide_speculation(&p, &w, 1.0));
+        assert!(!pol.decide_speculation(&p, &w, 0.0));
     }
 
     #[test]

@@ -123,6 +123,27 @@ pub fn waste_chunked_discard(p: &FwdProfile, w: &WasteInputs) -> f64 {
     gbs(c as f64 * m, t_full) / 2.0 + (n as f64) * gbs(w.other_tokens as f64 * m, t_chunk)
 }
 
+/// Expected net waste *saved* by speculating through this interception
+/// (GB·s; positive means speculation beats the best passive disposition).
+///
+/// Speculative continuation (see [`crate::speculation`]) forks the paused
+/// request and keeps decoding against a predicted answer. If the prediction
+/// is accepted (probability ≈ the predictor's per-kind acceptance EWMA),
+/// the parent skips the waste its best passive disposition would have paid
+/// — [`min_waste`]'s preserve/chunked-discard argmin. If it is rejected,
+/// the branch's GPU spend was pure waste: its context bytes held (and
+/// decoded into) for the interception duration, the same `C · M · T̂_INT`
+/// shape as Eq. 2. Weighing the two puts speculation in the same units as
+/// every other disposition, so [`crate::coordinator::sched_policy::
+/// SchedPolicy::decide_speculation`] is one more arm of the argmin.
+pub fn speculation_gain(p: &FwdProfile, w: &WasteInputs, accept_rate: f64) -> f64 {
+    let a = accept_rate.clamp(0.0, 1.0);
+    let saved = min_waste(p, w).waste_gbs;
+    let branch_bytes = w.ctx_tokens as f64 * w.kv_bytes_per_token as f64;
+    let spend = gbs(branch_bytes, w.est_interception_us);
+    a * saved - (1.0 - a) * spend
+}
+
 /// Eq. 5 — the request's waste under InferCept's best non-swap action, and
 /// which action attains it.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -245,6 +266,25 @@ mod tests {
             let disc = waste_chunked_discard(&p, &w);
             assert!((mw.waste_gbs - pres.min(disc)).abs() < 1e-12);
             assert_eq!(mw.prefer_preserve, pres <= disc);
+        }
+    }
+
+    #[test]
+    fn speculation_gain_tracks_accept_rate() {
+        let p = a100_6b_profile();
+        let w = inputs(1500, 1e6);
+        // A perfect predictor recovers exactly the passive argmin's waste.
+        let perfect = speculation_gain(&p, &w, 1.0);
+        assert!((perfect - min_waste(&p, &w).waste_gbs).abs() < 1e-12);
+        assert!(perfect > 0.0);
+        // An always-wrong predictor only burns branch memory.
+        assert!(speculation_gain(&p, &w, 0.0) < 0.0);
+        // Monotone in the acceptance rate.
+        let mut last = f64::NEG_INFINITY;
+        for a in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let g = speculation_gain(&p, &w, a);
+            assert!(g > last, "accept {a}: {g} vs {last}");
+            last = g;
         }
     }
 

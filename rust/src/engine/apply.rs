@@ -36,9 +36,21 @@ impl Engine {
                 }
                 InterceptAction::Discard => {
                     self.metrics.discard_decisions += 1;
-                    self.discard_context(req);
+                    if self.requests[req].speculative {
+                        // The planner decided a frozen speculative branch is
+                        // not worth holding: kill it outright (the sim
+                        // mirrored this as a terminal full release).
+                        let now = self.backend.now();
+                        self.reject_branch(req, now);
+                    } else {
+                        self.discard_context(req);
+                    }
                 }
                 InterceptAction::SwapOut { tokens } => {
+                    debug_assert!(
+                        !self.requests[req].speculative,
+                        "planner swapped out speculative branch {req}"
+                    );
                     self.metrics.swap_decisions += 1;
                     if tokens > 0 {
                         let moves = self.cache.swap_out(req, tokens.div_ceil(bs));

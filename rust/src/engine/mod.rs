@@ -53,13 +53,15 @@ use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::planner::{Planner, SchedPlan, SchedSnapshot};
 use crate::coordinator::sched_policy::{self, SchedPolicy};
 use crate::coordinator::scheduler::{Disposition, FcfsQueue};
+use crate::coordinator::waste::WasteInputs;
 use crate::kvcache::{CacheManager, ReqId};
 use crate::metrics::{Recorder, RequestRecord, RunReport};
 use crate::serving::events::{CancelReason, EngineEvent, EventBus};
 use crate::serving::intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
+use crate::speculation::{AnswerPredictor, SpecRecord, SpeculationController};
 use crate::util::rng::Pcg;
 use crate::util::Micros;
-use crate::workload::{RequestScript, RequestTrace};
+use crate::workload::{RequestScript, RequestTrace, Segment};
 
 /// Outcome of one [`Engine::pump_round`] of the serving loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +96,10 @@ pub struct Engine {
     /// The pluggable decision object every planning pass dispatches through
     /// (selected from `cfg.policy`; swappable via [`Engine::set_sched_policy`]).
     sched: Box<dyn SchedPolicy>,
+    /// Speculative-continuation state (see [`crate::speculation`]): the
+    /// answer predictor plus the live (parent, branch) set. Inert unless
+    /// `cfg.speculate` or a per-session opt-in turns speculation on.
+    spec: SpeculationController,
     pub metrics: Recorder,
     rng: Pcg,
     /// Pending arrivals, soonest last (popped from the back).
@@ -140,6 +146,7 @@ impl Engine {
             estimator,
             planner: Planner::new(),
             sched,
+            spec: SpeculationController::default(),
             metrics: Recorder::default(),
             rng,
             pending: Vec::new(),
@@ -163,6 +170,12 @@ impl Engine {
 
     pub fn request(&self, id: ReqId) -> Option<&Request> {
         self.requests.get(id)
+    }
+
+    /// Highest request id issued so far — client sessions *and* speculative
+    /// branch ids (branches draw from the same sequential allocator).
+    pub fn max_issued_id(&self) -> ReqId {
+        self.next_id - 1
     }
 
     /// Current engine-clock time.
@@ -204,6 +217,15 @@ impl Engine {
         self.intercepts.awaiting_external()
     }
 
+    /// Whether `req` is known and not yet terminal (finished/cancelled).
+    /// Used by the serving front to drop prefix-registry entries that point
+    /// at torn-down sessions instead of recording fork intent against them.
+    pub fn session_live(&self, req: ReqId) -> bool {
+        self.requests
+            .get(req)
+            .is_some_and(|rq| !matches!(rq.state, ReqState::Finished | ReqState::Cancelled))
+    }
+
     /// Swap in a custom scheduling-policy object (must happen before the
     /// run; decisions from the previous object are not revisited).
     pub fn set_sched_policy(&mut self, policy: Box<dyn SchedPolicy>) {
@@ -218,6 +240,28 @@ impl Engine {
     /// any interception fires; in-flight state does not transfer).
     pub fn set_intercept_source(&mut self, source: Box<dyn InterceptSource>) {
         self.intercepts = source;
+    }
+
+    /// Swap in a custom tool-answer predictor for speculative continuation
+    /// (the default is the memoizing
+    /// [`crate::speculation::CachedAnswerPredictor`]). Has no effect unless
+    /// speculation is enabled (`cfg.speculate` or a per-session opt-in).
+    pub fn set_answer_predictor(&mut self, predictor: Box<dyn AnswerPredictor>) {
+        self.spec.set_predictor(predictor);
+    }
+
+    /// Live speculation state (tests / diagnostics).
+    pub fn speculation(&self) -> &SpeculationController {
+        &self.spec
+    }
+
+    /// Per-session speculation override: `Some(true)` opts in even when
+    /// `cfg.speculate` is off, `Some(false)` opts out, `None` defers to
+    /// the config default.
+    pub fn set_speculate(&mut self, req: ReqId, speculate: Option<bool>) {
+        if let Some(rq) = self.requests.get_mut(req) {
+            rq.speculate = speculate;
+        }
     }
 
     /// Route `req`'s lifecycle events to `tx` (used by the serving front).
@@ -636,6 +680,11 @@ impl Engine {
             }
         };
         let ret_len = ret.len();
+        // Speculative continuation: verify any live branch against the
+        // actual answer — the verified prefix's cache moves into this
+        // request's slot ([`CacheManager::adopt`]), or the branch drops
+        // O(1) via refcount release.
+        let spec_outcome = self.verify_speculation(req, &ret, now);
         let keep_arrival = self.cfg.policy.keep_original_arrival;
         let has_cpu = self.cache.cpu_blocks_of(req) > 0;
         let rq = &mut self.requests[req];
@@ -648,6 +697,35 @@ impl Engine {
         rq.queue_arrival = if keep_arrival { rq.arrival } else { now };
         self.deadlines_armed -= disarmed as usize;
         self.paused.retain(|r| *r != req);
+        let mut segment_done = false;
+        if let Some((keep, continuation)) = spec_outcome {
+            let rq = &mut self.requests[req];
+            rq.tokens.extend_from_slice(&continuation);
+            rq.processed = keep;
+            rq.seg_generated = continuation.len() as u32;
+            rq.output_tokens += continuation.len();
+            segment_done =
+                !continuation.is_empty() && rq.seg_generated >= rq.current_segment_gen();
+            for &t in &continuation {
+                self.events.push_token(req, t, now);
+            }
+        }
+        self.metrics.interceptions_resolved += 1;
+        self.events
+            .emit(req, || EngineEvent::Resumed { req, tokens: ret_len, at: now });
+        if segment_done {
+            // The adopted branch already generated this whole segment:
+            // fire the next interception (or finish) directly instead of
+            // requeueing for a decode pass that has nothing left to do.
+            let rq = &self.requests[req];
+            if rq.segment_intercepts() {
+                self.fire_interception(req, now);
+            } else {
+                self.finish(req, now);
+            }
+            return;
+        }
+        let rq = &mut self.requests[req];
         if has_cpu {
             rq.state = ReqState::SwapQueue;
             self.swapq.push(rq.queue_arrival, req);
@@ -655,9 +733,6 @@ impl Engine {
             rq.state = ReqState::Waiting;
             self.waiting.push(rq.queue_arrival, req);
         }
-        self.metrics.interceptions_resolved += 1;
-        self.events
-            .emit(req, || EngineEvent::Resumed { req, tokens: ret_len, at: now });
     }
 
     /// Free a paused request's exclusive GPU context (keeping any CPU
@@ -678,7 +753,16 @@ impl Engine {
     }
 
     /// vLLM-style preemption-by-recompute of a running/waiting request.
+    /// Speculative branches are never worth rebuilding — under pressure
+    /// they are killed outright (they are also the planner's first-choice
+    /// victims, so real sessions evict only after every branch is gone).
     fn evict(&mut self, req: ReqId) {
+        if self.requests[req].speculative {
+            self.metrics.evictions += 1;
+            let now = self.backend.now();
+            self.reject_branch(req, now);
+            return;
+        }
         self.metrics.evictions += 1;
         let rq = &mut self.requests[req];
         rq.recompute_hwm = rq.recompute_hwm.max(rq.processed);
@@ -707,7 +791,11 @@ impl Engine {
         // Prefill-sampled requests were just moved to Running above.
         debug_assert_eq!(rq.state, ReqState::Running, "req {req}");
         if rq.seg_generated >= rq.current_segment_gen() {
-            if rq.segment_intercepts() {
+            if rq.speculative {
+                // A branch that exhausted its decode-ahead budget parks
+                // until the parent's call resolves and verifies it.
+                self.freeze_branch(req, now);
+            } else if rq.segment_intercepts() {
                 self.fire_interception(req, now);
             } else {
                 self.finish(req, now);
@@ -760,6 +848,302 @@ impl Engine {
         }
         self.events
             .emit(req, move || EngineEvent::Intercepted { req, kind, payload, at: now });
+        self.maybe_speculate(req, now);
+    }
+
+    // ------------------------------------------------------------------
+    // Speculative continuation (see `crate::speculation`)
+    // ------------------------------------------------------------------
+
+    /// `parent` just paused on an interception: decide whether to fork a
+    /// copy-on-write branch that decodes ahead against a predicted answer
+    /// while the call is in flight. Entirely skipped (before any predictor
+    /// or RNG interaction) unless the session or config opts in, so the
+    /// disabled engine is bit-identical.
+    fn maybe_speculate(&mut self, parent: ReqId, now: Micros) {
+        let rq = &self.requests[parent];
+        if rq.speculative || !rq.speculate.unwrap_or(self.cfg.speculate) {
+            return;
+        }
+        let kind = rq.pause_kind;
+        if !self.cfg.speculate_kinds.is_empty() && !self.cfg.speculate_kinds.contains(&kind) {
+            return;
+        }
+        // Nothing to decode ahead into: the interception ends the script,
+        // or the next segment generates nothing.
+        let Some(next_seg) = rq.script.segments.get(rq.segment + 1) else {
+            return;
+        };
+        let gen = next_seg.gen_tokens;
+        if gen == 0 {
+            return;
+        }
+        // The whether-to-speculate argmin: expected GB·s salvaged vs. the
+        // branch's expected GB·s spend, through the policy hook.
+        let accept = self.spec.accept_rate(kind);
+        let profile = *self.backend.fwd_profile();
+        let est = self.estimator.remaining_us(kind, 0, rq.pause_duration_us);
+        let gpu_self = self.cache.gpu_tokens_of(parent);
+        let other = self.cache.gpu_tokens().saturating_sub(gpu_self);
+        let w = WasteInputs {
+            ctx_tokens: rq.processed,
+            other_tokens: other,
+            kv_bytes_per_token: self.cfg.kv_bytes_per_token,
+            est_interception_us: est,
+            chunk_tokens: profile.saturation_tokens,
+            running_query: self.running.len(),
+            running_ctx: other,
+            shared_tokens: self.cache.shared_tokens_of(parent),
+        };
+        if !self.sched.decide_speculation(&profile, &w, accept) {
+            return;
+        }
+        let ret_hint = rq.script.segments[rq.segment]
+            .interception
+            .as_ref()
+            .map_or(0, |i| i.ret_tokens);
+        let Some(mut pred) = self.spec.predict(kind, ret_hint, &rq.tokens, parent) else {
+            return;
+        };
+        // Clamp the injected answer exactly like `resume` clamps the real
+        // one, so a verified prediction can never exceed what the resume
+        // path would have accepted.
+        let rq = &self.requests[parent];
+        let reserved: usize = rq.script.segments[rq.segment + 1..]
+            .iter()
+            .map(|s| {
+                s.gen_tokens as usize
+                    + s.interception.as_ref().map_or(0, |i| i.ret_tokens as usize)
+            })
+            .sum();
+        let pool_tokens = self.cfg.num_gpu_blocks * self.cfg.block_size;
+        let capacity = self.cfg.max_seq_tokens.min(pool_tokens - 1);
+        let allowed = capacity.saturating_sub(rq.tokens.len() + reserved);
+        pred.truncate(allowed);
+        let vocab = self.cfg.vocab;
+        for t in pred.iter_mut() {
+            *t %= vocab;
+        }
+        // Fork the parent's cached context onto the branch id. A fork that
+        // shares nothing (tiny unaligned context) is not worth a branch —
+        // observe the prediction as aborted so the pending memo state and
+        // the EWMA stay consistent.
+        let branch = self.next_id;
+        let shared = self.cache.fork(parent, branch, self.requests[parent].processed);
+        if shared == 0 {
+            let rec = SpecRecord {
+                parent,
+                branch,
+                kind,
+                predicted: pred,
+                base_tokens: 0,
+            };
+            self.spec.abort(&rec);
+            return;
+        }
+        self.next_id += 1;
+        let rq = &self.requests[parent];
+        let base = rq.tokens.len();
+        let mut tokens = rq.tokens.clone();
+        tokens.extend_from_slice(&pred);
+        // The branch is a real request in the normal batch: it prefills the
+        // predicted answer, decodes the next segment's budget, and competes
+        // for blocks like anyone else (but is the first eviction victim and
+        // is killed, never requeued — see `Engine::evict`).
+        let script = RequestScript {
+            kind: rq.script.kind,
+            prompt_tokens: tokens.len() as u32,
+            segments: vec![Segment { gen_tokens: gen, interception: None }],
+        };
+        let mut brq = Request::new(branch, now, script, tokens);
+        brq.state = ReqState::Waiting;
+        brq.processed = shared;
+        brq.speculative = true;
+        brq.pause_kind = kind;
+        self.requests.insert_next(brq);
+        self.waiting.push(now, branch);
+        self.unfinished += 1;
+        let predicted_len = pred.len();
+        self.spec
+            .begin(SpecRecord { parent, branch, kind, predicted: pred, base_tokens: base });
+        self.metrics.speculations_started += 1;
+        self.events.emit(parent, move || EngineEvent::SpeculationStarted {
+            req: parent,
+            branch,
+            predicted_tokens: predicted_len,
+            at: now,
+        });
+    }
+
+    /// An interception with a live branch resolved: verify predicted vs.
+    /// actual answer tokens. On (possibly partial) accept the branch is
+    /// rolled back to the divergence point and its cache adopted into the
+    /// parent's slot; otherwise it drops O(1). Returns the adopted context
+    /// length and the branch's own generated tokens (non-empty only on a
+    /// full accept, where the continuation is valid output).
+    fn verify_speculation(
+        &mut self,
+        parent: ReqId,
+        actual: &[u32],
+        now: Micros,
+    ) -> Option<(usize, Vec<u32>)> {
+        let rec = self.spec.take_by_parent(parent)?;
+        let branch = rec.branch;
+        let live = self
+            .requests
+            .get(branch)
+            .is_some_and(|b| !matches!(b.state, ReqState::Finished | ReqState::Cancelled));
+        if !live || !self.cache.has_seq(branch) {
+            // The branch was already torn down (evicted under pressure).
+            self.spec.abort(&rec);
+            return None;
+        }
+        let v = self.spec.verify(&rec, actual);
+        let accepted = v.accepted;
+        let (bproc, btokens) = {
+            let b = &self.requests[branch];
+            (b.processed, b.tokens.clone())
+        };
+        let decoded = bproc.saturating_sub(rec.base_tokens);
+        self.metrics.speculative_tokens_decoded += decoded as u64;
+        // The context the branch's KV is valid for: everything on a full
+        // accept; on a partial accept up to the divergence point, capped one
+        // short of the resumed context so at least one token remains to
+        // feed. A zero-accept misprediction keeps nothing — the branch
+        // could only offer the parent's own re-prefilled tail, and holding
+        // a whole branch for that sliver is exactly the waste the argmin
+        // priced against a real salvage.
+        let keep = if v.full {
+            bproc
+        } else if accepted == 0 {
+            0
+        } else {
+            bproc.min(rec.base_tokens + accepted)
+                .min((rec.base_tokens + actual.len()).saturating_sub(1))
+        };
+        let parent_len = self.cache.len_tokens(parent);
+        if keep <= parent_len {
+            // Nothing beyond what the parent already holds: drop O(1).
+            self.kill_branch(branch);
+            self.metrics.speculations_rejected += 1;
+            self.metrics.speculative_tokens_wasted += decoded as u64;
+            self.events.emit(parent, move || EngineEvent::SpeculationRejected {
+                req: parent,
+                branch,
+                accepted,
+                at: now,
+            });
+            return None;
+        }
+        let salvaged = keep - parent_len;
+        self.cache.truncate_to(branch, keep);
+        self.cache.adopt(parent, branch);
+        self.detach_branch(branch);
+        let continuation = if v.full {
+            btokens[rec.base_tokens + rec.predicted.len()..].to_vec()
+        } else {
+            Vec::new()
+        };
+        self.metrics.speculations_accepted += 1;
+        self.metrics.speculative_tokens_salvaged += salvaged as u64;
+        self.metrics.speculative_tokens_wasted += decoded.saturating_sub(salvaged) as u64;
+        self.events.emit(parent, move || EngineEvent::SpeculationAccepted {
+            req: parent,
+            branch,
+            salvaged_tokens: salvaged,
+            at: now,
+        });
+        Some((keep, continuation))
+    }
+
+    /// A speculative branch hit its decode-ahead budget before the real
+    /// call resolved: park it `Paused` — mirroring the remainder of the
+    /// parent's in-flight interception, so the disposition argmin weighs
+    /// holding it like any paused context — until verification at resume.
+    fn freeze_branch(&mut self, req: ReqId, now: Micros) {
+        let Some(parent) = self.spec.parent_of(req) else {
+            // Orphaned branch (parent torn down mid-iteration): drop it.
+            self.reject_branch(req, now);
+            return;
+        };
+        let (pk, pd, pat) = {
+            let p = &self.requests[parent];
+            (p.pause_kind, p.pause_duration_us, p.paused_at)
+        };
+        let rq = &mut self.requests[req];
+        rq.state = ReqState::Paused;
+        rq.disposition = Disposition::Fresh;
+        rq.paused_at = now;
+        rq.resume_at = 0;
+        rq.pause_kind = pk;
+        // The remaining horizon: the branch froze later than the parent
+        // paused, so the estimators see the same absolute resolution time.
+        rq.pause_duration_us = pd.saturating_sub(now.saturating_sub(pat)).max(1);
+        rq.external_pause = false;
+        self.running.remove(req);
+        self.paused.push(req);
+    }
+
+    /// Remove a branch from whatever queue holds it and terminal-ize it.
+    /// Branches never get a `RequestRecord` or terminal session event of
+    /// their own — their outcome is reported on the parent. Returns false
+    /// if the branch was already terminal.
+    fn detach_branch(&mut self, branch: ReqId) -> bool {
+        let Some(rq) = self.requests.get(branch) else {
+            return false;
+        };
+        debug_assert!(rq.speculative, "detach of non-branch {branch}");
+        match rq.state {
+            ReqState::Waiting => {
+                self.waiting.remove(branch);
+            }
+            ReqState::Running => {
+                self.running.remove(branch);
+            }
+            ReqState::Paused => self.paused.retain(|r| *r != branch),
+            ReqState::SwapQueue => {
+                self.swapq.remove(branch);
+            }
+            ReqState::Pending | ReqState::Finished | ReqState::Cancelled => return false,
+        }
+        let rq = &mut self.requests[branch];
+        rq.state = ReqState::Cancelled;
+        rq.external_pause = false;
+        self.unfinished -= 1;
+        true
+    }
+
+    /// Tear down a live branch and free its cache (the unverified-drop
+    /// path).
+    fn kill_branch(&mut self, branch: ReqId) {
+        if self.detach_branch(branch) {
+            self.cache.release(branch);
+        }
+    }
+
+    /// Drop a live branch *before* verification (eviction under pressure,
+    /// disposition kill, parent teardown): the speculation is observed as a
+    /// zero-accept so flaky kinds damp their EWMA.
+    fn reject_branch(&mut self, branch: ReqId, now: Micros) {
+        if let Some(rec) = self.spec.take_by_branch(branch) {
+            self.spec.abort(&rec);
+            let parent = rec.parent;
+            let decoded = self
+                .requests
+                .get(branch)
+                .map(|b| b.processed.saturating_sub(rec.base_tokens))
+                .unwrap_or(0);
+            self.metrics.speculations_rejected += 1;
+            self.metrics.speculative_tokens_decoded += decoded as u64;
+            self.metrics.speculative_tokens_wasted += decoded as u64;
+            self.events.emit(parent, move || EngineEvent::SpeculationRejected {
+                req: parent,
+                branch,
+                accepted: 0,
+                at: now,
+            });
+        }
+        self.kill_branch(branch);
     }
 
     fn finish(&mut self, req: ReqId, now: Micros) {
@@ -806,6 +1190,19 @@ impl Engine {
             return false;
         };
         let state = rq.state;
+        if rq.speculative {
+            // Branches are engine-internal: no session record, no terminal
+            // event — the rejection is reported on the parent.
+            if matches!(state, ReqState::Finished | ReqState::Cancelled) {
+                return false;
+            }
+            self.reject_branch(req, now);
+            return true;
+        }
+        // A parent teardown takes its live speculative branch with it.
+        if let Some(b) = self.spec.branch_of(req) {
+            self.reject_branch(b, now);
+        }
         match state {
             ReqState::Finished | ReqState::Cancelled => return false,
             ReqState::Pending => self.pending.retain(|&(_, r)| r != req),

@@ -204,6 +204,16 @@ pub struct Request {
     /// instead of prefilling it. Consumed (taken) when the fork is
     /// attempted; `None` for the default no-sharing path.
     pub shared_prefix_parent: Option<ReqId>,
+    /// True for a speculative continuation branch
+    /// ([`crate::speculation`]): a CoW fork of a paused parent decoding
+    /// ahead against a predicted interception answer. Branches are killed
+    /// rather than requeued/swapped under pressure, and are verified then
+    /// adopted or dropped when the parent's interception resolves. Always
+    /// false when speculation is disabled.
+    pub speculative: bool,
+    /// Per-session speculation opt-in (`SessionSpec::speculate`); `None`
+    /// defers to the engine-level `EngineConfig::speculate`.
+    pub speculate: Option<bool>,
 
     /// Metrics.
     pub first_token_at: Option<Micros>,
@@ -238,6 +248,8 @@ impl Request {
             external_timeout_us: None,
             external_deadline: None,
             shared_prefix_parent: None,
+            speculative: false,
+            speculate: None,
             first_token_at: None,
             finished_at: None,
             intercepted_us: 0,

@@ -69,6 +69,29 @@
 //! every code path below reduces bit-for-bit to the exclusive-ownership
 //! behavior (pinned by the no-fork parity properties in this module and the
 //! scheduler-level bit-identity suites).
+//!
+//! # Speculative branches
+//!
+//! Speculative continuation (see [`crate::speculation`]) layers a lifetime
+//! discipline on top of the fork primitive rather than new mechanism:
+//!
+//! * A branch is born by [`CacheManager::fork`] from its paused parent and
+//!   lives exactly as long as the parent's in-flight interception. It ends in
+//!   one of two ways, both O(blocks-held) and both leaving the conservation
+//!   audit green: **drop** via [`CacheManager::release`] (misprediction,
+//!   eviction, parent cancelled — shared prefix blocks just lose one
+//!   reference), or **adopt** via [`CacheManager::truncate_to`] (roll the
+//!   branch back to the verified `base + accepted` prefix) followed by
+//!   [`CacheManager::adopt`] (release the parent's cache and move the
+//!   branch's [`SeqCache`] into the parent's id, rewriting holder-map
+//!   entries so third-party prefix sharers keep valid back-references).
+//! * While live, a branch is an ordinary sequence: it grows, decodes, and is
+//!   evictable like any other holder. The scheduler guarantees a branch is
+//!   never swapped out (it is killed instead), so at verify time its layout
+//!   is `[shared GPU prefix][exclusive GPU tail]` with no CPU run.
+//! * Both `truncate_to` and `adopt` mark every touched id dirty, so
+//!   incremental capture observes adoption as (release parent-old, rewrite
+//!   parent-new, tombstone branch) — the same dirty-set invariant as above.
 
 pub mod slots;
 pub mod swap;
@@ -567,6 +590,88 @@ impl CacheManager {
             }
             self.promote_survivors();
         }
+    }
+
+    /// Roll a sequence back to `len` valid tokens, freeing every block past
+    /// `ceil(len / block_size)` — the speculative-branch rollback primitive:
+    /// after verification keeps only the accepted prefix, the branch's
+    /// unverified tail blocks return to the pool before adoption. Unlike
+    /// [`CacheManager::set_len`] this frees storage, and unlike
+    /// [`CacheManager::discard_gpu_tail`] it may cut into the shared prefix
+    /// (those blocks lose one reference, never a physical free). Freed CPU
+    /// blocks are returned too, though branch callers never have any (the
+    /// scheduler kills branches instead of swapping them). Returns the new
+    /// valid token count.
+    pub fn truncate_to(&mut self, req: ReqId, len: usize) -> usize {
+        let bs = self.alloc.block_size();
+        if !self.seqs.contains(req) {
+            return 0;
+        }
+        self.dirty.mark(req);
+        let keep = len.div_ceil(bs);
+        let (drained, old_shared) = {
+            let seq = self.seqs.get_mut(req).expect("checked above");
+            if keep >= seq.blocks.len() {
+                seq.len_tokens = seq.len_tokens.min(len);
+                return seq.len_tokens;
+            }
+            let old_shared = seq.shared;
+            let drained: Vec<BlockLoc> = seq.blocks.drain(keep..).collect();
+            seq.shared = seq.shared.min(keep);
+            seq.len_tokens = seq.len_tokens.min(len);
+            (drained, old_shared)
+        };
+        let mut cpu_freed = 0;
+        for (off, b) in drained.into_iter().enumerate() {
+            match b {
+                BlockLoc::Gpu(id) => {
+                    let remaining = self.alloc.free_gpu(id);
+                    if keep + off < old_shared {
+                        drop_holder(&mut self.holders, &mut self.promoted, req, id, remaining);
+                    } else {
+                        debug_assert_eq!(remaining, 0, "exclusive block {id} still referenced");
+                    }
+                }
+                BlockLoc::Cpu(id) => {
+                    self.alloc.free_cpu(id);
+                    cpu_freed += 1;
+                }
+            }
+        }
+        if cpu_freed > 0 {
+            self.seqs.get_mut(req).expect("checked above").cpu_resident -= cpu_freed;
+        }
+        self.promote_survivors();
+        self.seqs.get(req).map(|s| s.len_tokens).unwrap_or(0)
+    }
+
+    /// Adopt a verified speculative branch: release whatever cache `parent`
+    /// still holds and move `branch`'s [`SeqCache`] into `parent`'s slot, so
+    /// the parent resumes on the branch's KV with zero recompute. Holder-map
+    /// entries naming `branch` are rewritten to `parent`, keeping
+    /// back-references valid for any third-party sharers of the prefix.
+    /// `branch`'s id is left as a tombstone. Call
+    /// [`CacheManager::truncate_to`] first to cut the branch back to the
+    /// accepted prefix.
+    pub fn adopt(&mut self, parent: ReqId, branch: ReqId) {
+        assert_ne!(parent, branch, "adopt onto self");
+        assert!(self.seqs.contains(branch), "adopt of unknown branch {branch}");
+        self.release(parent);
+        let seq = self.seqs.remove(branch).expect("checked above");
+        for b in &seq.blocks[..seq.shared] {
+            let BlockLoc::Gpu(g) = *b else {
+                panic!("shared prefix off GPU in branch {branch}");
+            };
+            let hs = self.holders.get_mut(&g).expect("shared block missing holders entry");
+            for h in hs.iter_mut() {
+                if *h == branch {
+                    *h = parent;
+                }
+            }
+        }
+        self.dirty.mark(branch);
+        self.dirty.mark(parent);
+        self.seqs.insert(parent, seq);
     }
 
     /// Plan swapping OUT up to `max_blocks` GPU-resident blocks of `req`,
@@ -1687,6 +1792,81 @@ mod tests {
     }
 
     #[test]
+    fn truncate_to_frees_the_unverified_tail() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap(); // 4 blocks
+        m.advance(1, 64);
+        m.fork(1, 2, 32); // 2 blocks shared, branch starts at 32 tokens
+        m.grow(2, 64).unwrap(); // +2 exclusive decode blocks
+        m.advance(2, 32);
+        assert_eq!(m.gpu_free(), 2);
+        // keep base(32) + 8 accepted tokens → 3 blocks, one exclusive freed
+        assert_eq!(m.truncate_to(2, 40), 40);
+        assert_eq!(m.gpu_free(), 3);
+        assert_eq!(m.shared_blocks_of(2), 2);
+        m.check_conservation().unwrap();
+        // cutting into the shared prefix drops references, never frees
+        // a block another holder still uses
+        assert_eq!(m.truncate_to(2, 16), 16);
+        assert_eq!(m.gpu_free(), 4); // only the second exclusive block
+        assert_eq!(m.shared_blocks_of(2), 1);
+        assert_eq!(m.shared_blocks_of(1), 1); // survivor promoted
+        m.check_conservation().unwrap();
+        m.release(2);
+        m.release(1);
+        assert_eq!(m.gpu_free(), 8);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn adopt_moves_branch_cache_into_parent_slot() {
+        let mut m = mgr();
+        m.grow(1, 64).unwrap(); // 4 blocks
+        m.advance(1, 64);
+        m.fork(1, 2, 64); // 4 blocks shared
+        m.grow(2, 96).unwrap(); // +2 exclusive decode blocks
+        m.advance(2, 32);
+        m.check_conservation().unwrap();
+        // full accept: the parent takes over the branch's table wholesale
+        m.adopt(1, 2);
+        assert!(!m.has_seq(2));
+        assert_eq!(m.len_tokens(1), 96);
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 6);
+        assert_eq!(m.shared_blocks_of(1), 0); // no other holder remains
+        assert_eq!(m.shared_gpu_blocks(), 0);
+        assert_eq!(m.gpu_free(), 2);
+        m.check_conservation().unwrap();
+        m.release(1);
+        assert_eq!(m.gpu_free(), 8);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn adopt_rewrites_holder_entries_for_third_party_sharers() {
+        let mut m = mgr();
+        m.grow(1, 32).unwrap(); // 2 blocks
+        m.advance(1, 32);
+        m.fork(1, 2, 32); // prefix-sharing session aliases the prompt
+        m.fork(1, 3, 32); // speculative branch of the same parent
+        m.grow(3, 64).unwrap(); // +2 exclusive decode blocks
+        m.advance(3, 32);
+        m.adopt(1, 3);
+        // the parent holds the branch's table; the prompt blocks stay
+        // aliased with the prefix-sharing session under the parent's id
+        assert_eq!(m.shared_blocks_of(1), 2);
+        assert_eq!(m.shared_blocks_of(2), 2);
+        assert_eq!(m.shared_gpu_blocks(), 2);
+        m.check_conservation().unwrap();
+        // rewritten holder entries keep later releases sound
+        m.release(2);
+        assert_eq!(m.shared_blocks_of(1), 0);
+        m.check_conservation().unwrap();
+        m.release(1);
+        assert_eq!(m.gpu_free(), 8);
+        m.check_conservation().unwrap();
+    }
+
+    #[test]
     fn snapshot_fork_mirrors_manager_fork() {
         let mut m = mgr();
         m.grow(1, 64).unwrap();
@@ -1715,7 +1895,7 @@ mod tests {
             let mut live: Vec<ReqId> = Vec::new();
             let mut next_id: ReqId = 0;
             for _ in 0..80 {
-                match rng.usize(0, 6) {
+                match rng.usize(0, 7) {
                     0 => {
                         let req = if live.is_empty() || rng.usize(0, 1) == 0 {
                             next_id += 1;
@@ -1777,6 +1957,17 @@ mod tests {
                             if m.has_seq(req) {
                                 let len = m.len_tokens(req);
                                 m.set_len(req, rng.usize(0, len));
+                            }
+                        }
+                    }
+                    6 => {
+                        // speculative-branch rollback: storage-freeing
+                        // truncation may cut into the shared prefix
+                        if !live.is_empty() {
+                            let req = *rng.choose(&live);
+                            if m.has_seq(req) {
+                                let len = m.len_tokens(req);
+                                m.truncate_to(req, rng.usize(0, len));
                             }
                         }
                     }

@@ -58,6 +58,7 @@ pub mod profiler;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod speculation;
 pub mod util;
 pub mod workload;
 
@@ -74,5 +75,9 @@ pub mod prelude {
         SessionHandle, SessionSpec, SubmitError,
     };
     pub use crate::sim::{SimBackend, SimModelSpec};
+    pub use crate::speculation::{
+        AnswerPredictor, CachedAnswerPredictor, ConstantPredictor, OraclePredictor,
+        SpeculationController,
+    };
     pub use crate::workload::{RequestScript, RequestTrace, WorkloadGen, WorkloadKind};
 }

@@ -112,6 +112,18 @@ pub struct Recorder {
     pub prefix_hits: u64,
     pub cow_copies: u64,
     pub blocks_shared: u64,
+    /// Speculative-continuation gauges (see `crate::speculation`): branches
+    /// forked at interception dispatch, how they resolved, and the token
+    /// economics — `speculative_tokens_decoded` = every token a branch
+    /// decoded, of which `..._salvaged` survived verification into the
+    /// parent (context the resume did *not* recompute) and `..._wasted`
+    /// were discarded with the branch. All zero when `--speculate` is off.
+    pub speculations_started: u64,
+    pub speculations_accepted: u64,
+    pub speculations_rejected: u64,
+    pub speculative_tokens_decoded: u64,
+    pub speculative_tokens_salvaged: u64,
+    pub speculative_tokens_wasted: u64,
     pub run_started: Micros,
     pub run_ended: Micros,
 }
@@ -197,6 +209,12 @@ impl Recorder {
             prefix_hits: self.prefix_hits,
             cow_copies: self.cow_copies,
             blocks_shared: self.blocks_shared,
+            speculations_started: self.speculations_started,
+            speculations_accepted: self.speculations_accepted,
+            speculations_rejected: self.speculations_rejected,
+            speculative_tokens_decoded: self.speculative_tokens_decoded,
+            speculative_tokens_salvaged: self.speculative_tokens_salvaged,
+            speculative_tokens_wasted: self.speculative_tokens_wasted,
         }
     }
 }
@@ -240,6 +258,13 @@ pub struct RunReport {
     pub prefix_hits: u64,
     pub cow_copies: u64,
     pub blocks_shared: u64,
+    /// Speculative-continuation gauges (see [`Recorder`]).
+    pub speculations_started: u64,
+    pub speculations_accepted: u64,
+    pub speculations_rejected: u64,
+    pub speculative_tokens_decoded: u64,
+    pub speculative_tokens_salvaged: u64,
+    pub speculative_tokens_wasted: u64,
 }
 
 impl RunReport {
@@ -263,6 +288,16 @@ impl RunReport {
 
     pub fn median_ttft_ms(&self) -> f64 {
         stats::median(&self.ttfts_ms)
+    }
+
+    /// Fraction of speculatively decoded tokens that survived verification
+    /// into their parent session (0.0 when speculation never ran).
+    pub fn speculation_salvage_ratio(&self) -> f64 {
+        if self.speculative_tokens_decoded == 0 {
+            0.0
+        } else {
+            self.speculative_tokens_salvaged as f64 / self.speculative_tokens_decoded as f64
+        }
     }
 
     pub fn p99_ttft_ms(&self) -> f64 {

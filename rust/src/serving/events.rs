@@ -61,6 +61,21 @@ pub enum EngineEvent {
     /// the client executes those and answers with
     /// [`crate::serving::SessionHandle::resume_with`]).
     Intercepted { req: ReqId, kind: AugmentKind, payload: String, at: Micros },
+    /// Speculative continuation (see `crate::speculation`) forked a
+    /// copy-on-write branch that decodes ahead against a predicted answer
+    /// while this session's interception is in flight. Emitted after
+    /// `Intercepted`; exactly one of `SpeculationAccepted` /
+    /// `SpeculationRejected` follows before (or at) the matching `Resumed`.
+    SpeculationStarted { req: ReqId, branch: ReqId, predicted_tokens: usize, at: Micros },
+    /// The branch verified against the actual answer: `salvaged_tokens`
+    /// context tokens resume without recomputation (partial-prefix salvage
+    /// counts too).
+    SpeculationAccepted { req: ReqId, branch: ReqId, salvaged_tokens: usize, at: Micros },
+    /// The branch was dropped — misprediction (`accepted` = longest common
+    /// prefix of predicted vs. actual), eviction under memory pressure, or
+    /// session teardown. The session resumes exactly as if it had never
+    /// speculated.
+    SpeculationRejected { req: ReqId, branch: ReqId, accepted: usize, at: Micros },
     /// The interception resolved; `tokens` counts the appended API returns.
     Resumed { req: ReqId, tokens: usize, at: Micros },
     /// The request completed; `record` is its final metrics record.
@@ -80,6 +95,9 @@ impl EngineEvent {
             | EngineEvent::Token { req, .. }
             | EngineEvent::TokenBatch { req, .. }
             | EngineEvent::Intercepted { req, .. }
+            | EngineEvent::SpeculationStarted { req, .. }
+            | EngineEvent::SpeculationAccepted { req, .. }
+            | EngineEvent::SpeculationRejected { req, .. }
             | EngineEvent::Resumed { req, .. }
             | EngineEvent::Finished { req, .. }
             | EngineEvent::Cancelled { req, .. } => *req,
@@ -94,6 +112,9 @@ impl EngineEvent {
             EngineEvent::Token { .. } => "token",
             EngineEvent::TokenBatch { .. } => "token_batch",
             EngineEvent::Intercepted { .. } => "intercepted",
+            EngineEvent::SpeculationStarted { .. } => "speculation_started",
+            EngineEvent::SpeculationAccepted { .. } => "speculation_accepted",
+            EngineEvent::SpeculationRejected { .. } => "speculation_rejected",
             EngineEvent::Resumed { .. } => "resumed",
             EngineEvent::Finished { .. } => "finished",
             EngineEvent::Cancelled { .. } => "cancelled",

@@ -105,6 +105,11 @@ pub struct SessionSpec {
     /// `None` (the default) never shares — scheduling is bit-identical to
     /// a front without the registry.
     pub shared_prefix: Option<String>,
+    /// Per-session speculative-continuation override (see
+    /// [`crate::speculation`]): `Some(true)` opts in even when
+    /// `EngineConfig::speculate` is off, `Some(false)` opts out, `None`
+    /// (the default) defers to the engine config.
+    pub speculate: Option<bool>,
 }
 
 impl SessionSpec {
@@ -117,6 +122,7 @@ impl SessionSpec {
             mode: ResolutionMode::Scripted,
             external_timeout_us: None,
             shared_prefix: None,
+            speculate: None,
         }
     }
 
@@ -130,6 +136,7 @@ impl SessionSpec {
             mode: ResolutionMode::External,
             external_timeout_us: None,
             shared_prefix: None,
+            speculate: None,
         }
     }
 
@@ -164,6 +171,16 @@ impl SessionSpec {
     /// prefix evicted or swapped out) the session just prefills normally.
     pub fn with_shared_prefix(mut self, key: impl Into<String>) -> SessionSpec {
         self.shared_prefix = Some(key.into());
+        self
+    }
+
+    /// Opt this session in to (or out of) speculative continuation through
+    /// its interceptions, overriding `EngineConfig::speculate`. When the
+    /// session pauses, the engine predicts the tool answer, forks a
+    /// copy-on-write branch that decodes ahead, and verifies-or-drops the
+    /// branch when the real answer arrives (see [`crate::speculation`]).
+    pub fn with_speculate(mut self, speculate: bool) -> SessionSpec {
+        self.speculate = Some(speculate);
         self
     }
 }
@@ -493,11 +510,15 @@ pub struct EngineFront {
     /// external-interception deadline instead of handing back again.
     awaiting_reported: bool,
     /// Prefix-sharing registry: for each [`SessionSpec::with_shared_prefix`]
-    /// key, the most recently submitted session holding that prefix. New
-    /// submissions under the key fork from it at admission; the newest
-    /// session then becomes the holder (its copy of the prefix is the one
-    /// most likely to still be GPU-resident for the next arrival).
-    prefix_registry: HashMap<String, ReqId>,
+    /// key, the sessions submitted under it, oldest first. A new submission
+    /// forks from the most recently submitted holder that is *still live* —
+    /// sessions terminate out of submission order (finish, client abort,
+    /// deadline cancel), and recording fork intent against a torn-down
+    /// session whose blocks are long freed silently degrades admission to a
+    /// cold prefill even when an older live sibling still holds the prefix.
+    /// Dead holders are pruned at each lookup, so entries never point at
+    /// terminated sessions.
+    prefix_registry: HashMap<String, Vec<ReqId>>,
 }
 
 impl EngineFront {
@@ -590,11 +611,16 @@ impl EngineFront {
             self.shared.external.lock().unwrap().insert(id);
         }
         self.engine.set_external_timeout(id, spec.external_timeout_us);
+        if spec.speculate.is_some() {
+            self.engine.set_speculate(id, spec.speculate);
+        }
         if let Some(key) = spec.shared_prefix {
-            if let Some(&parent) = self.prefix_registry.get(&key) {
+            let holders = self.prefix_registry.entry(key).or_default();
+            holders.retain(|&r| self.engine.session_live(r));
+            if let Some(&parent) = holders.last() {
                 self.engine.adopt_prefix(id, parent);
             }
-            self.prefix_registry.insert(key, id);
+            holders.push(id);
         }
         // Stamp the run start at the first accepted submission, not the
         // first pump: a mid-flight `report` between the two must not span

@@ -1,0 +1,576 @@
+//! Speculative continuation through interceptions.
+//!
+//! InferCept's dispositions (§4.3) only decide how to *hold* a paused
+//! context while its API call is in flight; every one of them leaves the
+//! GPU idle with respect to that session. This module adds the missing
+//! fourth option, following "Optimizing Agentic Language Model Inference
+//! via Speculative Tool Calls" (PAPERS.md): *predict* the call's answer,
+//! fork the session's KV onto a copy-on-write branch
+//! ([`crate::kvcache::CacheManager::fork`]), inject the predicted answer
+//! tokens, and keep the branch decoding in the normal batch while the real
+//! call runs. When the call resolves, the predicted and actual answer
+//! token streams are compared by longest common prefix:
+//!
+//!  * **full accept** — the branch *is* the continuation: the parent adopts
+//!    it ([`crate::kvcache::CacheManager::adopt`]) and resumes with zero
+//!    recomputed prefill;
+//!  * **partial accept** — the branch is rolled back to the divergence
+//!    point ([`crate::kvcache::CacheManager::truncate_to`]) and the still-
+//!    valid prefix is adopted;
+//!  * **reject** — the branch drops O(1) via refcount release; the parent
+//!    resumes exactly as it would have without speculation.
+//!
+//! # Division of labor
+//!
+//! [`AnswerPredictor`] guesses answers and tracks per-kind acceptance-rate
+//! EWMAs. [`SpeculationController`] owns the predictor plus the set of live
+//! (parent, branch) speculations; the engine drives it at the three
+//! lifecycle points (fork at dispatch, verify at resume, kill on
+//! cancel/evict). *Whether* to speculate is a scheduling decision:
+//! [`crate::coordinator::sched_policy::SchedPolicy::decide_speculation`]
+//! weighs expected salvage against expected spend in the same GB·s units
+//! as the Preserve/Discard/SwapOut argmin
+//! ([`crate::coordinator::waste::speculation_gain`]).
+//!
+//! Everything here is strictly opt-in (`EngineConfig::speculate`, default
+//! off) and bit-identical to the non-speculating engine when disabled —
+//! pinned by `tests/speculation.rs`.
+
+use std::collections::HashMap;
+
+use crate::augment::{AugmentKind, ALL_KINDS};
+use crate::kvcache::ReqId;
+
+/// EWMA smoothing factor for per-kind acceptance rates.
+pub const ACCEPT_EWMA_ALPHA: f64 = 0.2;
+/// Neutral prior before any observation. Note the bootstrap consequence:
+/// [`crate::coordinator::waste::speculation_gain`]'s spend term equals the
+/// Preserve arm of the argmin, which upper-bounds the saved term, so the
+/// gain only goes positive above a 0.5 acceptance rate — a predictor stuck
+/// at this prior never fires and never observes. Predictors whose guesses
+/// carry real evidence (a memoized exact-input replay) start from
+/// [`CACHED_ACCEPT_PRIOR`] via [`AcceptanceEwma::with_prior`] instead, and
+/// the EWMA damps them below the threshold if the evidence turns out weak.
+pub const ACCEPT_EWMA_PRIOR: f64 = 0.5;
+/// Optimistic prior for memo-replay predictions: an exact repeat of a
+/// deterministic tool call usually returns the exact same answer.
+pub const CACHED_ACCEPT_PRIOR: f64 = 0.9;
+
+#[inline]
+fn kind_idx(kind: AugmentKind) -> usize {
+    ALL_KINDS.iter().position(|&k| k == kind).expect("kind in ALL_KINDS")
+}
+
+/// Per-kind acceptance-rate EWMA shared by the shipped predictors.
+///
+/// One observation = one resolved speculation; its value is the *fraction*
+/// of predicted tokens that matched (`lcp / predicted`), so partial-prefix
+/// salvage counts proportionally rather than as all-or-nothing.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEwma {
+    rates: [f64; ALL_KINDS.len()],
+    alpha: f64,
+}
+
+impl Default for AcceptanceEwma {
+    fn default() -> Self {
+        AcceptanceEwma { rates: [ACCEPT_EWMA_PRIOR; ALL_KINDS.len()], alpha: ACCEPT_EWMA_ALPHA }
+    }
+}
+
+impl AcceptanceEwma {
+    /// An EWMA starting every kind at `prior` instead of the neutral
+    /// [`ACCEPT_EWMA_PRIOR`] (see its docs for why a predictor may need to
+    /// start optimistic to ever fire).
+    pub fn with_prior(prior: f64) -> AcceptanceEwma {
+        AcceptanceEwma {
+            rates: [prior.clamp(0.0, 1.0); ALL_KINDS.len()],
+            alpha: ACCEPT_EWMA_ALPHA,
+        }
+    }
+
+    pub fn rate(&self, kind: AugmentKind) -> f64 {
+        self.rates[kind_idx(kind)]
+    }
+
+    /// Fold one resolved speculation in: `accepted` of `predicted` tokens
+    /// matched. Zero-length predictions observe as full accepts (the empty
+    /// prefix always verifies).
+    pub fn observe(&mut self, kind: AugmentKind, predicted: usize, accepted: usize) {
+        let x = if predicted == 0 { 1.0 } else { accepted as f64 / predicted as f64 };
+        let r = &mut self.rates[kind_idx(kind)];
+        *r = (1.0 - self.alpha) * *r + self.alpha * x;
+    }
+}
+
+/// Guesses the token stream an in-flight interception will return.
+///
+/// Implementations are deterministic state machines: `predict` may consult
+/// and `observe` may update internal memo tables, but neither may read
+/// clocks or external entropy — speculation must not perturb the engine's
+/// determinism guarantees.
+pub trait AnswerPredictor {
+    /// Predict the answer for an interception of `kind` fired by `req` with
+    /// context `ctx`. `ret_hint` is the scripted/estimated answer length in
+    /// tokens (the per-kind mean in real serving). `None` declines to
+    /// predict — no branch is forked.
+    fn predict(
+        &mut self,
+        kind: AugmentKind,
+        ret_hint: u32,
+        ctx: &[u32],
+        req: ReqId,
+    ) -> Option<Vec<u32>>;
+
+    /// A speculation resolved: `accepted` = longest common prefix of the
+    /// `predicted` tokens against the actual answer `actual`. Updates the
+    /// acceptance EWMA and any memo state.
+    fn observe(&mut self, kind: AugmentKind, predicted: &[u32], actual: &[u32], accepted: usize);
+
+    /// Current per-kind acceptance-rate estimate in [0, 1].
+    fn accept_rate(&self, kind: AugmentKind) -> f64;
+
+    fn name(&self) -> &'static str {
+        "predictor"
+    }
+}
+
+/// Predicts the same constant answer for every call. With an empty answer
+/// this is the *empty-answer* predictor: it bets the model's continuation
+/// does not depend on the tool output (common for fire-and-forget calls
+/// like TTS/image, whose returns are short constant descriptions).
+#[derive(Debug, Default)]
+pub struct ConstantPredictor {
+    answer: Vec<u32>,
+    ewma: AcceptanceEwma,
+}
+
+impl ConstantPredictor {
+    pub fn new(answer: Vec<u32>) -> ConstantPredictor {
+        ConstantPredictor { answer, ewma: AcceptanceEwma::default() }
+    }
+
+    /// The empty-answer predictor.
+    pub fn empty() -> ConstantPredictor {
+        ConstantPredictor::new(Vec::new())
+    }
+
+    /// Start the acceptance EWMA at `prior` instead of the neutral default
+    /// — the neutral prior never clears the speculation-gain threshold, so
+    /// a constant bet needs declared confidence to fire at all (tests and
+    /// the fire-and-forget empty-answer bet use this).
+    pub fn with_prior(answer: Vec<u32>, prior: f64) -> ConstantPredictor {
+        ConstantPredictor { answer, ewma: AcceptanceEwma::with_prior(prior) }
+    }
+}
+
+impl AnswerPredictor for ConstantPredictor {
+    fn predict(
+        &mut self,
+        _kind: AugmentKind,
+        _ret_hint: u32,
+        _ctx: &[u32],
+        _req: ReqId,
+    ) -> Option<Vec<u32>> {
+        Some(self.answer.clone())
+    }
+
+    fn observe(&mut self, kind: AugmentKind, predicted: &[u32], _actual: &[u32], accepted: usize) {
+        self.ewma.observe(kind, predicted.len(), accepted);
+    }
+
+    fn accept_rate(&self, kind: AugmentKind) -> f64 {
+        self.ewma.rate(kind)
+    }
+
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+}
+
+/// Memoizes the last actual answer per `(kind, tool-input)` and replays it
+/// on the next matching call — the "tool calls repeat" bet (retrieval of
+/// the same document, the same calculator expression, a re-rolled env
+/// step). The tool input is keyed by a hash of the context tail the call
+/// was issued from.
+#[derive(Debug)]
+pub struct CachedAnswerPredictor {
+    cache: HashMap<(AugmentKind, u64), Vec<u32>>,
+    /// (kind, input-key) of predictions currently awaiting verification —
+    /// `observe` files the actual answer under the key `predict` computed,
+    /// so the memo stays input-addressed. Keyed by predicted stream to stay
+    /// request-agnostic; collisions just overwrite a memo slot.
+    pending: Vec<(AugmentKind, u64)>,
+    ewma: AcceptanceEwma,
+}
+
+/// How many trailing context tokens identify "the tool input" (the span a
+/// call's arguments were decoded into).
+const INPUT_WINDOW: usize = 32;
+
+fn input_key(ctx: &[u32]) -> u64 {
+    // FNV-1a over the context tail: cheap, deterministic, no allocation.
+    let tail = &ctx[ctx.len().saturating_sub(INPUT_WINDOW)..];
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tail {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Default for CachedAnswerPredictor {
+    fn default() -> Self {
+        CachedAnswerPredictor {
+            cache: HashMap::new(),
+            pending: Vec::new(),
+            // Memo replays are exact-input repeats: start optimistic so the
+            // first warm hit actually forks (see ACCEPT_EWMA_PRIOR docs for
+            // the >0.5 bootstrap threshold); flaky memos damp the EWMA and
+            // shut speculation back off.
+            ewma: AcceptanceEwma::with_prior(CACHED_ACCEPT_PRIOR),
+        }
+    }
+}
+
+impl CachedAnswerPredictor {
+    pub fn new() -> CachedAnswerPredictor {
+        CachedAnswerPredictor::default()
+    }
+
+    /// Number of memoized answers (diagnostics).
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+impl AnswerPredictor for CachedAnswerPredictor {
+    fn predict(
+        &mut self,
+        kind: AugmentKind,
+        _ret_hint: u32,
+        ctx: &[u32],
+        _req: ReqId,
+    ) -> Option<Vec<u32>> {
+        let key = (kind, input_key(ctx));
+        let hit = self.cache.get(&key).cloned();
+        // Remember the key whether or not we predicted: the observation
+        // files the actual answer for next time either way.
+        self.pending.push(key);
+        hit
+    }
+
+    fn observe(&mut self, kind: AugmentKind, predicted: &[u32], actual: &[u32], accepted: usize) {
+        if let Some(pos) = self.pending.iter().position(|&(k, _)| k == kind) {
+            let key = self.pending.swap_remove(pos);
+            self.cache.insert(key, actual.to_vec());
+        }
+        self.ewma.observe(kind, predicted.len(), accepted);
+    }
+
+    fn accept_rate(&self, kind: AugmentKind) -> f64 {
+        self.ewma.rate(kind)
+    }
+
+    fn name(&self) -> &'static str {
+        "cached-answer"
+    }
+}
+
+/// Test/bench oracle: replicates the engine's deterministic scripted-answer
+/// synthesis (`(req ^ i) % vocab` for internal-timer resumptions), so every
+/// prediction verifies in full. Acceptance rate is pinned at 1.
+#[derive(Debug)]
+pub struct OraclePredictor {
+    vocab: u32,
+}
+
+impl OraclePredictor {
+    pub fn new(vocab: u32) -> OraclePredictor {
+        OraclePredictor { vocab }
+    }
+}
+
+impl AnswerPredictor for OraclePredictor {
+    fn predict(
+        &mut self,
+        _kind: AugmentKind,
+        ret_hint: u32,
+        _ctx: &[u32],
+        req: ReqId,
+    ) -> Option<Vec<u32>> {
+        Some((0..ret_hint).map(|i| (req as u32 ^ i) % self.vocab).collect())
+    }
+
+    fn observe(&mut self, _kind: AugmentKind, _predicted: &[u32], _actual: &[u32], _acc: usize) {}
+
+    fn accept_rate(&self, _kind: AugmentKind) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// One live speculation: `branch` decodes ahead for `parent` while the
+/// parent's interception is in flight.
+#[derive(Debug, Clone)]
+pub struct SpecRecord {
+    pub parent: ReqId,
+    pub branch: ReqId,
+    pub kind: AugmentKind,
+    /// The injected predicted answer tokens.
+    pub predicted: Vec<u32>,
+    /// `parent.tokens.len()` at the pause — the context both streams share;
+    /// answer tokens start here in the branch's token list.
+    pub base_tokens: usize,
+}
+
+/// Verification verdict for a resolved speculation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Verification {
+    /// Longest common prefix of predicted vs. actual answer tokens.
+    pub accepted: usize,
+    /// The whole prediction matched (continuation tokens are valid too).
+    pub full: bool,
+}
+
+/// Longest common prefix length of two token streams.
+pub fn longest_common_prefix(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// Owns the predictor and the live speculation set; the engine drives it at
+/// fork / resolve / kill. Never touches the cache or queues itself — all
+/// mutation stays in the engine so the dirty-set and conservation
+/// invariants have a single owner.
+pub struct SpeculationController {
+    predictor: Box<dyn AnswerPredictor>,
+    live: Vec<SpecRecord>,
+}
+
+impl std::fmt::Debug for SpeculationController {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpeculationController")
+            .field("predictor", &self.predictor.name())
+            .field("live", &self.live)
+            .finish()
+    }
+}
+
+impl Default for SpeculationController {
+    fn default() -> Self {
+        SpeculationController::new(Box::new(CachedAnswerPredictor::new()))
+    }
+}
+
+impl SpeculationController {
+    pub fn new(predictor: Box<dyn AnswerPredictor>) -> SpeculationController {
+        SpeculationController { predictor, live: Vec::new() }
+    }
+
+    pub fn set_predictor(&mut self, predictor: Box<dyn AnswerPredictor>) {
+        self.predictor = predictor;
+    }
+
+    pub fn predict(
+        &mut self,
+        kind: AugmentKind,
+        ret_hint: u32,
+        ctx: &[u32],
+        req: ReqId,
+    ) -> Option<Vec<u32>> {
+        self.predictor.predict(kind, ret_hint, ctx, req)
+    }
+
+    pub fn accept_rate(&self, kind: AugmentKind) -> f64 {
+        self.predictor.accept_rate(kind)
+    }
+
+    /// Register a forked speculation. At most one live branch per parent.
+    pub fn begin(&mut self, rec: SpecRecord) {
+        debug_assert!(self.branch_of(rec.parent).is_none(), "one branch per parent");
+        self.live.push(rec);
+    }
+
+    pub fn branch_of(&self, parent: ReqId) -> Option<ReqId> {
+        self.live.iter().find(|r| r.parent == parent).map(|r| r.branch)
+    }
+
+    pub fn parent_of(&self, branch: ReqId) -> Option<ReqId> {
+        self.live.iter().find(|r| r.branch == branch).map(|r| r.parent)
+    }
+
+    pub fn is_branch(&self, req: ReqId) -> bool {
+        self.parent_of(req).is_some()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Take the live record whose parent is `parent` (the resume/cancel
+    /// path).
+    pub fn take_by_parent(&mut self, parent: ReqId) -> Option<SpecRecord> {
+        let i = self.live.iter().position(|r| r.parent == parent)?;
+        Some(self.live.swap_remove(i))
+    }
+
+    /// Take the live record whose branch is `branch` (the branch-killed
+    /// path: eviction, disposition, conservation pressure).
+    pub fn take_by_branch(&mut self, branch: ReqId) -> Option<SpecRecord> {
+        let i = self.live.iter().position(|r| r.branch == branch)?;
+        Some(self.live.swap_remove(i))
+    }
+
+    /// Verify a resolved speculation against the actual answer and feed the
+    /// predictor's EWMA. Pure on engine state.
+    pub fn verify(&mut self, rec: &SpecRecord, actual: &[u32]) -> Verification {
+        let accepted = longest_common_prefix(&rec.predicted, actual);
+        let full = accepted == rec.predicted.len() && rec.predicted.len() == actual.len();
+        self.predictor.observe(rec.kind, &rec.predicted, actual, accepted);
+        Verification { accepted, full }
+    }
+
+    /// A speculation died unverified (branch evicted, parent cancelled):
+    /// observe it as a zero-accept so flaky speculations damp the EWMA.
+    pub fn abort(&mut self, rec: &SpecRecord) {
+        self.predictor.observe(rec.kind, &rec.predicted, &[], 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: AugmentKind = AugmentKind::Math;
+
+    #[test]
+    fn lcp_basics() {
+        assert_eq!(longest_common_prefix(&[1, 2, 3], &[1, 2, 4]), 2);
+        assert_eq!(longest_common_prefix(&[], &[1]), 0);
+        assert_eq!(longest_common_prefix(&[1], &[1]), 1);
+        assert_eq!(longest_common_prefix(&[1, 2], &[1, 2, 3]), 2);
+    }
+
+    #[test]
+    fn ewma_moves_toward_observations() {
+        let mut e = AcceptanceEwma::default();
+        assert!((e.rate(K) - ACCEPT_EWMA_PRIOR).abs() < 1e-12);
+        for _ in 0..50 {
+            e.observe(K, 10, 10);
+        }
+        assert!(e.rate(K) > 0.99, "{}", e.rate(K));
+        for _ in 0..50 {
+            e.observe(K, 10, 0);
+        }
+        assert!(e.rate(K) < 0.01, "{}", e.rate(K));
+        // Other kinds untouched.
+        assert!((e.rate(AugmentKind::Qa) - ACCEPT_EWMA_PRIOR).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_counts_partial_prefixes_proportionally() {
+        let mut e = AcceptanceEwma::default();
+        e.observe(K, 10, 5);
+        let after_half = e.rate(K);
+        assert!((after_half - (0.8 * 0.5 + 0.2 * 0.5)).abs() < 1e-12);
+        // Empty predictions verify trivially.
+        e.observe(K, 0, 0);
+        assert!(e.rate(K) > after_half);
+    }
+
+    #[test]
+    fn constant_predictor_predicts_and_tracks() {
+        let mut p = ConstantPredictor::new(vec![7, 8]);
+        assert_eq!(p.predict(K, 2, &[1, 2], 1), Some(vec![7, 8]));
+        p.observe(K, &[7, 8], &[7, 9], 1);
+        assert!(p.accept_rate(K) < ACCEPT_EWMA_PRIOR);
+        assert_eq!(ConstantPredictor::empty().predict(K, 4, &[], 1), Some(vec![]));
+    }
+
+    #[test]
+    fn cached_predictor_memoizes_by_context_tail() {
+        let mut p = CachedAnswerPredictor::new();
+        let ctx: Vec<u32> = (0..64).collect();
+        // Cold: no memo, declines.
+        assert_eq!(p.predict(K, 3, &ctx, 1), None);
+        p.observe(K, &[], &[5, 6, 7], 0);
+        assert_eq!(p.len(), 1);
+        // Warm: same context tail replays the memoized answer.
+        assert_eq!(p.predict(K, 3, &ctx, 9), Some(vec![5, 6, 7]));
+        // Different tail: still cold.
+        let other: Vec<u32> = (100..164).collect();
+        assert_eq!(p.predict(K, 3, &other, 9), None);
+        // Different kind: independent memo space.
+        assert_eq!(p.predict(AugmentKind::Qa, 3, &ctx, 9), None);
+    }
+
+    #[test]
+    fn priors_respect_the_gain_bootstrap_threshold() {
+        // The gain formula only fires above 0.5 (its spend term equals the
+        // Preserve arm bounding the saved term), so the memo predictor must
+        // start above it and the neutral predictors at it.
+        assert!(CACHED_ACCEPT_PRIOR > 0.5);
+        let p = CachedAnswerPredictor::new();
+        assert!((p.accept_rate(K) - CACHED_ACCEPT_PRIOR).abs() < 1e-12);
+        let c = ConstantPredictor::new(vec![1]);
+        assert!((c.accept_rate(K) - ACCEPT_EWMA_PRIOR).abs() < 1e-12);
+        let o = ConstantPredictor::with_prior(vec![1], 1.0);
+        assert!((o.accept_rate(K) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oracle_matches_engine_synthesis() {
+        let mut p = OraclePredictor::new(32_000);
+        let pred = p.predict(K, 4, &[], 6).unwrap();
+        let actual: Vec<u32> = (0..4u32).map(|i| (6u32 ^ i) % 32_000).collect();
+        assert_eq!(pred, actual);
+        assert_eq!(p.accept_rate(K), 1.0);
+    }
+
+    #[test]
+    fn controller_lifecycle() {
+        let mut c = SpeculationController::new(Box::new(OraclePredictor::new(100)));
+        let pred = c.predict(K, 3, &[], 4).unwrap();
+        c.begin(SpecRecord { parent: 4, branch: 9, kind: K, predicted: pred, base_tokens: 10 });
+        assert_eq!(c.branch_of(4), Some(9));
+        assert_eq!(c.parent_of(9), Some(4));
+        assert!(c.is_branch(9) && !c.is_branch(4));
+        assert_eq!(c.live_count(), 1);
+        let rec = c.take_by_parent(4).unwrap();
+        assert_eq!(rec.branch, 9);
+        let actual: Vec<u32> = (0..3u32).map(|i| (4u32 ^ i) % 100).collect();
+        let v = c.verify(&rec, &actual);
+        assert_eq!(v, Verification { accepted: 3, full: true });
+        assert_eq!(c.live_count(), 0);
+        assert_eq!(c.take_by_branch(9).map(|r| r.parent), None);
+    }
+
+    #[test]
+    fn controller_partial_and_reject_verdicts() {
+        let mut c = SpeculationController::new(Box::new(ConstantPredictor::new(vec![1, 2, 3])));
+        let rec = SpecRecord {
+            parent: 1,
+            branch: 2,
+            kind: K,
+            predicted: vec![1, 2, 3],
+            base_tokens: 0,
+        };
+        let v = c.verify(&rec, &[1, 2, 9, 9]);
+        assert_eq!(v, Verification { accepted: 2, full: false });
+        let v = c.verify(&rec, &[8]);
+        assert_eq!(v, Verification { accepted: 0, full: false });
+        // Same prefix but actual is longer than predicted: not full.
+        let v = c.verify(&rec, &[1, 2, 3, 4]);
+        assert_eq!(v, Verification { accepted: 3, full: false });
+        // Exact match is full.
+        let v = c.verify(&rec, &[1, 2, 3]);
+        assert_eq!(v, Verification { accepted: 3, full: true });
+    }
+}

@@ -9,9 +9,14 @@
 //! compare. Mutation coverage: submissions (trace arrivals), finishes,
 //! client cancels (random sprinkles), interception pause/resume under every
 //! Fig. 2 disposition policy (preserve / discard / swap) plus the adaptive
-//! scheduler, swap-queue traffic, and external-interception deadline expiry
+//! scheduler, swap-queue traffic, external-interception deadline expiry
 //! under both timeout actions (a flaky source marks every Nth interception
-//! external and never answers, so the deadline always fires).
+//! external and never answers, so the deadline always fires), and — on half
+//! the runs — speculative continuation with a randomly chosen predictor
+//! (memoizing, oracle, or a constant junk answer that mispredicts almost
+//! everything): branch forks, verify/adopt/drop at resume, mid-speculation
+//! cancels of parents *and* branch ids, and deadline expiry while a branch
+//! is live all flow through the same delta-vs-full oracle.
 //!
 //! "Logically identical" deliberately does not mean byte-identical slabs:
 //! the dense `ReqSlots` windows may cover different id spans (the delta
@@ -30,6 +35,7 @@ use infercept::engine::Engine;
 use infercept::kvcache::ReqId;
 use infercept::serving::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
 use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::speculation::{ConstantPredictor, OraclePredictor};
 use infercept::util::prop;
 use infercept::util::rng::Pcg;
 use infercept::util::Micros;
@@ -164,6 +170,9 @@ fn fuzz_one(policy: Policy, rng: &mut Pcg) {
     cfg.external_timeout_us = 150_000 + rng.range(0, 250_000);
     cfg.external_timeout_action =
         if rng.f64() < 0.5 { TimeoutAction::Cancel } else { TimeoutAction::ResumeEmpty };
+    // Half the runs speculate: every interception may fork a CoW branch
+    // that is verified-or-dropped when the call resolves.
+    cfg.speculate = rng.f64() < 0.5;
 
     let n = rng.usize(16, 28);
     let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0);
@@ -171,9 +180,25 @@ fn fuzz_one(policy: Policy, rng: &mut Pcg) {
     // every ∈ {0 (never external), 2, 3, 4}
     let every = [0u64, 2, 3, 4][rng.usize(0, 3)];
     eng.set_intercept_source(Box::new(FlakyExternal::new(every)));
+    if cfg.speculate {
+        // Predictor mix: the default memoizing predictor, a perfect oracle
+        // (every branch adopts), or a constant junk answer (almost every
+        // branch drops) — accept, reject, and partial-salvage paths all
+        // churn the journals.
+        match rng.usize(0, 2) {
+            0 => {}
+            1 => eng.set_answer_predictor(Box::new(OraclePredictor::new(cfg.vocab))),
+            _ => {
+                // Overconfident junk (prior 1.0): early interceptions fork
+                // and drop, then the damped EWMA shuts speculation off —
+                // both transitions churn the journals.
+                let junk: Vec<u32> =
+                    (0..rng.usize(1, 12)).map(|_| rng.next_u64() as u32).collect();
+                eng.set_answer_predictor(Box::new(ConstantPredictor::with_prior(junk, 1.0)));
+            }
+        }
+    }
     eng.load_trace(&trace);
-
-    let max_id = n as ReqId;
     let mut reference = Planner::new();
     let mut iters: u64 = 0;
     while eng.unfinished() > 0 {
@@ -183,8 +208,11 @@ fn fuzz_one(policy: Policy, rng: &mut Pcg) {
         let now = eng.prepare_iteration();
         eng.plan_iteration(now);
 
-        // Oracle: rebuild from scratch and compare before applying.
+        // Oracle: rebuild from scratch and compare before applying. The id
+        // span is dynamic — speculative branches draw fresh ids beyond the
+        // trace's n sessions.
         eng.capture_reference(&mut reference);
+        let max_id = eng.max_issued_id();
         let ctx = format!("iter {iters} seed {seed}");
         assert_snapshots_match(eng.sched_snapshot(), reference.snapshot(), max_id, &ctx);
         if iters % 5 == 0 {
@@ -194,8 +222,10 @@ fn fuzz_one(policy: Policy, rng: &mut Pcg) {
         let worked = eng.apply_iteration().unwrap();
 
         // Random client aborts — any live id, any state (ignored if dead).
+        // Branch ids are in range too: cancelling one mid-speculation must
+        // excise it cleanly (no terminal session event, parent unharmed).
         if rng.f64() < 0.04 {
-            let victim = rng.range(1, max_id);
+            let victim = rng.range(1, eng.max_issued_id());
             eng.cancel(victim);
         }
 

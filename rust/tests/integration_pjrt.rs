@@ -138,6 +138,8 @@ fn engine_serves_end_to_end_on_pjrt() {
         max_live_sessions: 0,
         max_waiting: 0,
         compact_interval_iters: infercept::config::DEFAULT_COMPACT_INTERVAL_ITERS,
+        speculate: false,
+        speculate_kinds: Vec::new(),
     };
     let _ = backend.max_decode_batch();
     let trace = WorkloadGen::new(WorkloadKind::Mixed, 7)

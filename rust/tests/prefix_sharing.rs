@@ -191,6 +191,37 @@ fn shared_prefix_sessions_emit_prefix_hits_in_order() {
     assert_eq!(rep.completed, N);
 }
 
+/// Regression: the registry must not point at terminated sessions. The
+/// newest holder of a key is cancelled before the next arrival; the next
+/// submission must fork from the *older live* sibling instead of recording
+/// fork intent against the torn-down session (which silently degrades to a
+/// cold prefill).
+#[test]
+fn registry_skips_terminated_holder_and_repoints_to_live_sibling() {
+    const PROMPT: usize = 256;
+    let mut f = front(Policy::infercept());
+    let p = prompt(PROMPT);
+    let mk = |at: Micros| {
+        SessionSpec::scripted(plain_script(PROMPT, 200), at)
+            .with_prompt(p.clone())
+            .with_shared_prefix("shared-doc")
+    };
+    let a = f.submit(mk(0)).unwrap();
+    let b = f.submit(mk(40_000)).unwrap();
+    // The newest holder dies (client abort) while still pending; the key
+    // must re-point, not dangle.
+    assert!(f.cancel(b.id()));
+    let c = f.submit(mk(80_000)).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+    assert!(
+        c.drain_events().iter().any(|e| e.tag() == "prefix_hit"),
+        "the arrival after a dead holder must still fork from the live sibling"
+    );
+    assert!(!a.drain_events().iter().any(|e| e.tag() == "prefix_hit"));
+    assert_eq!(f.report().prefix_hits, 1);
+}
+
 /// A prefix hit reports exactly the block-aligned prefix both prompts have
 /// in common (capped one token short of the child's context so prefill
 /// always has a token left to feed).

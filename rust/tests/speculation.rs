@@ -1,0 +1,347 @@
+//! Speculative-continuation integration tests (see `crate::speculation`).
+//!
+//! Four contracts:
+//!
+//! * **Off-is-free** — speculation is strictly opt-in: with
+//!   `EngineConfig::speculate = false` the engine is bit-identical to one
+//!   that has no predictor installed at all, and every speculation gauge
+//!   stays zero.
+//! * **Always-correct predictor** — the branch is adopted wholesale: the
+//!   parent resumes with zero recomputed prefill, the branch's decode-ahead
+//!   tokens all count as salvage (zero waste), and the session's output is
+//!   exactly the scripted token budget.
+//! * **Always-wrong predictor** — every branch drops: zero salvage, all
+//!   decode-ahead counted as waste, the parent's answer span holds the
+//!   *real* tool answer (predicted junk never leaks into the session), and
+//!   block conservation stays green.
+//! * **Partial-prefix prediction** — the branch rolls back to the
+//!   divergence point and the still-valid prefix is adopted (salvage
+//!   strictly positive, counted as an accept).
+//!
+//! Timing note: the sim decodes one token per ~6 ms iteration (`t_base`),
+//! so a 300 ms scripted pause gives a branch ~50 decode-ahead steps. The
+//! controlled tests size the post-interception segment well above that so
+//! the branch is still *running* at resume — a frozen branch competes in
+//! the disposition argmin, where any non-Preserve verdict kills it (that
+//! path is covered by the trace test and the capture-delta fuzz).
+
+use infercept::augment::AugmentKind;
+use infercept::config::EngineConfig;
+use infercept::coordinator::policy::Policy;
+use infercept::engine::{Engine, PumpRound};
+use infercept::kvcache::ReqId;
+use infercept::serving::{EngineFront, FrontStatus, SessionSpec};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::speculation::{AnswerPredictor, ConstantPredictor, OraclePredictor};
+use infercept::util::Micros;
+use infercept::workload::{
+    Interception, RequestScript, Segment, WorkloadGen, WorkloadKind,
+};
+
+const PROMPT: u32 = 64;
+const GEN0: u32 = 16;
+const RET: u32 = 8;
+const GEN1: u32 = 128;
+const PAUSE_US: Micros = 300_000;
+
+fn cfg(speculate: bool) -> EngineConfig {
+    let spec = SimModelSpec::gptj_6b();
+    let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    cfg.speculate = speculate;
+    cfg
+}
+
+fn engine(cfg: EngineConfig) -> Engine {
+    Engine::new(Box::new(SimBackend::new(SimModelSpec::gptj_6b())), cfg)
+}
+
+/// prompt → GEN0 tokens → interception (`kind`, PAUSE_US, RET tokens) →
+/// GEN1 tokens.
+fn spec_script(kind: AugmentKind) -> RequestScript {
+    RequestScript {
+        kind,
+        prompt_tokens: PROMPT,
+        segments: vec![
+            Segment {
+                gen_tokens: GEN0,
+                interception: Some(Interception {
+                    kind,
+                    duration_us: PAUSE_US,
+                    ret_tokens: RET,
+                }),
+            },
+            Segment { gen_tokens: GEN1, interception: None },
+        ],
+    }
+}
+
+/// The engine's scripted-timer answer synthesis for `req`.
+fn scripted_answer(req: ReqId, vocab: u32) -> Vec<u32> {
+    (0..RET).map(|i| (req as u32 ^ i) % vocab).collect()
+}
+
+fn drain(eng: &mut Engine) {
+    let mut iters = 0u64;
+    while !matches!(eng.pump_round(&mut iters).unwrap(), PumpRound::Drained) {
+        assert!(iters < 100_000, "engine does not drain");
+    }
+    eng.flush_events();
+    eng.check_invariants().unwrap();
+}
+
+/// Always-confident, always-wrong: differs from the scripted answer at
+/// every position, but claims a perfect acceptance rate so the gain
+/// threshold never stops it from forking.
+struct WrongOracle {
+    vocab: u32,
+}
+
+impl AnswerPredictor for WrongOracle {
+    fn predict(
+        &mut self,
+        _kind: AugmentKind,
+        ret_hint: u32,
+        _ctx: &[u32],
+        req: ReqId,
+    ) -> Option<Vec<u32>> {
+        Some((0..ret_hint).map(|i| ((req as u32 ^ i) + 1) % self.vocab).collect())
+    }
+
+    fn observe(&mut self, _k: AugmentKind, _p: &[u32], _a: &[u32], _acc: usize) {}
+
+    fn accept_rate(&self, _kind: AugmentKind) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "wrong-oracle"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Off-is-free
+// ---------------------------------------------------------------------------
+
+/// With `speculate = false` the predictor is never consulted: a run with an
+/// installed oracle is Debug-identical to a run with no predictor at all,
+/// and every gauge stays zero.
+#[test]
+fn disabled_speculation_is_bit_identical_and_gauges_stay_zero() {
+    for seed in [7u64, 20260808] {
+        let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(30, 3.0);
+        let mut plain = engine(cfg(false));
+        let rp = plain.run_trace(&trace).unwrap();
+        plain.check_invariants().unwrap();
+
+        let mut armed = engine(cfg(false));
+        armed.set_answer_predictor(Box::new(OraclePredictor::new(32_000)));
+        let ra = armed.run_trace(&trace).unwrap();
+        armed.check_invariants().unwrap();
+
+        assert_eq!(format!("{rp:?}"), format!("{ra:?}"), "seed {seed}");
+        assert_eq!(ra.speculations_started, 0);
+        assert_eq!(ra.speculations_accepted, 0);
+        assert_eq!(ra.speculations_rejected, 0);
+        assert_eq!(ra.speculative_tokens_decoded, 0);
+        assert_eq!(ra.speculative_tokens_salvaged, 0);
+        assert_eq!(ra.speculative_tokens_wasted, 0);
+        assert_eq!(ra.speculation_salvage_ratio(), 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Always-correct predictor
+// ---------------------------------------------------------------------------
+
+/// A perfect prediction turns the pause into pure decode-ahead: the branch
+/// is adopted in full, the parent re-prefills nothing (zero recompute even
+/// though its own context was discarded during the pause), and everything
+/// the branch decoded is salvage.
+#[test]
+fn oracle_predictor_salvages_branch_with_zero_recompute() {
+    let c = cfg(true);
+    let vocab = c.vocab;
+    let mut eng = engine(c);
+    eng.set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+    let id = eng.submit_script(0, spec_script(AugmentKind::Math), None).unwrap();
+    drain(&mut eng);
+
+    let m = &eng.metrics;
+    assert_eq!(m.speculations_started, 1);
+    assert_eq!(m.speculations_accepted, 1);
+    assert_eq!(m.speculations_rejected, 0);
+    assert!(m.speculative_tokens_decoded > 0, "branch never decoded ahead");
+    assert!(m.speculative_tokens_salvaged >= m.speculative_tokens_decoded);
+    assert_eq!(m.speculative_tokens_wasted, 0);
+    // The headline property: the resume path recomputed no prefill, ever.
+    assert_eq!(m.recompute_tokens, 0);
+
+    let rq = eng.request(id).unwrap();
+    assert_eq!(rq.output_tokens, (GEN0 + GEN1) as usize);
+    let base = (PROMPT + GEN0) as usize;
+    assert_eq!(&rq.tokens[base..base + RET as usize], &scripted_answer(id, vocab)[..]);
+}
+
+// ---------------------------------------------------------------------------
+// Always-wrong predictor
+// ---------------------------------------------------------------------------
+
+/// A misprediction costs exactly the branch and nothing else: the branch
+/// drops whole, the parent's context carries the *real* answer tokens, and
+/// the session still produces its full scripted output.
+#[test]
+fn wrong_predictor_drops_every_branch_and_never_leaks_tokens() {
+    let c = cfg(true);
+    let vocab = c.vocab;
+    let mut eng = engine(c);
+    eng.set_answer_predictor(Box::new(WrongOracle { vocab }));
+    let id = eng.submit_script(0, spec_script(AugmentKind::Qa), None).unwrap();
+    drain(&mut eng);
+
+    let m = &eng.metrics;
+    assert_eq!(m.speculations_started, 1);
+    assert_eq!(m.speculations_accepted, 0);
+    assert_eq!(m.speculations_rejected, 1);
+    assert!(m.speculative_tokens_decoded > 0);
+    assert_eq!(m.speculative_tokens_salvaged, 0);
+    assert_eq!(m.speculative_tokens_wasted, m.speculative_tokens_decoded);
+
+    let rq = eng.request(id).unwrap();
+    assert_eq!(rq.output_tokens, (GEN0 + GEN1) as usize);
+    // The answer span is the scripted return — the junk prediction only
+    // ever lived on the dropped branch.
+    let base = (PROMPT + GEN0) as usize;
+    let actual = scripted_answer(id, vocab);
+    assert_eq!(&rq.tokens[base..base + RET as usize], &actual[..]);
+    let wrong: Vec<u32> = (0..RET).map(|i| ((id as u32 ^ i) + 1) % vocab).collect();
+    assert_ne!(&rq.tokens[base..base + RET as usize], &wrong[..]);
+}
+
+// ---------------------------------------------------------------------------
+// Partial-prefix prediction
+// ---------------------------------------------------------------------------
+
+/// A prediction right in its first half salvages exactly up to the
+/// divergence point: the verdict is an accept, salvage is positive, and the
+/// parent still re-prefills the mispredicted tail from the real answer.
+#[test]
+fn partial_prefix_prediction_salvages_to_divergence() {
+    let c = cfg(true);
+    let vocab = c.vocab;
+    let mut eng = engine(c);
+    // The first submitted script gets id 1; its scripted answer is known in
+    // advance, so hand the predictor its first half plus junk.
+    let id: ReqId = 1;
+    let mut half_right = scripted_answer(id, vocab);
+    for t in &mut half_right[RET as usize / 2..] {
+        *t = (*t + 1) % vocab;
+    }
+    eng.set_answer_predictor(Box::new(ConstantPredictor::with_prior(half_right, 1.0)));
+    assert_eq!(eng.submit_script(0, spec_script(AugmentKind::Math), None).unwrap(), id);
+    drain(&mut eng);
+
+    let m = &eng.metrics;
+    assert_eq!(m.speculations_started, 1);
+    assert_eq!(m.speculations_accepted, 1, "a partial salvage is an accept");
+    assert_eq!(m.speculations_rejected, 0);
+    assert!(m.speculative_tokens_salvaged > 0);
+    assert!(
+        m.speculative_tokens_wasted > 0,
+        "the decode-ahead beyond the divergence must count as waste"
+    );
+
+    let rq = eng.request(id).unwrap();
+    assert_eq!(rq.output_tokens, (GEN0 + GEN1) as usize);
+    let base = (PROMPT + GEN0) as usize;
+    assert_eq!(&rq.tokens[base..base + RET as usize], &scripted_answer(id, vocab)[..]);
+}
+
+// ---------------------------------------------------------------------------
+// Gating: per-kind filter and per-session opt-in
+// ---------------------------------------------------------------------------
+
+/// `speculate_kinds` restricts forking to the listed interception kinds.
+#[test]
+fn speculate_kinds_filters_by_interception_kind() {
+    let mut c = cfg(true);
+    c.speculate_kinds = vec![AugmentKind::Math];
+    let vocab = c.vocab;
+    let mut eng = engine(c);
+    eng.set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+    eng.submit_script(0, spec_script(AugmentKind::Math), None).unwrap();
+    eng.submit_script(10_000, spec_script(AugmentKind::Qa), None).unwrap();
+    drain(&mut eng);
+    assert_eq!(eng.metrics.speculations_started, 1, "only the math pause forks");
+    assert_eq!(eng.metrics.speculations_accepted, 1);
+}
+
+/// `SessionSpec::with_speculate` overrides the config default per session,
+/// and the speculation lifecycle streams to the parent's event handle.
+#[test]
+fn session_opt_in_overrides_config_default() {
+    let spec = SimModelSpec::gptj_6b();
+    let c = {
+        let mut c = EngineConfig::for_sim(&spec, Policy::infercept());
+        c.speculate = false; // off globally; one session opts in
+        c
+    };
+    let vocab = c.vocab;
+    let mut f = EngineFront::new(Box::new(SimBackend::new(spec)), c);
+    f.engine_mut().set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+    let a = f
+        .submit(
+            SessionSpec::scripted(spec_script(AugmentKind::Math), 0).with_speculate(true),
+        )
+        .unwrap();
+    let b = f.submit(SessionSpec::scripted(spec_script(AugmentKind::Math), 20_000)).unwrap();
+    assert_eq!(f.run_until_blocked().unwrap(), FrontStatus::Drained);
+    f.engine().check_invariants().unwrap();
+
+    let rep = f.report();
+    assert_eq!(rep.speculations_started, 1, "only the opted-in session forks");
+    let a_tags: Vec<&str> = a.drain_events().iter().map(|e| e.tag()).collect();
+    assert!(a_tags.contains(&"speculation_started"), "{a_tags:?}");
+    assert!(a_tags.contains(&"speculation_accepted"), "{a_tags:?}");
+    let b_tags: Vec<&str> = b.drain_events().iter().map(|e| e.tag()).collect();
+    assert!(!b_tags.iter().any(|t| t.starts_with("speculation")), "{b_tags:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Whole-trace smoke: speculation on, mixed workload
+// ---------------------------------------------------------------------------
+
+/// A mixed multi-session trace with the oracle predictor: branches fork,
+/// verify, freeze, and get disposition-killed under real scheduling churn —
+/// every speculation must resolve, conservation must hold, and every
+/// session still emits its exact scripted token budget.
+#[test]
+fn mixed_trace_with_speculation_resolves_every_branch() {
+    let c = cfg(true);
+    let vocab = c.vocab;
+    let n = 24;
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 20260808).generate(n, 4.0);
+    let mut eng = engine(c);
+    eng.set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+    let rep = eng.run_trace(&trace).unwrap();
+    eng.check_invariants().unwrap();
+
+    assert_eq!(rep.completed, n);
+    assert!(rep.speculations_started > 0, "mixed trace never speculated");
+    assert!(rep.speculations_accepted > 0, "oracle predictions never adopted");
+    assert_eq!(
+        rep.speculations_started,
+        rep.speculations_accepted + rep.speculations_rejected,
+        "every speculation must resolve exactly once"
+    );
+    assert!(rep.speculative_tokens_salvaged > 0);
+    assert!(rep.speculation_salvage_ratio() > 0.0);
+    for (i, tr) in trace.iter().enumerate() {
+        let rq = eng.request(i as ReqId + 1).unwrap();
+        assert_eq!(
+            rq.output_tokens,
+            tr.script.total_gen_tokens(),
+            "session {} output budget",
+            i + 1
+        );
+    }
+}

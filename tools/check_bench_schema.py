@@ -33,6 +33,7 @@ EXPECTED_RESULTS = [
     "planner_e2e/capture 256r/128p/10000w/32s",
     "planner_e2e/sim_replay mixed120@3rps infercept",
     "planner_e2e/shared_prefix 32x512t infercept",
+    "planner_e2e/speculation 16x300ms infercept",
 ]
 
 EXPECTED_DERIVED = [
@@ -49,6 +50,9 @@ EXPECTED_DERIVED = [
     "shared_prefix_block_ratio",
     "shared_prefix_hits",
     "shared_prefix_cow_copies",
+    "speculation_salvage_ratio",
+    "speculations_started",
+    "speculation_salvaged_tokens",
 ]
 
 RESULT_FIELDS = ["name", "iters", "mean_ns", "p50_ns", "p95_ns"]
