@@ -118,8 +118,14 @@ fn main() -> anyhow::Result<()> {
     let mut bounded = EngineFront::new(Box::new(SimBackend::new(spec)), bounded_cfg);
     let _first = bounded.submit(SessionSpec::interactive(chat_script()))?;
     match bounded.submit(SessionSpec::interactive(chat_script())) {
-        Err(SubmitError::AtCapacity { live, limit, .. }) => {
-            println!("\nbackpressure: second submit rejected ({live} live, bound {limit})");
+        Err(SubmitError::AtCapacity { live, waiting, max_live, max_waiting }) => {
+            // Both depths and both caps arrive with the error, so a real
+            // client can back off in an informed way (e.g. wait until
+            // `live` drops well below `max_live`) instead of blind-retrying.
+            println!(
+                "\nbackpressure: second submit rejected \
+                 ({live}/{max_live} live, {waiting}/{max_waiting} waiting)"
+            );
         }
         other => anyhow::bail!("expected AtCapacity, got {other:?}"),
     }

@@ -13,7 +13,8 @@ pub mod table1;
 use anyhow::{anyhow, Result};
 
 use crate::augment::AugmentKind;
-use crate::config::{EngineConfig, TimeoutAction};
+use crate::config::{EngineConfig, FailureAction, TimeoutAction};
+use crate::faults::{FaultPlan, FaultRates};
 use crate::coordinator::policy::Policy;
 use crate::engine::ExecBackend;
 use crate::metrics::RunReport;
@@ -109,6 +110,56 @@ pub fn apply_speculation_args(cfg: &mut EngineConfig, args: &Args) -> Result<()>
                     .ok_or_else(|| anyhow!("--speculate-kinds: unknown kind '{s}'"))
             })
             .collect::<Result<Vec<_>>>()?;
+    }
+    Ok(())
+}
+
+/// Apply the interception failure-semantics CLI knobs (`serve` / `sim`):
+/// the retry budget (`--intercept-retries`, attempts beyond the first),
+/// the base backoff between attempts (`--intercept-backoff-ms`,
+/// engine-clock ms, doubled per attempt with seeded ±25% jitter), what an
+/// exhausted budget does (`--failure-action
+/// cancel|resume-empty|fallback[:t1,t2,...]`), the graceful-degradation
+/// watermark (`--degrade-watermark`, free GPU blocks; 0 = off), and the
+/// deterministic fault injector (`--fault-error` / `--fault-stall` /
+/// `--fault-slow` / `--fault-malformed` per-dispatch probabilities plus
+/// `--fault-seed`). All no-ops when the flags are absent — the defaults
+/// keep runs bit-identical to a build without the subsystem.
+pub fn apply_fault_args(cfg: &mut EngineConfig, args: &Args) -> Result<()> {
+    cfg.intercept_retries =
+        args.usize_or("intercept-retries", cfg.intercept_retries as usize)? as u32;
+    let backoff_ms =
+        args.f64_or("intercept-backoff-ms", cfg.intercept_backoff_us as f64 / 1e3)?;
+    anyhow::ensure!(backoff_ms >= 0.0, "--intercept-backoff-ms must be >= 0");
+    cfg.intercept_backoff_us = (backoff_ms * 1e3).round() as u64;
+    if let Some(a) = args.get("failure-action") {
+        cfg.intercept_failure_action = FailureAction::parse(a).ok_or_else(|| {
+            anyhow!("--failure-action must be 'cancel', 'resume-empty', or 'fallback[:t1,t2,...]'")
+        })?;
+    }
+    cfg.degrade_watermark_blocks =
+        args.usize_or("degrade-watermark", cfg.degrade_watermark_blocks)?;
+
+    let rates = FaultRates {
+        error: args.f64_or("fault-error", 0.0)?,
+        stall: args.f64_or("fault-stall", 0.0)?,
+        slow: args.f64_or("fault-slow", 0.0)?,
+        malformed: args.f64_or("fault-malformed", 0.0)?,
+    };
+    if rates.any() {
+        for (name, r) in [
+            ("--fault-error", rates.error),
+            ("--fault-stall", rates.stall),
+            ("--fault-slow", rates.slow),
+            ("--fault-malformed", rates.malformed),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&r), "{name} must be in [0, 1]");
+        }
+        anyhow::ensure!(
+            rates.error + rates.stall + rates.slow + rates.malformed <= 1.0,
+            "fault rates must sum to at most 1"
+        );
+        cfg.fault_plan = FaultPlan::uniform(args.u64_or("fault-seed", cfg.seed)?, rates);
     }
     Ok(())
 }

@@ -12,7 +12,9 @@ use crate::util::cli::Args;
 mod real {
     use anyhow::{anyhow, Result};
 
-    use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, apply_speculation_args};
+    use crate::cmds::{
+        apply_adaptive_args, apply_fault_args, apply_lifecycle_args, apply_speculation_args,
+    };
     use crate::config::EngineConfig;
     use crate::coordinator::policy::Policy;
     use crate::profiler;
@@ -74,10 +76,16 @@ mod real {
             compact_interval_iters: crate::config::DEFAULT_COMPACT_INTERVAL_ITERS,
             speculate: false,
             speculate_kinds: Vec::new(),
+            intercept_retries: 0,
+            intercept_backoff_us: 0,
+            intercept_failure_action: crate::config::FailureAction::Cancel,
+            degrade_watermark_blocks: 0,
+            fault_plan: crate::faults::FaultPlan::none(),
         };
         apply_adaptive_args(&mut cfg, args)?;
         apply_lifecycle_args(&mut cfg, args)?;
         apply_speculation_args(&mut cfg, args)?;
+        apply_fault_args(&mut cfg, args)?;
 
         // Mini models cap sequences at max_seq_tokens; scale contexts down and
         // leave one max-chunk headroom for padded prefill.

@@ -3,7 +3,10 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::cmds::{apply_adaptive_args, apply_lifecycle_args, apply_speculation_args, run_once_with};
+use crate::cmds::{
+    apply_adaptive_args, apply_fault_args, apply_lifecycle_args, apply_speculation_args,
+    run_once_with,
+};
 use crate::config::EngineConfig;
 use crate::coordinator::policy::Policy;
 use crate::sim::{SimBackend, SimModelSpec};
@@ -28,6 +31,7 @@ pub fn run(args: &Args) -> Result<()> {
     apply_adaptive_args(&mut cfg, args)?;
     apply_lifecycle_args(&mut cfg, args)?;
     apply_speculation_args(&mut cfg, args)?;
+    apply_fault_args(&mut cfg, args)?;
     let rep = run_once_with(cfg, Box::new(SimBackend::new(spec.clone())), &trace)?;
     println!("model={} workload={} rate={rate} n={n}", spec.name, kind.name());
     println!("{}", rep.summary_line());
@@ -46,6 +50,12 @@ pub fn run(args: &Args) -> Result<()> {
         println!(
             "  lifecycle: {} cancelled  {} timed-out interceptions  {} rejected submits",
             rep.sessions_cancelled, rep.interceptions_timed_out, rep.submits_rejected,
+        );
+    }
+    if rep.interception_failures + rep.interception_retries + rep.interception_fallbacks > 0 {
+        println!(
+            "  failures: {} failed attempts  {} retries  {} fallback resumes",
+            rep.interception_failures, rep.interception_retries, rep.interception_fallbacks,
         );
     }
     if rep.speculations_started > 0 {

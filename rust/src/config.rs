@@ -5,6 +5,7 @@
 
 use crate::augment::AugmentKind;
 use crate::coordinator::policy::Policy;
+use crate::faults::FaultPlan;
 use crate::sim::SimModelSpec;
 
 /// What the engine does when an externally-resolved interception outlives
@@ -35,6 +36,52 @@ impl TimeoutAction {
         match self {
             TimeoutAction::Cancel => "cancel",
             TimeoutAction::ResumeEmpty => "resume-empty",
+        }
+    }
+}
+
+/// What the engine does once an interception has failed terminally — every
+/// retry the policy allows ([`EngineConfig::intercept_retries`], or the
+/// per-session override) has been exhausted (`--failure-action`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum FailureAction {
+    /// Tear the session down: free all GPU/CPU blocks, emit a terminal
+    /// `Cancelled { reason: InterceptionFailed }` event (the default — a
+    /// session whose tool is gone must not anchor the capture span).
+    #[default]
+    Cancel,
+    /// Treat the failure as an empty answer: the paused context re-queues
+    /// and the script continues with zero returned tokens (mirrors
+    /// [`TimeoutAction::ResumeEmpty`]).
+    ResumeEmpty,
+    /// Resume with a fixed fallback answer (e.g. a canned "tool
+    /// unavailable" token sequence). Clamped to the vocab and the context
+    /// capacity by the normal resume path.
+    Fallback(Vec<u32>),
+}
+
+impl FailureAction {
+    /// `"cancel"`, `"resume-empty"`, `"fallback"` (empty answer), or
+    /// `"fallback:1,2,3"` (explicit token list).
+    pub fn parse(s: &str) -> Option<FailureAction> {
+        match s {
+            "cancel" => Some(FailureAction::Cancel),
+            "resume-empty" => Some(FailureAction::ResumeEmpty),
+            "fallback" => Some(FailureAction::Fallback(Vec::new())),
+            _ => {
+                let toks = s.strip_prefix("fallback:")?;
+                let parsed: Result<Vec<u32>, _> =
+                    toks.split(',').map(|t| t.trim().parse::<u32>()).collect();
+                parsed.ok().map(FailureAction::Fallback)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureAction::Cancel => "cancel",
+            FailureAction::ResumeEmpty => "resume-empty",
+            FailureAction::Fallback(_) => "fallback",
         }
     }
 }
@@ -119,6 +166,27 @@ pub struct EngineConfig {
     /// Useful because acceptance rates differ wildly (deterministic tools
     /// like `Math` memoize well; open-ended `Chatbot` rarely repeats).
     pub speculate_kinds: Vec<AugmentKind>,
+    /// Failed interception dispatches are retried up to this many times
+    /// (`--intercept-retries`; per-session override on `SessionSpec`).
+    /// 0 = first failure is terminal.
+    pub intercept_retries: u32,
+    /// Base backoff before retry attempt `n` (engine-clock µs, doubled per
+    /// attempt with seeded jitter — `--intercept-backoff-ms`). The backoff
+    /// extends the interception pause, so the preserve/discard/swap
+    /// economics price the retried wait like any longer interception.
+    pub intercept_backoff_us: u64,
+    /// What a terminally failed interception does (see [`FailureAction`]).
+    pub intercept_failure_action: FailureAction,
+    /// Graceful-degradation watermark, free GPU blocks: below it the
+    /// scheduler sheds load in order (kill speculative branches, bias
+    /// retrying sessions toward discard, then shed admissions through
+    /// `SubmitError::AtCapacity`). 0 disables — the planner is then
+    /// bit-identical to a build without the watermark.
+    pub degrade_watermark_blocks: usize,
+    /// Deterministic interception fault injection ([`crate::faults`]):
+    /// when active, every installed `InterceptSource` is wrapped in a
+    /// seeded `FaultInjector`. Inactive by default (no wrapping at all).
+    pub fault_plan: FaultPlan,
 }
 
 impl EngineConfig {
@@ -150,6 +218,11 @@ impl EngineConfig {
             compact_interval_iters: DEFAULT_COMPACT_INTERVAL_ITERS,
             speculate: false,
             speculate_kinds: Vec::new(),
+            intercept_retries: 0,
+            intercept_backoff_us: 0,
+            intercept_failure_action: FailureAction::Cancel,
+            degrade_watermark_blocks: 0,
+            fault_plan: FaultPlan::none(),
         }
     }
 
@@ -176,5 +249,27 @@ mod tests {
         assert!(cfg.num_gpu_blocks > 100);
         assert!(cfg.max_seq_tokens <= cfg.num_gpu_blocks * cfg.block_size);
         assert!(cfg.watermark_blocks < cfg.num_gpu_blocks / 10);
+        assert_eq!(cfg.intercept_retries, 0);
+        assert!(!cfg.fault_plan.is_active());
+    }
+
+    #[test]
+    fn failure_action_parse_roundtrip() {
+        assert_eq!(FailureAction::parse("cancel"), Some(FailureAction::Cancel));
+        assert_eq!(FailureAction::parse("resume-empty"), Some(FailureAction::ResumeEmpty));
+        assert_eq!(FailureAction::parse("fallback"), Some(FailureAction::Fallback(Vec::new())));
+        assert_eq!(
+            FailureAction::parse("fallback:1, 2,3"),
+            Some(FailureAction::Fallback(vec![1, 2, 3]))
+        );
+        assert_eq!(FailureAction::parse("fallback:x"), None);
+        assert_eq!(FailureAction::parse("retry"), None);
+        for a in [
+            FailureAction::Cancel,
+            FailureAction::ResumeEmpty,
+            FailureAction::Fallback(Vec::new()),
+        ] {
+            assert_eq!(FailureAction::parse(a.name()), Some(a));
+        }
     }
 }

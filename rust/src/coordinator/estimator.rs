@@ -42,6 +42,13 @@ pub struct DurationEstimator {
     /// Durations are scaled in real mode; estimates must match the engine
     /// clock, so the estimator applies the same scale.
     pub time_scale: f64,
+    /// EWMA of dispatch attempts per *completed* interception, by type
+    /// (1.0 = never retried). Fed by the engine's retry machinery; the
+    /// Dynamic estimator multiplies its estimate by this factor so a
+    /// flaky tool's expected re-dispatches are priced into the
+    /// preserve/discard/swap argmin. Stays exactly 1.0 when no failure
+    /// ever occurs, so fault-free runs are bit-identical.
+    expected_attempts: HashMap<AugmentKind, f64>,
 }
 
 impl DurationEstimator {
@@ -50,7 +57,20 @@ impl DurationEstimator {
             .iter()
             .map(|k| (*k, AugmentProfile::table1(*k).int_time_s.0 * 1e6))
             .collect();
-        DurationEstimator { kind, profile_means, time_scale }
+        DurationEstimator { kind, profile_means, time_scale, expected_attempts: HashMap::new() }
+    }
+
+    /// An interception of `kind` resolved after `attempts` dispatches
+    /// (1 = first try). Folds into the per-type expected-attempts EWMA.
+    pub fn observe_attempts(&mut self, kind: AugmentKind, attempts: u32) {
+        let e = self.expected_attempts.entry(kind).or_insert(1.0);
+        *e += 0.2 * (attempts as f64 - *e);
+    }
+
+    /// Expected dispatch attempts for `kind` (exactly 1.0 until a retry
+    /// has been observed).
+    pub fn expected_attempts(&self, kind: AugmentKind) -> f64 {
+        self.expected_attempts.get(&kind).copied().unwrap_or(1.0)
     }
 
     /// Estimated **remaining** interception time, µs (engine clock), for a
@@ -75,8 +95,11 @@ impl DurationEstimator {
                 // freshly-paused request isn't treated as a zero-cost hold.
                 // The floor scales with the clock like every other duration
                 // (under compressed time a 1 ms wall floor would overstate a
-                // fresh pause by 1/time_scale).
+                // fresh pause by 1/time_scale). Scaled up by the per-type
+                // expected dispatch attempts: a flaky tool's wait includes
+                // its likely retries (factor is exactly 1.0 fault-free).
                 (elapsed_us as f64).max(1_000.0 * self.time_scale)
+                    * self.expected_attempts(kind)
             }
         }
     }
@@ -135,6 +158,25 @@ mod tests {
         assert_eq!(e.remaining_us(AugmentKind::Image, 0, 0), 10.0);
         // Beyond the floor the elapsed engine time dominates, unscaled.
         assert_eq!(e.remaining_us(AugmentKind::Image, 5_000, 0), 5_000.0);
+    }
+
+    #[test]
+    fn expected_attempts_scale_dynamic_estimates_only_after_a_retry() {
+        let mut e = DurationEstimator::new(EstimatorKind::Dynamic, 1.0);
+        // First-try completions keep the factor at exactly 1.0: the
+        // fault-free estimate is bitwise unchanged.
+        e.observe_attempts(AugmentKind::Qa, 1);
+        e.observe_attempts(AugmentKind::Qa, 1);
+        assert_eq!(e.expected_attempts(AugmentKind::Qa), 1.0);
+        assert_eq!(e.remaining_us(AugmentKind::Qa, 50_000, 0), 50_000.0);
+        // A retried completion inflates the type's estimate...
+        e.observe_attempts(AugmentKind::Qa, 3);
+        let f = e.expected_attempts(AugmentKind::Qa);
+        assert!(f > 1.0 && f < 3.0);
+        assert_eq!(e.remaining_us(AugmentKind::Qa, 50_000, 0), 50_000.0 * f);
+        // ...and other types are untouched.
+        assert_eq!(e.expected_attempts(AugmentKind::Math), 1.0);
+        assert_eq!(e.remaining_us(AugmentKind::Math, 50_000, 0), 50_000.0);
     }
 
     #[test]

@@ -146,6 +146,10 @@ pub struct ReqSnapshot {
     /// A speculative branch (see `crate::speculation`): first eviction
     /// victim, killed (fully released) instead of requeued or swapped.
     pub speculative: bool,
+    /// The in-flight interception has already failed ≥ 1 dispatch attempt
+    /// and is being retried (see the engine's failure semantics): under
+    /// degradation pressure these pauses are biased toward discard.
+    pub retrying: bool,
 }
 
 impl ReqSnapshot {
@@ -161,6 +165,7 @@ impl ReqSnapshot {
             paused_at: rq.paused_at,
             pause_duration_us: rq.pause_duration_us,
             speculative: rq.speculative,
+            retrying: rq.intercept_attempt > 0,
         }
     }
 
@@ -182,6 +187,7 @@ impl ReqSnapshot {
             paused_at: 0,
             pause_duration_us: 0,
             speculative: false,
+            retrying: false,
         }
     }
 
@@ -203,6 +209,9 @@ pub struct SchedSnapshot {
     pub min_chunk: usize,
     pub max_batched_tokens: usize,
     pub kv_bytes_per_token: usize,
+    /// Free-GPU-block watermark for graceful degradation (0 = disabled):
+    /// see [`crate::coordinator::sched_policy::SchedPolicy::degradation_level`].
+    pub degrade_watermark: usize,
     // -- backend capabilities ---------------------------------------------
     pub max_decode_batch: usize,
     pub max_blocks_per_seq: usize,
@@ -244,6 +253,7 @@ impl SchedSnapshot {
             min_chunk: 16,
             max_batched_tokens: 4096,
             kv_bytes_per_token: 458_752,
+            degrade_watermark: 0,
             max_decode_batch: 256,
             max_blocks_per_seq: 256,
             prefill_chunk_sizes: Vec::new(),
@@ -620,6 +630,9 @@ fn stage_dispositions(
     };
     let actions =
         policy.decide_interceptions(snap, estimator, views.as_slice(), &stats, out_budget);
+    // Graceful degradation (0 unless the snapshot's watermark is set and
+    // free blocks have sunk below it — see the policy hook's ladder).
+    let degrade = policy.degradation_level(snap);
     for (req, action) in actions {
         let mut r = sim.req(snap, req);
         // A frozen speculative branch is either worth holding (Preserve) or
@@ -628,6 +641,18 @@ fn stage_dispositions(
         // non-Preserve decision kills the branch outright (the engine
         // mirrors this with a full release — see `Engine::reject_branch`).
         let action = if r.speculative && !matches!(action, InterceptAction::Preserve) {
+            InterceptAction::Discard
+        } else {
+            action
+        };
+        // Degradation coercions, shedding held context before sessions:
+        // level ≥ 1 drops paused speculative branches regardless of the
+        // argmin's choice; level ≥ 2 additionally stops preserving context
+        // for sessions mid-retry (their resolution time is the least
+        // certain, so their hold is the worst-priced bet on the box).
+        let action = if degrade >= 1 && r.speculative {
+            InterceptAction::Discard
+        } else if degrade >= 2 && r.retrying && matches!(action, InterceptAction::Preserve) {
             InterceptAction::Discard
         } else {
             action
@@ -1025,6 +1050,7 @@ impl Planner {
         s.min_chunk = cfg.min_chunk;
         s.max_batched_tokens = cfg.max_batched_tokens;
         s.kv_bytes_per_token = cfg.kv_bytes_per_token;
+        s.degrade_watermark = cfg.degrade_watermark_blocks;
         s.max_decode_batch = backend.max_decode_batch();
         s.max_blocks_per_seq = backend.max_blocks_per_seq();
         s.prefill_chunk_sizes.clear();
@@ -1082,6 +1108,7 @@ impl Planner {
             s.min_chunk = cfg.min_chunk;
             s.max_batched_tokens = cfg.max_batched_tokens;
             s.kv_bytes_per_token = cfg.kv_bytes_per_token;
+            s.degrade_watermark = cfg.degrade_watermark_blocks;
             s.max_decode_batch = backend.max_decode_batch();
             s.max_blocks_per_seq = backend.max_blocks_per_seq();
             s.prefill_chunk_sizes.clear();

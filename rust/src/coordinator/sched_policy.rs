@@ -157,6 +157,39 @@ pub trait SchedPolicy {
         crate::coordinator::waste::speculation_gain(profile, w, accept_rate) > 0.0
     }
 
+    /// Graceful-degradation level for this snapshot, consulted by the
+    /// disposition stage (and mirrored by the engine/front for speculation
+    /// gating and admission shedding):
+    ///
+    /// * `0` — normal operation (always, when the watermark is 0).
+    /// * `1` — free GPU blocks under the watermark: paused speculative
+    ///   branches are discarded regardless of the argmin.
+    /// * `2` — under ⅔ of the watermark: retrying sessions' context is no
+    ///   longer preserved.
+    /// * `3` — under ⅓ of the watermark: the serving front additionally
+    ///   rejects new admissions (`SubmitError::AtCapacity`).
+    ///
+    /// The default ladder reads `snap.degrade_watermark`
+    /// (`cfg.degrade_watermark_blocks`); overriding policies may reshape
+    /// it, but must return 0 when the watermark is 0 so the
+    /// watermark-disabled engine stays parity-pinned.
+    fn degradation_level(&self, snap: &SchedSnapshot) -> u8 {
+        let wm = snap.degrade_watermark;
+        if wm == 0 {
+            return 0;
+        }
+        let free = snap.cache.gpu_free();
+        if free < wm / 3 {
+            3
+        } else if free < 2 * wm / 3 {
+            2
+        } else if free < wm {
+            1
+        } else {
+            0
+        }
+    }
+
     /// Stage 5a — decode admissions this iteration (the planner clamps the
     /// result to the backend's `max_decode_batch`).
     fn decode_batch_cap(&mut self, snap: &SchedSnapshot) -> usize {
@@ -430,6 +463,20 @@ mod tests {
                     s.policy.name
                 );
             }
+        }
+    }
+
+    #[test]
+    fn degradation_ladder_follows_free_blocks() {
+        let p = InferceptPolicy;
+        let mut s = SchedSnapshot::new(Policy::infercept(), profile(), swap_model());
+        // Watermark off: level 0 however scarce memory is (parity pin).
+        s.cache = CacheSnapshot::for_test(BS, 0, 0, 64);
+        assert_eq!(p.degradation_level(&s), 0);
+        s.degrade_watermark = 30;
+        for (free, level) in [(30, 0), (29, 1), (20, 1), (19, 2), (10, 2), (9, 3), (0, 3)] {
+            s.cache = CacheSnapshot::for_test(BS, 0, free, 64);
+            assert_eq!(p.degradation_level(&s), level, "free {free}");
         }
     }
 

@@ -37,6 +37,46 @@
 //! Event emission ([`crate::serving::EventBus`]) is strictly observational
 //! — a run with subscribers makes bit-identical scheduling decisions to a
 //! run without them.
+//!
+//! # Interception failure semantics
+//!
+//! A dispatch may fast-fail ([`InterceptResolution::Failed`]) or a call may
+//! complete *as* a failure ([`Resumption::error`] — e.g. the seeded
+//! [`crate::faults::FaultInjector`]). Either way the contract is:
+//!
+//! 1. **The request never vanishes.** A failed attempt parks (or keeps)
+//!    the session `Paused`, so its held context stays priced by the
+//!    preserve/discard/swap argmin of §4.3 for as long as the failure is
+//!    being handled.
+//! 2. **Retry with seeded backoff.** While the per-session budget
+//!    ([`request::Request::intercept_retries`], default
+//!    `cfg.intercept_retries`) allows, the call is re-dispatched after an
+//!    exponential backoff (`cfg.intercept_backoff_us · 2^(attempt−1)`,
+//!    ±25% seeded jitter) that advances on the engine clock exactly like
+//!    interception latency. Completed interceptions feed their attempt
+//!    count into the Dynamic duration estimator, so flaky tools' expected
+//!    retries inflate their estimated wait.
+//! 3. **Deterministic terminal action.** An exhausted budget applies
+//!    `cfg.intercept_failure_action`: cancel the session (terminal
+//!    `Cancelled` event, reason `InterceptionFailed`), resume with an
+//!    empty answer, or resume with a configured fallback answer — both
+//!    resume flavors re-enter the normal segment machinery.
+//! 4. **Observability.** Each failed attempt emits
+//!    [`EngineEvent::InterceptionFailed`], each re-dispatch
+//!    [`EngineEvent::InterceptionRetried`]; `interception_failures`,
+//!    `interception_retries`, and `interception_fallbacks` accumulate in
+//!    the [`crate::metrics::RunReport`].
+//! 5. **Off is free.** With no fault ever injected nor failure surfaced,
+//!    no retry-jitter RNG draw happens and every estimator factor stays
+//!    exactly 1.0 — runs are bit-identical whatever the retry/backoff
+//!    configuration, pinned by `tests/chaos.rs`.
+//!
+//! Under memory pressure the engine degrades gracefully before it sheds
+//! sessions: below `cfg.degrade_watermark_blocks` free GPU blocks it stops
+//! forking speculative branches, the planner biases retrying sessions
+//! toward discard, and at the deepest level the serving front rejects new
+//! admissions with `SubmitError::AtCapacity` (see
+//! [`Engine::degradation_level`]).
 
 mod apply;
 pub mod backend;
@@ -48,7 +88,7 @@ use anyhow::{bail, Result};
 pub use backend::ExecBackend;
 use request::{ReqState, ReqTable, Request};
 
-use crate::config::{EngineConfig, TimeoutAction};
+use crate::config::{EngineConfig, FailureAction, TimeoutAction};
 use crate::coordinator::estimator::DurationEstimator;
 use crate::coordinator::planner::{Planner, SchedPlan, SchedSnapshot};
 use crate::coordinator::sched_policy::{self, SchedPolicy};
@@ -102,6 +142,11 @@ pub struct Engine {
     spec: SpeculationController,
     pub metrics: Recorder,
     rng: Pcg,
+    /// Jitter stream for retry backoff. Dedicated so backoff draws cannot
+    /// perturb prompt synthesis, and drawn from **only when an attempt has
+    /// already failed** — a fault-free run consumes zero draws and stays
+    /// bit-identical whatever the retry configuration.
+    retry_rng: Pcg,
     /// Pending arrivals, soonest last (popped from the back).
     pending: Vec<(Micros, ReqId)>,
     next_id: ReqId,
@@ -128,10 +173,17 @@ impl Engine {
             CacheManager::new(cfg.block_size, cfg.num_gpu_blocks, cfg.num_cpu_blocks);
         cache.watermark_blocks = cfg.watermark_blocks;
         let estimator = DurationEstimator::new(cfg.policy.estimator, cfg.time_scale);
-        let intercepts: Box<dyn InterceptSource> =
-            Box::new(ScriptedTimers::new(cfg.time_scale));
+        // Fault injection composes here: an active `cfg.fault_plan` wraps
+        // whatever source resolves interceptions (scripted timers now; any
+        // source installed later via `set_intercept_source` is wrapped the
+        // same way). An inactive plan adds no indirection at all.
+        let intercepts = crate::faults::maybe_wrap(
+            &cfg.fault_plan,
+            Box::new(ScriptedTimers::new(cfg.time_scale)),
+        );
         let sched = sched_policy::build(&cfg);
         let rng = Pcg::new(cfg.seed ^ 0xabcdef);
+        let retry_rng = Pcg::with_stream(cfg.seed, 0xfa117);
         Engine {
             backend,
             cfg,
@@ -149,6 +201,7 @@ impl Engine {
             spec: SpeculationController::default(),
             metrics: Recorder::default(),
             rng,
+            retry_rng,
             pending: Vec::new(),
             next_id: 1,
             unfinished: 0,
@@ -237,9 +290,12 @@ impl Engine {
     }
 
     /// Swap in a custom interception-resolution source (must happen before
-    /// any interception fires; in-flight state does not transfer).
+    /// any interception fires; in-flight state does not transfer). An
+    /// active `cfg.fault_plan` wraps the installed source in the seeded
+    /// [`crate::faults::FaultInjector`], exactly as `Engine::new` wraps the
+    /// default scripted timers.
     pub fn set_intercept_source(&mut self, source: Box<dyn InterceptSource>) {
-        self.intercepts = source;
+        self.intercepts = crate::faults::maybe_wrap(&self.cfg.fault_plan, source);
     }
 
     /// Swap in a custom tool-answer predictor for speculative continuation
@@ -284,6 +340,40 @@ impl Engine {
             if rq.state == ReqState::Pending {
                 rq.shared_prefix_parent = Some(parent);
             }
+        }
+    }
+
+    /// Per-session override of the interception retry budget (see
+    /// [`crate::engine::request::Request::intercept_retries`]): `None`
+    /// falls back to `cfg.intercept_retries`, `Some(0)` fails fast.
+    pub fn set_intercept_retries(&mut self, req: ReqId, retries: Option<u32>) {
+        if let Some(rq) = self.requests.get_mut(req) {
+            rq.intercept_retries = retries;
+        }
+    }
+
+    /// Current graceful-degradation level, from live cache occupancy:
+    /// 0 = normal, 1 = shed speculative branches, 2 = also bias retrying
+    /// sessions toward discard, 3 = also shed new admissions. Always 0
+    /// when `cfg.degrade_watermark_blocks` is 0 (the default). The staged
+    /// planner applies the same ladder through
+    /// [`crate::coordinator::sched_policy::SchedPolicy::degradation_level`];
+    /// this accessor lets the serving front price admissions without a
+    /// planning pass.
+    pub fn degradation_level(&self) -> u8 {
+        let wm = self.cfg.degrade_watermark_blocks;
+        if wm == 0 {
+            return 0;
+        }
+        let free = self.cache.gpu_free();
+        if free < wm / 3 {
+            3
+        } else if free < 2 * wm / 3 {
+            2
+        } else if free < wm {
+            1
+        } else {
+            0
         }
     }
 
@@ -494,11 +584,17 @@ impl Engine {
         // Deadlines are a hard bound: an answer landing in the same instant
         // as the expiry loses (the expired entry is gone before poll runs).
         self.expire_external_deadlines(now);
-        for r in self.intercepts.poll(now) {
+        for mut r in self.intercepts.poll(now) {
             // A resolution may surface for a session that no longer awaits
             // one — a scripted timer outliving a cancelled request, or a
             // client answer racing a teardown. The id is gone; drop it.
             if !self.requests.get(r.req).is_some_and(|q| q.state == ReqState::Paused) {
+                continue;
+            }
+            // A call that completed *as a failure* routes through the
+            // retry / terminal-action machinery instead of resuming.
+            if let Some(reason) = r.error.take() {
+                self.interception_failed(r.req, now, reason);
                 continue;
             }
             self.resume(r, now);
@@ -652,6 +748,17 @@ impl Engine {
     /// past `max_seq_tokens` or the GPU pool.
     fn resume(&mut self, r: Resumption, now: Micros) {
         let req = r.req;
+        // Close out the retry ledger: observe how many dispatch attempts
+        // this interception took (1 = first try — feeds the Dynamic
+        // estimator's expected-attempts factor) and reset the counter for
+        // the session's next interception.
+        let (pause_kind, attempts) = {
+            let rq = &mut self.requests[req];
+            let attempts = rq.intercept_attempt + 1;
+            rq.intercept_attempt = 0;
+            (rq.pause_kind, attempts)
+        };
+        self.estimator.observe_attempts(pause_kind, attempts);
         let vocab = self.cfg.vocab;
         let ret: Vec<u32> = match r.tokens {
             Some(tokens) => {
@@ -810,6 +917,32 @@ impl Engine {
             (int.kind, int.duration_us)
         };
         let resolution = self.intercepts.dispatch(req, kind, duration, now);
+        if let InterceptResolution::Failed { reason } = resolution {
+            // The dispatch itself fast-failed. Park the request as a normal
+            // pause first — so a retry's backoff wait re-enters the
+            // preserve/discard/swap economics like any interception latency
+            // — then route it through the retry machinery.
+            let rq = &mut self.requests[req];
+            rq.state = ReqState::Paused;
+            rq.disposition = Disposition::Fresh;
+            rq.paused_at = now;
+            rq.resume_at = now;
+            rq.pause_kind = kind;
+            rq.pause_duration_us = 0;
+            rq.external_pause = false;
+            rq.interceptions_fired += 1;
+            self.running.remove(req);
+            self.paused.push(req);
+            self.metrics.interceptions_dispatched += 1;
+            self.events.emit(req, move || EngineEvent::Intercepted {
+                req,
+                kind,
+                payload: String::new(),
+                at: now,
+            });
+            self.interception_failed(req, now, reason);
+            return;
+        }
         let (resume_at, pause_hint, external, payload) = match resolution {
             InterceptResolution::Internal { resume_at, payload } => {
                 (resume_at, resume_at - now, false, payload)
@@ -822,6 +955,7 @@ impl Engine {
                     ((duration as f64) * self.cfg.time_scale).round().max(1.0) as Micros;
                 (0, hint, true, payload)
             }
+            InterceptResolution::Failed { .. } => unreachable!("handled above"),
         };
         let rq = &mut self.requests[req];
         rq.state = ReqState::Paused;
@@ -851,6 +985,105 @@ impl Engine {
         self.maybe_speculate(req, now);
     }
 
+    /// One dispatch attempt of `req`'s current interception completed as a
+    /// failure (a fast-fail at dispatch, or a failed resolution surfaced by
+    /// `poll`). The request is already parked `Paused`. While the retry
+    /// budget allows, re-dispatch with seeded exponential backoff — the
+    /// backoff rides the engine clock exactly like interception latency, so
+    /// the paused context stays priced by the §4.3 argmin while it waits —
+    /// otherwise apply the configured terminal
+    /// [`crate::config::FailureAction`].
+    fn interception_failed(&mut self, req: ReqId, now: Micros, reason: String) {
+        let (kind, attempt, retries) = {
+            let rq = &mut self.requests[req];
+            rq.intercept_attempt += 1;
+            let budget = rq.intercept_retries.unwrap_or(self.cfg.intercept_retries);
+            (rq.pause_kind, rq.intercept_attempt, budget)
+        };
+        self.metrics.interception_failures += 1;
+        self.events.emit(req, move || EngineEvent::InterceptionFailed {
+            req,
+            kind,
+            attempt,
+            reason,
+            at: now,
+        });
+        if attempt > retries {
+            // Retry budget exhausted: terminal action.
+            match self.cfg.intercept_failure_action.clone() {
+                FailureAction::Cancel => {
+                    self.cancel_with(req, now, CancelReason::InterceptionFailed);
+                }
+                FailureAction::ResumeEmpty => {
+                    self.metrics.interception_fallbacks += 1;
+                    self.intercepts.abandon(req);
+                    self.resume(Resumption { req, tokens: Some(Vec::new()), error: None }, now);
+                }
+                FailureAction::Fallback(tokens) => {
+                    self.metrics.interception_fallbacks += 1;
+                    self.intercepts.abandon(req);
+                    self.resume(Resumption { req, tokens: Some(tokens), error: None }, now);
+                }
+            }
+            return;
+        }
+        // Exponential backoff with seeded jitter (±25%), then re-dispatch.
+        // The jitter stream is drawn from only on this already-failed path,
+        // so fault-free runs stay bit-identical.
+        let base = self.cfg.intercept_backoff_us;
+        let backoff = if base == 0 {
+            0
+        } else {
+            let shift = (attempt - 1).min(20);
+            let scaled = base.saturating_mul(1u64 << shift) as f64;
+            (scaled * (0.75 + 0.5 * self.retry_rng.f64())).round() as Micros
+        };
+        self.metrics.interception_retries += 1;
+        self.events.emit(req, move || EngineEvent::InterceptionRetried {
+            req,
+            kind,
+            attempt,
+            backoff_us: backoff,
+            at: now,
+        });
+        let duration = {
+            let rq = &self.requests[req];
+            rq.script.segments[rq.segment].interception.as_ref().unwrap().duration_us
+        };
+        let dispatch_at = now.saturating_add(backoff);
+        match self.intercepts.dispatch(req, kind, duration, dispatch_at) {
+            InterceptResolution::Internal { resume_at, payload: _ } => {
+                let rq = &mut self.requests[req];
+                let disarmed = rq.external_deadline.take().is_some();
+                rq.resume_at = resume_at;
+                rq.external_pause = false;
+                rq.pause_duration_us = resume_at.saturating_sub(rq.paused_at);
+                self.deadlines_armed -= disarmed as usize;
+            }
+            InterceptResolution::External { payload: _ } => {
+                let hint =
+                    ((duration as f64) * self.cfg.time_scale).round().max(1.0) as Micros;
+                let rq = &mut self.requests[req];
+                rq.resume_at = 0;
+                rq.external_pause = true;
+                rq.pause_duration_us =
+                    dispatch_at.saturating_sub(rq.paused_at).saturating_add(hint);
+                let timeout = rq.external_timeout_us.unwrap_or(self.cfg.external_timeout_us);
+                let was_armed = rq.external_deadline.is_some();
+                rq.external_deadline =
+                    (timeout > 0).then_some(dispatch_at.saturating_add(timeout));
+                let now_armed = rq.external_deadline.is_some();
+                self.deadlines_armed += now_armed as usize;
+                self.deadlines_armed -= was_armed as usize;
+            }
+            // The re-dispatch itself fast-failed: recurse (bounded by the
+            // retry budget — each pass burns one attempt).
+            InterceptResolution::Failed { reason } => {
+                self.interception_failed(req, now, reason);
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // Speculative continuation (see `crate::speculation`)
     // ------------------------------------------------------------------
@@ -861,6 +1094,13 @@ impl Engine {
     /// or RNG interaction) unless the session or config opts in, so the
     /// disabled engine is bit-identical.
     fn maybe_speculate(&mut self, parent: ReqId, now: Micros) {
+        // Graceful degradation, stage 1: below the free-block watermark no
+        // new branch is forked — speculation is the first load to shed
+        // (live branches are already the planner's first eviction victims).
+        let wm = self.cfg.degrade_watermark_blocks;
+        if wm > 0 && self.cache.gpu_free() < wm {
+            return;
+        }
         let rq = &self.requests[parent];
         if rq.speculative || !rq.speculate.unwrap_or(self.cfg.speculate) {
             return;
@@ -1284,7 +1524,7 @@ impl Engine {
                     // client answer counts as stray — but the session stays
                     // registered (it may intercept again).
                     self.intercepts.abandon(req);
-                    self.resume(Resumption { req, tokens: Some(Vec::new()) }, now);
+                    self.resume(Resumption { req, tokens: Some(Vec::new()), error: None }, now);
                 }
             }
             // Both arms removed `paused[i]`; do not advance `i`.

@@ -214,6 +214,13 @@ pub struct Request {
     /// Per-session speculation opt-in (`SessionSpec::speculate`); `None`
     /// defers to the engine-level `EngineConfig::speculate`.
     pub speculate: Option<bool>,
+    /// Failed attempts of the *current* interception (0 = no failure yet).
+    /// Reset on every successful resume; the retry machinery compares it
+    /// against the retry budget to pick re-dispatch vs terminal action.
+    pub intercept_attempt: u32,
+    /// Per-session retry budget (`SessionSpec::with_intercept_retries`);
+    /// `None` defers to `EngineConfig::intercept_retries`.
+    pub intercept_retries: Option<u32>,
 
     /// Metrics.
     pub first_token_at: Option<Micros>,
@@ -250,6 +257,8 @@ impl Request {
             shared_prefix_parent: None,
             speculative: false,
             speculate: None,
+            intercept_attempt: 0,
+            intercept_retries: None,
             first_token_at: None,
             finished_at: None,
             intercepted_us: 0,

@@ -1,0 +1,506 @@
+//! Deterministic fault injection for interceptions.
+//!
+//! InferCept treats interceptions as first-class scheduling events, which
+//! means their *failures* are first-class too: real tools error out, stall
+//! forever, come back late, or return garbage. This module provides the
+//! chaos half of the failure-semantics contract (see
+//! [`crate::serving`] / [`crate::engine`] module docs for the engine half):
+//! a seeded, fully deterministic [`FaultInjector`] that wraps any
+//! [`InterceptSource`] and perturbs its dispatches according to a
+//! declarative [`FaultPlan`].
+//!
+//! Determinism is the whole point — the injector never reads a wall clock
+//! or global RNG. Every fault decision is a pure function of
+//! `(plan.seed, req, dispatch ordinal)` via a per-dispatch
+//! [`Pcg`] stream, so a replay with the same plan and the same engine
+//! schedule injects byte-identical faults, and `tests/chaos.rs` can assert
+//! engine-level invariants under arbitrary seeded fault schedules.
+//!
+//! Four fault kinds, mutually exclusive per dispatch (one uniform draw,
+//! categorized by cumulative probability):
+//!
+//! * **Tool error** — the call runs (or fast-fails) and comes back as a
+//!   failure: an internally-timed dispatch resolves at its normal time with
+//!   [`Resumption::error`] set; an external dispatch fast-fails at dispatch
+//!   time via [`InterceptResolution::Failed`]. Either way the engine's
+//!   retry/terminal-action machinery takes over.
+//! * **Stall** — the answer never arrives: the dispatch is converted to an
+//!   unresolved external wait. The injector reports it via
+//!   [`InterceptSource::awaiting_external`] so the pump knows the engine is
+//!   *waiting*, not stuck; only an armed external deadline
+//!   (`EngineConfig::external_timeout_us`) reclaims the session.
+//! * **Slow answer** — an internally-timed resolution is pushed
+//!   [`FaultPlan::slow_extra_us`] further into the future (engine clock).
+//! * **Malformed answer** — the resolution's tokens are replaced with a
+//!   seeded garbage vector of up to [`FaultPlan::oversize_tokens`] + 1
+//!   entries, exercising the resume path's vocab clamping and
+//!   capacity-clamp economics.
+//!
+//! Composition: [`maybe_wrap`] is applied by the engine to *any* installed
+//! source ([`crate::serving::ScriptedTimers`], the serving front's
+//! client-resolved source, test doubles), so `sim`, `serve`, and the fuzz
+//! drivers all inherit fault injection from `EngineConfig::fault_plan`
+//! without knowing about it. With an inactive plan the source is passed
+//! through untouched — faults-off is structurally free.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::augment::AugmentKind;
+use crate::kvcache::ReqId;
+use crate::serving::{InterceptResolution, InterceptSource, Resumption};
+use crate::util::rng::Pcg;
+use crate::util::Micros;
+
+/// Per-kind fault probabilities, each in `[0, 1]`; drawn once per dispatch
+/// and categorized cumulatively (error, then stall, then slow, then
+/// malformed), so their sum should not exceed 1.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultRates {
+    /// The tool call fails (retryable; engine backoff applies).
+    pub error: f64,
+    /// The answer never arrives (only a deadline reclaims the session).
+    pub stall: f64,
+    /// The answer arrives `slow_extra_us` late.
+    pub slow: f64,
+    /// The answer arrives on time but carries garbage/oversized tokens.
+    pub malformed: f64,
+}
+
+impl FaultRates {
+    pub fn any(&self) -> bool {
+        self.error > 0.0 || self.stall > 0.0 || self.slow > 0.0 || self.malformed > 0.0
+    }
+}
+
+/// A declarative, seeded fault schedule: base rates plus per-kind
+/// overrides, and the shape parameters of the slow/malformed faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the per-dispatch decision streams (independent of the
+    /// engine's scheduling RNG).
+    pub seed: u64,
+    /// Rates applied to every interception kind without an override.
+    pub base: FaultRates,
+    /// Per-kind rate overrides (first match wins).
+    pub per_kind: Vec<(AugmentKind, FaultRates)>,
+    /// Extra engine-clock delay a "slow" fault adds to the resolution.
+    pub slow_extra_us: Micros,
+    /// Upper bound on garbage tokens a "malformed" fault injects (the
+    /// actual length is seeded in `[1, oversize_tokens + 1]`).
+    pub oversize_tokens: usize,
+}
+
+impl FaultPlan {
+    /// The inactive plan: no fault is ever injected ([`maybe_wrap`] passes
+    /// the source through untouched).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            base: FaultRates::default(),
+            per_kind: Vec::new(),
+            slow_extra_us: 0,
+            oversize_tokens: 0,
+        }
+    }
+
+    /// One rate set for every interception kind, with default fault shapes
+    /// (250 ms extra delay, up to 64 garbage tokens).
+    pub fn uniform(seed: u64, base: FaultRates) -> FaultPlan {
+        FaultPlan {
+            seed,
+            base,
+            per_kind: Vec::new(),
+            slow_extra_us: 250_000,
+            oversize_tokens: 64,
+        }
+    }
+
+    /// Does this plan ever inject anything?
+    pub fn is_active(&self) -> bool {
+        self.base.any() || self.per_kind.iter().any(|(_, r)| r.any())
+    }
+
+    /// Effective rates for one interception kind.
+    pub fn rates_for(&self, kind: AugmentKind) -> FaultRates {
+        self.per_kind
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| *r)
+            .unwrap_or(self.base)
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+/// What the injector decided for one dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    None,
+    Error,
+    Stall,
+    Slow,
+    Malformed,
+}
+
+/// An [`InterceptSource`] decorator that injects the faults a
+/// [`FaultPlan`] prescribes. See the module docs for the fault taxonomy
+/// and the determinism contract.
+pub struct FaultInjector {
+    inner: Box<dyn InterceptSource>,
+    plan: FaultPlan,
+    /// Dispatch ordinal: the per-dispatch RNG stream selector, so two
+    /// dispatches of the same request draw independently.
+    dispatches: u64,
+    /// Requests whose dispatch was converted to a never-resolving external
+    /// wait. Counted in `in_flight`/`awaiting_external`.
+    stalled: HashSet<ReqId>,
+    /// Requests whose internally-timed resolution must surface as an error.
+    failing: HashSet<ReqId>,
+    /// Pre-generated garbage answers, substituted at poll time.
+    malformed: HashMap<ReqId, Vec<u32>>,
+    /// Observability counters (per injected fault kind).
+    pub injected_errors: u64,
+    pub injected_stalls: u64,
+    pub injected_slows: u64,
+    pub injected_malformed: u64,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn InterceptSource>, plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            inner,
+            plan,
+            dispatches: 0,
+            stalled: HashSet::new(),
+            failing: HashSet::new(),
+            malformed: HashMap::new(),
+            injected_errors: 0,
+            injected_stalls: 0,
+            injected_slows: 0,
+            injected_malformed: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The seeded fault decision for this dispatch — a pure function of
+    /// `(plan.seed, req, dispatch ordinal)`, independent of wall clock and
+    /// of every other RNG in the system.
+    fn decide(&mut self, req: ReqId, kind: AugmentKind) -> (FaultKind, Pcg) {
+        self.dispatches += 1;
+        let mut rng = Pcg::with_stream(
+            self.plan.seed ^ (req as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            self.dispatches,
+        );
+        let r = self.plan.rates_for(kind);
+        let x = rng.f64();
+        let fault = if x < r.error {
+            FaultKind::Error
+        } else if x < r.error + r.stall {
+            FaultKind::Stall
+        } else if x < r.error + r.stall + r.slow {
+            FaultKind::Slow
+        } else if x < r.error + r.stall + r.slow + r.malformed {
+            FaultKind::Malformed
+        } else {
+            FaultKind::None
+        };
+        (fault, rng)
+    }
+}
+
+impl InterceptSource for FaultInjector {
+    fn dispatch(
+        &mut self,
+        req: ReqId,
+        kind: AugmentKind,
+        duration_us: Micros,
+        now: Micros,
+    ) -> InterceptResolution {
+        let (fault, mut rng) = self.decide(req, kind);
+        match fault {
+            FaultKind::None => self.inner.dispatch(req, kind, duration_us, now),
+            FaultKind::Error => {
+                self.injected_errors += 1;
+                match self.inner.dispatch(req, kind, duration_us, now) {
+                    // The call "runs" for its normal duration, then fails:
+                    // the resolution surfaces with `Resumption::error` set.
+                    InterceptResolution::Internal { resume_at, .. } => {
+                        self.failing.insert(req);
+                        InterceptResolution::Internal { resume_at, payload: String::new() }
+                    }
+                    // External (or already-failed) dispatches fast-fail: the
+                    // client will never be asked for this attempt's answer.
+                    _ => {
+                        self.inner.abandon(req);
+                        InterceptResolution::Failed {
+                            reason: "injected tool error".to_string(),
+                        }
+                    }
+                }
+            }
+            FaultKind::Stall => {
+                self.injected_stalls += 1;
+                self.stalled.insert(req);
+                // Never resolves; only an external deadline reclaims it. The
+                // inner source is not dispatched — there is nothing to time.
+                InterceptResolution::External { payload: String::new() }
+            }
+            FaultKind::Slow => {
+                self.injected_slows += 1;
+                match self.inner.dispatch(req, kind, duration_us, now) {
+                    InterceptResolution::Internal { resume_at, payload } => {
+                        InterceptResolution::Internal {
+                            resume_at: resume_at.saturating_add(self.plan.slow_extra_us),
+                            payload,
+                        }
+                    }
+                    other => other,
+                }
+            }
+            FaultKind::Malformed => {
+                self.injected_malformed += 1;
+                let len = 1 + rng.usize(0, self.plan.oversize_tokens);
+                let garbage: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                let res = self.inner.dispatch(req, kind, duration_us, now);
+                if !matches!(res, InterceptResolution::Failed { .. }) {
+                    self.malformed.insert(req, garbage);
+                }
+                res
+            }
+        }
+    }
+
+    fn poll(&mut self, now: Micros) -> Vec<Resumption> {
+        let mut out = self.inner.poll(now);
+        for r in &mut out {
+            if self.failing.remove(&r.req) {
+                r.tokens = None;
+                r.error = Some("injected tool error".to_string());
+            } else if let Some(garbage) = self.malformed.remove(&r.req) {
+                r.tokens = Some(garbage);
+            }
+        }
+        out
+    }
+
+    fn next_completion(&self) -> Option<Micros> {
+        self.inner.next_completion()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight() + self.stalled.len()
+    }
+
+    fn awaiting_external(&self) -> usize {
+        self.inner.awaiting_external() + self.stalled.len()
+    }
+
+    fn on_finished(&mut self, req: ReqId) {
+        self.stalled.remove(&req);
+        self.failing.remove(&req);
+        self.malformed.remove(&req);
+        self.inner.on_finished(req);
+    }
+
+    fn abandon(&mut self, req: ReqId) {
+        self.stalled.remove(&req);
+        self.failing.remove(&req);
+        self.malformed.remove(&req);
+        self.inner.abandon(req);
+    }
+}
+
+/// Wrap `source` in a [`FaultInjector`] when `plan` is active; otherwise
+/// hand it back untouched. The engine applies this to every installed
+/// source, so fault injection composes with scripted timers, the serving
+/// front, and test doubles alike.
+pub fn maybe_wrap(plan: &FaultPlan, source: Box<dyn InterceptSource>) -> Box<dyn InterceptSource> {
+    if plan.is_active() {
+        Box::new(FaultInjector::new(source, plan.clone()))
+    } else {
+        source
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic stub source: every dispatch resolves internally
+    /// after `duration_us`, with a recognizable token answer at poll.
+    struct Stub {
+        pending: Vec<(ReqId, Micros)>,
+        abandoned: Vec<ReqId>,
+    }
+
+    impl Stub {
+        fn new() -> Stub {
+            Stub { pending: Vec::new(), abandoned: Vec::new() }
+        }
+    }
+
+    impl InterceptSource for Stub {
+        fn dispatch(
+            &mut self,
+            req: ReqId,
+            _kind: AugmentKind,
+            duration_us: Micros,
+            now: Micros,
+        ) -> InterceptResolution {
+            let at = now + duration_us;
+            self.pending.push((req, at));
+            InterceptResolution::Internal { resume_at: at, payload: String::new() }
+        }
+
+        fn poll(&mut self, now: Micros) -> Vec<Resumption> {
+            let (done, rest): (Vec<_>, Vec<_>) =
+                self.pending.drain(..).partition(|&(_, at)| at <= now);
+            self.pending = rest;
+            done.into_iter()
+                .map(|(req, _)| Resumption { req, tokens: Some(vec![7]), error: None })
+                .collect()
+        }
+
+        fn next_completion(&self) -> Option<Micros> {
+            self.pending.iter().map(|&(_, at)| at).min()
+        }
+
+        fn in_flight(&self) -> usize {
+            self.pending.len()
+        }
+
+        fn abandon(&mut self, req: ReqId) {
+            self.abandoned.push(req);
+            self.pending.retain(|&(r, _)| r != req);
+        }
+    }
+
+    fn plan(rates: FaultRates) -> FaultPlan {
+        FaultPlan { slow_extra_us: 1_000, oversize_tokens: 8, ..FaultPlan::uniform(42, rates) }
+    }
+
+    #[test]
+    fn inactive_plan_is_not_wrapped_and_never_injects() {
+        assert!(!FaultPlan::none().is_active());
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), FaultPlan::none());
+        for req in 1..=50u64 {
+            let res = inj.dispatch(req, AugmentKind::Math, 100, 0);
+            assert!(matches!(res, InterceptResolution::Internal { .. }), "{res:?}");
+        }
+        let out = inj.poll(1_000);
+        assert_eq!(out.len(), 50);
+        assert!(out.iter().all(|r| r.error.is_none() && r.tokens == Some(vec![7])));
+        assert_eq!(inj.injected_errors + inj.injected_stalls, 0);
+        assert_eq!(inj.injected_slows + inj.injected_malformed, 0);
+    }
+
+    #[test]
+    fn error_fault_surfaces_at_resolution_time() {
+        let rates = FaultRates { error: 1.0, ..Default::default() };
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), plan(rates));
+        let res = inj.dispatch(1, AugmentKind::Math, 100, 0);
+        assert_eq!(res, InterceptResolution::Internal { resume_at: 100, payload: String::new() });
+        assert!(inj.poll(50).is_empty(), "not due yet");
+        let out = inj.poll(100);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].error.is_some());
+        assert_eq!(out[0].tokens, None);
+        assert_eq!(inj.injected_errors, 1);
+    }
+
+    #[test]
+    fn stall_fault_waits_forever_but_reports_awaiting() {
+        let rates = FaultRates { stall: 1.0, ..Default::default() };
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), plan(rates));
+        let res = inj.dispatch(3, AugmentKind::Qa, 100, 0);
+        assert!(matches!(res, InterceptResolution::External { .. }), "{res:?}");
+        assert_eq!(inj.in_flight(), 1);
+        assert_eq!(inj.awaiting_external(), 1);
+        assert_eq!(inj.next_completion(), None);
+        assert!(inj.poll(Micros::MAX).is_empty());
+        inj.abandon(3); // the deadline path
+        assert_eq!(inj.in_flight(), 0);
+        assert_eq!(inj.awaiting_external(), 0);
+    }
+
+    #[test]
+    fn slow_fault_defers_resolution_by_the_planned_extra() {
+        let rates = FaultRates { slow: 1.0, ..Default::default() };
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), plan(rates));
+        match inj.dispatch(4, AugmentKind::Math, 100, 0) {
+            InterceptResolution::Internal { resume_at, .. } => assert_eq!(resume_at, 1_100),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(inj.injected_slows, 1);
+    }
+
+    #[test]
+    fn malformed_fault_substitutes_seeded_garbage() {
+        let rates = FaultRates { malformed: 1.0, ..Default::default() };
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), plan(rates));
+        inj.dispatch(5, AugmentKind::Math, 100, 0);
+        let out = inj.poll(100);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].error.is_none());
+        let toks = out[0].tokens.as_ref().unwrap();
+        assert!((1..=9).contains(&toks.len()), "{}", toks.len());
+        assert_ne!(toks, &vec![7], "garbage must differ from the stub answer");
+    }
+
+    #[test]
+    fn decisions_are_deterministic_in_seed_req_and_ordinal() {
+        let rates =
+            FaultRates { error: 0.2, stall: 0.1, slow: 0.2, malformed: 0.2 };
+        let run = || {
+            let mut inj = FaultInjector::new(Box::new(Stub::new()), plan(rates));
+            for req in 1..=40u64 {
+                inj.dispatch(req, AugmentKind::Chatbot, 100, 0);
+            }
+            let mut out = inj.poll(Micros::MAX);
+            out.sort_by_key(|r| r.req);
+            let decided: Vec<String> = out.iter().map(|r| format!("{r:?}")).collect();
+            (
+                inj.injected_errors,
+                inj.injected_stalls,
+                inj.injected_slows,
+                inj.injected_malformed,
+                decided,
+            )
+        };
+        assert_eq!(run(), run());
+        // And a different seed makes different choices somewhere: the
+        // resolved-resumption sequence (stall set, garbage answers) diverges.
+        let mut other = FaultInjector::new(
+            Box::new(Stub::new()),
+            FaultPlan { slow_extra_us: 1_000, oversize_tokens: 8, ..FaultPlan::uniform(43, rates) },
+        );
+        for req in 1..=40u64 {
+            other.dispatch(req, AugmentKind::Chatbot, 100, 0);
+        }
+        let mut out = other.poll(Micros::MAX);
+        out.sort_by_key(|r| r.req);
+        let decided: Vec<String> = out.iter().map(|r| format!("{r:?}")).collect();
+        assert_ne!(run().4, decided);
+    }
+
+    #[test]
+    fn per_kind_overrides_beat_base_rates() {
+        let mut p = plan(FaultRates { error: 1.0, ..Default::default() });
+        p.per_kind.push((AugmentKind::Math, FaultRates::default()));
+        assert!(p.is_active());
+        let mut inj = FaultInjector::new(Box::new(Stub::new()), p);
+        // Math is exempted; Qa fails every time.
+        let res = inj.dispatch(1, AugmentKind::Math, 100, 0);
+        assert!(matches!(res, InterceptResolution::Internal { .. }));
+        assert_eq!(inj.injected_errors, 0);
+        inj.dispatch(2, AugmentKind::Qa, 100, 0);
+        assert_eq!(inj.injected_errors, 1);
+    }
+}

@@ -52,6 +52,7 @@ pub mod cmds;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod faults;
 pub mod kvcache;
 pub mod metrics;
 pub mod profiler;
@@ -69,6 +70,7 @@ pub mod prelude {
     pub use crate::coordinator::policy::Policy;
     pub use crate::coordinator::sched_policy::{AdaptivePolicy, InferceptPolicy, SchedPolicy};
     pub use crate::engine::{Engine, ExecBackend};
+    pub use crate::faults::{FaultInjector, FaultPlan, FaultRates};
     pub use crate::metrics::RunReport;
     pub use crate::serving::{
         CancelReason, EngineEvent, EngineFront, FrontStatus, InterceptSource, ResolutionMode,

@@ -71,4 +71,21 @@ SESSION-LIFECYCLE KNOBS (serve / sim; act on live front sessions):
                                     once n are live (default 0 = unlimited)
   --max-waiting <n>                 submit backpressure on waiting-queue depth
                                     (default 0 = unlimited)
+
+FAILURE-SEMANTICS KNOBS (serve / sim):
+  --intercept-retries <n>           re-dispatch attempts after a failed
+                                    interception (default 0 = fail fast)
+  --intercept-backoff-ms <ms>       base backoff before a retry, engine clock;
+                                    doubles per attempt, seeded ±25% jitter
+  --failure-action <cancel|resume-empty|fallback[:t1,t2,...]>
+                                    what an exhausted retry budget does
+                                    (default cancel: free the session's KV)
+  --degrade-watermark <blocks>      free-GPU-block watermark below which the
+                                    planner sheds load: speculative branches,
+                                    then retrying sessions' preserve, then
+                                    admissions (default 0 = off)
+  --fault-error/--fault-stall/--fault-slow/--fault-malformed <p>
+                                    deterministic fault injection: per-dispatch
+                                    probabilities (uniform across kinds)
+  --fault-seed <n>                  fault-injector seed (default --seed)
 ";

@@ -97,6 +97,14 @@ pub struct Recorder {
     pub sessions_cancelled: u64,
     pub interceptions_timed_out: u64,
     pub submits_rejected: u64,
+    /// Interception failure semantics (see `crate::engine` module docs):
+    /// dispatch attempts that completed as failures, re-dispatches issued
+    /// by the retry machinery, and exhausted-retry terminals resolved by a
+    /// non-cancel [`crate::config::FailureAction`] (empty or scripted
+    /// fallback answer). All zero in a fault-free run.
+    pub interception_failures: u64,
+    pub interception_retries: u64,
+    pub interception_fallbacks: u64,
     /// O(batch) iteration gauges: dirty ids consumed by the incremental
     /// snapshot captures (Σ over iterations), waiting-queue entries
     /// materialized by the admission frontier (Σ over iterations), and
@@ -203,6 +211,9 @@ impl Recorder {
             sessions_cancelled: self.sessions_cancelled,
             interceptions_timed_out: self.interceptions_timed_out,
             submits_rejected: self.submits_rejected,
+            interception_failures: self.interception_failures,
+            interception_retries: self.interception_retries,
+            interception_fallbacks: self.interception_fallbacks,
             capture_dirty_ids: self.capture_dirty_ids,
             frontier_depth: self.frontier_depth,
             events_batched: self.events_batched,
@@ -250,6 +261,10 @@ pub struct RunReport {
     pub sessions_cancelled: u64,
     pub interceptions_timed_out: u64,
     pub submits_rejected: u64,
+    /// Interception failure-semantics counts (see [`Recorder`]).
+    pub interception_failures: u64,
+    pub interception_retries: u64,
+    pub interception_fallbacks: u64,
     /// O(batch) iteration gauges (see [`Recorder`]).
     pub capture_dirty_ids: u64,
     pub frontier_depth: u64,

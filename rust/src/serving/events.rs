@@ -8,9 +8,14 @@
 //! Admitted → PrefixHit? → Token* → (Intercepted → Resumed → Token*)* → Finished
 //! ```
 //!
-//! A cancelled session (client abort, or an interception deadline firing)
-//! ends with a single terminal [`EngineEvent::Cancelled`] instead of
-//! `Finished`, at whatever point in the sequence the teardown happened.
+//! A cancelled session (client abort, an interception deadline firing, or a
+//! terminal interception failure) ends with a single terminal
+//! [`EngineEvent::Cancelled`] instead of `Finished`, at whatever point in
+//! the sequence the teardown happened. A failing interception interposes
+//! `InterceptionFailed (→ InterceptionRetried)*` between `Intercepted` and
+//! its outcome (`Resumed` under resume-empty/fallback, `Cancelled` under
+//! the cancel failure action) — see the failure-semantics contract in
+//! [`crate::serving`].
 //!
 //! Emission is strictly observational: the [`EventBus`] never touches
 //! scheduling state, the RNG, or the clock, so a run with subscribers makes
@@ -35,6 +40,9 @@ pub enum CancelReason {
     /// An externally-resolved interception outlived its
     /// `external_timeout_us` deadline without a client answer.
     DeadlineExceeded,
+    /// An interception failed terminally (every allowed retry exhausted)
+    /// under `FailureAction::Cancel`.
+    InterceptionFailed,
 }
 
 /// One observable step in a session's lifecycle (engine-clock timestamps).
@@ -76,6 +84,14 @@ pub enum EngineEvent {
     /// session teardown. The session resumes exactly as if it had never
     /// speculated.
     SpeculationRejected { req: ReqId, branch: ReqId, accepted: usize, at: Micros },
+    /// An interception attempt failed (tool error, fast-fail, or injected
+    /// fault). `attempt` is 1-based; either an `InterceptionRetried` or a
+    /// terminal outcome (`Resumed` under resume-empty/fallback, `Cancelled`
+    /// under cancel) follows.
+    InterceptionFailed { req: ReqId, kind: AugmentKind, attempt: u32, reason: String, at: Micros },
+    /// A failed interception is being re-dispatched after `backoff_us` of
+    /// engine-clock backoff (exponential with seeded jitter).
+    InterceptionRetried { req: ReqId, kind: AugmentKind, attempt: u32, backoff_us: Micros, at: Micros },
     /// The interception resolved; `tokens` counts the appended API returns.
     Resumed { req: ReqId, tokens: usize, at: Micros },
     /// The request completed; `record` is its final metrics record.
@@ -98,6 +114,8 @@ impl EngineEvent {
             | EngineEvent::SpeculationStarted { req, .. }
             | EngineEvent::SpeculationAccepted { req, .. }
             | EngineEvent::SpeculationRejected { req, .. }
+            | EngineEvent::InterceptionFailed { req, .. }
+            | EngineEvent::InterceptionRetried { req, .. }
             | EngineEvent::Resumed { req, .. }
             | EngineEvent::Finished { req, .. }
             | EngineEvent::Cancelled { req, .. } => *req,
@@ -115,6 +133,8 @@ impl EngineEvent {
             EngineEvent::SpeculationStarted { .. } => "speculation_started",
             EngineEvent::SpeculationAccepted { .. } => "speculation_accepted",
             EngineEvent::SpeculationRejected { .. } => "speculation_rejected",
+            EngineEvent::InterceptionFailed { .. } => "interception_failed",
+            EngineEvent::InterceptionRetried { .. } => "interception_retried",
             EngineEvent::Resumed { .. } => "resumed",
             EngineEvent::Finished { .. } => "finished",
             EngineEvent::Cancelled { .. } => "cancelled",

@@ -59,8 +59,21 @@
 //!   [`SubmitError::AtCapacity`] once `EngineConfig::max_live_sessions` /
 //!   `max_waiting` is reached, instead of admitting unboundedly.
 //!   [`EngineFront::run_trace`] sheds (and counts) rejected arrivals.
+//!   Under graceful degradation (`EngineConfig::degrade_watermark_blocks`)
+//!   the deepest pressure level sheds admissions the same way even below
+//!   the configured bounds — see [`crate::engine::Engine::degradation_level`].
+//!
+//! Interception *failures* (a tool dispatch fast-failing, or a call
+//! completing as an error — see [`crate::faults`]) never surface to the
+//! client as a torn stream mid-retry: the engine retries with backoff per
+//! its failure-semantics contract (`crate::engine` module docs), and only
+//! the terminal outcome reaches the session — a normal `Resumed` (empty or
+//! fallback answer) or one terminal [`EngineEvent::Cancelled`] with reason
+//! `InterceptionFailed`. Per-session retry budgets are set with
+//! [`SessionSpec::with_intercept_retries`].
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 
@@ -110,6 +123,11 @@ pub struct SessionSpec {
     /// `EngineConfig::speculate` is off, `Some(false)` opts out, `None`
     /// (the default) defers to the engine config.
     pub speculate: Option<bool>,
+    /// Per-session interception retry budget (failed dispatch attempts
+    /// re-tried with backoff before the terminal `FailureAction` fires):
+    /// `None` = engine default (`EngineConfig::intercept_retries`),
+    /// `Some(0)` = fail fast.
+    pub intercept_retries: Option<u32>,
 }
 
 impl SessionSpec {
@@ -123,6 +141,7 @@ impl SessionSpec {
             external_timeout_us: None,
             shared_prefix: None,
             speculate: None,
+            intercept_retries: None,
         }
     }
 
@@ -137,6 +156,7 @@ impl SessionSpec {
             external_timeout_us: None,
             shared_prefix: None,
             speculate: None,
+            intercept_retries: None,
         }
     }
 
@@ -174,6 +194,15 @@ impl SessionSpec {
         self
     }
 
+    /// Override the engine's default interception retry budget for this
+    /// session: up to `retries` failed dispatch attempts are re-tried with
+    /// exponential backoff before `EngineConfig::intercept_failure_action`
+    /// fires (0 = fail fast on the first failure).
+    pub fn with_intercept_retries(mut self, retries: u32) -> SessionSpec {
+        self.intercept_retries = Some(retries);
+        self
+    }
+
     /// Opt this session in to (or out of) speculative continuation through
     /// its interceptions, overriding `EngineConfig::speculate`. When the
     /// session pauses, the engine predicts the tool answer, forks a
@@ -201,9 +230,15 @@ pub enum FrontStatus {
 #[derive(Debug)]
 pub enum SubmitError {
     /// The front is at its configured admission bound
-    /// (`EngineConfig::max_live_sessions` / `max_waiting`): shed load or
-    /// retry after sessions finish. Counted in `submits_rejected`.
-    AtCapacity { live: usize, waiting: usize, limit: usize },
+    /// (`EngineConfig::max_live_sessions` / `max_waiting`) — or shedding
+    /// admissions under deep degradation pressure
+    /// (`EngineConfig::degrade_watermark_blocks`): shed load or retry
+    /// after sessions finish. Counted in `submits_rejected`.
+    ///
+    /// Carries both current depths and both caps (0 = unbounded) so
+    /// clients can implement informed backoff — e.g. wait until `live`
+    /// drops well below `max_live` instead of blindly re-submitting.
+    AtCapacity { live: usize, waiting: usize, max_live: usize, max_waiting: usize },
     /// Validation failed (unservable script, detached external session, …).
     Rejected(anyhow::Error),
 }
@@ -211,10 +246,10 @@ pub enum SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::AtCapacity { live, waiting, limit } => write!(
+            SubmitError::AtCapacity { live, waiting, max_live, max_waiting } => write!(
                 f,
-                "at capacity: {live} live sessions / {waiting} waiting (bound {limit}) — \
-                 retry after sessions finish"
+                "at capacity: {live}/{max_live} live sessions, {waiting}/{max_waiting} \
+                 waiting (0 = unbounded) — retry after sessions finish"
             ),
             SubmitError::Rejected(e) => write!(f, "{e}"),
         }
@@ -240,8 +275,10 @@ struct FrontShared {
     external: Mutex<HashSet<ReqId>>,
     /// Client answers not yet collected by the source.
     inbox: Mutex<VecDeque<InboxEntry>>,
-    /// Answers dropped because no interception was awaiting them.
-    stray: Mutex<u64>,
+    /// Answers dropped because no interception was awaiting them. A plain
+    /// counter — atomic, not mutexed: it is bumped on hot poll/teardown
+    /// paths and only ever read as a monotonic gauge.
+    stray: AtomicU64,
     /// Client aborts not yet applied by the pump.
     cancels: Mutex<Vec<ReqId>>,
 }
@@ -368,7 +405,7 @@ impl FrontSource {
     }
 
     fn count_stray(&self) {
-        *self.shared.stray.lock().unwrap() += 1;
+        self.shared.stray.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Move inbox entries onto the engine clock (answer available at
@@ -418,7 +455,7 @@ impl FrontSource {
         self.awaiting.remove(&req);
         let before = self.ready.len();
         self.ready.retain(|e| e.req != req);
-        *self.shared.stray.lock().unwrap() += (before - self.ready.len()) as u64;
+        self.shared.stray.fetch_add((before - self.ready.len()) as u64, Ordering::Relaxed);
     }
 }
 
@@ -447,7 +484,7 @@ impl InterceptSource for FrontSource {
             let e = self.ready.pop_front().expect("front checked above");
             // A duplicate answer for an already-resumed request is stray.
             if self.awaiting.remove(&e.req).is_some() {
-                out.push(Resumption { req: e.req, tokens: Some(e.tokens) });
+                out.push(Resumption { req: e.req, tokens: Some(e.tokens), error: None });
             } else {
                 self.count_stray();
             }
@@ -581,25 +618,25 @@ impl EngineFront {
         self.submit_inner(spec)
     }
 
-    /// The admission bound currently being hit, if any.
-    fn capacity_limit_hit(&self) -> Option<usize> {
+    /// Whether admission must be refused right now: a configured bound is
+    /// hit, or graceful degradation has reached its deepest level (free
+    /// GPU blocks under ⅓ of `degrade_watermark_blocks` — admissions are
+    /// the last load shed, after speculation and retry-preserves).
+    fn capacity_limit_hit(&self) -> bool {
         let cfg = &self.engine.cfg;
-        if cfg.max_live_sessions > 0 && self.engine.live_sessions() >= cfg.max_live_sessions {
-            return Some(cfg.max_live_sessions);
-        }
-        if cfg.max_waiting > 0 && self.engine.queue_depths().0 >= cfg.max_waiting {
-            return Some(cfg.max_waiting);
-        }
-        None
+        (cfg.max_live_sessions > 0 && self.engine.live_sessions() >= cfg.max_live_sessions)
+            || (cfg.max_waiting > 0 && self.engine.queue_depths().0 >= cfg.max_waiting)
+            || self.engine.degradation_level() >= 3
     }
 
     fn submit_inner(&mut self, spec: SessionSpec) -> Result<ReqId, SubmitError> {
-        if let Some(limit) = self.capacity_limit_hit() {
+        if self.capacity_limit_hit() {
             self.engine.metrics.submits_rejected += 1;
             return Err(SubmitError::AtCapacity {
                 live: self.engine.live_sessions(),
                 waiting: self.engine.queue_depths().0,
-                limit,
+                max_live: self.engine.cfg.max_live_sessions,
+                max_waiting: self.engine.cfg.max_waiting,
             });
         }
         let arrival = spec.arrival_us.unwrap_or_else(|| self.engine.now());
@@ -613,6 +650,9 @@ impl EngineFront {
         self.engine.set_external_timeout(id, spec.external_timeout_us);
         if spec.speculate.is_some() {
             self.engine.set_speculate(id, spec.speculate);
+        }
+        if spec.intercept_retries.is_some() {
+            self.engine.set_intercept_retries(id, spec.intercept_retries);
         }
         if let Some(key) = spec.shared_prefix {
             let holders = self.prefix_registry.entry(key).or_default();
@@ -660,7 +700,7 @@ impl EngineFront {
     /// Answers dropped because no interception was awaiting them (clients
     /// calling `resume_with` before `Intercepted`, or twice).
     pub fn stray_resolutions(&self) -> u64 {
-        *self.shared.stray.lock().unwrap()
+        self.shared.stray.load(Ordering::Relaxed)
     }
 
     /// Pump scheduler iterations until every session finished or the only

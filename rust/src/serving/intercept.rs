@@ -37,6 +37,11 @@ pub enum InterceptResolution {
     /// so the serving front can distinguish "waiting on a client" from
     /// "stuck".
     External { payload: String },
+    /// The dispatch itself failed (fast-fail: tool unreachable, rejected,
+    /// or an injected fault — see [`crate::faults`]). The engine's retry
+    /// machinery decides whether to re-dispatch with backoff or apply the
+    /// configured terminal `FailureAction`.
+    Failed { reason: String },
 }
 
 /// A resolved interception handed back to the engine.
@@ -47,6 +52,10 @@ pub struct Resumption {
     /// (internal timers — preserves trace-replay determinism);
     /// `Some(tokens)` carries a client's actual answer.
     pub tokens: Option<Vec<u32>>,
+    /// `Some(reason)` when the call completed *as a failure*: the engine
+    /// routes the request through its retry/terminal-action machinery
+    /// instead of resuming it (`tokens` is ignored in that case).
+    pub error: Option<String>,
 }
 
 /// Dispatch + completion tracking for in-flight interceptions, pluggable
@@ -136,7 +145,7 @@ impl InterceptSource for ScriptedTimers {
         self.timers
             .poll(now)
             .into_iter()
-            .map(|req| Resumption { req, tokens: None })
+            .map(|req| Resumption { req, tokens: None, error: None })
             .collect()
     }
 
@@ -174,8 +183,8 @@ mod tests {
         assert_eq!(
             done,
             vec![
-                Resumption { req: 2, tokens: None },
-                Resumption { req: 1, tokens: None }
+                Resumption { req: 2, tokens: None, error: None },
+                Resumption { req: 1, tokens: None, error: None }
             ]
         );
         assert_eq!(s.stats(), (2, 2));

@@ -27,6 +27,28 @@
 //! interception deadlines (`EngineConfig::external_timeout_us`), and
 //! submit backpressure ([`SubmitError::AtCapacity`]) — see the
 //! [`front`] module docs.
+//!
+//! # Failure-semantics contract (client view)
+//!
+//! Interceptions can *fail*: a dispatch may fast-fail
+//! ([`InterceptResolution::Failed`]) or a call may complete as an error
+//! ([`Resumption::error`]) — deterministically injectable via the seeded
+//! [`crate::faults::FaultInjector`]. Clients observe exactly this:
+//!
+//! * Failed attempts surface as [`EngineEvent::InterceptionFailed`], each
+//!   engine-side re-dispatch as [`EngineEvent::InterceptionRetried`];
+//!   between them the session simply stays paused (its context priced by
+//!   the normal §4.3 disposition economics).
+//! * Every session still reaches **exactly one** terminal event: on an
+//!   exhausted retry budget (`EngineConfig::intercept_retries` /
+//!   [`SessionSpec::with_intercept_retries`]) the configured
+//!   `FailureAction` either cancels the session (one
+//!   [`EngineEvent::Cancelled`], reason
+//!   [`CancelReason::InterceptionFailed`]) or resumes it with an empty /
+//!   fallback answer, after which the script runs on to `Finished`.
+//! * A fault-free run is bit-identical whatever the retry configuration —
+//!   failure handling costs nothing until a failure happens (pinned by
+//!   `tests/chaos.rs`).
 
 pub mod events;
 pub mod front;

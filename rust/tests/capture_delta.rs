@@ -16,7 +16,10 @@
 //! (memoizing, oracle, or a constant junk answer that mispredicts almost
 //! everything): branch forks, verify/adopt/drop at resume, mid-speculation
 //! cancels of parents *and* branch ids, and deadline expiry while a branch
-//! is live all flow through the same delta-vs-full oracle.
+//! is live all flow through the same delta-vs-full oracle. A further slice
+//! of the runs overlays a seeded `FaultPlan` (tool errors with random
+//! retry budgets, backoff, and terminal actions; stalls; slow and
+//! malformed answers), so the retry machinery churns the journals too.
 //!
 //! "Logically identical" deliberately does not mean byte-identical slabs:
 //! the dense `ReqSlots` windows may cover different id spans (the delta
@@ -26,7 +29,8 @@
 use std::collections::HashSet;
 
 use infercept::augment::AugmentKind;
-use infercept::config::{EngineConfig, TimeoutAction};
+use infercept::config::{EngineConfig, FailureAction, TimeoutAction};
+use infercept::faults::{FaultPlan, FaultRates};
 use infercept::coordinator::estimator::DurationEstimator;
 use infercept::coordinator::planner::Planner;
 use infercept::coordinator::policy::Policy;
@@ -173,6 +177,30 @@ fn fuzz_one(policy: Policy, rng: &mut Pcg) {
     // Half the runs speculate: every interception may fork a CoW branch
     // that is verified-or-dropped when the call resolves.
     cfg.speculate = rng.f64() < 0.5;
+    // ~40% of the runs inject seeded faults on top (the engine wraps the
+    // installed source in a `FaultInjector`): tool errors retry with
+    // backoff and land on a random terminal action, stalls become
+    // never-answered externals the armed deadline reclaims, slow and
+    // malformed answers stress the resume path — all through the same
+    // delta-vs-full oracle.
+    if rng.f64() < 0.4 {
+        cfg.fault_plan = FaultPlan::uniform(
+            rng.next_u64(),
+            FaultRates {
+                error: rng.f64() * 0.15,
+                stall: rng.f64() * 0.08,
+                slow: rng.f64() * 0.10,
+                malformed: rng.f64() * 0.10,
+            },
+        );
+        cfg.intercept_retries = rng.usize(0, 3) as u32;
+        cfg.intercept_backoff_us = rng.range(0, 40_000);
+        cfg.intercept_failure_action = match rng.usize(0, 2) {
+            0 => FailureAction::Cancel,
+            1 => FailureAction::ResumeEmpty,
+            _ => FailureAction::Fallback(vec![1, 2, 3]),
+        };
+    }
 
     let n = rng.usize(16, 28);
     let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(n, 4.0);

@@ -1,0 +1,294 @@
+//! Chaos property suite: the engine under seeded fault injection
+//! (see `crate::faults` and the failure-semantics contract in the
+//! `crate::engine` / `crate::serving` module docs).
+//!
+//! Three contracts:
+//!
+//! * **Off-is-free** — with an inactive `FaultPlan`, any retry/backoff/
+//!   failure-action configuration is bit-identical (Debug-equal
+//!   `RunReport`) to a plain engine, and every failure gauge stays zero.
+//! * **Chaos survival** — under arbitrary seeded fault schedules (tool
+//!   errors, stalls, slow answers, malformed answers) combined with every
+//!   Fig. 2 policy, the adaptive scheduler, speculation, random retry
+//!   budgets, random failure actions, random degradation watermarks, and
+//!   random client cancels: every session reaches **exactly one** terminal
+//!   state (`Finished` or `Cancelled`), block conservation stays green
+//!   every pump round, and the engine never wedges (stalled externals are
+//!   reclaimed by their armed deadlines).
+//! * **Graceful degradation** — a free-GPU-block watermark below which the
+//!   planner sheds speculative forks entirely, and (at the deepest level)
+//!   the front sheds new admissions with `SubmitError::AtCapacity` — while
+//!   conservation and completion stay intact.
+//!
+//! Every test derives its randomness from one seed, overridable with the
+//! `CHAOS_SEED` environment variable (CI pins and logs it): a failure
+//! report names the per-run sub-seed, so any counterexample replays
+//! exactly.
+
+use std::collections::HashMap;
+
+use infercept::augment::AugmentKind;
+use infercept::config::{EngineConfig, FailureAction, TimeoutAction};
+use infercept::coordinator::policy::Policy;
+use infercept::engine::{Engine, PumpRound};
+use infercept::faults::{FaultPlan, FaultRates};
+use infercept::kvcache::ReqId;
+use infercept::serving::{EngineEvent, EngineFront, SessionSpec, SubmitError};
+use infercept::sim::{SimBackend, SimModelSpec};
+use infercept::speculation::{ConstantPredictor, OraclePredictor};
+use infercept::util::rng::Pcg;
+use infercept::workload::{
+    Interception, RequestScript, Segment, WorkloadGen, WorkloadKind,
+};
+
+/// Root seed for every chaos schedule; override with `CHAOS_SEED=<u64>`.
+fn chaos_seed() -> u64 {
+    match std::env::var("CHAOS_SEED") {
+        Ok(s) => s.trim().parse().expect("CHAOS_SEED must be a u64"),
+        Err(_) => 20260808,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Off-is-free
+// ---------------------------------------------------------------------------
+
+/// With an inactive fault plan the whole failure subsystem is dormant: a
+/// run configured with retries, backoff, a fallback action, and a
+/// zero-rate plan is Debug-identical to a plain run, on every seed.
+#[test]
+fn faults_off_is_bit_identical_whatever_the_retry_config() {
+    for seed in [7u64, 20260808] {
+        let spec = SimModelSpec::gptj_6b();
+        let trace = WorkloadGen::new(WorkloadKind::Mixed, seed).generate(30, 3.0);
+
+        let cfg = EngineConfig::for_sim(&spec, Policy::infercept()).with_seed(seed);
+        let mut plain = Engine::new(Box::new(SimBackend::new(spec.clone())), cfg);
+        let rp = plain.run_trace(&trace).unwrap();
+        plain.check_invariants().unwrap();
+
+        let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept()).with_seed(seed);
+        cfg.intercept_retries = 3;
+        cfg.intercept_backoff_us = 25_000;
+        cfg.intercept_failure_action = FailureAction::Fallback(vec![9, 9]);
+        // Zero rates: the plan is inactive, the source is not even wrapped.
+        cfg.fault_plan = FaultPlan::uniform(seed ^ 0xdead, FaultRates::default());
+        let mut armed = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+        let ra = armed.run_trace(&trace).unwrap();
+        armed.check_invariants().unwrap();
+
+        assert_eq!(format!("{rp:?}"), format!("{ra:?}"), "seed {seed}");
+        assert_eq!(ra.interception_failures, 0);
+        assert_eq!(ra.interception_retries, 0);
+        assert_eq!(ra.interception_fallbacks, 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos survival
+// ---------------------------------------------------------------------------
+
+/// One chaos run: a randomized fault schedule + lifecycle configuration
+/// over one generated trace. Asserts conservation every pump round, no
+/// wedging, and exactly one terminal event per session.
+fn chaos_one(policy: Policy, rng: &mut Pcg) {
+    let seed = rng.next_u64();
+    let spec = SimModelSpec::gptj_6b();
+    let mut cfg = EngineConfig::for_sim(&spec, policy).with_seed(seed);
+    // Stalls convert dispatches to never-answered externals: an armed
+    // deadline is the only thing that reclaims them.
+    cfg.external_timeout_us = 200_000 + rng.range(0, 300_000);
+    cfg.external_timeout_action =
+        if rng.f64() < 0.5 { TimeoutAction::Cancel } else { TimeoutAction::ResumeEmpty };
+    cfg.speculate = rng.f64() < 0.5;
+    cfg.intercept_retries = rng.usize(0, 3) as u32;
+    cfg.intercept_backoff_us = rng.range(0, 50_000);
+    cfg.intercept_failure_action = match rng.usize(0, 2) {
+        0 => FailureAction::Cancel,
+        1 => FailureAction::ResumeEmpty,
+        _ => FailureAction::Fallback(vec![1, 2, 3]),
+    };
+    if rng.f64() < 0.5 {
+        cfg.degrade_watermark_blocks = rng.usize(0, cfg.num_gpu_blocks);
+    }
+    cfg.fault_plan = FaultPlan::uniform(
+        rng.next_u64(),
+        FaultRates {
+            error: rng.f64() * 0.25,
+            stall: rng.f64() * 0.10,
+            slow: rng.f64() * 0.15,
+            malformed: rng.f64() * 0.15,
+        },
+    );
+
+    let n = rng.usize(12, 20);
+    let kind = match rng.usize(0, 3) {
+        0 => WorkloadKind::Mixed,
+        1 => WorkloadKind::Single(AugmentKind::Qa),
+        2 => WorkloadKind::Single(AugmentKind::Chatbot),
+        _ => WorkloadKind::Single(AugmentKind::Math),
+    };
+    let trace = WorkloadGen::new(kind, seed).generate(n, 4.0);
+    let vocab = cfg.vocab;
+    let speculate = cfg.speculate;
+    let mut eng = Engine::new(Box::new(SimBackend::new(spec)), cfg);
+    if speculate {
+        match rng.usize(0, 2) {
+            0 => {}
+            1 => eng.set_answer_predictor(Box::new(OraclePredictor::new(vocab))),
+            _ => {
+                let junk: Vec<u32> =
+                    (0..rng.usize(1, 12)).map(|_| rng.next_u64() as u32).collect();
+                eng.set_answer_predictor(Box::new(ConstantPredictor::with_prior(junk, 1.0)));
+            }
+        }
+    }
+    eng.load_trace(&trace);
+
+    // Terminal-state accounting: every trace session streams its events.
+    let (tx, rx) = std::sync::mpsc::channel();
+    for id in 1..=n as ReqId {
+        eng.subscribe_events(id, tx.clone());
+    }
+    drop(tx);
+
+    let mut iters = 0u64;
+    let mut rounds = 0u64;
+    loop {
+        match eng.pump_round(&mut iters).unwrap_or_else(|e| panic!("seed {seed}: {e}")) {
+            PumpRound::Drained => break,
+            PumpRound::Progressed => {}
+            PumpRound::AwaitingExternal => {
+                // Only stalled externals remain. Their deadlines are always
+                // armed (cfg.external_timeout_us > 0), so the engine can
+                // never wedge here.
+                assert!(
+                    eng.jump_to_next_external_deadline(),
+                    "seed {seed}: awaiting external with no armed deadline"
+                );
+            }
+        }
+        // Conservation green every iteration, not just at the end.
+        eng.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // Random client aborts on any issued id (branches included):
+        // cancels must compose with in-flight retries and stalls.
+        if rng.f64() < 0.02 {
+            let victim = rng.range(1, eng.max_issued_id());
+            eng.cancel(victim);
+        }
+        rounds += 1;
+        assert!(
+            iters < 200_000 && rounds < 400_000,
+            "seed {seed}: engine does not drain ({} unfinished)",
+            eng.unfinished()
+        );
+    }
+    eng.flush_events();
+    eng.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+    let mut terminals: HashMap<ReqId, u32> = HashMap::new();
+    for ev in rx.try_iter() {
+        if matches!(ev, EngineEvent::Finished { .. } | EngineEvent::Cancelled { .. }) {
+            *terminals.entry(ev.req()).or_insert(0) += 1;
+        }
+    }
+    for id in 1..=n as ReqId {
+        assert_eq!(
+            terminals.get(&id).copied().unwrap_or(0),
+            1,
+            "seed {seed}: session {id} must reach exactly one terminal state"
+        );
+    }
+}
+
+#[test]
+fn chaos_fig2_policies_reach_exactly_one_terminal_state() {
+    let seed = chaos_seed();
+    eprintln!("chaos seed: {seed}");
+    for (p, policy) in Policy::fig2_set().into_iter().enumerate() {
+        let mut rng = Pcg::with_stream(seed, p as u64 + 1);
+        for _ in 0..2 {
+            chaos_one(policy.clone(), &mut rng);
+        }
+    }
+}
+
+#[test]
+fn chaos_adaptive_policy_survives_fault_schedules() {
+    let seed = chaos_seed();
+    eprintln!("chaos seed: {seed}");
+    let mut rng = Pcg::with_stream(seed, 0xada);
+    for _ in 0..3 {
+        chaos_one(Policy::adaptive(), &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graceful degradation
+// ---------------------------------------------------------------------------
+
+/// A watermark the cache can never satisfy keeps the engine at degradation
+/// level >= 1 for the whole run: every speculative fork is shed (even with
+/// a perfect predictor begging to be used), yet the run completes with
+/// conservation green. The zero-watermark control forks as usual.
+#[test]
+fn degradation_watermark_sheds_speculation_but_stays_green() {
+    let spec = SimModelSpec::gptj_6b();
+    let n = 20;
+    let trace = WorkloadGen::new(WorkloadKind::Mixed, 11).generate(n, 4.0);
+
+    let run = |watermark: usize| {
+        let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept()).with_seed(11);
+        cfg.speculate = true;
+        cfg.degrade_watermark_blocks = watermark;
+        let vocab = cfg.vocab;
+        let mut eng = Engine::new(Box::new(SimBackend::new(spec.clone())), cfg);
+        eng.set_answer_predictor(Box::new(OraclePredictor::new(vocab)));
+        let rep = eng.run_trace(&trace).unwrap();
+        eng.check_invariants().unwrap();
+        assert_eq!(rep.completed, n);
+        rep
+    };
+
+    let control = run(0);
+    assert!(control.speculations_started > 0, "control run never speculated");
+    let shed = run(SimModelSpec::gptj_6b().gpu_blocks * 3);
+    assert_eq!(
+        shed.speculations_started, 0,
+        "degradation level >= 1 must shed every speculative fork"
+    );
+}
+
+/// At degradation level 3 the serving front sheds admissions outright: a
+/// submit against a starved cache is rejected with the typed, retryable
+/// `AtCapacity` error even when no explicit session caps are set.
+#[test]
+fn degradation_level_three_sheds_admissions() {
+    let script = RequestScript {
+        kind: AugmentKind::Math,
+        prompt_tokens: 32,
+        segments: vec![
+            Segment {
+                gen_tokens: 8,
+                interception: Some(Interception {
+                    kind: AugmentKind::Math,
+                    duration_us: 10_000,
+                    ret_tokens: 4,
+                }),
+            },
+            Segment { gen_tokens: 8, interception: None },
+        ],
+    };
+    let spec = SimModelSpec::gptj_6b();
+    let mut cfg = EngineConfig::for_sim(&spec, Policy::infercept());
+    // free < watermark/3 from the first instant: level 3 immediately.
+    cfg.degrade_watermark_blocks = cfg.num_gpu_blocks * 3 + 3;
+    let mut front = EngineFront::new(Box::new(SimBackend::new(spec)), cfg);
+    assert_eq!(front.engine().degradation_level(), 3);
+    match front.submit(SessionSpec::interactive(script)) {
+        Err(SubmitError::AtCapacity { live, waiting, .. }) => {
+            assert_eq!((live, waiting), (0, 0), "shed by degradation, not by depth");
+        }
+        other => panic!("expected AtCapacity under max degradation, got {other:?}"),
+    }
+}

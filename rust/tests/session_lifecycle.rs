@@ -353,9 +353,10 @@ fn submit_rejects_at_live_session_capacity_and_recovers_after_cancel() {
     let a = f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)).unwrap();
     let _b = f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)).unwrap();
     match f.submit_detached(SessionSpec::scripted(plain_script(64, 4), 0)) {
-        Err(SubmitError::AtCapacity { live, limit, .. }) => {
+        Err(SubmitError::AtCapacity { live, max_live, max_waiting, .. }) => {
             assert_eq!(live, 2);
-            assert_eq!(limit, 2);
+            assert_eq!(max_live, 2);
+            assert_eq!(max_waiting, 0); // unbounded in this config
         }
         other => panic!("expected AtCapacity, got {other:?}"),
     }
