@@ -1,0 +1,23 @@
+//! Fixture: r2-no-hash-order must fire on hash-container declarations,
+//! iteration method calls, and `for … in` loops in `coordinator/`.
+
+use std::collections::HashMap;
+
+pub struct Plan {
+    pub weights: HashMap<String, f64>,
+}
+
+pub fn total(p: &Plan) -> f64 {
+    let mut sum = 0.0;
+    for (_k, v) in &p.weights {
+        sum += v;
+    }
+    sum
+}
+
+pub fn waived_keys(p: &Plan) -> Vec<String> {
+    // detlint: allow(r2) — fixture: order is restored by the sort below
+    let mut ks: Vec<String> = p.weights.keys().cloned().collect();
+    ks.sort();
+    ks
+}

@@ -1,0 +1,23 @@
+//! Fixture: a clean decision-path file, including a `#[cfg(test)]` module
+//! that uses hash containers and panics freely. Must produce nothing.
+
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hash_and_panics_ok_in_tests() {
+        let mut m: HashMap<u64, u64> = HashMap::new();
+        m.insert(1, super::double(1));
+        for (_k, v) in &m {
+            assert_eq!(*v, 2);
+        }
+        if m.is_empty() {
+            panic!("unreachable in fixture");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture: r1-no-wall-clock must fire on wall-clock reads in `engine/`,
+//! and an inline waiver must suppress it. Not compiled — scanned only.
+
+pub fn stamp_us() -> u64 {
+    let t = std::time::Instant::now();
+    let _ = t;
+    std::thread::sleep(std::time::Duration::from_micros(1));
+    0
+}
+
+pub fn waived_stamp() -> u64 {
+    // detlint: allow(r1) — fixture: proves a waiver suppresses the finding
+    let _t = std::time::SystemTime::now();
+    0
+}

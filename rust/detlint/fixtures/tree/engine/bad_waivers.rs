@@ -1,0 +1,18 @@
+//! Fixture: waiver hygiene. A stale waiver (matching no violation), an
+//! unknown rule, and a missing justification must each raise
+//! `waiver-syntax`; none of them suppress anything.
+
+// detlint: allow(r1) — fixture: stale, nothing below touches the clock
+pub fn pure(x: u64) -> u64 {
+    x + 1
+}
+
+// detlint: allow(r9) — fixture: no such rule
+pub fn also_pure(x: u64) -> u64 {
+    x + 2
+}
+
+// detlint: allow(r1)
+pub fn still_pure(x: u64) -> u64 {
+    x + 3
+}

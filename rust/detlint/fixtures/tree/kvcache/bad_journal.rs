@@ -1,0 +1,32 @@
+//! Fixture: r3-journal-completeness must fire on a `pub` `&mut self` method
+//! of `ReqTable` that never reaches the dirty-set mark, accept direct and
+//! transitive journaling, and honor a waiver.
+
+pub struct DirtySet;
+
+impl DirtySet {
+    pub fn mark(&mut self, _id: u64) {}
+}
+
+pub struct ReqTable {
+    dirty: DirtySet,
+}
+
+impl ReqTable {
+    pub fn forgets(&mut self, id: u64) {
+        let _ = id;
+    }
+
+    pub fn remembers(&mut self, id: u64) {
+        self.dirty.mark(id);
+    }
+
+    pub fn via_remembers(&mut self, id: u64) {
+        self.remembers(id);
+    }
+
+    fn private_unjournaled(&mut self) {}
+
+    // detlint: allow(r3) — fixture: scratch state only, nothing snapshotted
+    pub fn waived_scratch(&mut self) {}
+}

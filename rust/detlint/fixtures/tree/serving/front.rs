@@ -1,0 +1,34 @@
+//! Fixture: r4-no-panic-surface must fire on `.unwrap()`, `.expect(…)`,
+//! panicking macros and non-literal indexing here, skip literal indexing
+//! and `#[cfg(test)]` code, and honor a waiver.
+
+pub fn pop(v: &mut Vec<u32>) -> u32 {
+    v.pop().unwrap()
+}
+
+pub fn pick(v: &[u32], i: usize) -> u32 {
+    v[i]
+}
+
+pub fn first(v: &[u32]) -> u32 {
+    v[0]
+}
+
+pub fn boom() {
+    panic!("fixture");
+}
+
+pub fn waived_head(v: &[u32]) -> u32 {
+    // detlint: allow(r4) — fixture: caller guarantees non-empty by contract
+    *v.first().expect("non-empty by contract")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let v = vec![1u32];
+        let i = 0;
+        assert_eq!(v[i], *v.first().unwrap());
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: r5-seeded-rng-only must fire on unseeded entropy sources in
+//! `speculation/`, and honor a waiver.
+
+pub fn draw() -> u64 {
+    let _rng = rand::thread_rng();
+    0
+}
+
+pub fn waived_draw() -> u64 {
+    // detlint: allow(r5) — fixture: proves a waiver suppresses the finding
+    let _rng = rand::rngs::OsRng;
+    0
+}

@@ -1,0 +1,8 @@
+//! Fixture: `util/` is outside the decision paths — the wall clock is legal
+//! here (timing shells like `util/bench.rs` need it). Must produce nothing.
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

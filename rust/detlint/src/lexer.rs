@@ -1,0 +1,314 @@
+//! A masking lexer: everything the rules must not see (comments, string and
+//! char literal bodies) is blanked out with spaces, preserving offsets and
+//! line structure, so the rule scans can use plain substring searches over
+//! `code` without false positives from prose.
+//!
+//! The unit of position throughout detlint is a *char index* into the file
+//! (not a byte offset): `text` and `code` are `Vec<char>` and all helpers
+//! take/return indices into them.
+
+/// `true` for characters that can appear inside a Rust identifier.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `true` for characters that can *start* an identifier.
+pub fn is_ident_start(c: char) -> bool {
+    is_ident_char(c) && !c.is_ascii_digit()
+}
+
+/// Find `pat` in `code[start..]`, returning the char index of the match.
+pub fn find_from(code: &[char], pat: &str, start: usize) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    if p.is_empty() {
+        return Some(start.min(code.len()));
+    }
+    if start >= code.len() || code.len() - start < p.len() {
+        return None;
+    }
+    let last = code.len() - p.len();
+    for i in start..=last {
+        if code[i..i + p.len()] == p[..] {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Find the last occurrence of any char in `set` within `code[start..end)`.
+pub fn rfind_any(code: &[char], set: &str, start: usize, end: usize) -> Option<usize> {
+    let end = end.min(code.len());
+    for i in (start..end).rev() {
+        if set.contains(code[i]) {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// All ident-boundary-delimited occurrences of `name` in `code`.
+pub fn find_idents(code: &[char], name: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let len = name.chars().count();
+    let mut start = 0;
+    while let Some(p) = find_from(code, name, start) {
+        start = p + 1;
+        if p > 0 && is_ident_char(code[p - 1]) {
+            continue;
+        }
+        let e = p + len;
+        if e < code.len() && is_ident_char(code[e]) {
+            continue;
+        }
+        out.push(p);
+    }
+    out
+}
+
+/// The token ending strictly before `pos`: `(text, start_index)`.
+/// Returns an empty string at beginning-of-file. Identifier runs come back
+/// whole; `::` comes back as one token; anything else is a single char.
+pub fn prev_token(code: &[char], pos: usize) -> (String, usize) {
+    if pos == 0 {
+        return (String::new(), 0);
+    }
+    let mut j = pos - 1;
+    while code[j].is_whitespace() {
+        if j == 0 {
+            return (String::new(), 0);
+        }
+        j -= 1;
+    }
+    if is_ident_char(code[j]) {
+        let e = j + 1;
+        let mut s = j;
+        while s > 0 && is_ident_char(code[s - 1]) {
+            s -= 1;
+        }
+        return (code[s..e].iter().collect(), s);
+    }
+    if code[j] == ':' && j > 0 && code[j - 1] == ':' {
+        return ("::".to_string(), j - 1);
+    }
+    (code[j].to_string(), j)
+}
+
+/// First non-whitespace char index at or after `pos`.
+pub fn next_nonspace(code: &[char], pos: usize) -> usize {
+    let mut j = pos;
+    while j < code.len() && code[j].is_whitespace() {
+        j += 1;
+    }
+    j
+}
+
+/// Index just past the brace matching `code[open_idx] == '{'`.
+pub fn match_brace(code: &[char], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    for (j, &c) in code.iter().enumerate().skip(open_idx) {
+        if c == '{' {
+            depth += 1;
+        } else if c == '}' {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+    }
+    code.len()
+}
+
+/// A source file with comments and literal bodies masked out.
+pub struct Masked {
+    /// Original source, as chars.
+    pub text: Vec<char>,
+    /// Source with comments and string/char bodies blanked to spaces
+    /// (newlines preserved, so offsets and lines line up with `text`).
+    pub code: Vec<char>,
+    /// Every comment: `(start_char_index, comment_text)`.
+    pub comments: Vec<(usize, String)>,
+    /// Char index of the start of each line (line 1 starts the list).
+    pub line_starts: Vec<usize>,
+}
+
+impl Masked {
+    pub fn new(src: &str) -> Masked {
+        let text: Vec<char> = src.chars().collect();
+        let n = text.len();
+        let mut code = text.clone();
+        let mut comments: Vec<(usize, String)> = Vec::new();
+
+        fn blank(out: &mut [char], s: usize, e: usize) {
+            for c in out.iter_mut().take(e.min(out.len())).skip(s) {
+                if *c != '\n' {
+                    *c = ' ';
+                }
+            }
+        }
+
+        let mut i = 0;
+        while i < n {
+            let c = text[i];
+            if c == '/' && i + 1 < n && text[i + 1] == '/' {
+                let mut j = i;
+                while j < n && text[j] != '\n' {
+                    j += 1;
+                }
+                comments.push((i, text[i..j].iter().collect()));
+                blank(&mut code, i, j);
+                i = j;
+            } else if c == '/' && i + 1 < n && text[i + 1] == '*' {
+                // Block comments nest in Rust.
+                let mut depth = 1;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if text[j] == '/' && j + 1 < n && text[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if text[j] == '*' && j + 1 < n && text[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut code, i, j);
+                i = j;
+            } else if c == '"' {
+                let mut j = i + 1;
+                while j < n {
+                    if text[j] == '\\' {
+                        j += 2;
+                    } else if text[j] == '"' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut code, i + 1, (i + 1).max(j.saturating_sub(1)));
+                i = j;
+            } else if is_ident_start(c) {
+                let mut j = i;
+                while j < n && is_ident_char(text[j]) {
+                    j += 1;
+                }
+                let ident: String = text[i..j].iter().collect();
+                // Raw (byte) strings: r"…", r#"…"#, br##"…"##, …
+                if (ident == "r" || ident == "br") && j < n && (text[j] == '"' || text[j] == '#') {
+                    let mut k = j;
+                    let mut hashes = 0;
+                    while k < n && text[k] == '#' {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if k < n && text[k] == '"' {
+                        let close = format!("\"{}", "#".repeat(hashes));
+                        let closelen = close.chars().count();
+                        let e = match find_from(&text, &close, k + 1) {
+                            Some(p) => p + closelen,
+                            None => n,
+                        };
+                        blank(&mut code, k + 1, (k + 1).max(e - closelen));
+                        i = e;
+                        continue;
+                    }
+                }
+                i = j;
+            } else if c == '\'' {
+                // Char literal vs lifetime: `'\…'` is a char; `'x'` is a
+                // char; anything else (`'a`, `'static`) is a lifetime.
+                if i + 1 < n && text[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && text[j] != '\'' {
+                        j += 1;
+                    }
+                    blank(&mut code, i + 1, j);
+                    i = j + 1;
+                } else if i + 2 < n && text[i + 2] == '\'' && text[i + 1] != '\'' {
+                    blank(&mut code, i + 1, i + 2);
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        let mut line_starts = vec![0];
+        for (idx, &ch) in text.iter().enumerate() {
+            if ch == '\n' {
+                line_starts.push(idx + 1);
+            }
+        }
+        Masked { text, code, comments, line_starts }
+    }
+
+    /// 1-based line number holding char index `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= offset)
+    }
+
+    /// `[start, end)` char span of 1-based `line` (end excludes the newline).
+    pub fn line_span(&self, line: usize) -> (usize, usize) {
+        let s = self.line_starts[line - 1];
+        let e = if line < self.line_starts.len() {
+            self.line_starts[line] - 1
+        } else {
+            self.text.len()
+        };
+        (s, e)
+    }
+
+    /// Does 1-based `line` contain any non-masked, non-whitespace code?
+    pub fn line_has_code(&self, line: usize) -> bool {
+        let (s, e) = self.line_span(line);
+        self.code[s..e].iter().any(|c| !c.is_whitespace())
+    }
+
+    /// Masked content of 1-based `line`, as a String.
+    pub fn code_line(&self, line: usize) -> String {
+        let (s, e) = self.line_span(line);
+        self.code[s..e].iter().collect()
+    }
+
+    pub fn num_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+}
+
+/// Char-index ranges covered by `#[cfg(test)]` / `#[test]` items (merged).
+/// Rules skip anything inside: tests may panic, use HashMaps, and read the
+/// clock freely.
+pub fn test_regions(m: &Masked) -> Vec<(usize, usize)> {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let code = &m.code;
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut start = 0;
+        while let Some(p) = find_from(code, pat, start) {
+            start = p + pat.chars().count();
+            let mut j = start;
+            while j < code.len() && code[j] != '{' && code[j] != ';' {
+                j += 1;
+            }
+            if j < code.len() && code[j] == '{' {
+                regions.push((p, match_brace(code, j)));
+            }
+        }
+    }
+    regions.sort_unstable();
+    let mut merged: Vec<(usize, usize)> = Vec::new();
+    for (s, e) in regions {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    merged
+}
+
+/// Is char index `off` inside any of the (sorted, merged) `regions`?
+pub fn in_regions(regions: &[(usize, usize)], off: usize) -> bool {
+    regions.iter().any(|&(s, e)| s <= off && off < e)
+}

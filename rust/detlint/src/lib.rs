@@ -1,0 +1,70 @@
+//! detlint — determinism & invariant static analysis for the scheduling core.
+//!
+//! The InferCept coordinator promises bit-identical schedules for identical
+//! inputs (the determinism, policy-parity, capture-delta and chaos suites all
+//! pin on it). That promise is easy to break silently: one `Instant::now()`
+//! in an admission path, one `HashMap` iteration feeding a plan, one
+//! `&mut self` mutation that skips the dirty-set journal. detlint makes the
+//! five contracts machine-checked:
+//!
+//! - **r1-no-wall-clock** — no wall clock / OS timing in decision paths
+//!   (`engine/`, `coordinator/`, `kvcache/`, `faults/`, `speculation/`,
+//!   `serving/`); the virtual clock is the only time source there.
+//! - **r2-no-hash-order** — no hash-ordered containers in decision paths;
+//!   iteration order must be run-independent (point lookups can be waived).
+//! - **r3-journal-completeness** — every `pub` `&mut self` method on
+//!   `ReqTable` / `CacheManager` / `FcfsQueue` reaches the dirty-set /
+//!   journal mark, directly or via another compliant method.
+//! - **r4-no-panic-surface** — no `unwrap`/`expect`/panicking macros or
+//!   unchecked indexing on the client-facing serving surface
+//!   (`serving/front.rs`, `serving/events.rs`).
+//! - **r5-seeded-rng-only** — randomness in decision paths derives from the
+//!   config seed, never from thread/OS entropy.
+//!
+//! Findings are suppressed inline with
+//! `// detlint: allow(<rules>) — <justification>`; a waiver without a
+//! justification, naming an unknown rule, or matching no violation is itself
+//! an error. The analysis is intentionally lexical (no rustc, no syn): it
+//! masks comments/strings, skips `#[cfg(test)]` regions, and scans with
+//! ident-boundary precision. That keeps it dependency-free and offline, at
+//! the cost of being a lint, not a proof — see docs/determinism.md.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+pub use rules::{full_rule, scan_tree, Violation, ALL_RULES};
+
+/// Scan with every rule enabled.
+pub fn scan_all(root: &Path) -> std::io::Result<(Vec<Violation>, usize)> {
+    let enabled: BTreeSet<String> = ALL_RULES.iter().map(|r| r.to_string()).collect();
+    scan_tree(root, &enabled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lexer::{find_idents, Masked};
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let m = Masked::new("let x = \"Instant\"; // Instant\nlet y = Instant::now();\n");
+        assert_eq!(find_idents(&m.code, "Instant").len(), 1);
+        assert_eq!(m.comments.len(), 1);
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars() {
+        let m = Masked::new("let s = r#\"HashMap \"quoted\" body\"#; let c = 'H'; let l: &'a u8;");
+        assert!(find_idents(&m.code, "HashMap").is_empty());
+        assert_eq!(find_idents(&m.code, "l").len(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let m = Masked::new("/* outer /* inner */ still comment */ let sleep = 1;");
+        assert_eq!(find_idents(&m.code, "sleep").len(), 1);
+    }
+}

@@ -1,0 +1,116 @@
+//! detlint CLI.
+//!
+//! ```text
+//! detlint [--root <dir>] [--json <path>] [--rules r1,r2,…] [--quiet]
+//! ```
+//!
+//! Scans every `.rs` file under `--root` (default `src`, i.e. the scheduling
+//! core when run from `rust/`). Prints one `file:line: [rule] message`
+//! diagnostic per finding, writes the machine-readable report to `--json`
+//! if given, and exits 0 when clean, 1 when any unwaived violation remains,
+//! 2 on usage or I/O errors.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::report::render_json;
+use detlint::{full_rule, scan_tree, ALL_RULES};
+
+struct Opts {
+    root: PathBuf,
+    json: Option<PathBuf>,
+    rules: BTreeSet<String>,
+    quiet: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: detlint [--root <dir>] [--json <path>] [--rules r1,r2,…] [--quiet] [--list-rules]"
+}
+
+fn parse_opts() -> Result<Option<Opts>, String> {
+    let mut root = PathBuf::from("src");
+    let mut json = None;
+    let mut rules: BTreeSet<String> = ALL_RULES.iter().map(|r| r.to_string()).collect();
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                root = PathBuf::from(args.next().ok_or("--root needs a directory")?);
+            }
+            "--json" => {
+                json = Some(PathBuf::from(args.next().ok_or("--json needs a path")?));
+            }
+            "--rules" => {
+                let list = args.next().ok_or("--rules needs a comma-separated list")?;
+                rules = BTreeSet::new();
+                for r in list.split(',') {
+                    let r = r.trim();
+                    let full = full_rule(r).ok_or_else(|| format!("unknown rule `{r}`"))?;
+                    rules.insert(full.to_string());
+                }
+            }
+            "--quiet" | "-q" => quiet = true,
+            "--list-rules" => {
+                for r in ALL_RULES {
+                    println!("{r}");
+                }
+                return Ok(None);
+            }
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return Ok(None);
+            }
+            other => return Err(format!("unknown argument `{other}`\n{}", usage())),
+        }
+    }
+    Ok(Some(Opts { root, json, rules, quiet }))
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(Some(o)) => o,
+        Ok(None) => return ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if !opts.root.is_dir() {
+        eprintln!("detlint: root `{}` is not a directory", opts.root.display());
+        return ExitCode::from(2);
+    }
+    let (violations, files_scanned) = match scan_tree(&opts.root, &opts.rules) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let unwaived = violations.iter().filter(|v| !v.waived).count();
+    if !opts.quiet {
+        for v in &violations {
+            let tag = if v.waived { "WAIVED " } else { "" };
+            println!("{}:{}: {tag}[{}] {}", v.file, v.line, v.rule, v.message);
+        }
+        println!(
+            "detlint: {files_scanned} files, {} violations ({unwaived} unwaived)",
+            violations.len()
+        );
+    }
+    if let Some(path) = &opts.json {
+        let rule_list: Vec<String> = opts.rules.iter().cloned().collect();
+        let body =
+            render_json(&opts.root.display().to_string(), files_scanned, &rule_list, &violations);
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("detlint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if unwaived > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

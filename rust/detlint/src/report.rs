@@ -1,0 +1,75 @@
+//! Machine-readable report writer. Hand-rolled JSON (the crate is
+//! dependency-free); output is fully deterministic — sorted violations,
+//! sorted `by_rule` keys, and deliberately no timestamp (detlint polices
+//! wall-clock use and takes its own medicine).
+
+use std::collections::BTreeMap;
+
+use crate::rules::Violation;
+
+pub const REPORT_VERSION: u64 = 1;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the full report. `rules` is the enabled rule set (full ids).
+pub fn render_json(root: &str, files_scanned: usize, rules: &[String], vs: &[Violation]) -> String {
+    let waived = vs.iter().filter(|v| v.waived).count();
+    let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for v in vs {
+        *by_rule.entry(v.rule.as_str()).or_insert(0) += 1;
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"version\": {REPORT_VERSION},\n"));
+    out.push_str(&format!("  \"root\": \"{}\",\n", esc(root)));
+    out.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+    let rule_list: Vec<String> = rules.iter().map(|r| format!("\"{}\"", esc(r))).collect();
+    out.push_str(&format!("  \"rules\": [{}],\n", rule_list.join(", ")));
+    out.push_str("  \"violations\": [");
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    {");
+        out.push_str(&format!("\"rule\": \"{}\", ", esc(&v.rule)));
+        out.push_str(&format!("\"file\": \"{}\", ", esc(&v.file)));
+        out.push_str(&format!("\"line\": {}, ", v.line));
+        out.push_str(&format!("\"message\": \"{}\", ", esc(&v.message)));
+        out.push_str(&format!("\"waived\": {}", v.waived));
+        if let Some(j) = &v.justification {
+            out.push_str(&format!(", \"justification\": \"{}\"", esc(j)));
+        }
+        out.push('}');
+    }
+    if vs.is_empty() {
+        out.push_str("],\n");
+    } else {
+        out.push_str("\n  ],\n");
+    }
+    out.push_str("  \"summary\": {\n");
+    out.push_str(&format!("    \"total\": {},\n", vs.len()));
+    out.push_str(&format!("    \"waived\": {waived},\n"));
+    out.push_str(&format!("    \"unwaived\": {},\n", vs.len() - waived));
+    out.push_str("    \"by_rule\": {");
+    let rule_counts: Vec<String> =
+        by_rule.iter().map(|(r, c)| format!("\"{}\": {c}", esc(r))).collect();
+    out.push_str(&rule_counts.join(", "));
+    out.push_str("}\n");
+    out.push_str("  }\n");
+    out.push_str("}\n");
+    out
+}

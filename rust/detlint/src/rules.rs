@@ -1,0 +1,743 @@
+//! The five determinism & invariant rules, plus waiver handling and the
+//! directory scan driver. See docs/determinism.md for the contracts.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::lexer::{
+    find_from, find_idents, in_regions, is_ident_char, is_ident_start, match_brace, next_nonspace,
+    prev_token, rfind_any, test_regions, Masked,
+};
+
+pub const R1: &str = "r1-no-wall-clock";
+pub const R2: &str = "r2-no-hash-order";
+pub const R3: &str = "r3-journal-completeness";
+pub const R4: &str = "r4-no-panic-surface";
+pub const R5: &str = "r5-seeded-rng-only";
+/// Synthetic rule for malformed or stale waivers (never waivable itself).
+pub const WAIVER_SYNTAX: &str = "waiver-syntax";
+
+/// All real rules, in report order.
+pub const ALL_RULES: [&str; 5] = [R1, R2, R3, R4, R5];
+
+/// Modules whose behavior feeds scheduling decisions: wall clock, hash
+/// order, and unseeded entropy are forbidden here.
+const DECISION_PREFIXES: [&str; 6] =
+    ["engine", "coordinator", "kvcache", "faults", "speculation", "serving"];
+
+/// Files forming the client-facing serving surface: must never panic.
+const R4_FILES: [&str; 2] = ["serving/front.rs", "serving/events.rs"];
+
+/// Identifiers that reach for the wall clock or OS entropy (r1).
+const R1_IDENTS: [&str; 5] = ["Instant", "SystemTime", "sleep", "gettimeofday", "getrandom"];
+
+/// Identifiers that construct unseeded randomness (r5).
+const R5_IDENTS: [&str; 6] =
+    ["thread_rng", "from_entropy", "OsRng", "from_os_rng", "getrandom", "EntropyRng"];
+
+/// Methods whose call on a hash-ordered container observes its order (r2).
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Type wrappers walked through when resolving a declared container name.
+const WRAPPERS: [&str; 8] = ["Mutex", "RwLock", "Arc", "Rc", "Box", "RefCell", "Cell", "Option"];
+
+/// Types whose `&mut self` methods must journal into the dirty set (r3).
+const R3_TARGETS: [&str; 3] = ["ReqTable", "CacheManager", "FcfsQueue"];
+
+/// Macros that unconditionally panic (r4). `assert!`/`debug_assert!` are
+/// deliberately NOT listed: they state invariants, not control flow.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Body substrings that count as journaling for each r3 target.
+fn r3_markers(ty: &str) -> &'static [&'static str] {
+    match ty {
+        "FcfsQueue" => &["self.record(", "journal"],
+        _ => &["dirty.mark(", "dirty.drain_into(", "dirty.compact_below("],
+    }
+}
+
+/// Resolve a waiver rule name (`r2` or `r2-no-hash-order`) to its full id.
+pub fn full_rule(name: &str) -> Option<&'static str> {
+    match name {
+        "r1" | R1 => Some(R1),
+        "r2" | R2 => Some(R2),
+        "r3" | R3 => Some(R3),
+        "r4" | R4 => Some(R4),
+        "r5" | R5 => Some(R5),
+        _ => None,
+    }
+}
+
+/// One diagnostic. `line` is 1-based; `file` is the path relative to the
+/// scanned root, with `/` separators.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub waived: bool,
+    pub justification: Option<String>,
+}
+
+/// An inline `// detlint: allow(<rules>) — <justification>` directive.
+struct Waiver {
+    rules: Vec<&'static str>,
+    justification: String,
+    line: usize,
+    /// Lines this waiver covers: its own line (trailing form) or the next
+    /// code line, extended through `#[…]` attributes to the decorated item.
+    targets: BTreeSet<usize>,
+    used: bool,
+}
+
+fn parse_waivers(m: &Masked) -> (Vec<Waiver>, Vec<(usize, String)>) {
+    let mut waivers = Vec::new();
+    let mut bad: Vec<(usize, String)> = Vec::new();
+    for (start, ctext) in &m.comments {
+        let Some(pos) = ctext.find("detlint:") else { continue };
+        let line = m.line_of(*start);
+        let rest = ctext[pos + "detlint:".len()..].trim();
+        let Some(list) = rest.strip_prefix("allow(") else {
+            bad.push((
+                line,
+                "unrecognized detlint directive (expected \
+                 `detlint: allow(<rules>) — <justification>`)"
+                    .to_string(),
+            ));
+            continue;
+        };
+        let Some(close) = list.find(')') else {
+            bad.push((line, "unterminated rule list in detlint waiver".to_string()));
+            continue;
+        };
+        let mut rules = Vec::new();
+        let mut ok = true;
+        for r in list[..close].split(',') {
+            let r = r.trim();
+            match full_rule(r) {
+                Some(full) => rules.push(full),
+                None => {
+                    bad.push((line, format!("unknown rule `{r}` in detlint waiver")));
+                    ok = false;
+                }
+            }
+        }
+        let just = list[close + 1..]
+            .trim()
+            .trim_start_matches(|c: char| matches!(c, '\u{2014}' | '\u{2013}' | '-' | ':'))
+            .trim()
+            .to_string();
+        if just.is_empty() {
+            bad.push((line, "detlint waiver missing a justification".to_string()));
+            ok = false;
+        }
+        if !ok || rules.is_empty() {
+            continue;
+        }
+        let (s, _) = m.line_span(line);
+        let trailing = m.code[s..*start].iter().any(|c| !c.is_whitespace());
+        let mut targets = BTreeSet::new();
+        if trailing {
+            targets.insert(line);
+        } else {
+            let mut nxt = line + 1;
+            while nxt <= m.num_lines() && !m.line_has_code(nxt) {
+                nxt += 1;
+            }
+            if nxt <= m.num_lines() {
+                targets.insert(nxt);
+                while nxt <= m.num_lines() && m.code_line(nxt).trim().starts_with("#[") {
+                    nxt += 1;
+                    while nxt <= m.num_lines() && !m.line_has_code(nxt) {
+                        nxt += 1;
+                    }
+                    if nxt <= m.num_lines() {
+                        targets.insert(nxt);
+                    }
+                }
+            }
+        }
+        waivers.push(Waiver { rules, justification: just, line, targets, used: false });
+    }
+    (waivers, bad)
+}
+
+/// One scanned file plus everything the rules derived from it.
+pub struct FileScan {
+    pub rel: String,
+    pub m: Masked,
+    waivers: Vec<Waiver>,
+    bad_waivers: Vec<(usize, String)>,
+    tests: Vec<(usize, usize)>,
+    pub violations: Vec<Violation>,
+}
+
+impl FileScan {
+    pub fn new(rel: String, src: &str) -> FileScan {
+        let m = Masked::new(src);
+        let (waivers, bad_waivers) = parse_waivers(&m);
+        let tests = test_regions(&m);
+        FileScan { rel, m, waivers, bad_waivers, tests, violations: Vec::new() }
+    }
+
+    fn decision_path(&self) -> bool {
+        DECISION_PREFIXES
+            .iter()
+            .any(|p| self.rel == *p || self.rel.starts_with(&format!("{p}/")))
+    }
+
+    fn waived(&mut self, rule: &str, line: usize) -> Option<String> {
+        for w in &mut self.waivers {
+            if w.rules.iter().any(|r| *r == rule) && w.targets.contains(&line) {
+                w.used = true;
+                return Some(w.justification.clone());
+            }
+        }
+        None
+    }
+
+    fn report_at(&mut self, rule: &str, offset: usize, message: String) {
+        let line = self.m.line_of(offset);
+        self.report_line(rule, line, message);
+    }
+
+    fn report_line(&mut self, rule: &str, line: usize, message: String) {
+        let just = self.waived(rule, line);
+        self.violations.push(Violation {
+            rule: rule.to_string(),
+            file: self.rel.clone(),
+            line,
+            message,
+            waived: just.is_some(),
+            justification: just,
+        });
+    }
+}
+
+/// r1 / r5: flag each forbidden identifier outside test regions.
+fn scan_idents_rule(fs: &mut FileScan, rule: &'static str, idents: &[&str], what: &str) {
+    for name in idents {
+        let hits = find_idents(&fs.m.code, name);
+        for p in hits {
+            if in_regions(&fs.tests, p) {
+                continue;
+            }
+            let msg = format!("{what}: `{name}` is forbidden in decision-path modules");
+            fs.report_at(rule, p, msg);
+        }
+    }
+}
+
+/// Declared hash-container bindings: `(decl_offset, type_name, binding)`.
+/// The binding is resolved by walking back from the type through wrappers,
+/// references, generics and path segments to `name :` or `name =`.
+fn collect_hash_names(fs: &FileScan) -> (BTreeSet<String>, Vec<(usize, String, Option<String>)>) {
+    let mut names = BTreeSet::new();
+    let mut decl_sites = Vec::new();
+    let code = &fs.m.code;
+    for tyname in ["HashMap", "HashSet"] {
+        for p in find_idents(code, tyname) {
+            if in_regions(&fs.tests, p) {
+                continue;
+            }
+            // `use std::collections::{…}` introduces no binding; skip it —
+            // actual declarations are flagged at their own sites.
+            if fs.m.code_line(fs.m.line_of(p)).trim_start().starts_with("use ") {
+                continue;
+            }
+            let mut pos = p;
+            loop {
+                let (t, tstart) = prev_token(code, pos);
+                if t == "<"
+                    || t == "&"
+                    || t == "::"
+                    || t == "mut"
+                    || WRAPPERS.iter().any(|w| *w == t)
+                {
+                    pos = tstart;
+                    continue;
+                }
+                if !t.is_empty() && is_ident_start(t.chars().next().unwrap_or(' ')) {
+                    // A bare path segment: keep walking only through `::`.
+                    let (t2, t2start) = prev_token(code, tstart);
+                    if t2 == "::" {
+                        pos = t2start;
+                        continue;
+                    }
+                }
+                break;
+            }
+            let mut name = None;
+            let (t, tstart) = prev_token(code, pos);
+            if t == ":" {
+                let (n2, _) = prev_token(code, tstart);
+                if !n2.is_empty() && is_ident_char(n2.chars().next().unwrap_or(' ')) {
+                    name = Some(n2);
+                }
+            } else if t == "=" {
+                let (mut n2, n2s) = prev_token(code, tstart);
+                if n2 == "mut" {
+                    n2 = prev_token(code, n2s).0;
+                }
+                if !n2.is_empty() && is_ident_char(n2.chars().next().unwrap_or(' ')) {
+                    name = Some(n2);
+                }
+            }
+            if let Some(n) = &name {
+                names.insert(n.clone());
+            }
+            decl_sites.push((p, tyname.to_string(), name));
+        }
+    }
+    (names, decl_sites)
+}
+
+/// r2: hash-ordered containers (declarations, iteration calls, `for` loops)
+/// in decision-path modules.
+fn rule_r2(fs: &mut FileScan) {
+    let (names, decl_sites) = collect_hash_names(fs);
+    for (p, tyname, name) in decl_sites {
+        let nm = match &name {
+            Some(n) => format!(" `{n}`"),
+            None => String::new(),
+        };
+        fs.report_at(
+            R2,
+            p,
+            format!(
+                "hash-ordered container{nm} ({tyname}) in a decision-path module: \
+                 iteration order would leak into plans — use BTreeMap/BTreeSet \
+                 or waive with a point-lookup justification"
+            ),
+        );
+    }
+    let code = fs.m.code.clone();
+    for meth in ITER_METHODS {
+        for p in find_idents(&code, meth) {
+            if in_regions(&fs.tests, p) {
+                continue;
+            }
+            if p == 0 || code[p - 1] != '.' {
+                continue;
+            }
+            let e = next_nonspace(&code, p + meth.chars().count());
+            if e >= code.len() || code[e] != '(' {
+                continue;
+            }
+            let (recv, _) = prev_token(&code, p - 1);
+            if names.contains(&recv) {
+                fs.report_at(
+                    R2,
+                    p,
+                    format!(
+                        "iteration over hash-ordered `{recv}` (`.{meth}()`): \
+                         non-deterministic order in a decision path"
+                    ),
+                );
+            }
+        }
+    }
+    for p in find_idents(&code, "for") {
+        if in_regions(&fs.tests, p) {
+            continue;
+        }
+        let Some(brace) = find_from(&code, "{", p) else { continue };
+        let seg = &code[p..brace];
+        let Some(ipos) = find_idents(seg, "in").first().copied() else { continue };
+        let expr: String = seg[ipos + 2..].iter().collect();
+        let expr = expr.trim();
+        if expr.contains('(') {
+            continue; // call chains are handled by the method scan above
+        }
+        let expr = expr.trim_start_matches('&').trim();
+        let expr = expr.strip_prefix("mut ").unwrap_or(expr).trim();
+        let last = expr.rsplit('.').next().unwrap_or("").trim();
+        if names.contains(last) {
+            fs.report_at(
+                R2,
+                p,
+                format!(
+                    "`for … in` over hash-ordered `{last}`: \
+                     non-deterministic order in a decision path"
+                ),
+            );
+        }
+    }
+}
+
+/// r4: panics on the serving surface — `.unwrap()`, `.expect(…)`, panicking
+/// macros, and non-literal indexing.
+fn rule_r4(fs: &mut FileScan) {
+    let code = fs.m.code.clone();
+    for p in find_idents(&code, "unwrap") {
+        if in_regions(&fs.tests, p) || p == 0 || code[p - 1] != '.' {
+            continue;
+        }
+        let e = next_nonspace(&code, p + "unwrap".chars().count());
+        if e < code.len() && code[e] == '(' {
+            let inner = next_nonspace(&code, e + 1);
+            if inner < code.len() && code[inner] == ')' {
+                fs.report_at(
+                    R4,
+                    p,
+                    "`.unwrap()` on the serving surface: return a typed error or recover \
+                     (poisoned locks: `unwrap_or_else(PoisonError::into_inner)`)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    for p in find_idents(&code, "expect") {
+        if in_regions(&fs.tests, p) || p == 0 || code[p - 1] != '.' {
+            continue;
+        }
+        let e = next_nonspace(&code, p + "expect".chars().count());
+        if e < code.len() && code[e] == '(' {
+            fs.report_at(
+                R4,
+                p,
+                "`.expect()` on the serving surface: return a typed error or waive \
+                 with the invariant that makes it unreachable"
+                    .to_string(),
+            );
+        }
+    }
+    for mac in PANIC_MACROS {
+        for p in find_idents(&code, mac) {
+            if in_regions(&fs.tests, p) {
+                continue;
+            }
+            let e = next_nonspace(&code, p + mac.chars().count());
+            if e < code.len() && code[e] == '!' {
+                fs.report_at(
+                    R4,
+                    p,
+                    format!("`{mac}!` on the serving surface: never panic on client-facing paths"),
+                );
+            }
+        }
+    }
+    for p in 0..code.len() {
+        if code[p] != '[' || in_regions(&fs.tests, p) || p == 0 {
+            continue;
+        }
+        // Indexing only: the `[` must follow an expression (identifier or a
+        // closing `)`/`]`), which excludes slice types, attributes (`#[`)
+        // and macro brackets (`vec![`).
+        let mut j = p - 1;
+        while code[j].is_whitespace() {
+            if j == 0 {
+                break;
+            }
+            j -= 1;
+        }
+        if !(is_ident_char(code[j]) || code[j] == ')' || code[j] == ']') {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut e = p;
+        while e < code.len() {
+            if code[e] == '[' {
+                depth += 1;
+            } else if code[e] == ']' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            e += 1;
+        }
+        let inner: String = code[p + 1..e.min(code.len())].iter().collect();
+        let inner = inner.trim().to_string();
+        if inner.is_empty() || inner.chars().all(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        fs.report_at(
+            R4,
+            p,
+            format!(
+                "non-literal indexing `[{inner}]` on the serving surface can panic: \
+                 use `.get()` or waive with the bounds invariant"
+            ),
+        );
+    }
+}
+
+struct MethodInfo {
+    file_idx: usize,
+    line: usize,
+    is_pub: bool,
+    mut_self: bool,
+    body: Vec<char>,
+    calls: BTreeSet<String>,
+}
+
+/// r3: every `pub` `&mut self` method on a journal-bearing type must reach a
+/// journal mark, directly or through another compliant method (fixpoint over
+/// `self.…(…)` calls).
+fn rule_r3(files: &mut [FileScan]) {
+    let mut methods: BTreeMap<&'static str, BTreeMap<String, MethodInfo>> =
+        R3_TARGETS.iter().map(|t| (*t, BTreeMap::new())).collect();
+
+    for (file_idx, fs) in files.iter().enumerate() {
+        let code = &fs.m.code;
+        for p in find_idents(code, "impl") {
+            if in_regions(&fs.tests, p) {
+                continue;
+            }
+            let Some(brace) = find_from(code, "{", p) else { continue };
+            let head: String = code[p + 4..brace].iter().collect();
+            let head_norm = format!(" {} ", head.split_whitespace().collect::<Vec<_>>().join(" "));
+            if head_norm.contains(" for ") {
+                continue; // trait impl — only inherent impls carry the contract
+            }
+            let cleaned = head.replace(['<', '>'], " ");
+            let mut tyname: Option<&'static str> = None;
+            for s in cleaned.split_whitespace().rev() {
+                if is_ident_start(s.chars().next().unwrap_or(' ')) {
+                    let last_seg = s.rsplit("::").next().unwrap_or(s);
+                    tyname = R3_TARGETS.iter().find(|&&t| t == last_seg).copied();
+                    break;
+                }
+            }
+            let Some(tyname) = tyname else { continue };
+            let end = match_brace(code, brace);
+            let mut q = brace + 1;
+            while q < end {
+                let Some(fnp) = find_from(code, "fn ", q) else { break };
+                if fnp >= end {
+                    break;
+                }
+                q = fnp + 3;
+                if fnp > 0 && is_ident_char(code[fnp - 1]) {
+                    continue;
+                }
+                let mut depth = 0i64;
+                for k in brace..fnp {
+                    if code[k] == '{' {
+                        depth += 1;
+                    } else if code[k] == '}' {
+                        depth -= 1;
+                    }
+                }
+                if depth != 1 {
+                    continue; // nested fn (closure body, inner item)
+                }
+                let back = rfind_any(code, ";{}", brace, fnp).unwrap_or(brace);
+                let vis_seg = &code[back + 1..fnp];
+                let is_pub = !find_idents(vis_seg, "pub").is_empty();
+                let nm_start = next_nonspace(code, fnp + 2);
+                let mut nm_end = nm_start;
+                while nm_end < code.len() && is_ident_char(code[nm_end]) {
+                    nm_end += 1;
+                }
+                let name: String = code[nm_start..nm_end].iter().collect();
+                let Some(par_open) = find_from(code, "(", nm_end) else { continue };
+                if par_open >= end {
+                    continue;
+                }
+                let mut pdepth = 0i64;
+                let mut par_close = par_open;
+                while par_close < end {
+                    if code[par_close] == '(' {
+                        pdepth += 1;
+                    } else if code[par_close] == ')' {
+                        pdepth -= 1;
+                        if pdepth == 0 {
+                            break;
+                        }
+                    }
+                    par_close += 1;
+                }
+                let par_hi = par_close.min(code.len() - 1);
+                let params: String = code[par_open..=par_hi].iter().collect();
+                let spaced = params
+                    .replace('&', " & ")
+                    .replace(',', " , ")
+                    .replace('(', " ( ")
+                    .replace(')', " ) ");
+                let toks: Vec<&str> = spaced.split_whitespace().collect();
+                let mut mut_self = false;
+                for idx in 0..toks.len() {
+                    if toks[idx] == "&" {
+                        let mut k = idx + 1;
+                        if k < toks.len() && toks[k].starts_with('\'') {
+                            k += 1;
+                        }
+                        if k + 1 < toks.len() && toks[k] == "mut" && toks[k + 1] == "self" {
+                            mut_self = true;
+                            break;
+                        }
+                    }
+                }
+                let mut bodyp = par_close;
+                let mut body: Vec<char> = Vec::new();
+                let mut body_end = par_close;
+                while bodyp < end && code[bodyp] != '{' && code[bodyp] != ';' {
+                    bodyp += 1;
+                }
+                if bodyp < end && code[bodyp] == '{' {
+                    body_end = match_brace(code, bodyp);
+                    body = code[bodyp..body_end].to_vec();
+                }
+                let mut calls = BTreeSet::new();
+                let mut bi = 0;
+                while let Some(sp) = find_from(&body, "self.", bi) {
+                    bi = sp + 5;
+                    let mut ce = bi;
+                    while ce < body.len() && is_ident_char(body[ce]) {
+                        ce += 1;
+                    }
+                    let np = next_nonspace(&body, ce);
+                    if np < body.len() && body[np] == '(' {
+                        calls.insert(body[bi..ce].iter().collect::<String>());
+                    }
+                }
+                let info = MethodInfo {
+                    file_idx,
+                    line: fs.m.line_of(fnp),
+                    is_pub,
+                    mut_self,
+                    body: body.clone(),
+                    calls,
+                };
+                if let Some(per_ty) = methods.get_mut(tyname) {
+                    per_ty.insert(name, info);
+                }
+                q = if body.is_empty() { par_close + 1 } else { body_end };
+            }
+        }
+    }
+
+    for (tyname, ms) in &methods {
+        let markers = r3_markers(tyname);
+        let mut compliant: BTreeSet<String> = ms
+            .iter()
+            .filter(|(_, info)| markers.iter().any(|mk| find_from(&info.body, mk, 0).is_some()))
+            .map(|(name, _)| name.clone())
+            .collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for (name, info) in ms {
+                if compliant.contains(name) {
+                    continue;
+                }
+                if info.calls.iter().any(|c| compliant.contains(c)) {
+                    compliant.insert(name.clone());
+                    changed = true;
+                }
+            }
+        }
+        for (name, info) in ms {
+            if !(info.is_pub && info.mut_self) || compliant.contains(name) {
+                continue;
+            }
+            files[info.file_idx].report_line(
+                R3,
+                info.line,
+                format!(
+                    "`{tyname}::{name}` takes `&mut self` but never journals into the \
+                     dirty set — O(batch) delta capture silently misses its mutations \
+                     (call the journal mark or waive with why no tracked state changes)"
+                ),
+            );
+        }
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, as sorted root-relative paths.
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> =
+        std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` with the `enabled` rules (full ids).
+/// Returns `(violations sorted by (file, line, rule), files_scanned)`.
+pub fn scan_tree(
+    root: &Path,
+    enabled: &BTreeSet<String>,
+) -> std::io::Result<(Vec<Violation>, usize)> {
+    let mut rels = Vec::new();
+    collect_rs_files(root, root, &mut rels)?;
+    rels.sort();
+    let mut files: Vec<FileScan> = Vec::new();
+    for rel in &rels {
+        let src = std::fs::read_to_string(root.join(rel))?;
+        files.push(FileScan::new(rel.clone(), &src));
+    }
+    for fs in &mut files {
+        for (line, msg) in std::mem::take(&mut fs.bad_waivers) {
+            fs.violations.push(Violation {
+                rule: WAIVER_SYNTAX.to_string(),
+                file: fs.rel.clone(),
+                line,
+                message: msg,
+                waived: false,
+                justification: None,
+            });
+        }
+        if fs.decision_path() {
+            if enabled.contains(R1) {
+                scan_idents_rule(fs, R1, &R1_IDENTS, "wall clock / OS timing");
+            }
+            if enabled.contains(R2) {
+                rule_r2(fs);
+            }
+            if enabled.contains(R5) {
+                scan_idents_rule(fs, R5, &R5_IDENTS, "unseeded entropy source");
+            }
+        }
+        if enabled.contains(R4) && R4_FILES.iter().any(|f| *f == fs.rel) {
+            rule_r4(fs);
+        }
+    }
+    if enabled.contains(R3) {
+        rule_r3(&mut files);
+    }
+    // An unused waiver is itself a violation: its justification is stale and
+    // would silently mask a future regression at that site.
+    for fs in &mut files {
+        for i in 0..fs.waivers.len() {
+            if !fs.waivers[i].used {
+                let line = fs.waivers[i].line;
+                fs.violations.push(Violation {
+                    rule: WAIVER_SYNTAX.to_string(),
+                    file: fs.rel.clone(),
+                    line,
+                    message: "waiver matches no violation (stale?)".to_string(),
+                    waived: false,
+                    justification: None,
+                });
+            }
+        }
+    }
+    let mut out: Vec<Violation> = files.into_iter().flat_map(|fs| fs.violations).collect();
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok((out, rels.len()))
+}

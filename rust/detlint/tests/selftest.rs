@@ -1,0 +1,121 @@
+//! detlint self-test: every rule is proven by a fixture that fires it at a
+//! known line, waivers suppress exactly where placed, clean files stay
+//! silent, and the real scheduling core (`rust/src`) is pinned at zero
+//! unwaived violations.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use detlint::report::render_json;
+use detlint::rules::{R1, R2, R3, R4, R5, WAIVER_SYNTAX};
+use detlint::{scan_all, scan_tree, Violation};
+
+fn fixtures_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/tree")
+}
+
+fn shape(vs: &[Violation]) -> Vec<(String, String, usize, bool)> {
+    vs.iter().map(|v| (v.rule.clone(), v.file.clone(), v.line, v.waived)).collect()
+}
+
+#[test]
+fn fixtures_fire_exactly_where_expected() {
+    let (vs, files) = scan_all(&fixtures_root()).expect("fixture scan");
+    assert_eq!(files, 8, "fixture corpus drifted");
+    let expected: Vec<(&str, &str, usize, bool)> = vec![
+        (R2, "coordinator/bad_hash.rs", 7, false),
+        (R2, "coordinator/bad_hash.rs", 12, false),
+        (R2, "coordinator/bad_hash.rs", 20, true),
+        (R1, "engine/bad_clock.rs", 5, false),
+        (R1, "engine/bad_clock.rs", 7, false),
+        (R1, "engine/bad_clock.rs", 13, true),
+        (WAIVER_SYNTAX, "engine/bad_waivers.rs", 5, false),
+        (WAIVER_SYNTAX, "engine/bad_waivers.rs", 10, false),
+        (WAIVER_SYNTAX, "engine/bad_waivers.rs", 15, false),
+        (R3, "kvcache/bad_journal.rs", 16, false),
+        (R3, "kvcache/bad_journal.rs", 31, true),
+        (R4, "serving/front.rs", 6, false),
+        (R4, "serving/front.rs", 10, false),
+        (R4, "serving/front.rs", 18, false),
+        (R4, "serving/front.rs", 23, true),
+        (R5, "speculation/bad_rng.rs", 5, false),
+        (R5, "speculation/bad_rng.rs", 11, true),
+    ];
+    let expected: Vec<(String, String, usize, bool)> = expected
+        .into_iter()
+        .map(|(r, f, l, w)| (r.to_string(), f.to_string(), l, w))
+        .collect();
+    assert_eq!(shape(&vs), expected);
+}
+
+#[test]
+fn clean_fixtures_stay_silent() {
+    let (vs, _) = scan_all(&fixtures_root()).expect("fixture scan");
+    for v in &vs {
+        assert_ne!(v.file, "util/clock_ok.rs", "exempt path flagged: {v:?}");
+        assert_ne!(v.file, "coordinator/clean.rs", "clean file flagged: {v:?}");
+    }
+}
+
+#[test]
+fn waived_violations_carry_their_justification() {
+    let (vs, _) = scan_all(&fixtures_root()).expect("fixture scan");
+    let waived: Vec<_> = vs.iter().filter(|v| v.waived).collect();
+    assert_eq!(waived.len(), 5);
+    for v in waived {
+        let j = v.justification.as_deref().unwrap_or("");
+        assert!(j.starts_with("fixture:"), "lost justification: {v:?}");
+    }
+}
+
+#[test]
+fn rule_toggles_disable_rules() {
+    let only_r1: BTreeSet<String> = [R1.to_string()].into_iter().collect();
+    let (vs, _) = scan_tree(&fixtures_root(), &only_r1).expect("fixture scan");
+    assert!(vs.iter().any(|v| v.rule == R1));
+    for v in &vs {
+        assert!(
+            v.rule == R1 || v.rule == WAIVER_SYNTAX,
+            "disabled rule still fired: {v:?}"
+        );
+    }
+}
+
+#[test]
+fn json_report_is_deterministic_and_well_formed() {
+    let (vs, files) = scan_all(&fixtures_root()).expect("fixture scan");
+    let rules: Vec<String> =
+        [R1, R2, R3, R4, R5].iter().map(|r| r.to_string()).collect();
+    let a = render_json("fixtures/tree", files, &rules, &vs);
+    let b = render_json("fixtures/tree", files, &rules, &vs);
+    assert_eq!(a, b);
+    assert!(a.starts_with("{\n"));
+    assert!(a.ends_with("}\n"));
+    assert!(a.contains("\"version\": 1"));
+    assert!(a.contains("\"files_scanned\": 8"));
+    assert!(a.contains("\"total\": 17"));
+    assert!(a.contains("\"waived\": 5"));
+    assert!(a.contains("\"unwaived\": 12"));
+    assert!(a.contains("\"by_rule\""));
+    assert!(a.contains("\"justification\""));
+}
+
+/// The real scheduling core must be detlint-clean: every violation in
+/// `rust/src` is either fixed or carries a justified waiver. This is the
+/// same gate CI applies via `cargo run -p detlint`.
+#[test]
+fn scheduling_core_has_zero_unwaived_violations() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let (vs, files) = scan_all(&src).expect("src scan");
+    assert!(files >= 40, "src tree shrank to {files} files — wrong root?");
+    let unwaived: Vec<_> = vs.iter().filter(|v| !v.waived).collect();
+    assert!(
+        unwaived.is_empty(),
+        "unwaived determinism violations in rust/src:\n{}",
+        unwaived
+            .iter()
+            .map(|v| format!("  {}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -11,7 +11,7 @@
 //!    naturally re-evaluated every iteration, which is what lets InferCept
 //!    demote a long-preserved request to discard mid-interception.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::augment::{AugmentKind, AugmentProfile, ALL_KINDS};
 use crate::util::Micros;
@@ -37,8 +37,10 @@ impl EstimatorKind {
 #[derive(Debug, Clone)]
 pub struct DurationEstimator {
     pub kind: EstimatorKind,
-    /// Per-type mean duration in µs (offline profile, Table 1).
-    profile_means: HashMap<AugmentKind, f64>,
+    /// Per-type mean duration in µs (offline profile, Table 1). Ordered
+    /// map: estimates feed the scheduling argmin, so no container whose
+    /// iteration order could differ between runs belongs here (detlint r2).
+    profile_means: BTreeMap<AugmentKind, f64>,
     /// Durations are scaled in real mode; estimates must match the engine
     /// clock, so the estimator applies the same scale.
     pub time_scale: f64,
@@ -48,7 +50,7 @@ pub struct DurationEstimator {
     /// flaky tool's expected re-dispatches are priced into the
     /// preserve/discard/swap argmin. Stays exactly 1.0 when no failure
     /// ever occurs, so fault-free runs are bit-identical.
-    expected_attempts: HashMap<AugmentKind, f64>,
+    expected_attempts: BTreeMap<AugmentKind, f64>,
 }
 
 impl DurationEstimator {
@@ -57,7 +59,7 @@ impl DurationEstimator {
             .iter()
             .map(|k| (*k, AugmentProfile::table1(*k).int_time_s.0 * 1e6))
             .collect();
-        DurationEstimator { kind, profile_means, time_scale, expected_attempts: HashMap::new() }
+        DurationEstimator { kind, profile_means, time_scale, expected_attempts: BTreeMap::new() }
     }
 
     /// An interception of `kind` resolved after `attempts` dispatches

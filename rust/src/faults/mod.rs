@@ -43,7 +43,7 @@
 //! without knowing about it. With an inactive plan the source is passed
 //! through untouched — faults-off is structurally free.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::augment::AugmentKind;
 use crate::kvcache::ReqId;
@@ -156,12 +156,14 @@ pub struct FaultInjector {
     /// dispatches of the same request draw independently.
     dispatches: u64,
     /// Requests whose dispatch was converted to a never-resolving external
-    /// wait. Counted in `in_flight`/`awaiting_external`.
-    stalled: HashSet<ReqId>,
+    /// wait. Counted in `in_flight`/`awaiting_external`. Ordered sets/maps
+    /// throughout: injector state sits on the scheduling decision path, so
+    /// nothing with run-dependent iteration order is allowed (detlint r2).
+    stalled: BTreeSet<ReqId>,
     /// Requests whose internally-timed resolution must surface as an error.
-    failing: HashSet<ReqId>,
+    failing: BTreeSet<ReqId>,
     /// Pre-generated garbage answers, substituted at poll time.
-    malformed: HashMap<ReqId, Vec<u32>>,
+    malformed: BTreeMap<ReqId, Vec<u32>>,
     /// Observability counters (per injected fault kind).
     pub injected_errors: u64,
     pub injected_stalls: u64,
@@ -175,9 +177,9 @@ impl FaultInjector {
             inner,
             plan,
             dispatches: 0,
-            stalled: HashSet::new(),
-            failing: HashSet::new(),
-            malformed: HashMap::new(),
+            stalled: BTreeSet::new(),
+            failing: BTreeSet::new(),
+            malformed: BTreeMap::new(),
             injected_errors: 0,
             injected_stalls: 0,
             injected_slows: 0,

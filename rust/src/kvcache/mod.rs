@@ -96,7 +96,7 @@
 pub mod slots;
 pub mod swap;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -305,7 +305,9 @@ pub struct CacheManager {
     dirty: DirtySet,
     /// Sequences aliasing each shared (refcount ≥ 2) GPU block. Maintained
     /// only on the cold fork/unshare paths; empty when sharing is unused.
-    holders: HashMap<BlockId, Vec<ReqId>>,
+    /// Ordered map: `check_conservation` iterates it, and hash order in a
+    /// decision-path module is forbidden (detlint r2).
+    holders: BTreeMap<BlockId, Vec<ReqId>>,
     /// Scratch: survivors of a 2 → 1 refcount transition awaiting a
     /// shared-prefix recount (drained by `promote_survivors`).
     promoted: Vec<ReqId>,
@@ -321,7 +323,7 @@ impl CacheManager {
             alloc: BlockAllocator::new(block_size, num_gpu, num_cpu),
             seqs: ReqSlots::new(),
             dirty: DirtySet::default(),
-            holders: HashMap::new(),
+            holders: BTreeMap::new(),
             promoted: Vec::new(),
             cow_copies: 0,
             watermark_blocks: 0,
@@ -908,7 +910,7 @@ impl CacheManager {
     pub fn check_conservation(&self) -> Result<()> {
         let mut gpu_refs = vec![0u32; self.alloc.num_gpu()];
         let mut cpu_refs = vec![0u32; self.alloc.num_cpu()];
-        let mut gpu_holders: HashMap<BlockId, Vec<ReqId>> = HashMap::new();
+        let mut gpu_holders: BTreeMap<BlockId, Vec<ReqId>> = BTreeMap::new();
         for (req, seq) in self.seqs.iter() {
             let mut cpu = 0usize;
             for (i, b) in seq.blocks.iter().enumerate() {
@@ -1000,7 +1002,7 @@ impl CacheManager {
 /// the drop was a 2 → 1 transition, queue the surviving holder for a
 /// shared-prefix recount and retire the map entry.
 fn drop_holder(
-    holders: &mut HashMap<BlockId, Vec<ReqId>>,
+    holders: &mut BTreeMap<BlockId, Vec<ReqId>>,
     promoted: &mut Vec<ReqId>,
     req: ReqId,
     block: BlockId,

@@ -7,6 +7,10 @@
 //! pools round-trip host↔device every call (see DESIGN.md §Perf for the
 //! buffer-resident optimization path).
 
+// Timing shell: the real-execution runtime paces itself on the wall clock
+// (detlint r1 exempts runtime/; rust/clippy.toml documents the list).
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;

@@ -23,7 +23,7 @@
 //! serving parity tests). Dropped receivers auto-unsubscribe on the next
 //! failed send, so detached replay pays one failed send per request at most.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 
 use crate::augment::AugmentKind;
@@ -155,7 +155,9 @@ impl EngineEvent {
 /// the rest of the bus.
 #[derive(Debug, Default)]
 pub struct EventBus {
-    subs: HashMap<ReqId, Sender<EngineEvent>>,
+    /// Ordered map (accessed by point lookup only; ordered so no future
+    /// iteration can leak hash order into the event stream — detlint r2).
+    subs: BTreeMap<ReqId, Sender<EngineEvent>>,
     /// Buffered per-token events awaiting a flush, in emission order.
     pending: Vec<(ReqId, u32, Micros)>,
     /// Channel sends saved by coalescing: Σ (run length − 1) over batches.
@@ -239,12 +241,15 @@ impl EventBus {
         pending.sort_by_key(|&(r, _, _)| r);
         let mut i = 0;
         while i < pending.len() {
+            // detlint: allow(r4) — i < pending.len() is the loop guard
             let req = pending[i].0;
             let mut j = i + 1;
+            // detlint: allow(r4) — j < pending.len() is checked first in the && chain
             while j < pending.len() && pending[j].0 == req {
                 j += 1;
             }
             let run: Vec<(u32, Micros)> =
+                // detlint: allow(r4) — i < j ≤ pending.len() by the runs of the two loops above
                 pending[i..j].iter().map(|&(_, token, at)| (token, at)).collect();
             self.send_run(req, run);
             i = j;

@@ -72,10 +72,10 @@
 //! `InterceptionFailed`. Per-session retry budgets are set with
 //! [`SessionSpec::with_intercept_retries`].
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use anyhow::{bail, Result};
 
@@ -88,6 +88,15 @@ use crate::serving::events::EngineEvent;
 use crate::serving::intercept::{InterceptResolution, InterceptSource, Resumption, ScriptedTimers};
 use crate::util::Micros;
 use crate::workload::{RequestScript, RequestTrace};
+
+/// Lock one of the front's shared-state mutexes without ever panicking
+/// (detlint r4: the serving surface is panic-free). A lock is poisoned only
+/// if a client thread panicked *while holding it*; every critical section
+/// here is a plain push/pop/lookup on ordinary data, so the contents stay
+/// consistent and recovering the guard is always safe.
+fn lock_live<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// How a session's interceptions resolve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -271,8 +280,11 @@ struct InboxEntry {
 /// State shared between the front, its intercept source, and every handle.
 #[derive(Debug, Default)]
 struct FrontShared {
-    /// Sessions whose interceptions resolve externally.
-    external: Mutex<HashSet<ReqId>>,
+    /// Sessions whose interceptions resolve externally. Ordered set —
+    /// membership is point-looked-up on the dispatch path, and nothing with
+    /// run-dependent iteration order belongs in a decision-path module
+    /// (detlint r2).
+    external: Mutex<BTreeSet<ReqId>>,
     /// Client answers not yet collected by the source.
     inbox: Mutex<VecDeque<InboxEntry>>,
     /// Answers dropped because no interception was awaiting them. A plain
@@ -319,7 +331,7 @@ impl SessionHandle {
 
     /// Next pending event, if any (non-blocking).
     pub fn try_event(&self) -> Option<EngineEvent> {
-        let mut buf = self.expanded.lock().unwrap();
+        let mut buf = lock_live(&self.expanded);
         loop {
             if let Some(ev) = buf.pop_front() {
                 return Some(ev);
@@ -330,7 +342,7 @@ impl SessionHandle {
 
     /// Every event delivered since the last drain (non-blocking).
     pub fn drain_events(&self) -> Vec<EngineEvent> {
-        let mut buf = self.expanded.lock().unwrap();
+        let mut buf = lock_live(&self.expanded);
         let mut out = VecDeque::new();
         std::mem::swap(&mut *buf, &mut out);
         for ev in self.events.try_iter() {
@@ -353,11 +365,7 @@ impl SessionHandle {
     /// so paused time accrues on the engine clock as it would in the paper's
     /// timed traces.
     pub fn resume_with_after(&self, tokens: Vec<u32>, delay_us: Micros) {
-        self.shared
-            .inbox
-            .lock()
-            .unwrap()
-            .push_back(InboxEntry { req: self.req, tokens, delay_us });
+        lock_live(&self.shared.inbox).push_back(InboxEntry { req: self.req, tokens, delay_us });
     }
 
     /// Abort this session. Thread-safe and idempotent: the cancel is
@@ -367,7 +375,7 @@ impl SessionHandle {
     /// [`EngineEvent::Cancelled`]. For an immediate teardown from the
     /// pump-owning thread, use [`EngineFront::cancel`].
     pub fn cancel(&self) {
-        self.shared.cancels.lock().unwrap().push(self.req);
+        lock_live(&self.shared.cancels).push(self.req);
     }
 }
 
@@ -387,7 +395,9 @@ struct FrontSource {
     scripted: ScriptedTimers,
     shared: Arc<FrontShared>,
     /// Dispatch time of each interception awaiting a client, by request.
-    awaiting: HashMap<ReqId, Micros>,
+    /// Ordered map: `next_completion` walks the inbox against it, and the
+    /// idle-loop clock jump must not depend on hash order (detlint r2).
+    awaiting: BTreeMap<ReqId, Micros>,
     /// Collected answers ordered by (available-at, req). A `VecDeque` so
     /// the per-iteration poll pops ready answers from the front in O(1)
     /// instead of shifting the whole list (`Vec::remove(0)`).
@@ -399,7 +409,7 @@ impl FrontSource {
         FrontSource {
             scripted: ScriptedTimers::new(time_scale),
             shared,
-            awaiting: HashMap::new(),
+            awaiting: BTreeMap::new(),
             ready: VecDeque::new(),
         }
     }
@@ -413,7 +423,7 @@ impl FrontSource {
     /// with a binary-search insertion per entry (index math over the ring —
     /// no `make_contiguous` shuffle, no full re-sort on every resume push).
     fn intake(&mut self) {
-        let mut inbox = self.shared.inbox.lock().unwrap();
+        let mut inbox = lock_live(&self.shared.inbox);
         while let Some(e) = inbox.pop_front() {
             match self.awaiting.get(&e.req) {
                 Some(&t0) => {
@@ -428,6 +438,7 @@ impl FrontSource {
                     let (mut lo, mut hi) = (0, self.ready.len());
                     while lo < hi {
                         let mid = lo + (hi - lo) / 2;
+                        // detlint: allow(r4) — mid < hi <= ready.len() by the loop invariant
                         if (self.ready[mid].at, self.ready[mid].req) <= key {
                             lo = mid + 1;
                         } else {
@@ -467,7 +478,7 @@ impl InterceptSource for FrontSource {
         duration_us: Micros,
         now: Micros,
     ) -> InterceptResolution {
-        if self.shared.external.lock().unwrap().contains(&req) {
+        if lock_live(&self.shared.external).contains(&req) {
             self.awaiting.insert(req, now);
             // Nothing runs engine-side: the client executes the call and
             // answers with the returned tokens.
@@ -481,7 +492,7 @@ impl InterceptSource for FrontSource {
         self.intake();
         let mut out = self.scripted.poll(now);
         while self.ready.front().is_some_and(|e| e.at <= now) {
-            let e = self.ready.pop_front().expect("front checked above");
+            let Some(e) = self.ready.pop_front() else { break };
             // A duplicate answer for an already-resumed request is stray.
             if self.awaiting.remove(&e.req).is_some() {
                 out.push(Resumption { req: e.req, tokens: Some(e.tokens), error: None });
@@ -495,11 +506,7 @@ impl InterceptSource for FrontSource {
     fn next_completion(&self) -> Option<Micros> {
         // Include not-yet-collected inbox entries so the idle loop can jump
         // straight to a delayed client answer.
-        let inbox_min = self
-            .shared
-            .inbox
-            .lock()
-            .unwrap()
+        let inbox_min = lock_live(&self.shared.inbox)
             .iter()
             .filter_map(|e| self.awaiting.get(&e.req).map(|&t0| t0.saturating_add(e.delay_us)))
             .min();
@@ -522,7 +529,7 @@ impl InterceptSource for FrontSource {
         // leak one entry per interactive session. An answer still scheduled
         // for a session that just ended (finished, cancelled, or timed out)
         // was never consumable — count it stray, like a duplicate.
-        self.shared.external.lock().unwrap().remove(&req);
+        lock_live(&self.shared.external).remove(&req);
         self.drop_pending_answers(req);
     }
 
@@ -554,8 +561,9 @@ pub struct EngineFront {
     /// session whose blocks are long freed silently degrades admission to a
     /// cold prefill even when an older live sibling still holds the prefix.
     /// Dead holders are pruned at each lookup, so entries never point at
-    /// terminated sessions.
-    prefix_registry: HashMap<String, Vec<ReqId>>,
+    /// terminated sessions. Ordered map: admission consults it, so its
+    /// order must be run-independent (detlint r2).
+    prefix_registry: BTreeMap<String, Vec<ReqId>>,
 }
 
 impl EngineFront {
@@ -576,7 +584,7 @@ impl EngineFront {
             iters: 0,
             started: false,
             awaiting_reported: false,
-            prefix_registry: HashMap::new(),
+            prefix_registry: BTreeMap::new(),
         }
     }
 
@@ -645,7 +653,7 @@ impl EngineFront {
             .submit_script(arrival, spec.script, spec.prompt)
             .map_err(SubmitError::Rejected)?;
         if spec.mode == ResolutionMode::External {
-            self.shared.external.lock().unwrap().insert(id);
+            lock_live(&self.shared.external).insert(id);
         }
         self.engine.set_external_timeout(id, spec.external_timeout_us);
         if spec.speculate.is_some() {
@@ -687,7 +695,7 @@ impl EngineFront {
 
     /// Apply handle-side aborts queued since the last round.
     fn drain_cancels(&mut self) {
-        let pending: Vec<ReqId> = std::mem::take(&mut *self.shared.cancels.lock().unwrap());
+        let pending: Vec<ReqId> = std::mem::take(&mut *lock_live(&self.shared.cancels));
         for req in pending {
             if self.engine.cancel(req) {
                 // As in `EngineFront::cancel`: a teardown counts as

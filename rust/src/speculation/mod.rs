@@ -36,7 +36,7 @@
 //! off) and bit-identical to the non-speculating engine when disabled —
 //! pinned by `tests/speculation.rs`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::augment::{AugmentKind, ALL_KINDS};
 use crate::kvcache::ReqId;
@@ -195,7 +195,10 @@ impl AnswerPredictor for ConstantPredictor {
 /// was issued from.
 #[derive(Debug)]
 pub struct CachedAnswerPredictor {
-    cache: HashMap<(AugmentKind, u64), Vec<u32>>,
+    /// Ordered map: predictions steer speculative forks (a scheduling
+    /// decision), so the memo store must have run-independent iteration
+    /// order even though today's accesses are point lookups (detlint r2).
+    cache: BTreeMap<(AugmentKind, u64), Vec<u32>>,
     /// (kind, input-key) of predictions currently awaiting verification —
     /// `observe` files the actual answer under the key `predict` computed,
     /// so the memo stays input-addressed. Keyed by predicted stream to stay
@@ -222,7 +225,7 @@ fn input_key(ctx: &[u32]) -> u64 {
 impl Default for CachedAnswerPredictor {
     fn default() -> Self {
         CachedAnswerPredictor {
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             pending: Vec::new(),
             // Memo replays are exact-input repeats: start optimistic so the
             // first warm hit actually forks (see ACCEPT_EWMA_PRIOR docs for

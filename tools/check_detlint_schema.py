@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Validate a detlint_report.json produced by `cargo run -p detlint --
+--json <path>` (see rust/detlint/src/report.rs for the writer).
+
+Usage:
+    check_detlint_schema.py [--allow-unwaived] [PATH]
+
+PATH defaults to detlint_report.json at the repo root. By default the report
+must be *clean*: zero unwaived violations (the CI gate). `--allow-unwaived`
+validates structure only, for inspecting a red report without failing twice.
+
+Exit status 0 on success, 1 with per-problem messages otherwise.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+EXPECTED_VERSION = 1
+
+EXPECTED_RULES = [
+    "r1-no-wall-clock",
+    "r2-no-hash-order",
+    "r3-journal-completeness",
+    "r4-no-panic-surface",
+    "r5-seeded-rng-only",
+]
+
+TOP_LEVEL_KEYS = ["version", "root", "files_scanned", "rules", "violations", "summary"]
+
+VIOLATION_FIELDS = ["rule", "file", "line", "message", "waived"]
+
+SUMMARY_KEYS = ["total", "waived", "unwaived", "by_rule"]
+
+
+def check(path: Path, allow_unwaived: bool) -> list[str]:
+    errors: list[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+
+    for key in TOP_LEVEL_KEYS:
+        if key not in data:
+            errors.append(f"missing top-level key: {key!r}")
+    if errors:
+        return errors
+
+    if data["version"] != EXPECTED_VERSION:
+        errors.append(f"version is {data['version']!r}, expected {EXPECTED_VERSION}")
+    if not isinstance(data["files_scanned"], int) or data["files_scanned"] <= 0:
+        errors.append(f"files_scanned must be a positive int, got {data['files_scanned']!r}")
+    if not isinstance(data["violations"], list):
+        return errors + ["'violations' is not a list"]
+    if not isinstance(data["summary"], dict):
+        return errors + ["'summary' is not an object"]
+
+    for rule in EXPECTED_RULES:
+        if rule not in data["rules"]:
+            errors.append(f"rule {rule!r} missing from enabled set — CI must run all five")
+
+    waived = 0
+    for i, v in enumerate(data["violations"]):
+        if not isinstance(v, dict):
+            errors.append(f"violations[{i}] is not an object")
+            continue
+        for field in VIOLATION_FIELDS:
+            if field not in v:
+                errors.append(f"violations[{i}] missing field {field!r}")
+        if v.get("waived"):
+            waived += 1
+            if not v.get("justification"):
+                errors.append(
+                    f"violations[{i}] ({v.get('file')}:{v.get('line')}): "
+                    "waived without a justification"
+                )
+
+    summary = data["summary"]
+    for key in SUMMARY_KEYS:
+        if key not in summary:
+            errors.append(f"summary missing key {key!r}")
+    if errors:
+        return errors
+
+    total = len(data["violations"])
+    if summary["total"] != total:
+        errors.append(f"summary.total is {summary['total']}, but {total} violations listed")
+    if summary["waived"] != waived:
+        errors.append(f"summary.waived is {summary['waived']}, but {waived} waived listed")
+    if summary["unwaived"] != total - waived:
+        errors.append(
+            f"summary.unwaived is {summary['unwaived']}, expected {total - waived}"
+        )
+    by_rule_total = sum(summary["by_rule"].values())
+    if by_rule_total != total:
+        errors.append(f"summary.by_rule sums to {by_rule_total}, expected {total}")
+
+    if summary["unwaived"] and not allow_unwaived:
+        errors.append(
+            f"{summary['unwaived']} unwaived determinism violations — fix them or "
+            "add justified `// detlint: allow(…)` waivers (docs/determinism.md)"
+        )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    args = [a for a in argv if a != "--allow-unwaived"]
+    allow_unwaived = len(args) != len(argv)
+    root = Path(__file__).resolve().parent.parent
+    path = Path(args[0]) if args else root / "detlint_report.json"
+    errors = check(path, allow_unwaived)
+    if errors:
+        for e in errors:
+            print(f"check_detlint_schema: {e}", file=sys.stderr)
+        return 1
+    print(f"check_detlint_schema: {path} OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
